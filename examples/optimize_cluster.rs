@@ -1,0 +1,46 @@
+//! Optimize a whole model zoo across communication schemes (a miniature of
+//! paper Fig. 9): for each (model, scheme), search combined op-fusion +
+//! tensor-fusion/partition strategies and validate the found strategies on
+//! the ground-truth testbed against the deployed defaults and XLA.
+
+use dpro::baselines;
+use dpro::config::{JobSpec, Transport};
+use dpro::optimizer::{optimize, SearchOpts};
+use dpro::testbed::{run as testbed_run, TestbedOpts};
+
+fn throughput(spec: &JobSpec) -> f64 {
+    let r = testbed_run(spec, &TestbedOpts { iterations: 5, ..Default::default() });
+    let imgs = (spec.cluster.n_workers * spec.model.batch_size) as f64;
+    imgs / (r.avg_iter() / 1e6)
+}
+
+fn main() {
+    println!("{:<14} {:<8} {:>12} {:>12} {:>12} {:>9}", "model", "scheme", "default/s",
+             "xla/s", "dPRO/s", "speedup");
+    for model in ["resnet50", "vgg16", "inception_v3", "bert_base"] {
+        for scheme in ["horovod", "byteps"] {
+            let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+            let deployed = baselines::deployed_default(&spec);
+            let t_default = throughput(&deployed);
+
+            let mut xla = deployed.clone();
+            xla.fusion = baselines::xla_auto_cluster(&xla.model);
+            let t_xla = throughput(&xla);
+
+            let out = optimize(&deployed, &SearchOpts { budget_wall_s: 25.0, ..Default::default() });
+            let t_dpro = throughput(&out.spec);
+
+            println!(
+                "{:<14} {:<8} {:>12.1} {:>12.1} {:>12.1} {:>8.2}x",
+                model,
+                scheme,
+                t_default,
+                t_xla,
+                t_dpro,
+                t_dpro / t_default.max(t_xla).max(1e-9)
+            );
+        }
+    }
+    println!("\n(samples/s on the ground-truth testbed, 16 GPUs, RDMA; dPRO column is the");
+    println!(" combined OPFS+TSFS strategy found by Alg. 1 with all accelerations)");
+}

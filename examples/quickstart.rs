@@ -1,0 +1,79 @@
+//! Quickstart: the full dPRO pipeline on one job —
+//! profile (testbed) → align → replay → diagnose → optimize → validate.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [model] [scheme] [transport]
+//! ```
+
+use dpro::baselines;
+use dpro::config::{JobSpec, Transport};
+use dpro::optimizer::{optimize, SearchOpts};
+use dpro::profiler;
+use dpro::testbed::{run as testbed_run, TestbedOpts};
+use dpro::util::stats::rel_err_pct;
+use dpro::util::{fmt_bytes, fmt_us};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet50");
+    let scheme = args.get(1).map(String::as_str).unwrap_or("horovod");
+    let transport = match args.get(2).map(String::as_str) {
+        Some("tcp") => Transport::Tcp,
+        _ => Transport::Rdma,
+    };
+
+    // A 16-GPU job with the communication library's *deployed defaults*
+    // (Horovod 64 MB fusion buckets / BytePS 4 MB partitions).
+    let spec = baselines::deployed_default(&JobSpec::standard(model, scheme, transport));
+    println!(
+        "== dPRO quickstart: {} × {} GPUs, {}, {} ==\n",
+        spec.model.name,
+        spec.cluster.n_workers,
+        spec.scheme.name(),
+        transport.name()
+    );
+
+    // 1. Profile: run the job on the ground-truth testbed and collect the
+    //    fine-grained global trace (what the paper's profiler collects).
+    let tb = testbed_run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
+    println!("[profile] ground-truth iteration: {}", fmt_us(tb.avg_iter()));
+    println!("[profile] {} trace events over 10 iterations", tb.trace.events.len());
+
+    // 2. Align + replay: reconstruct the global DFG from the trace and
+    //    simulate it (paper §4.2–4.3).
+    let est = profiler::estimate(&spec, &tb.trace, true);
+    let err = rel_err_pct(est.iteration_us(), tb.avg_iter());
+    println!("\n[replay] estimated iteration: {} (error {:.2}%)", fmt_us(est.iteration_us()), err);
+    println!("[replay] FW {} / BW {}", fmt_us(est.fw_us()), fmt_us(est.bw_us()));
+    println!("[replay] est. peak memory: {}  (truth {})",
+             fmt_bytes(est.peak_memory(&spec)), fmt_bytes(tb.peak_memory));
+
+    // 3. Diagnose: show the tail of the critical path.
+    let path = est.result.critical_path();
+    println!("\n[diagnose] critical path has {} ops; tail:", path.len());
+    let tail: Vec<_> = path.iter().rev().take(5).collect();
+    for &n in tail.iter().rev() {
+        let node = est.graph.dfg.node(*n);
+        println!("  {:50} {:>10}", node.name, fmt_us(node.duration));
+    }
+
+    // 4. Optimize: Alg. 1 with all accelerations.
+    let out = optimize(&spec, &SearchOpts { budget_wall_s: 30.0, ..Default::default() });
+    println!(
+        "\n[optimize] replayed {} → {} ({:.2}x) via {} passes in {:.1}s",
+        fmt_us(out.baseline_iteration_us),
+        fmt_us(out.est_iteration_us),
+        out.speedup(),
+        out.actions_applied,
+        out.wall_s
+    );
+
+    // 5. Validate on the ground truth (the measurement the paper reports).
+    let tb_opt = testbed_run(&out.spec, &TestbedOpts { iterations: 10, ..Default::default() });
+    println!(
+        "[validate] testbed: {} → {} ({:.2}x real speed-up)",
+        fmt_us(tb.avg_iter()),
+        fmt_us(tb_opt.avg_iter()),
+        tb.avg_iter() / tb_opt.avg_iter()
+    );
+}

@@ -1,0 +1,149 @@
+"""AOT lowering: JAX (L2, calling Pallas L1) → HLO **text** artifacts the
+Rust runtime loads via PJRT.
+
+HLO text, NOT `lowered.compile()`/`.serialize()`: jax ≥ 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+`xla` crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--config mini]
+
+Emits, per config:
+  gpt_<cfg>.init.hlo.txt        init(seed)                  -> flat params
+  gpt_<cfg>.grad.hlo.txt        grad_step(params, x, y)     -> (loss, grads)
+  gpt_<cfg>.apply.hlo.txt       apply_step(params, mom, gr) -> (params, mom)
+  gpt_<cfg>.train.hlo.txt       fused single-worker step
+  gpt_<cfg>.meta.json           param names/shapes (Rust-side marshalling)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def param_meta(cfg):
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    leaves, _ = flatten(params)
+    names = leaf_names(params)
+    return [
+        {"name": n, "shape": list(l.shape), "size": int(l.size)}
+        for n, l in zip(names, leaves)
+    ]
+
+
+def leaf_names(tree, prefix=""):
+    """Stable dotted names matching tree_flatten order (sorted dict keys)."""
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree.keys()):
+            out.extend(leaf_names(tree[k], f"{prefix}{k}."))
+        return out
+    return [prefix.rstrip(".")]
+
+
+def lower_config(cfg_name: str, out_dir: str):
+    cfg = getattr(M.GptConfig, cfg_name)()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    state = M.init_opt_state(params)
+    p_leaves, p_def = flatten(params)
+    s_leaves, s_def = flatten(state)
+    x = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+    y = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+
+    def init_flat(seed):
+        p = M.init_params(cfg, jax.random.PRNGKey(seed))
+        s = M.init_opt_state(p)
+        return tuple(flatten(p)[0] + flatten(s)[0])
+
+    def grad_flat(*args):
+        ps = jax.tree_util.tree_unflatten(p_def, args[: len(p_leaves)])
+        xx = args[len(p_leaves)]
+        yy = args[len(p_leaves) + 1]
+        loss, grads = M.grad_step(cfg, ps, xx, yy)
+        return tuple([loss] + flatten(grads)[0])
+
+    ns = len(s_leaves)
+
+    def apply_flat(*args):
+        n = len(p_leaves)
+        ps = jax.tree_util.tree_unflatten(p_def, args[:n])
+        st = jax.tree_util.tree_unflatten(s_def, args[n : n + ns])
+        gs = jax.tree_util.tree_unflatten(p_def, args[n + ns : n + ns + n])
+        np_, nst = M.apply_step(cfg, ps, st, gs)
+        return tuple(flatten(np_)[0] + flatten(nst)[0])
+
+    def train_flat(*args):
+        n = len(p_leaves)
+        ps = jax.tree_util.tree_unflatten(p_def, args[:n])
+        st = jax.tree_util.tree_unflatten(s_def, args[n : n + ns])
+        xx = args[n + ns]
+        yy = args[n + ns + 1]
+        loss, np_, nst = M.train_step(cfg, ps, st, xx, yy)
+        return tuple([loss] + flatten(np_)[0] + flatten(nst)[0])
+
+    jobs = {
+        "init": (init_flat, (jnp.int32(0),)),
+        "grad": (grad_flat, tuple(p_leaves) + (x, y)),
+        "apply": (apply_flat, tuple(p_leaves) + tuple(s_leaves) + tuple(p_leaves)),
+        "train": (train_flat, tuple(p_leaves) + tuple(s_leaves) + (x, y)),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, args) in jobs.items():
+        path = os.path.join(out_dir, f"gpt_{cfg_name}.{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.1f} MB)")
+
+    meta = {
+        "config": cfg_name,
+        "batch_size": cfg.batch_size,
+        "seq_len": cfg.seq_len,
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "vocab": cfg.vocab,
+        "n_state_leaves": len(s_leaves),
+        "params": param_meta(cfg),
+    }
+    with open(os.path.join(out_dir, f"gpt_{cfg_name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    n_params = sum(p["size"] for p in meta["params"])
+    print(f"config {cfg_name}: {n_params / 1e6:.1f}M params, {len(meta['params'])} tensors")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", action="append", default=None,
+                    help="tiny|mini|m100 (repeatable; default tiny+mini)")
+    args = ap.parse_args()
+    configs = args.config or ["tiny", "mini"]
+    for cfg in configs:
+        lower_config(cfg, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

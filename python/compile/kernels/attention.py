@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: fused causal attention (scores → mask → softmax → ·V).
+
+TPU-shaped (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch·heads, query blocks); each grid step holds one (BLOCK_Q × D) query
+tile in VMEM and streams the full K/V for that head — MXU-friendly matmuls
+with fp32 accumulation, BlockSpec expressing the HBM↔VMEM schedule a CUDA
+flash-attention kernel would express with threadblocks.
+
+On this image Pallas must run `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls); the lowered HLO is what the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q):
+    """One (batch·head, q-block) grid step."""
+    qi = pl.program_id(1)
+    q = q_ref[...]  # [block_q, d]
+    k = k_ref[...]  # [s, d]
+    v = v_ref[...]  # [s, d]
+    s = k.shape[0]
+    # scores for this query tile against all keys (MXU matmul, fp32 acc)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # causal mask: query row (qi*block_q + i) attends to keys <= that row
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, s), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (block_q, s), 1)
+    scores = jnp.where(k_pos <= q_pos, scores, -1e30)
+    # numerically-stable softmax in fp32
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def causal_attention(q, k, v, *, block_q=DEFAULT_BLOCK_Q, interpret=True):
+    """Fused causal attention over [B, H, S, D] via a Pallas kernel.
+
+    Shapes: S must be a multiple of block_q (callers pad otherwise).
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    assert s % block_q == 0, f"seq {s} not a multiple of block_q {block_q}"
+    scale = 1.0 / (d ** 0.5)
+
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, block_q=block_q)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_bytes(s, d, block_q=DEFAULT_BLOCK_Q, dtype_bytes=4):
+    """Estimated VMEM working set per grid step (DESIGN.md §Perf)."""
+    q_tile = block_q * d * dtype_bytes
+    kv = 2 * s * d * dtype_bytes
+    scores = block_q * s * 4  # fp32 accumulator
+    out = block_q * d * dtype_bytes
+    return q_tile + kv + scores + out
+
+
+def _auto_block(s):
+    for b in (DEFAULT_BLOCK_Q, 32, 16, 8, 4, 2, 1):
+        if b <= s and s % b == 0:
+            return b
+    return 1
+
+
+@jax.custom_vjp
+def causal_attention_ad(q, k, v):
+    """Differentiable wrapper: Pallas kernel forward, reference-formulation
+    backward (on a real TPU the backward would be a second Pallas kernel;
+    both lower into the same HLO module here)."""
+    return causal_attention(q, k, v, block_q=_auto_block(q.shape[2]))
+
+
+def _fwd(q, k, v):
+    return causal_attention_ad(q, k, v), (q, k, v)
+
+
+def _bwd(res, g):
+    from compile.kernels import ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(ref.causal_attention, q, k, v)
+    return vjp(g)
+
+
+causal_attention_ad.defvjp(_fwd, _bwd)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: fused LayerNorm (mean/var/normalize/affine in one
+VMEM-resident pass over row blocks)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # [rows, d]
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm(x, gamma, beta, *, eps=1e-5, block_rows=DEFAULT_BLOCK_ROWS, interpret=True):
+    """LayerNorm over the last axis of [N, D] (callers flatten)."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, f"rows {n} not a multiple of {block_rows}"
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def _auto_block(n):
+    for b in (DEFAULT_BLOCK_ROWS, 64, 32, 16, 8, 4, 2, 1):
+        if b <= n and n % b == 0:
+            return b
+    return 1
+
+
+@jax.custom_vjp
+def layernorm_ad(x, gamma, beta):
+    """Differentiable wrapper: Pallas forward, reference backward."""
+    return layernorm(x, gamma, beta, block_rows=_auto_block(x.shape[0]))
+
+
+def _fwd(x, gamma, beta):
+    return layernorm_ad(x, gamma, beta), (x, gamma, beta)
+
+
+def _bwd(res, g):
+    from compile.kernels import ref
+
+    x, gamma, beta = res
+    _, vjp = jax.vjp(ref.layernorm, x, gamma, beta)
+    return vjp(g)
+
+
+layernorm_ad.defvjp(_fwd, _bwd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every Pallas kernel in this package must match its reference here to
+float32 tolerance; pytest + hypothesis sweep shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention(q, k, v, scale=None):
+    """Causal self-attention over [B, H, S, D] tensors."""
+    _, _, _, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = q.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis of [..., D]."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,177 @@
+"""L2: GPT-style decoder LM in JAX, calling the L1 Pallas kernels.
+
+Mirrors `rust/src/models/transformer.rs` (GptConfig) so dPRO can profile
+the same architecture the Rust coordinator actually executes via PJRT.
+
+Exports three jittable functions (AOT-lowered by aot.py):
+  - init(seed)                         -> params + Adam state
+  - grad_step(params, x, y)            -> (loss, grads)       [per worker]
+  - apply_step(params, state, grads)   -> (params, state)     [leader]
+
+grad/apply are split so the Rust coordinator can do *data-parallel*
+training: workers run grad_step on their shards, the leader averages
+gradients (through the simulated network), applies the update once, and
+broadcasts. Python never runs at training time.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_k
+from compile.kernels import layernorm as ln_k
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    batch_size: int = 4
+    seq_len: int = 128
+    hidden: int = 384
+    layers: int = 6
+    heads: int = 6
+    vocab: int = 8192
+
+    @staticmethod
+    def tiny():
+        """Unit-test scale."""
+        return GptConfig(batch_size=2, seq_len=32, hidden=64, layers=2, heads=2, vocab=256)
+
+    @staticmethod
+    def mini(batch_size=4):
+        """~25M params: the config the e2e example trains for hundreds of steps."""
+        return GptConfig(batch_size=batch_size, seq_len=128, hidden=384, layers=6, heads=6, vocab=8192)
+
+    @staticmethod
+    def m100(batch_size=2):
+        """~117M params (GPT-2-small shaped): capacity demonstration."""
+        return GptConfig(batch_size=batch_size, seq_len=256, hidden=768, layers=12, heads=12, vocab=32768)
+
+    def num_params(self):
+        return sum(x.size for x in jax.tree_util.tree_leaves(init_params(self, jax.random.PRNGKey(0))))
+
+
+def init_params(cfg: GptConfig, key):
+    """Parameter pytree (dict of arrays)."""
+    h, ff = cfg.hidden, 4 * cfg.hidden
+    k = iter(jax.random.split(key, 4 + 10 * cfg.layers))
+
+    def dense(key, din, dout):
+        return jax.random.normal(key, (din, dout), jnp.float32) * (din ** -0.5)
+
+    params = {
+        "wte": jax.random.normal(next(k), (cfg.vocab, h), jnp.float32) * 0.02,
+        "wpe": jax.random.normal(next(k), (cfg.seq_len, h), jnp.float32) * 0.01,
+        "lnf_g": jnp.ones((h,)),
+        "lnf_b": jnp.zeros((h,)),
+    }
+    for l in range(cfg.layers):
+        params[f"l{l}"] = {
+            "ln1_g": jnp.ones((h,)),
+            "ln1_b": jnp.zeros((h,)),
+            "qkv": dense(next(k), h, 3 * h),
+            "qkv_b": jnp.zeros((3 * h,)),
+            "proj": dense(next(k), h, h),
+            "proj_b": jnp.zeros((h,)),
+            "ln2_g": jnp.ones((h,)),
+            "ln2_b": jnp.zeros((h,)),
+            "fc1": dense(next(k), h, ff),
+            "fc1_b": jnp.zeros((ff,)),
+            "fc2": dense(next(k), ff, h),
+            "fc2_b": jnp.zeros((h,)),
+        }
+    return params
+
+
+def init_opt_state(params):
+    """Adam state: first/second moments + step counter."""
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "t": jnp.float32(0.0)}
+
+
+# backwards-compatible alias used by tests
+init_momentum = init_opt_state
+
+
+def _ln(x, g, b):
+    """LayerNorm via the Pallas kernel ([B,S,H] flattened to rows)."""
+    bsz, s, h = x.shape
+    return ln_k.layernorm_ad(x.reshape(bsz * s, h), g, b).reshape(bsz, s, h)
+
+
+def forward(cfg: GptConfig, params, x):
+    """Logits [B, S, V] for token ids x [B, S]."""
+    h = cfg.hidden
+    tok = params["wte"][x]  # [B,S,H]
+    pos = params["wpe"][None, : x.shape[1], :]
+    z = tok + pos
+    for l in range(cfg.layers):
+        p = params[f"l{l}"]
+        zn = _ln(z, p["ln1_g"], p["ln1_b"])
+        qkv = zn @ p["qkv"] + p["qkv_b"]  # [B,S,3H]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        d = h // cfg.heads
+
+        def heads(t):
+            return t.reshape(t.shape[0], t.shape[1], cfg.heads, d).transpose(0, 2, 1, 3)
+
+        a = attn_k.causal_attention_ad(heads(q), heads(k), heads(v))
+        a = a.transpose(0, 2, 1, 3).reshape(z.shape)
+        z = z + a @ p["proj"] + p["proj_b"]
+        zn = _ln(z, p["ln2_g"], p["ln2_b"])
+        f = jax.nn.gelu(zn @ p["fc1"] + p["fc1_b"])
+        z = z + f @ p["fc2"] + p["fc2_b"]
+    z = _ln(z, params["lnf_g"], params["lnf_b"])
+    return z @ params["wte"].T  # weight-tied logits
+
+
+def loss_fn(cfg: GptConfig, params, x, y):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1).squeeze(-1)
+    return nll.mean()
+
+
+def grad_step(cfg: GptConfig, params, x, y):
+    """Per-worker step: (loss, grads)."""
+    return jax.value_and_grad(functools.partial(loss_fn, cfg))(params, x, y)
+
+
+def apply_step(cfg: GptConfig, params, state, grads, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """Leader step: Adam on averaged gradients."""
+    del cfg
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** t)) / (jnp.sqrt(v_ / (1 - b2 ** t)) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_step(cfg: GptConfig, params, state, x, y, lr=2e-3):
+    """Fused single-worker step (quickstart path): loss + update."""
+    loss, grads = grad_step(cfg, params, x, y)
+    params, state = apply_step(cfg, params, state, grads, lr=lr)
+    return loss, params, state
+
+
+def synthetic_batch(cfg: GptConfig, key):
+    """Synthetic corpus with learnable structure: token t+1 is a fixed
+    affine function of token t plus noise — the LM can drive loss well
+    below log(vocab) by learning the transition rule."""
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (cfg.batch_size, 1), 0, cfg.vocab)
+    steps = jax.random.randint(k2, (cfg.batch_size, cfg.seq_len), 0, 3)
+    toks = (start + jnp.cumsum(steps * 13 + 1, axis=1)) % cfg.vocab
+    x = toks[:, :-1]
+    y = toks[:, 1:]
+    # pad back to seq_len
+    x = jnp.pad(x, ((0, 0), (1, 0)))
+    y = jnp.pad(y, ((0, 0), (1, 0)))
+    return x, y

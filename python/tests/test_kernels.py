@@ -1,0 +1,92 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the core signal).
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+class TestAttention:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2]),
+        h=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([8, 16, 32, 64]),
+        d=st.sampled_from([8, 16, 32]),
+    )
+    def test_matches_reference(self, b, h, s, d):
+        keys = jax.random.split(jax.random.PRNGKey(b * 1000 + h * 100 + s + d), 3)
+        q, k, v = (rand(kk, (b, h, s, d)) for kk in keys)
+        got = attention.causal_attention(q, k, v, block_q=min(16, s))
+        want = ref.causal_attention(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Changing future keys/values must not change earlier outputs."""
+        key = jax.random.PRNGKey(0)
+        q, k, v = (rand(kk, (1, 2, 32, 16)) for kk in jax.random.split(key, 3))
+        base = attention.causal_attention(q, k, v, block_q=16)
+        k2 = k.at[:, :, 20:, :].set(99.0)
+        v2 = v.at[:, :, 20:, :].set(-99.0)
+        pert = attention.causal_attention(q, k2, v2, block_q=16)
+        np.testing.assert_allclose(base[:, :, :20], pert[:, :, :20], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(base[:, :, 21:], pert[:, :, 21:])
+
+    def test_block_size_invariance(self):
+        key = jax.random.PRNGKey(7)
+        q, k, v = (rand(kk, (2, 2, 64, 16)) for kk in jax.random.split(key, 3))
+        a = attention.causal_attention(q, k, v, block_q=16)
+        b = attention.causal_attention(q, k, v, block_q=64)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged_seq(self):
+        q = jnp.zeros((1, 1, 33, 8))
+        with pytest.raises(AssertionError):
+            attention.causal_attention(q, q, q, block_q=16)
+
+    def test_softmax_rows_bounded(self):
+        """Output is a convex combination of V rows."""
+        key = jax.random.PRNGKey(3)
+        q, k = (rand(kk, (1, 1, 32, 8)) for kk in jax.random.split(key, 2))
+        v = jnp.ones((1, 1, 32, 8))
+        out = attention.causal_attention(q, k, v, block_q=16)
+        np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+    def test_vmem_estimate_fits_budget(self):
+        # mini config: s=128, d=64 → well under 16 MB/core
+        assert attention.vmem_bytes(128, 64) < 16e6
+        assert attention.vmem_bytes(2048, 128) < 16e6
+
+
+class TestLayerNorm:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([8, 64, 128, 256]),
+        d=st.sampled_from([16, 64, 384]),
+    )
+    def test_matches_reference(self, n, d):
+        key = jax.random.PRNGKey(n + d)
+        x = rand(key, (n, d)) * 3.0 + 1.0
+        g = rand(jax.random.fold_in(key, 1), (d,))
+        b = rand(jax.random.fold_in(key, 2), (d,))
+        got = layernorm.layernorm(x, g, b, block_rows=min(64, n))
+        want = ref.layernorm(x, g, b)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_normalizes(self):
+        x = rand(jax.random.PRNGKey(1), (64, 384)) * 10 + 5
+        out = layernorm.layernorm(x, jnp.ones((384,)), jnp.zeros((384,)), block_rows=64)
+        np.testing.assert_allclose(np.asarray(out).mean(axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(out).std(axis=-1), 1.0, atol=1e-3)

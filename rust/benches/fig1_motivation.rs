@@ -1,0 +1,37 @@
+//! Paper Fig. 1 (motivation): training ResNet50 on a 100 Gbps fabric under
+//! four deployed configurations. Ground truth (testbed) varies by protocol
+//! and architecture; Daydream's size/bandwidth estimate stays flat.
+
+use dpro::baselines::{self, daydream};
+use dpro::config::{JobSpec, Transport};
+use dpro::profiler::corrected_profile;
+use dpro::testbed::{run, TestbedOpts};
+use dpro::util::print_table;
+
+fn main() {
+    println!("\n=== Fig. 1: ResNet50, 16 GPUs, 100 Gbps, batch 32/GPU ===\n");
+    let mut rows = Vec::new();
+    for (scheme, tp) in [
+        ("horovod", Transport::Rdma),
+        ("horovod", Transport::Tcp),
+        ("byteps", Transport::Rdma),
+        ("byteps", Transport::Tcp),
+    ] {
+        let spec = baselines::deployed_default(&JobSpec::standard("resnet50", scheme, tp));
+        let tb = run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
+        let db = corrected_profile(&tb.trace, &dpro::alignment::Alignment::identity());
+        let dd = daydream::estimate(&spec, Some(&db));
+        rows.push(vec![
+            format!("{}+{}", spec.scheme.name(), tp.name()),
+            format!("{:.1}", tb.avg_iter() / 1e3),
+            format!("{:.1}", dd.iteration_us / 1e3),
+            format!("{:+.1}%", 100.0 * (dd.iteration_us - tb.avg_iter()) / tb.avg_iter()),
+        ]);
+    }
+    print_table(
+        &["config", "ground truth (ms)", "Daydream (ms)", "Daydream bias"],
+        &rows,
+    );
+    println!("\npaper: real time varies strongly across the four configs while");
+    println!("Daydream's prediction stays ~constant (it only sees nominal bandwidth).");
+}

@@ -1,0 +1,47 @@
+//! Paper Fig. 7: replay accuracy of dPRO vs Daydream across models ×
+//! communication schemes × transports (16 GPUs, deployed defaults).
+//! Paper claim: dPRO < 5% in most cases; Daydream up to 70.2%.
+
+use dpro::baselines::{self, daydream};
+use dpro::config::{JobSpec, Transport};
+use dpro::profiler;
+use dpro::testbed::{run, TestbedOpts};
+use dpro::util::print_table;
+use dpro::util::stats::rel_err_pct;
+
+fn main() {
+    println!("\n=== Fig. 7: replay error vs ground truth (16 GPUs) ===\n");
+    let mut rows = Vec::new();
+    let mut dpro_errs = Vec::new();
+    let mut dd_errs = Vec::new();
+    for model in ["resnet50", "vgg16", "inception_v3", "bert_base"] {
+        for (scheme, tp) in [
+            ("horovod", Transport::Rdma),
+            ("horovod", Transport::Tcp),
+            ("byteps", Transport::Rdma),
+            ("byteps", Transport::Tcp),
+        ] {
+            let spec = baselines::deployed_default(&JobSpec::standard(model, scheme, tp));
+            let tb = run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
+            let est = profiler::estimate(&spec, &tb.trace, true);
+            let db = profiler::corrected_profile(&tb.trace, &dpro::alignment::Alignment::identity());
+            let dd = daydream::estimate(&spec, Some(&db));
+            let e_dpro = rel_err_pct(est.iteration_us(), tb.avg_iter());
+            let e_dd = rel_err_pct(dd.iteration_us, tb.avg_iter());
+            dpro_errs.push(e_dpro);
+            dd_errs.push(e_dd);
+            rows.push(vec![
+                model.to_string(),
+                format!("{}+{}", spec.scheme.name(), tp.name()),
+                format!("{:.1}", tb.avg_iter() / 1e3),
+                format!("{:.2}%", e_dpro),
+                format!("{:.2}%", e_dd),
+            ]);
+        }
+    }
+    print_table(&["model", "config", "truth (ms)", "dPRO err", "Daydream err"], &rows);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(0.0f64, f64::max);
+    println!("\ndPRO:     mean {:.2}%  max {:.2}%   (paper: <5% average)", mean(&dpro_errs), max(&dpro_errs));
+    println!("Daydream: mean {:.2}%  max {:.2}%   (paper: up to 70.2%)", mean(&dd_errs), max(&dd_errs));
+}

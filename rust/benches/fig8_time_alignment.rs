@@ -1,0 +1,38 @@
+//! Paper Fig. 8: effect of trace time alignment vs cluster size. Workers
+//! of the 8-GPU job share one machine (no drift — only the RECV launch
+//! error); larger clusters add NTP-grade clock drift.
+
+use dpro::baselines::deployed_default;
+use dpro::config::{ClusterSpec, CommPlan, FusionPlan, JobSpec, NetworkSpec, Transport};
+use dpro::profiler;
+use dpro::testbed::{run, TestbedOpts};
+use dpro::util::print_table;
+use dpro::util::stats::rel_err_pct;
+
+fn main() {
+    println!("\n=== Fig. 8: replay error w/ and w/o time alignment ===\n");
+    let mut rows = Vec::new();
+    for model in ["resnet50", "bert_base"] {
+        for gpus in [8usize, 16, 32, 64] {
+            let mut spec = JobSpec::standard(model, "horovod", Transport::Rdma);
+            spec.cluster = ClusterSpec::new(gpus, 8, NetworkSpec::rdma_100g());
+            // NTP-grade drift grows with cluster sprawl
+            spec.cluster.clock.drift_std_us = 800.0 * (gpus as f64 / 8.0);
+            spec.plan = CommPlan::per_tensor(&spec.model);
+            spec.fusion = FusionPlan::singletons(&spec.model);
+            let spec = deployed_default(&spec);
+            let tb = run(&spec, &TestbedOpts { iterations: 8, ..Default::default() });
+            let w = profiler::estimate(&spec, &tb.trace, true);
+            let wo = profiler::estimate(&spec, &tb.trace, false);
+            rows.push(vec![
+                model.to_string(),
+                format!("{gpus}"),
+                format!("{:.2}%", rel_err_pct(wo.iteration_us(), tb.avg_iter())),
+                format!("{:.2}%", rel_err_pct(w.iteration_us(), tb.avg_iter())),
+            ]);
+        }
+    }
+    print_table(&["model", "GPUs", "err w/o alignment", "err w/ alignment"], &rows);
+    println!("\npaper: w/o alignment up to 36.7% error, growing with cluster size;");
+    println!("alignment brings it under 5% everywhere (8-GPU error is pure RECV launch error).");
+}

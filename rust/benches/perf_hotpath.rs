@@ -1,0 +1,63 @@
+//! §Perf microbenchmarks of the L3 hot paths: global-DFG construction,
+//! replay throughput (ops/s), partial replay, alignment solve, and one
+//! full search. Used for the before/after log in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use dpro::baselines::deployed_default;
+use dpro::config::{ClusterSpec, CommPlan, FusionPlan, JobSpec, NetworkSpec, Transport};
+use dpro::graph::{build_global, AnalyticCost};
+use dpro::optimizer::{optimize, SearchOpts};
+use dpro::replay::Replayer;
+use dpro::testbed::{run, TestbedOpts};
+use dpro::util::print_table;
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for (model, gpus) in [("resnet50", 16usize), ("bert_base", 16), ("resnet50", 128)] {
+        let mut spec = JobSpec::standard(model, "horovod", Transport::Rdma);
+        spec.cluster = ClusterSpec::new(gpus, 8, NetworkSpec::rdma_100g());
+        spec.plan = CommPlan::per_tensor(&spec.model);
+        spec.fusion = FusionPlan::singletons(&spec.model);
+        let (g, t_build) = time(|| build_global(&spec, &AnalyticCost::new(&spec)));
+        let (_, t_nameless) = time(|| dpro::graph::build_global_nameless(&spec, &AnalyticCost::new(&spec)));
+        let mut rp = Replayer::new(&g);
+        // warm
+        rp.replay(&g);
+        let reps = if gpus > 64 { 3 } else { 20 };
+        let (_, t_replay) = time(|| {
+            for _ in 0..reps {
+                rp.replay(&g);
+            }
+        });
+        let per_replay = t_replay / reps as f64;
+        rows.push(vec![
+            format!("{model}@{gpus}"),
+            format!("{}", g.dfg.len()),
+            format!("{:.1}", t_build * 1e3),
+            format!("{:.1}", t_nameless * 1e3),
+            format!("{:.2}", per_replay * 1e3),
+            format!("{:.2}M", g.dfg.len() as f64 / per_replay / 1e6),
+        ]);
+    }
+    println!("\n=== replayer hot path ===\n");
+    print_table(&["graph", "nodes", "build (ms)", "build nameless (ms)", "replay (ms)", "ops/s"], &rows);
+
+    // alignment solve
+    let spec = deployed_default(&JobSpec::standard("resnet50", "horovod", Transport::Tcp));
+    let tb = run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
+    let (a, t_align) = time(|| dpro::alignment::align(&tb.trace, 1.0, 1.0));
+    println!("\nalignment: {} offsets from {} events in {:.2}s ({} iters)",
+             a.theta.len(), tb.trace.events.len(), t_align, a.iterations);
+
+    // end-to-end search
+    let (out, t_search) = time(|| optimize(&spec, &SearchOpts { budget_wall_s: 60.0, ..Default::default() }));
+    println!("search: {:.2}s wall, {} replays, {} actions, speedup {:.2}x",
+             t_search, out.replays, out.actions_applied, out.speedup());
+}

@@ -1,0 +1,248 @@
+//! Solver for the alignment objective (paper §4.2 uses CVXPY; we implement
+//! a projected-gradient / quadratic-penalty method specialized to the
+//! problem: tens of variables, thousands of residual terms).
+//!
+//! Objective (minimize over θ, with θ₀ = 0):
+//!   a₁ · Σ_families Var(clipped recv durations)            (O₁)
+//! + a₂ · Σ_machines Var(θ of procs on the machine)          (O₂)
+//! + ρ  · Σ_deps  max(0, (tᵢ+θᵢ) − (tⱼ+θⱼ))²                (constraints)
+//!
+//! O₁'s `max` makes the objective piecewise-quadratic; we use the
+//! subgradient of the active branch, which is exact almost everywhere, with
+//! Adam-style steps and a growing penalty weight. Converges in a few
+//! hundred iterations for the traces we produce (≤ ~150 processes).
+
+use super::Problem;
+
+pub struct Solution {
+    pub theta: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// Evaluate objective and gradient at θ.
+fn eval(p: &Problem, a1: f64, a2: f64, rho: f64, theta: &[f64], grad: &mut [f64]) -> f64 {
+    for g in grad.iter_mut() {
+        *g = 0.0;
+    }
+    let n_fam = p.obs.iter().map(|o| o.family).max().map(|m| m as usize + 1).unwrap_or(0);
+
+    // O1: per-family variance of clipped durations.
+    // duration d_k = ed_j + θ_j − max(st_j + θ_j, st_i + θ_i)
+    // d(d_k)/dθ_j = 1 − [recv branch active]; d(d_k)/dθ_i = −[send branch active]
+    let mut sums = vec![0.0f64; n_fam];
+    let mut counts = vec![0u32; n_fam];
+    let mut durs = vec![0.0f64; p.obs.len()];
+    let mut branch_send = vec![false; p.obs.len()];
+    for (k, o) in p.obs.iter().enumerate() {
+        let j = p.index[&o.recv_proc];
+        let i = p.index[&o.send_proc];
+        let recv_start = o.recv_st + theta[j];
+        let send_start = o.send_st + theta[i];
+        let send_active = send_start > recv_start;
+        let d = (o.recv_ed + theta[j]) - recv_start.max(send_start);
+        durs[k] = d;
+        branch_send[k] = send_active;
+        sums[o.family as usize] += d;
+        counts[o.family as usize] += 1;
+    }
+    let mut obj = 0.0;
+    // variance gradient: d/dd_k Var = 2 (d_k − mean) / n
+    for (k, o) in p.obs.iter().enumerate() {
+        let f = o.family as usize;
+        let n = counts[f] as f64;
+        if n < 2.0 {
+            continue;
+        }
+        let mean = sums[f] / n;
+        let dev = durs[k] - mean;
+        obj += a1 * dev * dev / n;
+        let g = a1 * 2.0 * dev / n;
+        let j = p.index[&o.recv_proc];
+        let i = p.index[&o.send_proc];
+        if branch_send[k] {
+            // d = ed_j + θ_j − st_i − θ_i
+            grad[j] += g;
+            grad[i] -= g;
+        }
+        // else d = ed_j − st_j: no θ dependence
+    }
+
+    // O2: variance of θ per machine
+    let n_machines = p.machine_of.iter().map(|&m| m as usize + 1).max().unwrap_or(0);
+    let mut msum = vec![0.0f64; n_machines];
+    let mut mcnt = vec![0u32; n_machines];
+    for (i, &m) in p.machine_of.iter().enumerate() {
+        msum[m as usize] += theta[i];
+        mcnt[m as usize] += 1;
+    }
+    for (i, &m) in p.machine_of.iter().enumerate() {
+        let n = mcnt[m as usize] as f64;
+        if n < 2.0 {
+            continue;
+        }
+        let dev = theta[i] - msum[m as usize] / n;
+        obj += a2 * dev * dev / n;
+        grad[i] += a2 * 2.0 * dev / n;
+    }
+
+    // Tie-breaker: the variance is flat wherever *every* family member is
+    // clipped by its SEND, so among variance-minimal θ we prefer the least
+    // clipping (trust measured RECV starts unless O₁ disagrees). Small
+    // quadratic penalty on the clip amount.
+    let eps = 0.02 * a1;
+    for o in p.obs.iter() {
+        let j = p.index[&o.recv_proc];
+        let i = p.index[&o.send_proc];
+        let clip = (o.send_st + theta[i]) - (o.recv_st + theta[j]);
+        if clip > 0.0 {
+            obj += eps * clip * clip / p.obs.len() as f64;
+            let g = eps * 2.0 * clip / p.obs.len() as f64;
+            grad[i] += g;
+            grad[j] -= g;
+        }
+    }
+
+    // dependency penalty: (t_i + θ_i) ≤ (t_j + θ_j)
+    for &(i, ti, j, tj) in &p.deps {
+        let v = (ti + theta[i]) - (tj + theta[j]);
+        if v > 0.0 {
+            obj += rho * v * v;
+            grad[i] += rho * 2.0 * v;
+            grad[j] -= rho * 2.0 * v;
+        }
+    }
+
+    // θ₀ pinned to 0
+    grad[0] = 0.0;
+    obj
+}
+
+/// Solve with Adam + growing penalty. Deterministic.
+pub fn solve(p: &Problem, a1: f64, a2: f64) -> Solution {
+    let n = p.procs.len();
+    let mut theta = vec![0.0f64; n];
+
+    // Warm start: per-proc median of (recv_ed − send_st) offsets would need
+    // true durations; instead initialize θ_j so the *minimum* observed
+    // (send_st + θ_i) − recv_st gap is zero-ish: use mean of
+    // send_st − recv_st per receiving proc (sender assumed aligned).
+    let mut acc = vec![(0.0f64, 0u32); n];
+    for o in &p.obs {
+        let j = p.index[&o.recv_proc];
+        acc[j].0 += o.send_st - o.recv_st;
+        acc[j].1 += 1;
+    }
+    for jdx in 1..n {
+        if acc[jdx].1 > 0 {
+            theta[jdx] = acc[jdx].0 / acc[jdx].1 as f64;
+        }
+    }
+    theta[0] = 0.0;
+
+    let mut grad = vec![0.0f64; n];
+    let mut m = vec![0.0f64; n];
+    let mut v = vec![0.0f64; n];
+    let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+    let mut rho = 1e-4;
+    let mut obj = f64::INFINITY;
+    let mut iters = 0;
+    let max_iters = 4000;
+    let mut last_improve = 0;
+    let mut best = f64::INFINITY;
+
+    for t in 1..=max_iters {
+        iters = t;
+        obj = eval(p, a1, a2, rho, &theta, &mut grad);
+        if obj < best - 1e-9 * (1.0 + best.abs()) {
+            best = obj;
+            last_improve = t;
+        } else if t - last_improve > 200 {
+            break; // converged at this penalty level
+        }
+        let lr = 50.0 / (1.0 + t as f64 / 500.0);
+        for i in 1..n {
+            m[i] = b1 * m[i] + (1.0 - b1) * grad[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * grad[i] * grad[i];
+            let mh = m[i] / (1.0 - b1.powi(t as i32));
+            let vh = v[i] / (1.0 - b2.powi(t as i32));
+            theta[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+        if t % 500 == 0 {
+            rho *= 4.0; // tighten constraints over time
+            best = f64::INFINITY;
+        }
+    }
+    Solution { theta, objective: obj, iterations: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alignment::RecvObs;
+    use std::collections::HashMap;
+
+    /// Two procs; recv durations within a family should be equalizable by
+    /// shifting θ₁.
+    fn toy_problem() -> Problem {
+        let mut index = HashMap::new();
+        index.insert(0u16, 0usize);
+        index.insert(1u16, 1usize);
+        let mut obs = Vec::new();
+        // family 0: true transfer 50, recorded with recv clock +1000 and
+        // launch 20 early
+        for it in 0..6 {
+            let t = 500.0 * it as f64;
+            obs.push(RecvObs {
+                family: 0,
+                recv_proc: 1,
+                send_proc: 0,
+                recv_st: t - 20.0 + 1000.0,
+                recv_ed: t + 50.0 + 1000.0,
+                send_st: t,
+            });
+        }
+        let deps = obs
+            .iter()
+            .map(|o| (0usize, o.send_st, 1usize, o.recv_ed))
+            .collect();
+        Problem {
+            procs: vec![0, 1],
+            machine_of: vec![0, 1],
+            obs,
+            deps,
+            index,
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = toy_problem();
+        let theta = vec![0.0, -900.0];
+        let mut grad = vec![0.0; 2];
+        let obj = eval(&p, 1.0, 1.0, 1.0, &theta, &mut grad);
+        let h = 1e-4;
+        let mut tp = theta.clone();
+        tp[1] += h;
+        let mut tmp = vec![0.0; 2];
+        let obj2 = eval(&p, 1.0, 1.0, 1.0, &tp, &mut tmp);
+        let fd = (obj2 - obj) / h;
+        assert!(
+            (fd - grad[1]).abs() < 1e-2 * (1.0 + fd.abs()),
+            "fd={fd} grad={}",
+            grad[1]
+        );
+    }
+
+    #[test]
+    fn solves_toy_to_low_objective() {
+        let p = toy_problem();
+        let sol = solve(&p, 1.0, 1.0);
+        // the drift is -1000; anything within ±80 us collapses variance
+        assert!(
+            (sol.theta[1] + 1000.0).abs() < 80.0,
+            "theta1={}",
+            sol.theta[1]
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Command-line interface (paper §6 "APIs and Commands").
+//!
+//! ```text
+//! dpro profile  --model resnet50 --scheme horovod --transport rdma -o trace.json
+//! dpro replay   --model resnet50 --scheme horovod --transport rdma --trace trace.json
+//! dpro align    --trace trace.json
+//! dpro optimize --model resnet50 --scheme horovod --transport rdma
+//! dpro train    --config mini --workers 4 --steps 50
+//! dpro report   --model bert_base
+//! ```
+
+use crate::baselines;
+use crate::config::{JobSpec, Transport};
+use crate::optimizer::{optimize, SearchOpts};
+use crate::profiler;
+use crate::testbed::{run as tb_run, TestbedOpts};
+use crate::trace::GTrace;
+use crate::util::{fmt_bytes, fmt_us, Args};
+
+pub fn run(args: Args) -> i32 {
+    match args.positional.first().map(String::as_str) {
+        Some("profile") => cmd_profile(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("align") => cmd_align(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("train") => cmd_train(&args),
+        Some("report") => cmd_report(&args),
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            0
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "dpro {} — profiling & optimization for distributed DNN training\n\n\
+         commands:\n  \
+         profile  --model M --scheme S --transport T [-o trace.json] [--iters 10]\n  \
+         replay   --model M --scheme S --transport T --trace trace.json [--no-align]\n  \
+         align    --trace trace.json\n  \
+         optimize --model M --scheme S --transport T [--budget-s 60] [--strawman]\n  \
+         train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n  \
+         report   --model M [--scheme S] [--transport T]\n\n\
+         models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
+         schemes: horovod byteps   transports: rdma tcp",
+        crate::version()
+    );
+}
+
+fn job_from_args(args: &Args) -> JobSpec {
+    let model = args.get_or("model", "resnet50");
+    let scheme = args.get_or("scheme", "horovod");
+    let transport = match args.get_or("transport", "rdma").as_str() {
+        "tcp" => Transport::Tcp,
+        _ => Transport::Rdma,
+    };
+    let mut spec = JobSpec::standard(&model, &scheme, transport);
+    if let Some(w) = args.get("workers") {
+        let w: usize = w.parse().unwrap_or(16);
+        spec.cluster.n_workers = w;
+    }
+    if args.flag("deployed") || !args.flag("per-tensor") {
+        spec = baselines::deployed_default(&spec);
+    }
+    spec
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    let spec = job_from_args(args);
+    let iters = args.usize("iters", 10);
+    let out = args.get_or("o", "trace.json");
+    println!(
+        "profiling {} × {} workers ({}, {}) for {iters} iterations on the testbed...",
+        spec.model.name,
+        spec.cluster.n_workers,
+        spec.scheme.name(),
+        spec.cluster.network.transport.name()
+    );
+    let r = tb_run(&spec, &TestbedOpts { iterations: iters, ..Default::default() });
+    println!("ground-truth iteration: {}", fmt_us(r.avg_iter()));
+    println!("peak memory (worker 0): {}", fmt_bytes(r.peak_memory));
+    match r.trace.save(&out) {
+        Ok(()) => {
+            println!("wrote {} events to {out}", r.trace.events.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing {out}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_replay(args: &Args) -> i32 {
+    let spec = job_from_args(args);
+    let path = args.get_or("trace", "trace.json");
+    let trace = match GTrace::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error loading {path}: {e}");
+            return 1;
+        }
+    };
+    let aligned = !args.flag("no-align");
+    let est = profiler::estimate(&spec, &trace, aligned);
+    println!(
+        "replayed {} ops (alignment: {})",
+        est.graph.dfg.len(),
+        if aligned { "on" } else { "off" }
+    );
+    println!("estimated iteration: {}", fmt_us(est.iteration_us()));
+    println!("  forward:  {}", fmt_us(est.fw_us()));
+    println!("  backward: {}", fmt_us(est.bw_us()));
+    println!("  est. peak memory: {}", fmt_bytes(est.peak_memory(&spec)));
+    0
+}
+
+fn cmd_align(args: &Args) -> i32 {
+    let path = args.get_or("trace", "trace.json");
+    let trace = match GTrace::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error loading {path}: {e}");
+            return 1;
+        }
+    };
+    let a = crate::alignment::align(&trace, 1.0, 1.0);
+    println!("solved {} clock offsets in {} iterations (objective {:.3})",
+             a.theta.len(), a.iterations, a.objective);
+    let mut procs: Vec<_> = a.theta.iter().collect();
+    procs.sort_by_key(|(p, _)| **p);
+    for (proc, theta) in procs {
+        println!("  proc {proc:4}: θ = {theta:+.1} us");
+    }
+    0
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    let spec = job_from_args(args);
+    let mut opts = if args.flag("strawman") { SearchOpts::strawman() } else { SearchOpts::default() };
+    opts.budget_wall_s = args.f64("budget-s", 60.0);
+    if let Some(b) = args.get("memory-budget-gb") {
+        opts.memory_budget_bytes = b.parse::<f64>().ok().map(|g| g * 1e9);
+    }
+    println!(
+        "optimizing {} × {} workers ({}, {})...",
+        spec.model.name,
+        spec.cluster.n_workers,
+        spec.scheme.name(),
+        spec.cluster.network.transport.name()
+    );
+    let out = optimize(&spec, &opts);
+    println!("baseline iteration (replayed): {}", fmt_us(out.baseline_iteration_us));
+    println!("optimized iteration (replayed): {}", fmt_us(out.est_iteration_us));
+    println!("speed-up: {:.2}x  ({} passes applied, {} replays, {:.1}s search)",
+             out.speedup(), out.actions_applied, out.replays, out.wall_s);
+    println!("memory pass: {}", out.mem_opt.name());
+    // validate on the testbed
+    let base = tb_run(&spec, &TestbedOpts { iterations: 5, ..Default::default() });
+    let opt = tb_run(&out.spec, &TestbedOpts { iterations: 5, ..Default::default() });
+    println!(
+        "testbed validation: {} -> {} ({:.2}x real speed-up)",
+        fmt_us(base.avg_iter()),
+        fmt_us(opt.avg_iter()),
+        base.avg_iter() / opt.avg_iter()
+    );
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let cfg = crate::coordinator::TrainCfg {
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        config: args.get_or("config", "mini"),
+        n_workers: args.usize("workers", 4),
+        steps: args.usize("steps", 50),
+        seed: args.u64("seed", 17),
+        log_every: args.usize("log-every", 10),
+        ..Default::default()
+    };
+    match crate::coordinator::train(&cfg) {
+        Ok(report) => {
+            println!(
+                "final loss {:.4} after {} steps; throughput {:.0} tokens/s ({} params)",
+                report.final_loss(),
+                report.losses.len(),
+                report.tokens_per_s(),
+                report.n_params
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    let spec = job_from_args(args);
+    let tb = tb_run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
+    let est = profiler::estimate(&spec, &tb.trace, true);
+    let dd = baselines::daydream::estimate(
+        &spec,
+        Some(&profiler::corrected_profile(&tb.trace, &crate::alignment::Alignment::identity())),
+    );
+    let truth = tb.avg_iter();
+    println!("=== {} / {} / {} / {} workers ===",
+             spec.model.name, spec.scheme.name(),
+             spec.cluster.network.transport.name(), spec.cluster.n_workers);
+    println!("ground truth : {}", fmt_us(truth));
+    println!("dPRO replay  : {}  (err {:.2}%)", fmt_us(est.iteration_us()),
+             crate::util::stats::rel_err_pct(est.iteration_us(), truth));
+    println!("Daydream     : {}  (err {:.2}%)", fmt_us(dd.iteration_us),
+             crate::util::stats::rel_err_pct(dd.iteration_us, truth));
+    0
+}

@@ -1,0 +1,408 @@
+//! Job/cluster specifications: everything needed to run a training job on
+//! the testbed, to build its global DFG, and for the optimizer to rewrite.
+
+use crate::graph::dfg::TensorId;
+use crate::models::cost::GpuModel;
+use crate::models::ModelGraph;
+use crate::util::Us;
+
+/// Inter-server transport. The two cases differ in achievable efficiency,
+/// per-message overhead and latency — exactly the effects Daydream's
+/// `size/bandwidth` estimate ignores (paper Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    Tcp,
+    Rdma,
+}
+
+impl Transport {
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Tcp => "TCP",
+            Transport::Rdma => "RDMA",
+        }
+    }
+}
+
+/// Network model of the cluster fabric.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub transport: Transport,
+    /// Nominal NIC bandwidth in Gbit/s (100 in the paper's testbed).
+    pub nic_gbps: f64,
+    /// Intra-machine GPU interconnect bandwidth in Gbit/s (NVLink).
+    pub nvlink_gbps: f64,
+}
+
+impl NetworkSpec {
+    pub fn tcp_100g() -> NetworkSpec {
+        NetworkSpec { transport: Transport::Tcp, nic_gbps: 100.0, nvlink_gbps: 1200.0 }
+    }
+
+    pub fn rdma_100g() -> NetworkSpec {
+        NetworkSpec { transport: Transport::Rdma, nic_gbps: 100.0, nvlink_gbps: 1200.0 }
+    }
+
+    /// Fraction of nominal bandwidth large transfers achieve. TCP on
+    /// 100 GbE is CPU-bound in practice (kernel stack, copies, congestion
+    /// control): a single stream lands near 30–40 Gbps.
+    pub fn efficiency(&self) -> f64 {
+        match self.transport {
+            Transport::Tcp => 0.34,
+            Transport::Rdma => 0.94,
+        }
+    }
+
+    /// Fixed per-message cost on the sending side (syscall / doorbell,
+    /// protocol headers), microseconds.
+    pub fn per_msg_overhead_us(&self) -> Us {
+        match self.transport {
+            Transport::Tcp => 25.0,
+            Transport::Rdma => 4.0,
+        }
+    }
+
+    /// One-way propagation + switching latency, microseconds.
+    pub fn base_latency_us(&self) -> Us {
+        match self.transport {
+            Transport::Tcp => 18.0,
+            Transport::Rdma => 2.5,
+        }
+    }
+
+    /// Wire time of `bytes` on the NIC at achieved bandwidth (us), without
+    /// per-message overhead.
+    pub fn wire_time_us(&self, bytes: f64) -> Us {
+        bytes * 8.0 / (self.nic_gbps * 1e9 * self.efficiency()) * 1e6
+    }
+
+    /// Intra-machine transfer time over NVLink (us).
+    pub fn nvlink_time_us(&self, bytes: f64) -> Us {
+        bytes * 8.0 / (self.nvlink_gbps * 1e9 * 0.85) * 1e6 + 3.0
+    }
+}
+
+/// Per-machine clock behaviour injected by the testbed (paper §2.2: NTP
+/// leaves ms-level drift; RECV launch timestamps mismeasure transfers).
+#[derive(Clone, Debug)]
+pub struct ClockSpec {
+    /// Std-dev of the per-machine clock offset (us). NTP-grade ≈ 1–3 ms.
+    pub drift_std_us: f64,
+    /// If true, RECV trace events report the op *launch* time rather than
+    /// when data actually started arriving (paper §2.2 factor 2).
+    pub recv_launch_error: bool,
+}
+
+impl Default for ClockSpec {
+    fn default() -> Self {
+        ClockSpec { drift_std_us: 1500.0, recv_launch_error: true }
+    }
+}
+
+/// The machines + devices the job runs on.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub n_workers: usize,
+    pub gpus_per_machine: usize,
+    pub gpu: GpuModel,
+    pub network: NetworkSpec,
+    pub clock: ClockSpec,
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    pub fn new(n_workers: usize, gpus_per_machine: usize, network: NetworkSpec) -> ClusterSpec {
+        ClusterSpec {
+            n_workers,
+            gpus_per_machine,
+            gpu: GpuModel::default(),
+            network,
+            clock: ClockSpec::default(),
+            seed: 42,
+        }
+    }
+
+    /// Paper default testbed: 16 GPUs on 2 servers (8 per machine).
+    pub fn default_16(transport: Transport) -> ClusterSpec {
+        let net = match transport {
+            Transport::Tcp => NetworkSpec::tcp_100g(),
+            Transport::Rdma => NetworkSpec::rdma_100g(),
+        };
+        ClusterSpec::new(16, 8, net)
+    }
+
+    pub fn n_machines(&self) -> usize {
+        (self.n_workers + self.gpus_per_machine - 1) / self.gpus_per_machine
+    }
+
+    pub fn machine_of(&self, worker: usize) -> usize {
+        worker / self.gpus_per_machine
+    }
+
+    /// Workers located on machine `m`.
+    pub fn workers_on(&self, m: usize) -> Vec<usize> {
+        (0..self.n_workers).filter(|&w| self.machine_of(w) == m).collect()
+    }
+}
+
+/// Gradient-synchronization architecture.
+#[derive(Clone, Debug)]
+pub enum CommScheme {
+    /// Horovod-style collective AllReduce (hierarchical ring across
+    /// machines, NVLink reduce/broadcast within a machine).
+    AllReduce(ArSpec),
+    /// BytePS-style parameter servers (PUSH/PULL with tensor partitions).
+    Ps(PsSpec),
+}
+
+impl CommScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommScheme::AllReduce(_) => "Horovod",
+            CommScheme::Ps(_) => "BytePS",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArSpec {
+    /// Coordinator negotiation cycle time (us): a ready tensor waits on
+    /// average half a cycle before its collective is scheduled.
+    pub cycle_time_us: Us,
+}
+
+impl Default for ArSpec {
+    fn default() -> Self {
+        ArSpec { cycle_time_us: 2000.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PsSpec {
+    /// Number of parameter-server processes (one per machine by default —
+    /// BytePS colocated mode).
+    pub n_servers: usize,
+    /// Server-side aggregation throughput, bytes/s (summation on CPU).
+    pub agg_bytes_per_s: f64,
+}
+
+impl PsSpec {
+    pub fn for_cluster(c: &ClusterSpec) -> PsSpec {
+        PsSpec { n_servers: c.n_machines().max(1), agg_bytes_per_s: 24.0e9 }
+    }
+}
+
+/// How tensors are grouped (fusion) and sliced (partition) for
+/// synchronization — the structure the optimizer's tensor-fusion and
+/// tensor-partition passes rewrite.
+#[derive(Clone, Debug)]
+pub struct TensorGroup {
+    /// Template tensor ids fused into one synchronization unit.
+    pub tensors: Vec<TensorId>,
+    /// Number of equal slices the fused tensor is split into.
+    pub partitions: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct CommPlan {
+    pub groups: Vec<TensorGroup>,
+}
+
+impl CommPlan {
+    /// One group per tensor, no partitioning — the unoptimized plan.
+    pub fn per_tensor(model: &ModelGraph) -> CommPlan {
+        CommPlan {
+            groups: (0..model.tensors.len() as TensorId)
+                .map(|t| TensorGroup { tensors: vec![t], partitions: 1 })
+                .collect(),
+        }
+    }
+
+    /// Fused-tensor bytes of a group.
+    pub fn group_bytes(&self, model: &ModelGraph, gi: usize) -> f64 {
+        self.groups[gi].tensors.iter().map(|&t| model.tensors[t as usize].bytes).sum()
+    }
+
+    /// Validate: every tensor appears in exactly one group; partitions >= 1.
+    pub fn validate(&self, model: &ModelGraph) -> Result<(), String> {
+        let mut seen = vec![false; model.tensors.len()];
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.partitions == 0 {
+                return Err(format!("group {gi} has 0 partitions"));
+            }
+            if g.tensors.is_empty() {
+                return Err(format!("group {gi} empty"));
+            }
+            for &t in &g.tensors {
+                let i = t as usize;
+                if i >= seen.len() {
+                    return Err(format!("group {gi} references unknown tensor {t}"));
+                }
+                if seen[i] {
+                    return Err(format!("tensor {t} in multiple groups"));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(t) = seen.iter().position(|&s| !s) {
+            return Err(format!("tensor {t} not in any group"));
+        }
+        Ok(())
+    }
+}
+
+/// How computation ops are clustered into fused kernels — the structure
+/// the op-fusion pass (and the XLA auto-clustering baseline) rewrites.
+/// Mirrors [`CommPlan`]: the template itself is never mutated.
+#[derive(Clone, Debug)]
+pub struct FusionPlan {
+    /// Disjoint groups of template op ids; each group executes as one
+    /// fused kernel. Singleton groups = unfused ops.
+    pub groups: Vec<Vec<u32>>,
+    /// group index of each template op (derived; kept in sync)
+    pub group_of: Vec<u32>,
+}
+
+impl FusionPlan {
+    pub fn singletons(model: &ModelGraph) -> FusionPlan {
+        FusionPlan {
+            groups: (0..model.ops.len() as u32).map(|i| vec![i]).collect(),
+            group_of: (0..model.ops.len() as u32).collect(),
+        }
+    }
+
+    pub fn rebuild_index(&mut self, n_ops: usize) {
+        self.group_of = vec![0; n_ops];
+        for (gi, g) in self.groups.iter().enumerate() {
+            for &op in g {
+                self.group_of[op as usize] = gi as u32;
+            }
+        }
+    }
+
+    /// Fused kernel duration of group `gi` (one launch overhead, slight
+    /// locality gain — see [`crate::models::cost::GpuModel::fused_time`]).
+    pub fn duration(&self, model: &ModelGraph, gpu: &crate::models::cost::GpuModel, gi: usize) -> Us {
+        let g = &self.groups[gi];
+        if g.len() == 1 {
+            return model.ops[g[0] as usize].duration(gpu);
+        }
+        let times: Vec<Us> = g.iter().map(|&i| model.ops[i as usize].duration(gpu)).collect();
+        gpu.fused_time(&times)
+    }
+
+    pub fn validate(&self, model: &ModelGraph) -> Result<(), String> {
+        let mut seen = vec![false; model.ops.len()];
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.is_empty() {
+                return Err(format!("fusion group {gi} empty"));
+            }
+            let kind = model.ops[g[0] as usize].kind;
+            for &op in g {
+                let i = op as usize;
+                if i >= seen.len() {
+                    return Err(format!("fusion group {gi} references op {op}"));
+                }
+                if seen[i] {
+                    return Err(format!("op {op} in multiple fusion groups"));
+                }
+                if model.ops[i].kind != kind {
+                    return Err(format!("fusion group {gi} mixes op kinds"));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(i) = seen.iter().position(|&s| !s) {
+            return Err(format!("op {i} not in any fusion group"));
+        }
+        Ok(())
+    }
+}
+
+/// A complete training-job specification: what the testbed executes and
+/// what the global DFG is built from.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub model: ModelGraph,
+    pub cluster: ClusterSpec,
+    pub scheme: CommScheme,
+    pub plan: CommPlan,
+    pub fusion: FusionPlan,
+}
+
+impl JobSpec {
+    pub fn new(model: ModelGraph, cluster: ClusterSpec, scheme: CommScheme) -> JobSpec {
+        let plan = CommPlan::per_tensor(&model);
+        let fusion = FusionPlan::singletons(&model);
+        JobSpec { model, cluster, scheme, plan, fusion }
+    }
+
+    /// Paper-default job: model × 16 GPUs/2 machines × scheme × transport.
+    pub fn standard(model_name: &str, scheme_name: &str, transport: Transport) -> JobSpec {
+        let model = crate::models::by_name(model_name, 32)
+            .unwrap_or_else(|| panic!("unknown model {model_name}"));
+        let cluster = ClusterSpec::default_16(transport);
+        let scheme = match scheme_name {
+            "horovod" | "allreduce" => CommScheme::AllReduce(ArSpec::default()),
+            "byteps" | "ps" => CommScheme::Ps(PsSpec::for_cluster(&cluster)),
+            other => panic!("unknown scheme {other}"),
+        };
+        JobSpec::new(model, cluster, scheme)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn cluster_layout() {
+        let c = ClusterSpec::default_16(Transport::Rdma);
+        assert_eq!(c.n_machines(), 2);
+        assert_eq!(c.machine_of(7), 0);
+        assert_eq!(c.machine_of(8), 1);
+        assert_eq!(c.workers_on(1), (8..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn network_models_differ() {
+        let tcp = NetworkSpec::tcp_100g();
+        let rdma = NetworkSpec::rdma_100g();
+        assert!(tcp.wire_time_us(4.0e6) > rdma.wire_time_us(4.0e6));
+        assert!(tcp.per_msg_overhead_us() > rdma.per_msg_overhead_us());
+        // 4 MB at ~94 Gbps ≈ 340 us
+        let t = rdma.wire_time_us(4.0e6);
+        assert!((300.0..400.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn per_tensor_plan_valid() {
+        let m = models::by_name("resnet50", 8).unwrap();
+        let plan = CommPlan::per_tensor(&m);
+        assert_eq!(plan.validate(&m), Ok(()));
+        assert_eq!(plan.groups.len(), m.tensors.len());
+    }
+
+    #[test]
+    fn plan_validation_catches_errors() {
+        let m = models::by_name("vgg16", 8).unwrap();
+        let mut plan = CommPlan::per_tensor(&m);
+        plan.groups[0].tensors.push(1); // duplicate of group 1's tensor
+        assert!(plan.validate(&m).is_err());
+        let mut plan2 = CommPlan::per_tensor(&m);
+        plan2.groups.pop();
+        assert!(plan2.validate(&m).is_err());
+    }
+
+    #[test]
+    fn standard_jobs_construct() {
+        for scheme in ["horovod", "byteps"] {
+            for transport in [Transport::Tcp, Transport::Rdma] {
+                let j = JobSpec::standard("resnet50", scheme, transport);
+                assert_eq!(j.cluster.n_workers, 16);
+                assert_eq!(j.plan.validate(&j.model), Ok(()));
+            }
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! The live data-parallel training coordinator: the Rust "leader" that
+//! drives the AOT-compiled JAX/Pallas train step through PJRT across
+//! simulated data-parallel workers, synchronizing gradients through the
+//! testbed's network model, and profiling itself with dPRO's trace format.
+//!
+//! Computation times are **real** (PJRT execution wall time); network
+//! times are simulated (this box has one CPU and no NICs — see DESIGN.md
+//! §Substitutions). dPRO's profiler/replayer consume the resulting gTrace
+//! exactly as they would a hardware trace.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::NetworkSpec;
+use crate::graph::dfg::OpKind;
+use crate::runtime::{scalar_f32, tokens_literal, GptArtifacts, Runtime};
+use crate::trace::{GTrace, TraceEvent};
+use crate::util::rng::Pcg;
+use crate::util::Us;
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub artifacts_dir: PathBuf,
+    pub config: String,
+    pub n_workers: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Simulated inter-worker fabric for gradient synchronization.
+    pub network: NetworkSpec,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            artifacts_dir: PathBuf::from("artifacts"),
+            config: "mini".into(),
+            n_workers: 4,
+            steps: 50,
+            seed: 17,
+            log_every: 10,
+            network: NetworkSpec::rdma_100g(),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    /// wall seconds per step (compute, real)
+    pub grad_wall_s: Vec<f64>,
+    pub apply_wall_s: Vec<f64>,
+    /// simulated AllReduce time per step (us)
+    pub sim_comm_us: Vec<Us>,
+    pub tokens_per_step: usize,
+    pub trace: GTrace,
+    pub n_params: usize,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    /// Effective training throughput (tokens/s) counting real compute and
+    /// simulated communication.
+    pub fn tokens_per_s(&self) -> f64 {
+        let total: f64 = self
+            .grad_wall_s
+            .iter()
+            .zip(&self.apply_wall_s)
+            .zip(&self.sim_comm_us)
+            .map(|((g, a), c)| g + a + c / 1e6)
+            .sum();
+        self.tokens_per_step as f64 * self.losses.len() as f64 / total
+    }
+}
+
+/// Synthetic corpus batch (same transition rule as model.synthetic_batch:
+/// next = cur + 13·s + 1 mod vocab, s ∈ {0,1,2}).
+pub fn synthetic_batch(
+    rng: &mut Pcg,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut x = vec![0i32; batch * seq];
+    let mut y = vec![0i32; batch * seq];
+    for b in 0..batch {
+        let mut tok = rng.below(vocab) as i64;
+        for t in 1..seq {
+            let s = rng.below(3) as i64;
+            let next = (tok + 13 * s + 1) % vocab as i64;
+            x[b * seq + t] = next as i32;
+            if t >= 1 {
+                y[b * seq + t - 1] = if t == 1 { 0 } else { next as i32 };
+            }
+            // y is x shifted left: y[t] = x[t+1]
+            tok = next;
+        }
+        // fix up y to be exactly x shifted left
+        for t in 0..seq - 1 {
+            y[b * seq + t] = x[b * seq + t + 1];
+        }
+        y[b * seq + seq - 1] = 0;
+    }
+    (x, y)
+}
+
+/// Simulated ring-allreduce time for `bytes` across `n` workers (the same
+/// model as `NetworkSpec` + the analytic cost in graph::build).
+pub fn allreduce_time_us(net: &NetworkSpec, bytes: f64, n: usize) -> Us {
+    if n <= 1 {
+        return 0.0;
+    }
+    let volume = 2.0 * (n as f64 - 1.0) / n as f64 * bytes;
+    let steps = 2 * (n - 1);
+    net.wire_time_us(volume) + steps as f64 * (net.per_msg_overhead_us() + net.base_latency_us())
+}
+
+/// Run live data-parallel training. Workers share one PJRT CPU device
+/// (time-sliced); gradients are averaged by the leader in Rust.
+pub fn train(cfg: &TrainCfg) -> Result<TrainReport> {
+    let rt = Runtime::cpu()?;
+    let art = GptArtifacts::load(&rt, cfg.artifacts_dir.clone(), &cfg.config)?;
+    let meta = &art.meta;
+    let n = meta.n_params();
+    let grad_bytes = meta.total_elems() as f64 * 4.0;
+    let mut rng = Pcg::seeded(cfg.seed);
+
+    // init params + opt state on the leader
+    let mut state: Vec<xla::Literal> = art.init.run(&[xla::Literal::scalar(cfg.seed as i32)])?;
+    assert_eq!(state.len(), n + meta.n_state_leaves, "init arity");
+
+    let mut report = TrainReport {
+        tokens_per_step: cfg.n_workers * meta.batch_size * meta.seq_len,
+        n_params: meta.total_elems(),
+        ..Default::default()
+    };
+    let mut clock: Us = 0.0; // simulated global clock for the trace
+    let t_run = Instant::now();
+
+    for step in 0..cfg.steps {
+        // ---- per-worker gradient computation (real PJRT execution) ----
+        let mut grad_sum: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut loss_sum = 0.0f32;
+        let mut grad_wall = 0.0f64;
+        let mut max_worker_us: Us = 0.0;
+        for w in 0..cfg.n_workers {
+            let (x, y) = synthetic_batch(&mut rng, meta.batch_size, meta.seq_len, meta.vocab);
+            let xl = tokens_literal(&x, meta.batch_size, meta.seq_len)?;
+            let yl = tokens_literal(&y, meta.batch_size, meta.seq_len)?;
+            let mut args: Vec<&xla::Literal> = state[..n].iter().collect();
+            args.push(&xl);
+            args.push(&yl);
+            let t0 = Instant::now();
+            let out = art.grad.run(&args)?;
+            let dur = t0.elapsed().as_secs_f64();
+            grad_wall += dur;
+            max_worker_us = max_worker_us.max(dur * 1e6);
+            loss_sum += scalar_f32(&out[0])?;
+            for (i, g) in out[1..].iter().enumerate() {
+                let v = g.to_vec::<f32>()?;
+                if w == 0 {
+                    grad_sum.push(v);
+                } else {
+                    for (a, b) in grad_sum[i].iter_mut().zip(v) {
+                        *a += b;
+                    }
+                }
+            }
+            report.trace.events.push(TraceEvent {
+                name: format!("w{w}.BW.grad_step"),
+                kind: OpKind::Backward,
+                ts: clock,
+                dur: dur * 1e6,
+                proc: w as u16,
+                machine: (w / 8) as u16,
+                iter: step as u32,
+                txid: None,
+            });
+        }
+
+        // ---- simulated gradient AllReduce ----
+        let comm_us = allreduce_time_us(&cfg.network, grad_bytes, cfg.n_workers);
+        report.trace.events.push(TraceEvent {
+            name: "allreduce.grads".into(),
+            kind: OpKind::Recv,
+            ts: clock + max_worker_us,
+            dur: comm_us,
+            proc: 0,
+            machine: 0,
+            iter: step as u32,
+            txid: Some(step as u64 + 1),
+        });
+
+        // ---- leader update (real PJRT execution) ----
+        let inv = 1.0 / cfg.n_workers as f32;
+        let avg: Vec<xla::Literal> = grad_sum
+            .iter()
+            .zip(&meta.params)
+            .map(|(g, pm)| {
+                let scaled: Vec<f32> = g.iter().map(|x| x * inv).collect();
+                let dims: Vec<i64> = pm.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&scaled);
+                if dims.is_empty() {
+                    lit
+                } else {
+                    lit.reshape(&dims).unwrap()
+                }
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut args: Vec<&xla::Literal> = state.iter().collect();
+        let avg_refs: Vec<&xla::Literal> = avg.iter().collect();
+        args.extend(avg_refs);
+        let new_state = art.apply.run(&args)?;
+        let apply_dur = t0.elapsed().as_secs_f64();
+        report.trace.events.push(TraceEvent {
+            name: "w0.UPD.apply_step".into(),
+            kind: OpKind::Update,
+            ts: clock + max_worker_us + comm_us,
+            dur: apply_dur * 1e6,
+            proc: 0,
+            machine: 0,
+            iter: step as u32,
+            txid: None,
+        });
+        state = new_state;
+
+        let loss = loss_sum / cfg.n_workers as f32;
+        report.losses.push(loss);
+        report.grad_wall_s.push(grad_wall);
+        report.apply_wall_s.push(apply_dur);
+        report.sim_comm_us.push(comm_us);
+        clock += max_worker_us + comm_us + apply_dur * 1e6;
+
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            log::info!(
+                "step {step:4}  loss {loss:.4}  grad {:.2}s  comm(sim) {:.1}ms  apply {:.2}s",
+                grad_wall,
+                comm_us / 1e3,
+                apply_dur
+            );
+            println!(
+                "step {step:4}  loss {loss:.4}  grad {grad_wall:.2}s  comm(sim) {:.1}ms  apply {apply_dur:.2}s",
+                comm_us / 1e3
+            );
+        }
+    }
+    report.trace.n_workers = cfg.n_workers;
+    report.trace.n_procs = cfg.n_workers;
+    report.trace.iterations = cfg.steps;
+    log::info!("trained {} steps in {:.1}s", cfg.steps, t_run.elapsed().as_secs_f64());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_batch_shifted() {
+        let mut rng = Pcg::seeded(1);
+        let (x, y) = synthetic_batch(&mut rng, 2, 16, 256);
+        assert_eq!(x.len(), 32);
+        for b in 0..2 {
+            for t in 0..15 {
+                assert_eq!(y[b * 16 + t], x[b * 16 + t + 1]);
+            }
+        }
+        assert!(x.iter().all(|&t| t >= 0 && t < 256));
+    }
+
+    #[test]
+    fn allreduce_time_scales() {
+        let net = NetworkSpec::rdma_100g();
+        let t4 = allreduce_time_us(&net, 64.0e6, 4);
+        let t16 = allreduce_time_us(&net, 64.0e6, 16);
+        assert!(t16 > t4);
+        assert_eq!(allreduce_time_us(&net, 64.0e6, 1), 0.0);
+        // 64 MB at ~94 Gbps ring ≈ 8-12 ms
+        assert!((4_000.0..20_000.0).contains(&t16), "t16={t16}");
+    }
+
+    // PJRT-dependent tests live in rust/tests/integration.rs (they need
+    // built artifacts).
+}

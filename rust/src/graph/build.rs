@@ -1,0 +1,709 @@
+//! Global-DFG construction (paper §4.1): connect per-worker local DFGs with
+//! the fine-grained communication topology of the chosen synchronization
+//! scheme, via In/Out virtual ops and producer/consumer (SEND/RECV) pairs
+//! labelled with transaction ids.
+//!
+//! Op names are deterministic and shared with the testbed's trace emitter,
+//! so measured traces can be joined back onto the skeleton by name.
+
+use std::collections::HashMap;
+
+use crate::config::{ClusterSpec, CommScheme, JobSpec};
+use crate::graph::dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorMeta};
+use crate::util::Us;
+
+/// Supplies op durations during construction. `AnalyticCost` derives them
+/// from the cluster spec; the profiler swaps in measured averages.
+pub trait CostProvider {
+    /// Duration of *fusion group* `group_id` on `worker` (singleton groups
+    /// are plain template ops).
+    fn comp(&self, worker: usize, group_id: u32) -> Us;
+    /// TX-side occupancy of sending `bytes` (one message).
+    fn send(&self, bytes: f64, intra_machine: bool) -> Us;
+    /// RX-side occupancy of receiving `bytes` (one message).
+    fn recv(&self, bytes: f64, intra_machine: bool) -> Us;
+    /// Coordinator negotiation delay for one tensor group (AllReduce).
+    fn negotiate(&self) -> Us;
+    /// NVLink reduce of `bytes` across the GPUs of one machine.
+    fn reduce_local(&self, bytes: f64, n_gpus: usize) -> Us;
+    /// NVLink broadcast of `bytes` to the GPUs of one machine.
+    fn bcast_local(&self, bytes: f64, n_gpus: usize) -> Us;
+    /// PS server-side aggregation of one pushed partition.
+    fn aggregate(&self, bytes: f64) -> Us;
+    /// Optimizer update for `bytes` of parameters on a worker.
+    fn update(&self, bytes: f64) -> Us;
+    /// GPU-side kernel time a collective/copy costs *on the worker's GPU*
+    /// (NCCL reduce-scatter/all-gather kernels, D2H/H2D staging): the
+    /// compute/communication contention term Daydream does not model.
+    fn gpu_collective(&self, bytes: f64) -> Us;
+}
+
+/// Cost model implied by the job spec (no noise — expectation values).
+pub struct AnalyticCost<'a> {
+    pub spec: &'a JobSpec,
+}
+
+impl<'a> AnalyticCost<'a> {
+    pub fn new(spec: &'a JobSpec) -> Self {
+        AnalyticCost { spec }
+    }
+}
+
+impl CostProvider for AnalyticCost<'_> {
+    fn comp(&self, _worker: usize, group_id: u32) -> Us {
+        self.spec.fusion.duration(&self.spec.model, &self.spec.cluster.gpu, group_id as usize)
+    }
+
+    fn send(&self, bytes: f64, intra: bool) -> Us {
+        let net = &self.spec.cluster.network;
+        if intra {
+            net.nvlink_time_us(bytes)
+        } else {
+            net.per_msg_overhead_us() + net.wire_time_us(bytes)
+        }
+    }
+
+    fn recv(&self, bytes: f64, intra: bool) -> Us {
+        let net = &self.spec.cluster.network;
+        if intra {
+            net.nvlink_time_us(bytes)
+        } else {
+            net.base_latency_us() + net.wire_time_us(bytes)
+        }
+    }
+
+    fn negotiate(&self) -> Us {
+        match &self.spec.scheme {
+            CommScheme::AllReduce(ar) => ar.cycle_time_us * 0.5,
+            CommScheme::Ps(_) => 0.0,
+        }
+    }
+
+    fn reduce_local(&self, bytes: f64, n_gpus: usize) -> Us {
+        if n_gpus <= 1 {
+            return 0.0;
+        }
+        // ring-reduce within the machine over NVLink
+        self.spec.cluster.network.nvlink_time_us(bytes) * 2.0 * (n_gpus - 1) as f64
+            / n_gpus as f64
+    }
+
+    fn bcast_local(&self, bytes: f64, n_gpus: usize) -> Us {
+        if n_gpus <= 1 {
+            return 0.0;
+        }
+        self.spec.cluster.network.nvlink_time_us(bytes)
+    }
+
+    fn aggregate(&self, bytes: f64) -> Us {
+        match &self.spec.scheme {
+            CommScheme::Ps(ps) => bytes / ps.agg_bytes_per_s * 1e6,
+            CommScheme::AllReduce(_) => 0.0,
+        }
+    }
+
+    fn update(&self, bytes: f64) -> Us {
+        // SGD+momentum: ~4 passes over the parameter bytes, memory-bound.
+        let gpu = &self.spec.cluster.gpu;
+        gpu.launch_overhead_us + 4.0 * bytes / gpu.mem_bw * 1e6
+    }
+
+    fn gpu_collective(&self, bytes: f64) -> Us {
+        // kernel launch + stream sync (~90 us) + reduction/copy at ~40 GB/s
+        90.0 + bytes / 40.0e9 * 1e6
+    }
+}
+
+/// The constructed global DFG plus lookup tables used by replay, partial
+/// replay and the optimizer.
+#[derive(Clone, Debug)]
+pub struct GlobalDfg {
+    pub dfg: Dfg,
+    /// comp node of (worker, fusion-group id); with the default singleton
+    /// fusion plan, group id == template op id
+    pub comp_node: HashMap<(u16, u32), NodeId>,
+    /// all communication-chain node ids of each tensor group (for partial
+    /// replay of a tensor's synchronization, paper §5.3)
+    pub group_nodes: Vec<Vec<NodeId>>,
+    /// Out virtual ops per (worker, group)
+    pub group_out: HashMap<(u16, usize), Vec<NodeId>>,
+    /// update node per (worker, group)
+    pub update_node: HashMap<(u16, usize), NodeId>,
+    pub n_workers: usize,
+}
+
+/// Build the global DFG for a job. See module docs for naming scheme.
+pub fn build_global(spec: &JobSpec, cost: &dyn CostProvider) -> GlobalDfg {
+    build_global_opts(spec, cost, true)
+}
+
+/// §Perf: the optimizer's search replays thousands of freshly-built graphs
+/// whose node *names* are never read (durations come from the cost model,
+/// not a trace join). `with_names = false` skips ~1 string allocation per
+/// node — the dominant cost of construction at 128-GPU scale.
+pub fn build_global_nameless(spec: &JobSpec, cost: &dyn CostProvider) -> GlobalDfg {
+    build_global_opts(spec, cost, false)
+}
+
+fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) -> GlobalDfg {
+    let cluster = &spec.cluster;
+    let model = &spec.model;
+    let n_workers = cluster.n_workers;
+    let mut dfg = Dfg::new();
+    let mut comp_node: HashMap<(u16, u32), NodeId> = HashMap::new();
+    let mut group_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); spec.plan.groups.len()];
+    let mut group_out: HashMap<(u16, usize), Vec<NodeId>> = HashMap::new();
+    let mut update_node: HashMap<(u16, usize), NodeId> = HashMap::new();
+
+    macro_rules! name {
+        ($($arg:tt)*) => {
+            if with_names { format!($($arg)*) } else { String::new() }
+        };
+    }
+
+    // ---- local DFGs: per-worker computation ops (one node per fusion
+    // group; the default singleton plan gives one node per template op) ----
+    let fusion = &spec.fusion;
+    for w in 0..n_workers as u16 {
+        for (gi, members) in fusion.groups.iter().enumerate() {
+            let first = &model.ops[members[0] as usize];
+            let name = if !with_names {
+                String::new()
+            } else if members.len() == 1 {
+                format!("w{w}.{}", first.name)
+            } else {
+                format!("w{w}.FUSED.{}x{}", members.iter().min().unwrap(), members.len())
+            };
+            let id = dfg.add(Node {
+                name,
+                kind: first.kind,
+                device: DeviceKey::Gpu(w),
+                duration: cost.comp(w as usize, gi as u32),
+                owner: w,
+                proc: w,
+                tensor: None,
+                txid: None,
+                template_id: Some(gi as u32),
+            });
+            comp_node.insert((w, gi as u32), id);
+        }
+        // edges between groups (dedup via Dfg::edge)
+        for (gi, members) in fusion.groups.iter().enumerate() {
+            for &m in members {
+                for &d in &model.ops[m as usize].deps {
+                    let dg = fusion.group_of[d as usize];
+                    if dg as usize != gi {
+                        dfg.edge(comp_node[&(w, dg)], comp_node[&(w, gi as u32)]);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- communication topology per tensor group ----
+    let mut txid: u64 = 1;
+    for (gi, group) in spec.plan.groups.iter().enumerate() {
+        let gbytes = spec.plan.group_bytes(model, gi);
+        let producers: Vec<u32> = group
+            .tensors
+            .iter()
+            .filter_map(|&t| model.producer_of(t))
+            .map(|op| spec.fusion.group_of[op as usize])
+            .collect();
+
+        // In virtual op per worker: all producers of the group's tensors.
+        let mut in_ops: Vec<NodeId> = Vec::with_capacity(n_workers);
+        for w in 0..n_workers as u16 {
+            let id = dfg.add(Node {
+                tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
+                ..Node::virtual_op(name!("w{w}.IN.g{gi}"), OpKind::In, w)
+            });
+            for &p in &producers {
+                dfg.edge(comp_node[&(w, p)], id);
+            }
+            in_ops.push(id);
+            group_nodes[gi].push(id);
+        }
+
+        let k = group.partitions.max(1);
+        let pbytes = gbytes / k as f64;
+        let mut out_per_worker: Vec<Vec<NodeId>> = vec![Vec::new(); n_workers];
+
+        match &spec.scheme {
+            CommScheme::AllReduce(_) => {
+                // negotiation op: coordinator serializes group scheduling
+                let neg = dfg.add(Node {
+                    name: name!("neg.g{gi}"),
+                    kind: OpKind::Negotiate,
+                    // a delay, not an exclusive resource: Null device means
+                    // "elapses without queuing" in testbed and replayer
+                    device: DeviceKey::Null,
+                    duration: cost.negotiate(),
+                    owner: 0,
+                    proc: crate::graph::dfg::COORD_PROC,
+                    tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
+                    txid: None,
+                    template_id: None,
+                });
+                for &i in &in_ops {
+                    dfg.edge(i, neg);
+                }
+                group_nodes[gi].push(neg);
+                for p in 0..k {
+                    build_allreduce_partition(
+                        &mut dfg, cluster, cost, with_names, gi, p, pbytes, neg,
+                        &mut out_per_worker, &mut group_nodes[gi], &mut txid,
+                    );
+                }
+            }
+            CommScheme::Ps(ps) => {
+                for p in 0..k {
+                    let server = (gi + p) % ps.n_servers;
+                    build_ps_partition(
+                        &mut dfg, cluster, cost, with_names, gi, p, pbytes, server, &in_ops,
+                        &mut out_per_worker, &mut group_nodes[gi], &mut txid,
+                    );
+                }
+            }
+        }
+
+        // Out virtual op + update per worker
+        for w in 0..n_workers as u16 {
+            let out = dfg.add(Node {
+                tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
+                ..Node::virtual_op(name!("w{w}.OUT.g{gi}"), OpKind::Out, w)
+            });
+            for &o in &out_per_worker[w as usize] {
+                dfg.edge(o, out);
+            }
+            group_nodes[gi].push(out);
+            group_out.entry((w, gi)).or_default().push(out);
+
+            let upd = dfg.add(Node {
+                name: name!("w{w}.UPD.g{gi}"),
+                kind: OpKind::Update,
+                device: DeviceKey::Gpu(w),
+                duration: cost.update(gbytes),
+                owner: w,
+                proc: w,
+                tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
+                txid: None,
+                template_id: None,
+            });
+            dfg.edge(out, upd);
+            update_node.insert((w, gi), upd);
+        }
+    }
+
+    debug_assert!(dfg.is_dag());
+    GlobalDfg { dfg, comp_node, group_nodes, group_out, update_node, n_workers }
+}
+
+/// AllReduce for one partition, modeled as NCCL models it: NVLink reduce
+/// within each machine, then a flat-ring equivalent across machine NICs —
+/// `2(N−1)` pipelined chunk steps of `bytes/N` each, so every NIC crossing
+/// carries the full `2(N−1)/N × bytes` ring volume with per-chunk latency
+/// — and an NVLink broadcast back to local GPUs.
+#[allow(clippy::too_many_arguments)]
+fn build_allreduce_partition(
+    dfg: &mut Dfg,
+    cluster: &ClusterSpec,
+    cost: &dyn CostProvider,
+    with_names: bool,
+    gi: usize,
+    p: usize,
+    pbytes: f64,
+    neg: NodeId,
+    out_per_worker: &mut [Vec<NodeId>],
+    gnodes: &mut Vec<NodeId>,
+    txid: &mut u64,
+) {
+    let m_count = cluster.n_machines();
+    let meta = |bytes: f64| Some(TensorMeta { tensor_id: gi as u32, bytes });
+    macro_rules! name {
+        ($($arg:tt)*) => {
+            if with_names { format!($($arg)*) } else { String::new() }
+        };
+    }
+
+    // per-worker GPU reduce-scatter kernel, then NVLink reduce per machine
+    let mut reduced: Vec<NodeId> = Vec::with_capacity(m_count);
+    for m in 0..m_count {
+        let gpus = cluster.workers_on(m);
+        let mut rs_ops = Vec::with_capacity(gpus.len());
+        for &w in &gpus {
+            let rs = dfg.add(Node {
+                name: name!("w{w}.NCCL_RS.g{gi}.p{p}"),
+                kind: OpKind::Aggregate,
+                device: DeviceKey::Gpu(w as u16),
+                duration: cost.gpu_collective(pbytes),
+                owner: w as u16,
+                proc: w as u16,
+                tensor: meta(pbytes),
+                txid: None,
+                template_id: None,
+            });
+            dfg.edge(neg, rs);
+            rs_ops.push(rs);
+            gnodes.push(rs);
+        }
+        let id = dfg.add(Node {
+            name: name!("m{m}.RED.g{gi}.p{p}"),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::NvLink(m as u16),
+            duration: cost.reduce_local(pbytes, gpus.len()),
+            owner: gpus[0] as u16,
+            proc: gpus[0] as u16,
+            tensor: meta(pbytes),
+            txid: None,
+            template_id: None,
+        });
+        for &rs in &rs_ops {
+            dfg.edge(rs, id);
+        }
+        reduced.push(id);
+        gnodes.push(id);
+    }
+
+    // ring across machines: 2(N-1) flat-ring chunk steps of bytes/N
+    let mut last_recv: Vec<NodeId> = reduced.clone();
+    if m_count > 1 {
+        let n = cluster.n_workers;
+        let chunk = pbytes / n as f64;
+        let steps = 2 * (n - 1);
+        let mut prev_send: Vec<Option<NodeId>> = vec![None; m_count];
+        for step in 0..steps {
+            let mut this_recv: Vec<NodeId> = vec![0; m_count];
+            for m in 0..m_count {
+                let dst = (m + 1) % m_count;
+                let tid = *txid;
+                *txid += 1;
+                let send = dfg.add(Node {
+                    name: name!("m{m}.SEND.g{gi}.p{p}.s{step}"),
+                    kind: OpKind::Send,
+                    device: DeviceKey::LinkTx(m as u16),
+                    duration: cost.send(chunk, false),
+                    owner: cluster.workers_on(m)[0] as u16,
+                    proc: cluster.workers_on(m)[0] as u16,
+                    tensor: meta(chunk),
+                    txid: Some(tid),
+                    template_id: None,
+                });
+                // forward what we received last step (or the local reduction)
+                dfg.edge(last_recv[m], send);
+                if let Some(ps) = prev_send[m] {
+                    dfg.edge(ps, send);
+                }
+                let recv = dfg.add(Node {
+                    name: name!("m{dst}.RECV.g{gi}.p{p}.s{step}"),
+                    kind: OpKind::Recv,
+                    device: DeviceKey::LinkRx(dst as u16),
+                    duration: cost.recv(chunk, false),
+                    owner: cluster.workers_on(dst)[0] as u16,
+                    proc: cluster.workers_on(dst)[0] as u16,
+                    tensor: meta(chunk),
+                    txid: Some(tid),
+                    template_id: None,
+                });
+                dfg.edge(send, recv);
+                this_recv[dst] = recv;
+                prev_send[m] = Some(send);
+                gnodes.push(send);
+                gnodes.push(recv);
+            }
+            last_recv = this_recv;
+        }
+    }
+
+    // local broadcast + per-worker GPU all-gather kernel feeding Out
+    for m in 0..m_count {
+        let gpus = cluster.workers_on(m);
+        let bc = dfg.add(Node {
+            name: name!("m{m}.BCAST.g{gi}.p{p}"),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::NvLink(m as u16),
+            duration: cost.bcast_local(pbytes, gpus.len()),
+            owner: gpus[0] as u16,
+            proc: gpus[0] as u16,
+            tensor: meta(pbytes),
+            txid: None,
+            template_id: None,
+        });
+        dfg.edge(last_recv[m], bc);
+        gnodes.push(bc);
+        for w in gpus {
+            let ag = dfg.add(Node {
+                name: name!("w{w}.NCCL_AG.g{gi}.p{p}"),
+                kind: OpKind::Aggregate,
+                device: DeviceKey::Gpu(w as u16),
+                duration: cost.gpu_collective(pbytes),
+                owner: w as u16,
+                proc: w as u16,
+                tensor: meta(pbytes),
+                txid: None,
+                template_id: None,
+            });
+            dfg.edge(bc, ag);
+            gnodes.push(ag);
+            out_per_worker[w].push(ag);
+        }
+    }
+}
+
+/// PS PUSH/PULL for one partition on its assigned server: each worker
+/// pushes (SEND→RECV), the server aggregates each contribution, and once
+/// all contributions are in, each worker pulls (SEND→RECV).
+#[allow(clippy::too_many_arguments)]
+fn build_ps_partition(
+    dfg: &mut Dfg,
+    cluster: &ClusterSpec,
+    cost: &dyn CostProvider,
+    with_names: bool,
+    gi: usize,
+    p: usize,
+    pbytes: f64,
+    server: usize,
+    in_ops: &[NodeId],
+    out_per_worker: &mut [Vec<NodeId>],
+    gnodes: &mut Vec<NodeId>,
+    txid: &mut u64,
+) {
+    let n_workers = cluster.n_workers;
+    let meta = Some(TensorMeta { tensor_id: gi as u32, bytes: pbytes });
+    macro_rules! name {
+        ($($arg:tt)*) => {
+            if with_names { format!($($arg)*) } else { String::new() }
+        };
+    }
+    // PS `server` runs on machine `server` (colocated mode).
+    let server_machine = server % cluster.n_machines().max(1);
+    let mut aggs: Vec<NodeId> = Vec::with_capacity(n_workers);
+
+    for w in 0..n_workers {
+        let wm = cluster.machine_of(w);
+        let intra = wm == server_machine;
+        let tid = *txid;
+        *txid += 1;
+        let d2h = dfg.add(Node {
+            name: name!("w{w}.D2H.g{gi}.p{p}"),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::Gpu(w as u16),
+            duration: cost.gpu_collective(pbytes),
+            owner: w as u16,
+            proc: w as u16,
+            tensor: meta,
+            txid: None,
+            template_id: None,
+        });
+        dfg.edge(in_ops[w], d2h);
+        gnodes.push(d2h);
+        let push_send = dfg.add(Node {
+            name: name!("w{w}.PUSH_SEND.g{gi}.p{p}"),
+            kind: OpKind::Send,
+            device: if intra { DeviceKey::NvLink(wm as u16) } else { DeviceKey::LinkTx(wm as u16) },
+            duration: cost.send(pbytes, intra),
+            owner: w as u16,
+            proc: w as u16,
+            tensor: meta,
+            txid: Some(tid),
+            template_id: None,
+        });
+        dfg.edge(d2h, push_send);
+        let push_recv = dfg.add(Node {
+            name: name!("s{server}.PUSH_RECV.g{gi}.p{p}.w{w}"),
+            kind: OpKind::Recv,
+            device: if intra {
+                DeviceKey::NvLink(server_machine as u16)
+            } else {
+                DeviceKey::LinkRx(server_machine as u16)
+            },
+            duration: if intra { 0.0 } else { cost.recv(pbytes, false) },
+            owner: w as u16,
+            proc: (cluster.n_workers + server) as u16,
+            tensor: meta,
+            txid: Some(tid),
+            template_id: None,
+        });
+        dfg.edge(push_send, push_recv);
+        let agg = dfg.add(Node {
+            name: name!("s{server}.AGG.g{gi}.p{p}.w{w}"),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::PsCpu(server as u16),
+            duration: cost.aggregate(pbytes),
+            owner: w as u16,
+            proc: (cluster.n_workers + server) as u16,
+            tensor: meta,
+            txid: None,
+            template_id: None,
+        });
+        dfg.edge(push_recv, agg);
+        aggs.push(agg);
+        gnodes.extend_from_slice(&[push_send, push_recv, agg]);
+    }
+
+    for w in 0..n_workers {
+        let wm = cluster.machine_of(w);
+        let intra = wm == server_machine;
+        let tid = *txid;
+        *txid += 1;
+        let pull_send = dfg.add(Node {
+            name: name!("s{server}.PULL_SEND.g{gi}.p{p}.w{w}"),
+            kind: OpKind::Send,
+            device: if intra {
+                DeviceKey::NvLink(server_machine as u16)
+            } else {
+                DeviceKey::LinkTx(server_machine as u16)
+            },
+            duration: cost.send(pbytes, intra),
+            owner: w as u16,
+            proc: w as u16,
+            tensor: meta,
+            txid: Some(tid),
+            template_id: None,
+        });
+        // synchronous training: pull waits for every worker's contribution
+        for &a in &aggs {
+            dfg.edge(a, pull_send);
+        }
+        let pull_recv = dfg.add(Node {
+            name: name!("w{w}.PULL_RECV.g{gi}.p{p}"),
+            kind: OpKind::Recv,
+            device: if intra { DeviceKey::NvLink(wm as u16) } else { DeviceKey::LinkRx(wm as u16) },
+            duration: if intra { 0.0 } else { cost.recv(pbytes, false) },
+            owner: w as u16,
+            proc: w as u16,
+            tensor: meta,
+            txid: Some(tid),
+            template_id: None,
+        });
+        dfg.edge(pull_send, pull_recv);
+        let h2d = dfg.add(Node {
+            name: name!("w{w}.H2D.g{gi}.p{p}"),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::Gpu(w as u16),
+            duration: cost.gpu_collective(pbytes),
+            owner: w as u16,
+            proc: w as u16,
+            tensor: meta,
+            txid: None,
+            template_id: None,
+        });
+        dfg.edge(pull_recv, h2d);
+        out_per_worker[w].push(h2d);
+        gnodes.extend_from_slice(&[pull_send, pull_recv, h2d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArSpec, CommPlan, JobSpec, PsSpec, Transport};
+    use crate::models;
+
+    fn small_job(scheme: &str) -> JobSpec {
+        let model = models::by_name("vgg16", 8).unwrap();
+        let mut spec = JobSpec::standard("vgg16", scheme, Transport::Rdma);
+        spec.model = model;
+        spec.plan = CommPlan::per_tensor(&spec.model);
+        spec
+    }
+
+    #[test]
+    fn allreduce_dfg_is_dag_with_expected_ops() {
+        let spec = small_job("horovod");
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        assert!(g.dfg.is_dag());
+        let n_tensors = spec.model.tensors.len();
+        // negotiation per group
+        let negs = g.dfg.nodes.iter().filter(|n| n.kind == OpKind::Negotiate).count();
+        assert_eq!(negs, n_tensors);
+        // flat-ring steps 2(N-1)=30, one send per machine per step
+        let sends = g.dfg.nodes.iter().filter(|n| n.kind == OpKind::Send).count();
+        assert_eq!(sends, n_tensors * 30 * 2);
+        // every send has a matching recv with the same txid
+        for n in g.dfg.nodes.iter().filter(|n| n.kind == OpKind::Send) {
+            let tid = n.txid.unwrap();
+            assert!(g
+                .dfg
+                .nodes
+                .iter()
+                .any(|m| m.kind == OpKind::Recv && m.txid == Some(tid)));
+        }
+    }
+
+    #[test]
+    fn ps_dfg_pull_waits_for_all_pushes() {
+        let spec = small_job("byteps");
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        assert!(g.dfg.is_dag());
+        // first pull_send of group 0 must have n_workers aggregate preds
+        let pull = g.dfg.find("s0.PULL_SEND.g0.p0.w0").unwrap();
+        let agg_preds = g
+            .dfg
+            .preds(pull)
+            .iter()
+            .filter(|&&p| g.dfg.node(p).kind == OpKind::Aggregate)
+            .count();
+        assert_eq!(agg_preds, spec.cluster.n_workers);
+    }
+
+    #[test]
+    fn partitioned_group_has_k_chains() {
+        let mut spec = small_job("byteps");
+        spec.plan.groups[0].partitions = 4;
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let pushes = g
+            .dfg
+            .nodes
+            .iter()
+            .filter(|n| n.name.starts_with("w0.PUSH_SEND.g0."))
+            .count();
+        assert_eq!(pushes, 4);
+        assert!(g.dfg.is_dag());
+    }
+
+    #[test]
+    fn fused_group_in_depends_on_both_producers() {
+        let mut spec = small_job("horovod");
+        // fuse tensors 0 and 1 into one group
+        let t0 = spec.plan.groups.remove(0);
+        spec.plan.groups[0].tensors.splice(0..0, t0.tensors);
+        assert_eq!(spec.plan.validate(&spec.model), Ok(()));
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let in0 = g.dfg.find("w0.IN.g0").unwrap();
+        assert!(g.dfg.preds(in0).len() >= 1);
+        assert!(g.dfg.is_dag());
+    }
+
+    #[test]
+    fn update_depends_on_out() {
+        let spec = small_job("horovod");
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let upd = g.update_node[&(0u16, 0usize)];
+        let preds = g.dfg.preds(upd);
+        assert_eq!(preds.len(), 1);
+        assert_eq!(g.dfg.node(preds[0]).kind, OpKind::Out);
+    }
+
+    #[test]
+    fn single_machine_has_no_ring() {
+        let model = models::by_name("vgg16", 8).unwrap();
+        let cluster = crate::config::ClusterSpec::new(8, 8, crate::config::NetworkSpec::rdma_100g());
+        let spec = JobSpec::new(model, cluster, crate::config::CommScheme::AllReduce(ArSpec::default()));
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let sends = g.dfg.nodes.iter().filter(|n| n.kind == OpKind::Send).count();
+        assert_eq!(sends, 0);
+        assert!(g.dfg.is_dag());
+    }
+
+    #[test]
+    fn ps_server_count_from_cluster() {
+        let spec = small_job("byteps");
+        if let crate::config::CommScheme::Ps(ps) = &spec.scheme {
+            assert_eq!(ps.n_servers, 2);
+        } else {
+            panic!("expected PS");
+        }
+        let _ = PsSpec::for_cluster(&spec.cluster);
+    }
+}

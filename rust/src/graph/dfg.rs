@@ -1,0 +1,310 @@
+//! The data-flow-graph arena shared by local DFGs, the global DFG, and all
+//! rewritten graphs produced by optimization passes.
+//!
+//! Vertices are computation ops and *fine-grained* communication ops
+//! (paper §4.1); edges are dependencies. The same structure carries the
+//! execution graph the replayer derives (extra ordering edges are kept in a
+//! side list so the original DFG is never mutated).
+
+use crate::util::Us;
+
+/// Node index inside one `Dfg`.
+pub type NodeId = u32;
+
+/// Identifier of a logical tensor (gradient) in the model template.
+/// Fused tensors get fresh ids above the template range.
+pub type TensorId = u32;
+
+/// Kind of op in the global DFG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Forward computation op.
+    Forward,
+    /// Backward computation op (may produce gradient tensors).
+    Backward,
+    /// Parameter update op (after a tensor's synchronization completes).
+    Update,
+    /// Communication-library negotiation/coordination op (e.g. Horovod's
+    /// coordinator cycle) — fine-grained comm op, runs on the coordinator.
+    Negotiate,
+    /// Producer side of one tensor-(partition)-chunk transmission.
+    Send,
+    /// Consumer side of one tensor-(partition)-chunk transmission.
+    Recv,
+    /// Server-side aggregation of a pushed partition (PS architecture).
+    Aggregate,
+    /// Virtual op marking where a tensor leaves a local DFG (no cost).
+    In,
+    /// Virtual op marking where a synchronized tensor re-enters (no cost).
+    Out,
+}
+
+impl OpKind {
+    pub fn is_comp(self) -> bool {
+        matches!(self, OpKind::Forward | OpKind::Backward | OpKind::Update)
+    }
+
+    pub fn is_comm(self) -> bool {
+        matches!(
+            self,
+            OpKind::Send | OpKind::Recv | OpKind::Negotiate | OpKind::Aggregate
+        )
+    }
+
+    pub fn is_virtual(self) -> bool {
+        matches!(self, OpKind::In | OpKind::Out)
+    }
+}
+
+/// The execution resource an op occupies; the replayer serializes ops that
+/// share a device (paper §4.3 treats "each worker/PS and each communication
+/// link as one device").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceKey {
+    /// GPU compute stream of worker `w`.
+    Gpu(u16),
+    /// Transmit side of the NIC/link of node `n` (worker or server).
+    LinkTx(u16),
+    /// Receive side of the NIC/link of node `n`.
+    LinkRx(u16),
+    /// CPU aggregation resource of PS server `s`.
+    PsCpu(u16),
+    /// Intra-machine interconnect (NVLink/PCIe) of machine `m`; carries
+    /// local reduce/broadcast and worker↔colocated-server transfers.
+    NvLink(u16),
+    /// The AllReduce coordinator (negotiation cycles).
+    Coordinator,
+    /// Ops that take time but occupy no exclusive resource (virtual In/Out
+    /// ops, negotiation delays): never queue, may still have a duration.
+    Null,
+}
+
+/// Process id of the AllReduce coordinator in trace events.
+pub const COORD_PROC: u16 = u16::MAX;
+
+/// Tensor (partition) metadata attached to comm ops and to the Backward op
+/// that produces the tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub tensor_id: TensorId,
+    /// Size in bytes of the tensor *piece* this op moves (full tensor for
+    /// In/Out, chunk for ring steps, partition for PS pieces).
+    pub bytes: f64,
+}
+
+/// A vertex of the DFG.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub kind: OpKind,
+    pub device: DeviceKey,
+    /// Expected execution time (profiled average) in microseconds.
+    pub duration: Us,
+    /// Worker (or server) that owns the op; used for per-worker breakdowns.
+    pub owner: u16,
+    /// Process that executes and *timestamps* the op: worker id, or
+    /// `n_workers + s` for PS server `s`, or [`COORD_PROC`] for the
+    /// AllReduce coordinator. Trace alignment solves one clock offset per
+    /// process (paper §4.2).
+    pub proc: u16,
+    pub tensor: Option<TensorMeta>,
+    /// Unique transaction id matching a Send to its Recv (paper §4.1).
+    pub txid: Option<u64>,
+    /// For comp ops: index of the op in the model template (same on every
+    /// data-parallel worker — used by the symmetry acceleration).
+    pub template_id: Option<u32>,
+}
+
+impl Node {
+    pub fn virtual_op(name: impl Into<String>, kind: OpKind, owner: u16) -> Node {
+        Node {
+            name: name.into(),
+            kind,
+            device: DeviceKey::Null,
+            duration: 0.0,
+            owner,
+            proc: owner,
+            tensor: None,
+            txid: None,
+            template_id: None,
+        }
+    }
+}
+
+/// Directed acyclic graph over `Node`s with forward and reverse adjacency.
+#[derive(Clone, Debug, Default)]
+pub struct Dfg {
+    pub nodes: Vec<Node>,
+    succs: Vec<Vec<NodeId>>,
+    preds: Vec<Vec<NodeId>>,
+}
+
+impl Dfg {
+    pub fn new() -> Dfg {
+        Dfg::default()
+    }
+
+    pub fn add(&mut self, node: Node) -> NodeId {
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(node);
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        id
+    }
+
+    pub fn edge(&mut self, from: NodeId, to: NodeId) {
+        debug_assert_ne!(from, to, "self edge on {}", self.nodes[from as usize].name);
+        if !self.succs[from as usize].contains(&to) {
+            self.succs[from as usize].push(to);
+            self.preds[to as usize].push(from);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id as usize]
+    }
+
+    pub fn succs(&self, id: NodeId) -> &[NodeId] {
+        &self.succs[id as usize]
+    }
+
+    pub fn preds(&self, id: NodeId) -> &[NodeId] {
+        &self.preds[id as usize]
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.nodes.len() as NodeId).into_iter()
+    }
+
+    /// Kahn topological order; panics if the graph has a cycle (graphs are
+    /// constructed acyclic; a cycle is a builder bug worth failing loudly).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg: Vec<u32> = self.preds.iter().map(|p| p.len() as u32).collect();
+        let mut ready: Vec<NodeId> =
+            self.ids().filter(|&i| indeg[i as usize] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(id) = ready.pop() {
+            order.push(id);
+            for &s in self.succs(id) {
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "cycle in DFG");
+        order
+    }
+
+    /// True if the graph is acyclic (used by tests and pass validation).
+    pub fn is_dag(&self) -> bool {
+        let mut indeg: Vec<u32> = self.preds.iter().map(|p| p.len() as u32).collect();
+        let mut ready: Vec<NodeId> =
+            self.ids().filter(|&i| indeg[i as usize] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(id) = ready.pop() {
+            seen += 1;
+            for &s in self.succs(id) {
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        seen == self.len()
+    }
+
+    /// Sum of durations of all comp ops owned by `worker` of a given kind —
+    /// used for FW/BW breakdown reports (paper Table 2).
+    pub fn comp_time(&self, worker: u16, kind: OpKind) -> Us {
+        self.nodes
+            .iter()
+            .filter(|n| n.owner == worker && n.kind == kind)
+            .map(|n| n.duration)
+            .sum()
+    }
+
+    /// Find node id by exact name (slow; test/report helper).
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.name == name).map(|i| i as NodeId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(name: &str, dur: Us) -> Node {
+        Node {
+            name: name.into(),
+            kind: OpKind::Forward,
+            device: DeviceKey::Gpu(0),
+            duration: dur,
+            owner: 0,
+            proc: 0,
+            tensor: None,
+            txid: None,
+            template_id: None,
+        }
+    }
+
+    #[test]
+    fn add_edges_and_topo() {
+        let mut g = Dfg::new();
+        let a = g.add(comp("a", 1.0));
+        let b = g.add(comp("b", 1.0));
+        let c = g.add(comp("c", 1.0));
+        g.edge(a, b);
+        g.edge(b, c);
+        g.edge(a, c);
+        let order = g.topo_order();
+        let pos = |id: NodeId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(a) < pos(b) && pos(b) < pos(c));
+        assert!(g.is_dag());
+    }
+
+    #[test]
+    fn duplicate_edge_ignored() {
+        let mut g = Dfg::new();
+        let a = g.add(comp("a", 1.0));
+        let b = g.add(comp("b", 1.0));
+        g.edge(a, b);
+        g.edge(a, b);
+        assert_eq!(g.succs(a).len(), 1);
+        assert_eq!(g.preds(b).len(), 1);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Dfg::new();
+        let a = g.add(comp("a", 1.0));
+        let b = g.add(comp("b", 1.0));
+        g.edge(a, b);
+        g.edge(b, a);
+        assert!(!g.is_dag());
+    }
+
+    #[test]
+    fn comp_time_breakdown() {
+        let mut g = Dfg::new();
+        g.add(comp("f1", 5.0));
+        let mut bw = comp("b1", 7.0);
+        bw.kind = OpKind::Backward;
+        g.add(bw);
+        assert_eq!(g.comp_time(0, OpKind::Forward), 5.0);
+        assert_eq!(g.comp_time(0, OpKind::Backward), 7.0);
+        assert_eq!(g.comp_time(1, OpKind::Forward), 0.0);
+    }
+}

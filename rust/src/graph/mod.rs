@@ -1,0 +1,8 @@
+//! Data-flow-graph layer: arena DFG, and global-DFG construction from a
+//! job spec (local DFGs × fine-grained communication topology, §4.1).
+
+pub mod build;
+pub mod dfg;
+
+pub use build::{build_global, build_global_nameless, AnalyticCost, CostProvider, GlobalDfg};
+pub use dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorId, TensorMeta};

@@ -1,0 +1,36 @@
+//! # dPRO — profiling, replay and optimization for distributed DNN training
+//!
+//! Reproduction of *dPRO: A Generic Profiling and Optimization System for
+//! Expediting Distributed DNN Training* (Hu et al., MLSys 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Profiler** ([`testbed`] emits fine-grained traces; [`trace`] builds
+//!   the global timeline; [`alignment`] corrects clock drift, §4.2).
+//! - **Replayer** ([`replay`]): per-device-queue simulation of the global
+//!   DFG, critical path, partial replay, peak-memory estimation (§4.3).
+//! - **Optimizer** ([`optimizer`]): graph-pass registry + the critical-path
+//!   search of Alg. 1 with Coarsened View / partial replay / symmetry
+//!   accelerations (§5), validated against [`baselines`].
+//!
+//! The live end-to-end path ([`runtime`] + [`coordinator`]) executes a JAX
+//! (+Pallas) transformer AOT-compiled to HLO through PJRT, with Python
+//! never on the hot path.
+
+pub mod alignment;
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod runtime;
+pub mod config;
+pub mod testbed;
+pub mod trace;
+pub mod graph;
+pub mod models;
+pub mod optimizer;
+pub mod profiler;
+pub mod replay;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,9 @@
+//! `dpro` CLI — profile / align / replay / optimize / train, mirroring the
+//! paper's `dpro profile|replay|optimize` commands (§6).
+
+use dpro::cli;
+
+fn main() {
+    let code = cli::run(dpro::util::Args::from_env());
+    std::process::exit(code);
+}

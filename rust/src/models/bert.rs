@@ -1,0 +1,129 @@
+//! BERT-Base template (Devlin et al. 2019): embeddings + 12 identical
+//! transformer encoder blocks + pooler, ≈ 110 M parameters. The 12-block
+//! repetition is the symmetry the optimizer's search acceleration exploits
+//! (paper §5.3), and the per-block GEMM sizes reproduce BERT's
+//! communication profile (a few large tensors per block).
+
+use super::{elementwise_bytes, ModelBuilder, ModelGraph};
+
+const GEMM_EFF: f64 = 0.95;
+/// TF keeps attention probs, dropout masks and fp32 softmax buffers alive
+/// for the backward pass — about 2.2x the raw layer outputs.
+const ACT_FACTOR: f64 = 2.2;
+const HIDDEN: f64 = 768.0;
+const FF: f64 = 3072.0;
+const HEADS: f64 = 12.0;
+const VOCAB: f64 = 30522.0;
+
+/// Build BERT-Base at the given per-GPU batch size and sequence length.
+pub fn bert_base(batch_size: usize, seq_len: usize) -> ModelGraph {
+    let mut b = ModelBuilder::new("bert_base", batch_size);
+    let bs = b.batch();
+    let s = seq_len as f64;
+    let tok = bs * s; // total tokens
+    let h = HIDDEN;
+
+    // Embedding lookup + additions: memory-bound; params: word/pos/type
+    // embeddings + LN(γ,β).
+    let emb = b.op(
+        "embed",
+        &[],
+        0.0,
+        3.0 * 4.0 * tok * h,
+        1.0,
+        4.0 * tok * h,
+        &[
+            ("word", VOCAB * h),
+            ("pos", 512.0 * h),
+            ("type", 2.0 * h),
+        ],
+    );
+    let emb_ln = b.op("embed_ln", &[emb], 0.0, 2.0 * elementwise_bytes(1.0, tok * h), 1.0,
+                      4.0 * tok * h, &[("gamma", h), ("beta", h)]);
+
+    let mut x = emb_ln;
+    for l in 0..12 {
+        x = encoder_block(&mut b, &format!("blk{l:02}"), x, bs, s);
+    }
+
+    // pooler: dense over [CLS]
+    b.op("pooler", &[x], 2.0 * bs * h * h, 4.0 * (h * h + bs * 2.0 * h), GEMM_EFF,
+         4.0 * bs * h, &[("weight", h * h), ("bias", h)]);
+    let mut g = b.finish();
+    for op in &mut g.ops {
+        op.activation_bytes *= ACT_FACTOR;
+    }
+    g
+}
+
+/// One encoder block; returns the id of its final op.
+fn encoder_block(b: &mut ModelBuilder, name: &str, input: u32, bs: f64, s: f64) -> u32 {
+    let h = HIDDEN;
+    let tok = bs * s;
+    let dense = |b: &mut ModelBuilder, nm: &str, dep: u32, din: f64, dout: f64| -> u32 {
+        b.op(nm, &[dep], 2.0 * tok * din * dout, 4.0 * (din * dout + tok * (din + dout)),
+             GEMM_EFF, 4.0 * tok * dout,
+             &[("kernel", din * dout), ("bias", dout)])
+    };
+    // Q, K, V projections (three separate matmuls, as TF graphs emit them)
+    let q = dense(b, &format!("{name}_q"), input, h, h);
+    let k = dense(b, &format!("{name}_k"), input, h, h);
+    let v = dense(b, &format!("{name}_v"), input, h, h);
+    // attention scores: B*heads * (s×d)·(d×s)
+    let score_flops = 2.0 * bs * HEADS * s * s * (h / HEADS);
+    let scores = b.op(&format!("{name}_scores"), &[q, k], score_flops,
+                      4.0 * (2.0 * tok * h + bs * HEADS * s * s), GEMM_EFF,
+                      4.0 * bs * HEADS * s * s, &[]);
+    let softmax = b.op(&format!("{name}_softmax"), &[scores], 0.0,
+                       2.0 * 4.0 * bs * HEADS * s * s, 1.0, 4.0 * bs * HEADS * s * s, &[]);
+    let ctx = b.op(&format!("{name}_context"), &[softmax, v], score_flops,
+                   4.0 * (bs * HEADS * s * s + 2.0 * tok * h), GEMM_EFF, 4.0 * tok * h, &[]);
+    let attn_out = dense(b, &format!("{name}_attnout"), ctx, h, h);
+    let add1 = b.op(&format!("{name}_add1"), &[attn_out, input], 0.0,
+                    1.5 * elementwise_bytes(1.0, tok * h), 1.0, 4.0 * tok * h, &[]);
+    let ln1 = b.op(&format!("{name}_ln1"), &[add1], 0.0, 2.0 * elementwise_bytes(1.0, tok * h),
+                   1.0, 4.0 * tok * h, &[("gamma", h), ("beta", h)]);
+    let ff1 = dense(b, &format!("{name}_ff1"), ln1, h, FF);
+    let gelu = b.op(&format!("{name}_gelu"), &[ff1], 0.0, elementwise_bytes(1.0, tok * FF), 1.0,
+                    4.0 * tok * FF, &[]);
+    let ff2 = dense(b, &format!("{name}_ff2"), gelu, FF, h);
+    let add2 = b.op(&format!("{name}_add2"), &[ff2, ln1], 0.0,
+                    1.5 * elementwise_bytes(1.0, tok * h), 1.0, 4.0 * tok * h, &[]);
+    b.op(&format!("{name}_ln2"), &[add2], 0.0, 2.0 * elementwise_bytes(1.0, tok * h), 1.0,
+         4.0 * tok * h, &[("gamma", h), ("beta", h)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dfg::OpKind;
+    use crate::models::cost::GpuModel;
+
+    #[test]
+    fn params_near_110m() {
+        let g = bert_base(32, 128);
+        let params = g.num_params();
+        assert!((105.0e6..115.0e6).contains(&params), "params={params}");
+    }
+
+    #[test]
+    fn fw_bw_near_paper_table2() {
+        // Paper Table 2: FW 107.49 ms, BW 185.66 ms (bs 32, V100, TF).
+        let g = bert_base(32, 128);
+        let gpu = GpuModel::default();
+        let fw_ms = g.comp_time(&gpu, OpKind::Forward) / 1e3;
+        let bw_ms = g.comp_time(&gpu, OpKind::Backward) / 1e3;
+        assert!((80.0..140.0).contains(&fw_ms), "fw={fw_ms}ms");
+        assert!((160.0..280.0).contains(&bw_ms), "bw={bw_ms}ms");
+    }
+
+    #[test]
+    fn twelve_symmetric_blocks() {
+        let g = bert_base(8, 128);
+        assert_eq!(g.validate(), Ok(()));
+        let blk0: Vec<&str> = g.ops.iter().filter(|o| o.name.contains("blk00")).map(|o| o.name.as_str()).collect();
+        let blk7: Vec<&str> = g.ops.iter().filter(|o| o.name.contains("blk07")).map(|o| o.name.as_str()).collect();
+        assert_eq!(blk0.len(), blk7.len());
+        assert!(blk0.len() >= 28); // 14 fw + 14 bw
+    }
+}

@@ -1,0 +1,127 @@
+//! Analytic GPU cost model used to synthesize op-level profiles.
+//!
+//! The paper profiles real V100s; we have none, so op durations come from a
+//! roofline-style model: `launch_overhead + max(flops / eff_flops, bytes /
+//! eff_bw)`. Default constants are calibrated so that ResNet50 / BERT-Base
+//! forward+backward times land near the paper's Table 2 measurements
+//! (ResNet50 FW ≈ 35 ms, BW ≈ 70 ms at batch 32; BERT FW ≈ 107 ms,
+//! BW ≈ 186 ms), which keeps compute/communication ratios — the quantity
+//! every dPRO claim depends on — realistic.
+
+use crate::util::Us;
+
+/// Numeric precision of an op's math; mixed-precision pass flips eligible
+/// ops to Fp16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+}
+
+/// Device model (defaults approximate one V100-32GB running TF graphs
+/// without XLA, i.e. *achieved* rather than peak rates).
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    /// Achieved FLOP/s for compute-bound fp32 kernels.
+    pub flops: f64,
+    /// fp16 (tensor core) multiplier over fp32 throughput.
+    pub fp16_speedup: f64,
+    /// Achieved HBM bytes/s for memory-bound kernels.
+    pub mem_bw: f64,
+    /// Fixed per-kernel launch + framework scheduling overhead (us). This
+    /// is the term op fusion removes, so it is first-class here.
+    pub launch_overhead_us: Us,
+    /// Coefficient of variation of kernel durations (testbed jitter).
+    pub duration_cv: f64,
+    /// Device memory capacity in bytes (V100-32GB default; Table 4 uses
+    /// the 16 GB variant).
+    pub mem_capacity: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            flops: 7.0e12,
+            fp16_speedup: 2.6,
+            mem_bw: 800.0e9,
+            launch_overhead_us: 8.0,
+            duration_cv: 0.04,
+            mem_capacity: 32.0e9,
+        }
+    }
+}
+
+impl GpuModel {
+    pub fn v100_16gb() -> GpuModel {
+        GpuModel { mem_capacity: 16.0e9, ..GpuModel::default() }
+    }
+
+    /// Duration of a kernel with the given work, in microseconds.
+    pub fn kernel_time(&self, flops: f64, bytes: f64, prec: Precision) -> Us {
+        let eff_flops = match prec {
+            Precision::Fp32 => self.flops,
+            Precision::Fp16 => self.flops * self.fp16_speedup,
+        };
+        let eff_bytes = match prec {
+            // fp16 halves the traffic of the same logical op.
+            Precision::Fp32 => bytes,
+            Precision::Fp16 => bytes * 0.5,
+        };
+        let compute_us = flops / eff_flops * 1e6;
+        let mem_us = eff_bytes / self.mem_bw * 1e6;
+        self.launch_overhead_us + compute_us.max(mem_us)
+    }
+
+    /// Duration of a *fused* kernel: one launch overhead, slight locality
+    /// gain on the body (fused intermediates stay in registers/L2).
+    pub fn fused_time(&self, body_times: &[Us]) -> Us {
+        const LOCALITY_GAIN: f64 = 0.06;
+        let body: Us = body_times
+            .iter()
+            .map(|t| (t - self.launch_overhead_us).max(0.0))
+            .sum();
+        self.launch_overhead_us + body * (1.0 - LOCALITY_GAIN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_vs_memory_bound() {
+        let g = GpuModel::default();
+        // 7 GFLOP compute-bound kernel: 1 ms + launch
+        let t = g.kernel_time(7.0e9, 1.0e6, Precision::Fp32);
+        assert!((t - (1000.0 + g.launch_overhead_us)).abs() < 1e-6, "t={t}");
+        // 800 MB memory-bound kernel: 1 ms + launch
+        let t = g.kernel_time(1.0e6, 800.0e6, Precision::Fp32);
+        assert!((t - (1000.0 + g.launch_overhead_us)).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn fp16_faster() {
+        let g = GpuModel::default();
+        let a = g.kernel_time(4.0e9, 1.0e6, Precision::Fp32);
+        let b = g.kernel_time(4.0e9, 1.0e6, Precision::Fp16);
+        assert!(b < a);
+    }
+
+    #[test]
+    fn fusion_saves_launch_overhead() {
+        let g = GpuModel::default();
+        let a = g.kernel_time(1.0e8, 1.0e6, Precision::Fp32);
+        let b = g.kernel_time(1.0e8, 1.0e6, Precision::Fp32);
+        let fused = g.fused_time(&[a, b]);
+        assert!(fused < a + b);
+        // Saves at least one launch overhead.
+        assert!(a + b - fused >= g.launch_overhead_us * 0.9);
+    }
+
+    #[test]
+    fn fused_never_negative() {
+        let g = GpuModel::default();
+        let fused = g.fused_time(&[1.0, 2.0]);
+        assert!(fused >= g.launch_overhead_us);
+    }
+}

@@ -1,0 +1,335 @@
+//! Model zoo: op-level local-DFG templates for the four paper benchmarks
+//! (ResNet50, VGG16, InceptionV3, BERT-Base) plus a configurable GPT-style
+//! decoder used by the live end-to-end example.
+//!
+//! A template describes *one worker's* computation graph: forward ops,
+//! mirrored backward ops, the gradient tensors each backward op produces,
+//! and per-op FLOPs / memory traffic from which the [`cost::GpuModel`]
+//! synthesizes durations. Data-parallel training replicates the template on
+//! every worker (the paper's symmetry assumption).
+
+pub mod bert;
+pub mod cost;
+pub mod inception;
+pub mod resnet;
+pub mod transformer;
+pub mod vgg;
+
+use crate::graph::dfg::{OpKind, TensorId};
+use crate::util::Us;
+use cost::{GpuModel, Precision};
+
+/// A gradient tensor synchronized across workers.
+#[derive(Clone, Debug)]
+pub struct TensorTpl {
+    pub name: String,
+    /// Size in bytes at fp32.
+    pub bytes: f64,
+}
+
+/// One computation op of the per-worker template.
+#[derive(Clone, Debug)]
+pub struct CompOpTpl {
+    pub name: String,
+    /// `Forward` or `Backward`.
+    pub kind: OpKind,
+    pub flops: f64,
+    /// HBM traffic in bytes (memory-bound ops).
+    pub bytes: f64,
+    /// Achieved-FLOPs multiplier relative to the device baseline (GEMMs
+    /// run closer to peak than convolutions on V100/TF).
+    pub eff: f64,
+    /// Template ids of predecessor ops.
+    pub deps: Vec<u32>,
+    /// Gradient tensors this (backward) op produces, in production order.
+    pub produces: Vec<TensorId>,
+    /// Bytes of output activations a forward op keeps alive until its
+    /// mirrored backward op consumes them (memory estimation, §7.4).
+    pub activation_bytes: f64,
+    pub precision: Precision,
+    /// Original template ids merged into this op by op fusion (empty for
+    /// unfused ops). Used for reporting and for `opfs_time` refinement.
+    pub fused_from: Vec<u32>,
+    /// For a forward op: template id of its mirrored backward op (and vice
+    /// versa). Drives activation lifetime in memory estimation.
+    pub mirror: Option<u32>,
+}
+
+impl CompOpTpl {
+    pub fn duration(&self, gpu: &GpuModel) -> Us {
+        if !self.fused_from.is_empty() {
+            // Fused op: body times of constituents are folded by the cost
+            // model's fusion rule at construction time and cached in
+            // `flops/bytes`; duration recomputed the same way.
+        }
+        let mut g = gpu.clone();
+        g.flops *= self.eff;
+        g.kernel_time(self.flops, self.bytes, self.precision)
+    }
+}
+
+/// Per-worker model template.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    pub batch_size: usize,
+    pub ops: Vec<CompOpTpl>,
+    pub tensors: Vec<TensorTpl>,
+}
+
+impl ModelGraph {
+    pub fn param_bytes(&self) -> f64 {
+        self.tensors.iter().map(|t| t.bytes).sum()
+    }
+
+    pub fn num_params(&self) -> f64 {
+        self.param_bytes() / 4.0
+    }
+
+    pub fn fw_ids(&self) -> Vec<u32> {
+        self.ids_of(OpKind::Forward)
+    }
+
+    pub fn bw_ids(&self) -> Vec<u32> {
+        self.ids_of(OpKind::Backward)
+    }
+
+    fn ids_of(&self, kind: OpKind) -> Vec<u32> {
+        (0..self.ops.len() as u32).filter(|&i| self.ops[i as usize].kind == kind).collect()
+    }
+
+    /// Total forward/backward time on one device with no jitter (the
+    /// "profiled" single-GPU breakdown).
+    pub fn comp_time(&self, gpu: &GpuModel, kind: OpKind) -> Us {
+        self.ops.iter().filter(|o| o.kind == kind).map(|o| o.duration(gpu)).sum()
+    }
+
+    /// Backward op that produces tensor `t`, if any.
+    pub fn producer_of(&self, t: TensorId) -> Option<u32> {
+        (0..self.ops.len() as u32).find(|&i| self.ops[i as usize].produces.contains(&t))
+    }
+
+    /// Validate invariant structure (DAG over template ids; every tensor
+    /// produced exactly once; deps within range).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.ops.len() as u32;
+        let mut produced = vec![0u32; self.tensors.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            for &d in &op.deps {
+                if d >= n {
+                    return Err(format!("op {i} dep {d} out of range"));
+                }
+                if d as usize >= i {
+                    return Err(format!("op {i} ({}) dep {d} not earlier", op.name));
+                }
+            }
+            for &t in &op.produces {
+                if t as usize >= produced.len() {
+                    return Err(format!("op {i} produces unknown tensor {t}"));
+                }
+                produced[t as usize] += 1;
+            }
+        }
+        if let Some(t) = produced.iter().position(|&c| c != 1) {
+            return Err(format!("tensor {t} ({}) produced {} times", self.tensors[t].name, produced[t]));
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder used by the per-model generators. Ops are appended
+/// in forward order, then `finish_backward` mirrors them.
+pub struct ModelBuilder {
+    name: String,
+    batch_size: usize,
+    ops: Vec<CompOpTpl>,
+    tensors: Vec<TensorTpl>,
+    /// For each forward op: parameter tensors its backward op will produce.
+    fw_params: Vec<Vec<TensorId>>,
+}
+
+impl ModelBuilder {
+    pub fn new(name: &str, batch_size: usize) -> ModelBuilder {
+        ModelBuilder {
+            name: name.to_string(),
+            batch_size,
+            ops: Vec::new(),
+            tensors: Vec::new(),
+            fw_params: Vec::new(),
+        }
+    }
+
+    pub fn batch(&self) -> f64 {
+        self.batch_size as f64
+    }
+
+    fn add_tensor(&mut self, name: String, elems: f64) -> TensorId {
+        let id = self.tensors.len() as TensorId;
+        self.tensors.push(TensorTpl { name, bytes: elems * 4.0 });
+        id
+    }
+
+    /// Append a forward op. `params` lists (suffix, element-count) pairs of
+    /// learnable tensors whose gradients the mirrored backward op emits.
+    /// Returns the forward op id (use as dep for later ops).
+    pub fn op(
+        &mut self,
+        name: &str,
+        deps: &[u32],
+        flops: f64,
+        bytes: f64,
+        eff: f64,
+        activation_bytes: f64,
+        params: &[(&str, f64)],
+    ) -> u32 {
+        let id = self.ops.len() as u32;
+        let tensor_ids: Vec<TensorId> =
+            params.iter().map(|(suffix, elems)| self.add_tensor(format!("{name}.{suffix}"), *elems)).collect();
+        self.ops.push(CompOpTpl {
+            name: format!("FW.{name}"),
+            kind: OpKind::Forward,
+            flops,
+            bytes,
+            eff,
+            deps: deps.to_vec(),
+            produces: Vec::new(),
+            activation_bytes,
+            precision: Precision::Fp32,
+            fused_from: Vec::new(),
+            mirror: None,
+        });
+        self.fw_params.push(tensor_ids);
+        id
+    }
+
+    /// Mirror every forward op into a backward op (reverse order, ~1.8×
+    /// FLOPs, ~1.9× memory traffic — calibrated to Table 2 BW/FW ratios) and return
+    /// the finished template. Backward of op i depends on backward of each
+    /// successor of i (chain rule) and on forward op i (activations).
+    pub fn finish(self) -> ModelGraph {
+        let ModelBuilder { name, batch_size, mut ops, tensors, fw_params } = self;
+        let n_fw = ops.len() as u32;
+        // successor lists over forward template
+        let mut fw_succs: Vec<Vec<u32>> = vec![Vec::new(); n_fw as usize];
+        for i in 0..n_fw {
+            for &d in &ops[i as usize].deps {
+                fw_succs[d as usize].push(i);
+            }
+        }
+        // Backward op for forward op i gets id n_fw + (n_fw - 1 - i):
+        // reverse program order so deps point backwards.
+        let bw_id = |i: u32| n_fw + (n_fw - 1 - i);
+        for i in (0..n_fw).rev() {
+            let fw = ops[i as usize].clone();
+            let mut deps: Vec<u32> = fw_succs[i as usize].iter().map(|&s| bw_id(s)).collect();
+            deps.push(i); // activations from the forward op
+            deps.sort();
+            deps.dedup();
+            ops.push(CompOpTpl {
+                name: format!("BW.{}", fw.name.trim_start_matches("FW.")),
+                kind: OpKind::Backward,
+                flops: fw.flops * 1.8,
+                bytes: fw.bytes * 1.9,
+                eff: fw.eff,
+                deps,
+                produces: fw_params[i as usize].clone(),
+                activation_bytes: 0.0,
+                precision: fw.precision,
+                fused_from: Vec::new(),
+                mirror: Some(i),
+            });
+            ops[i as usize].mirror = Some(bw_id(i));
+        }
+        let g = ModelGraph { name, batch_size, ops, tensors };
+        debug_assert_eq!(g.validate(), Ok(()));
+        g
+    }
+}
+
+/// Convolution FLOPs/traffic helper shared by the CNN generators.
+pub(crate) struct ConvShape {
+    pub flops: f64,
+    pub bytes: f64,
+    pub act_bytes: f64,
+    pub weight_elems: f64,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+pub(crate) fn conv2d(
+    batch: f64,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> ConvShape {
+    let out_h = (h + stride - 1) / stride;
+    let out_w = (w + stride - 1) / stride;
+    let out_elems = batch * (out_h * out_w * cout) as f64;
+    let in_elems = batch * (h * w * cin) as f64;
+    let weight_elems = (k * k * cin * cout) as f64;
+    ConvShape {
+        flops: 2.0 * out_elems * (k * k * cin) as f64,
+        bytes: 4.0 * (in_elems + out_elems + weight_elems),
+        act_bytes: 4.0 * out_elems,
+        weight_elems,
+        out_h,
+        out_w,
+    }
+}
+
+/// Elementwise-op traffic (ReLU/add/BN): read+write of the activation.
+pub(crate) fn elementwise_bytes(batch: f64, elems_per_sample: f64) -> f64 {
+    2.0 * 4.0 * batch * elems_per_sample
+}
+
+/// Construct a model by name — the registry used by the CLI and benches.
+pub fn by_name(name: &str, batch_size: usize) -> Option<ModelGraph> {
+    match name {
+        "resnet50" => Some(resnet::resnet50(batch_size)),
+        "vgg16" => Some(vgg::vgg16(batch_size)),
+        "inception_v3" => Some(inception::inception_v3(batch_size)),
+        "bert_base" => Some(bert::bert_base(batch_size, 128)),
+        "gpt_mini" => Some(transformer::gpt(transformer::GptConfig::mini(batch_size))),
+        _ => None,
+    }
+}
+
+pub const ALL_MODELS: [&str; 4] = ["resnet50", "vgg16", "inception_v3", "bert_base"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_mirrors_backward() {
+        let mut b = ModelBuilder::new("toy", 8);
+        let c1 = b.op("conv1", &[], 1e9, 1e6, 1.0, 1e6, &[("w", 100.0)]);
+        let r1 = b.op("relu1", &[c1], 0.0, 2e6, 1.0, 1e6, &[]);
+        let _c2 = b.op("conv2", &[r1], 1e9, 1e6, 1.0, 1e6, &[("w", 200.0), ("b", 10.0)]);
+        let g = b.finish();
+        assert_eq!(g.ops.len(), 6);
+        assert_eq!(g.tensors.len(), 3);
+        assert_eq!(g.validate(), Ok(()));
+        // BW.conv2 is first backward op and produces its two tensors.
+        let bw2 = &g.ops[3];
+        assert_eq!(bw2.name, "BW.conv2");
+        assert_eq!(bw2.produces, vec![1, 2]);
+        // BW.conv1 is the last op, depends on BW.relu1 (id 4) and FW.conv1.
+        let bw1 = &g.ops[5];
+        assert_eq!(bw1.name, "BW.conv1");
+        assert!(bw1.deps.contains(&4));
+        assert!(bw1.deps.contains(&0));
+    }
+
+    #[test]
+    fn conv_shape_math() {
+        let c = conv2d(1.0, 224, 224, 3, 64, 7, 2);
+        assert_eq!((c.out_h, c.out_w), (112, 112));
+        assert_eq!(c.weight_elems, (7 * 7 * 3 * 64) as f64);
+        let expected_flops = 2.0 * (112.0 * 112.0 * 64.0) * (7.0 * 7.0 * 3.0);
+        assert!((c.flops - expected_flops).abs() < 1.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Configurable GPT-style decoder template. Mirrors the JAX/Pallas model in
+//! `python/compile/model.py`, so the live end-to-end example can profile
+//! the same architecture it actually executes through PJRT, and dPRO can
+//! replay/optimize that live job.
+
+use super::{elementwise_bytes, ModelBuilder, ModelGraph};
+
+const GEMM_EFF: f64 = 0.95;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GptConfig {
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub vocab: usize,
+}
+
+impl GptConfig {
+    /// ~25 M params — the config the e2e example trains for hundreds of
+    /// steps through PJRT on this CPU box.
+    pub fn mini(batch_size: usize) -> GptConfig {
+        GptConfig { batch_size, seq_len: 128, hidden: 384, layers: 6, heads: 6, vocab: 8192 }
+    }
+
+    /// ~117 M params — the "100M-class" configuration used for profiling /
+    /// replay experiments (GPT-2-small shaped).
+    pub fn m100(batch_size: usize) -> GptConfig {
+        GptConfig { batch_size, seq_len: 256, hidden: 768, layers: 12, heads: 12, vocab: 32768 }
+    }
+
+    pub fn num_params(&self) -> f64 {
+        let h = self.hidden as f64;
+        let v = self.vocab as f64;
+        let per_layer = 4.0 * h * h + 2.0 * 4.0 * h * h + 4.0 * h + 9.0 * h; // attn + mlp + biases/ln
+        v * h + self.seq_len as f64 * h + self.layers as f64 * per_layer + 2.0 * h
+    }
+}
+
+/// Build the GPT template from a config.
+pub fn gpt(cfg: GptConfig) -> ModelGraph {
+    let mut b = ModelBuilder::new("gpt", cfg.batch_size);
+    let bs = b.batch();
+    let s = cfg.seq_len as f64;
+    let h = cfg.hidden as f64;
+    let ff = 4.0 * h;
+    let tok = bs * s;
+
+    let emb = b.op("embed", &[], 0.0, 3.0 * 4.0 * tok * h, 1.0, 4.0 * tok * h,
+                   &[("wte", cfg.vocab as f64 * h), ("wpe", s * h)]);
+    let mut x = emb;
+    for l in 0..cfg.layers {
+        let name = format!("layer{l:02}");
+        let dense = |b: &mut ModelBuilder, nm: &str, dep: u32, din: f64, dout: f64| -> u32 {
+            b.op(nm, &[dep], 2.0 * tok * din * dout, 4.0 * (din * dout + tok * (din + dout)),
+                 GEMM_EFF, 4.0 * tok * dout, &[("kernel", din * dout), ("bias", dout)])
+        };
+        let ln1 = b.op(&format!("{name}_ln1"), &[x], 0.0, 2.0 * elementwise_bytes(1.0, tok * h),
+                       1.0, 4.0 * tok * h, &[("gamma", h), ("beta", h)]);
+        // fused qkv projection (as the Pallas/JAX model emits it)
+        let qkv = dense(&mut b, &format!("{name}_qkv"), ln1, h, 3.0 * h);
+        // fused attention kernel (the L1 Pallas hot-spot): scores+softmax+context
+        let heads = cfg.heads as f64;
+        let attn_flops = 2.0 * 2.0 * bs * heads * s * s * (h / heads);
+        let attn = b.op(&format!("{name}_attn"), &[qkv], attn_flops,
+                        4.0 * (3.0 * tok * h + bs * heads * s * s), GEMM_EFF, 4.0 * tok * h, &[]);
+        let proj = dense(&mut b, &format!("{name}_proj"), attn, h, h);
+        let add1 = b.op(&format!("{name}_add1"), &[proj, x], 0.0,
+                        1.5 * elementwise_bytes(1.0, tok * h), 1.0, 4.0 * tok * h, &[]);
+        let ln2 = b.op(&format!("{name}_ln2"), &[add1], 0.0, 2.0 * elementwise_bytes(1.0, tok * h),
+                       1.0, 4.0 * tok * h, &[("gamma", h), ("beta", h)]);
+        let fc1 = dense(&mut b, &format!("{name}_fc1"), ln2, h, ff);
+        let gelu = b.op(&format!("{name}_gelu"), &[fc1], 0.0, elementwise_bytes(1.0, tok * ff),
+                        1.0, 4.0 * tok * ff, &[]);
+        let fc2 = dense(&mut b, &format!("{name}_fc2"), gelu, ff, h);
+        x = b.op(&format!("{name}_add2"), &[fc2, add1], 0.0,
+                 1.5 * elementwise_bytes(1.0, tok * h), 1.0, 4.0 * tok * h, &[]);
+    }
+    let lnf = b.op("ln_f", &[x], 0.0, 2.0 * elementwise_bytes(1.0, tok * h), 1.0, 4.0 * tok * h,
+                   &[("gamma", h), ("beta", h)]);
+    // logits head (ties to wte in the JAX model; treated as flops-only here)
+    b.op("logits", &[lnf], 2.0 * tok * h * cfg.vocab as f64,
+         4.0 * (h * cfg.vocab as f64 + tok * h), GEMM_EFF, 4.0 * tok * cfg.vocab as f64, &[]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mini_config_size() {
+        let cfg = GptConfig::mini(8);
+        let g = gpt(cfg);
+        assert_eq!(g.validate(), Ok(()));
+        let params = g.num_params();
+        assert!((8.0e6..30.0e6).contains(&params), "params={params}");
+    }
+
+    #[test]
+    fn m100_is_100m_class() {
+        let cfg = GptConfig::m100(8);
+        assert!((80.0e6..150.0e6).contains(&cfg.num_params()), "estimate={}", cfg.num_params());
+        let g = gpt(cfg);
+        let params = g.num_params();
+        assert!((80.0e6..150.0e6).contains(&params), "params={params}");
+    }
+
+    #[test]
+    fn layers_scale_ops() {
+        let a = gpt(GptConfig { layers: 2, ..GptConfig::mini(8) });
+        let b = gpt(GptConfig { layers: 4, ..GptConfig::mini(8) });
+        assert!(b.ops.len() > a.ops.len());
+    }
+}

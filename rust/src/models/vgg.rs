@@ -1,0 +1,87 @@
+//! VGG16 template (Simonyan & Zisserman 2015): 13 convs + 3 FC layers,
+//! ~138 M parameters dominated by the 102 M-element fc1 weight — the
+//! pathological huge-tensor case that makes tensor *partitioning* matter
+//! (BytePS's default 4 MB slices vs dPRO's searched size).
+
+use super::{conv2d, elementwise_bytes, ModelBuilder, ModelGraph};
+
+const CONV_EFF: f64 = 1.0;
+const FC_EFF: f64 = 1.1;
+
+/// Build the VGG16 template (input 224×224×3, 1000 classes, no BN).
+pub fn vgg16(batch_size: usize) -> ModelGraph {
+    let mut b = ModelBuilder::new("vgg16", batch_size);
+    let batch = b.batch();
+    let cfg: [&[usize]; 5] = [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    let (mut h, mut w, mut c) = (224usize, 224usize, 3usize);
+    let mut last: Option<u32> = None;
+    for (si, stage) in cfg.iter().enumerate() {
+        for (ci, &cout) in stage.iter().enumerate() {
+            let s = conv2d(batch, h, w, c, cout, 3, 1);
+            let name = format!("conv{}_{}", si + 1, ci + 1);
+            let deps: Vec<u32> = last.into_iter().collect();
+            let conv = b.op(&name, &deps, s.flops, s.bytes, CONV_EFF, s.act_bytes,
+                            &[("weight", s.weight_elems), ("bias", cout as f64)]);
+            h = s.out_h;
+            w = s.out_w;
+            c = cout;
+            let relu_elems = (h * w * c) as f64;
+            last = Some(b.op(&format!("{name}_relu"), &[conv], 0.0,
+                             elementwise_bytes(batch, relu_elems), 1.0,
+                             4.0 * batch * relu_elems, &[]));
+        }
+        // max pool /2
+        h /= 2;
+        w /= 2;
+        let pool_elems = (h * w * c) as f64;
+        last = Some(b.op(&format!("pool{}", si + 1), &[last.unwrap()], 0.0,
+                         elementwise_bytes(batch, pool_elems), 1.0,
+                         4.0 * batch * pool_elems, &[]));
+    }
+    // flatten 7*7*512 = 25088 → fc 4096 → 4096 → 1000
+    let mut in_dim = (h * w * c) as f64;
+    debug_assert_eq!(in_dim, 25088.0);
+    for (i, out_dim) in [4096.0, 4096.0, 1000.0].iter().enumerate() {
+        let name = format!("fc{}", i + 1);
+        let flops = 2.0 * batch * in_dim * out_dim;
+        let bytes = 4.0 * (in_dim * out_dim + batch * (in_dim + out_dim));
+        let fc = b.op(&name, &[last.unwrap()], flops, bytes, FC_EFF, 4.0 * batch * out_dim,
+                      &[("weight", in_dim * out_dim), ("bias", *out_dim)]);
+        last = if i < 2 {
+            Some(b.op(&format!("{name}_relu"), &[fc], 0.0, elementwise_bytes(batch, *out_dim),
+                      1.0, 4.0 * batch * out_dim, &[]))
+        } else {
+            Some(fc)
+        };
+        in_dim = *out_dim;
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_138m() {
+        let g = vgg16(32);
+        let params = g.num_params();
+        assert!((135.0e6..140.0e6).contains(&params), "params={params}");
+        assert_eq!(g.tensors.len(), 32); // 16 weight + 16 bias
+    }
+
+    #[test]
+    fn fc1_is_the_huge_tensor() {
+        let g = vgg16(32);
+        let max = g.tensors.iter().max_by(|a, b2| a.bytes.partial_cmp(&b2.bytes).unwrap()).unwrap();
+        assert!(max.name.contains("fc1"));
+        assert!((max.bytes - 25088.0 * 4096.0 * 4.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn structure_valid() {
+        let g = vgg16(16);
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(g.fw_ids().len(), g.bw_ids().len());
+    }
+}

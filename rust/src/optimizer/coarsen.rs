@@ -1,0 +1,135 @@
+//! Coarsened View (paper §5.3, Fig. 6): shrink the strategy space before
+//! search by applying the fusions Theorem 3 shows are never harmful:
+//!
+//! 1. a computation op that produces **no** tensor is grouped with the
+//!    tensor-producing op it feeds (view its null tensor as fused);
+//! 2. tensors produced by the **same** computation op (e.g. BatchNorm's
+//!    γ and β) are fused into one synchronization group.
+
+use crate::config::JobSpec;
+use crate::graph::dfg::OpKind;
+use crate::optimizer::passes;
+
+/// Statistics of a coarsening application.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CoarsenStats {
+    pub op_fusions: usize,
+    pub tensor_fusions: usize,
+}
+
+/// Apply the Coarsened View to `spec` in place.
+pub fn coarsen(spec: &mut JobSpec) -> CoarsenStats {
+    let mut stats = CoarsenStats::default();
+
+    // --- rule 2: fuse tensors produced by the same op ---
+    // (do this first: comm-group indices shift as we merge)
+    let produced_together: Vec<Vec<u32>> = spec
+        .model
+        .ops
+        .iter()
+        .filter(|o| o.produces.len() >= 2)
+        .map(|o| o.produces.clone())
+        .collect();
+    for tensors in produced_together {
+        // merge the comm group of tensors[1..] into tensors[0]'s group
+        for &t in &tensors[1..] {
+            let Some(a) = passes::comm_group_of_tensor(spec, tensors[0]) else { continue };
+            let Some(b) = passes::comm_group_of_tensor(spec, t) else { continue };
+            if a != b && passes::fuse_tensor_groups(spec, a, b).is_ok() {
+                stats.tensor_fusions += 1;
+            }
+        }
+    }
+
+    // --- rule 1: group non-producing comp ops with their unique
+    // tensor-producing successor (backward ops; mirrored on forward) ---
+    // successor lists over template ops of the same kind
+    let n = spec.model.ops.len();
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, op) in spec.model.ops.iter().enumerate() {
+        for &d in &op.deps {
+            if spec.model.ops[d as usize].kind == op.kind {
+                succs[d as usize].push(i as u32);
+            }
+        }
+    }
+    // walk backward ops in reverse template order (BW topological order)
+    let bw_ids: Vec<u32> = spec.model.bw_ids();
+    for &b in &bw_ids {
+        let op = &spec.model.ops[b as usize];
+        if op.kind != OpKind::Backward || !op.produces.is_empty() {
+            continue;
+        }
+        // unique same-kind successor
+        if succs[b as usize].len() != 1 {
+            continue;
+        }
+        let succ = succs[b as usize][0];
+        let ga = spec.fusion.group_of[b as usize] as usize;
+        let gb = spec.fusion.group_of[succ as usize] as usize;
+        if ga == gb {
+            continue;
+        }
+        if passes::fuse_comp_groups(spec, ga, gb).is_ok() {
+            stats.op_fusions += 1;
+            // mirror the fusion on the forward side (keeps FW/BW kernels
+            // consistent, as XLA clusters both directions)
+            let (ma, mb) = (
+                spec.model.ops[b as usize].mirror,
+                spec.model.ops[succ as usize].mirror,
+            );
+            if let (Some(ma), Some(mb)) = (ma, mb) {
+                let fa = spec.fusion.group_of[ma as usize] as usize;
+                let fb = spec.fusion.group_of[mb as usize] as usize;
+                if fa != fb {
+                    let _ = passes::fuse_comp_groups(spec, fa, fb);
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+
+    #[test]
+    fn resnet_coarsening_shrinks_search_space() {
+        let mut s = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let groups_before = s.plan.groups.len();
+        let fusion_before = s.fusion.groups.len();
+        let stats = coarsen(&mut s);
+        // BN produces γ+β → 53 tensor fusions; ReLU/pool/add BW ops fold in
+        assert!(stats.tensor_fusions >= 50, "{stats:?}");
+        assert!(stats.op_fusions >= 50, "{stats:?}");
+        assert!(s.plan.groups.len() < groups_before);
+        assert!(s.fusion.groups.len() < fusion_before);
+        assert_eq!(s.plan.validate(&s.model), Ok(()));
+        assert_eq!(s.fusion.validate(&s.model), Ok(()));
+    }
+
+    #[test]
+    fn coarsened_graph_still_replays() {
+        let mut s = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let g0 = crate::graph::build_global(&s, &crate::graph::AnalyticCost::new(&s));
+        let t0 = crate::replay::replay_once(&g0).iteration_time;
+        coarsen(&mut s);
+        let g1 = crate::graph::build_global(&s, &crate::graph::AnalyticCost::new(&s));
+        assert!(g1.dfg.is_dag());
+        let t1 = crate::replay::replay_once(&g1).iteration_time;
+        // coarsening fuses launch overheads away and merges tiny
+        // collectives: should not slow the job down materially
+        assert!(t1 < t0 * 1.05, "t0={t0} t1={t1}");
+    }
+
+    #[test]
+    fn bert_coarsening_fuses_ln_tensors() {
+        let mut s = JobSpec::standard("bert_base", "horovod", Transport::Rdma);
+        let before = s.plan.groups.len();
+        let stats = coarsen(&mut s);
+        assert!(stats.tensor_fusions > 20);
+        assert!(s.plan.groups.len() < before);
+    }
+}

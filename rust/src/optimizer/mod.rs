@@ -1,0 +1,21 @@
+//! The dPRO optimizer (paper §5): a Graph-Pass Registry plus the
+//! critical-path search of Alg. 1.
+//!
+//! - [`passes`] — op fusion / tensor fusion / tensor partition rewrites
+//! - [`theorems`] — the fusion-profitability predicates of Theorems 1–3
+//! - [`coarsen`] — Coarsened View construction (§5.3)
+//! - [`symmetry`] — block-analogy propagation (§5.3)
+//! - [`memopt`] — re-computation / gradient-accumulation passes (Table 4)
+//! - [`search`] — Alg. 1 with the three search accelerations
+//! - [`registry`] — the extension point for custom strategies (§8), with
+//!   mixed-precision as the built-in example
+
+pub mod coarsen;
+pub mod memopt;
+pub mod passes;
+pub mod registry;
+pub mod search;
+pub mod symmetry;
+pub mod theorems;
+
+pub use search::{optimize, SearchOpts, SearchOutcome};

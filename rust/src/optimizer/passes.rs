@@ -1,0 +1,235 @@
+//! Graph passes (paper §5.2): rewrites of a [`JobSpec`]'s fusion plan
+//! (op fusion), comm plan (tensor fusion / tensor partition), and template
+//! (memory passes live in [`super::memopt`]). Passes never mutate the model
+//! template itself — op fusion is a partition over template ops, tensor
+//! fusion a partition over tensors — so every rewrite is cheap and
+//! reversible by cloning the spec.
+
+use crate::config::JobSpec;
+use crate::graph::dfg::TensorId;
+
+/// Error type for invalid pass applications.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PassError {
+    WouldCreateCycle,
+    KindMismatch,
+    SameGroup,
+    OutOfRange,
+}
+
+impl std::fmt::Display for PassError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Does a path exist from fusion group `from` to fusion group `to` that
+/// passes through at least one intermediate group? (A direct edge is fine
+/// to contract; an indirect path would make the merged group cyclic.)
+fn indirect_path(spec: &JobSpec, from: usize, to: usize) -> bool {
+    let fusion = &spec.fusion;
+    let model = &spec.model;
+    // group-level successor lists
+    let n = fusion.groups.len();
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (gi, members) in fusion.groups.iter().enumerate() {
+        for &m in members {
+            for &d in &model.ops[m as usize].deps {
+                let dg = fusion.group_of[d as usize] as usize;
+                if dg != gi && !succs[dg].contains(&(gi as u32)) {
+                    succs[dg].push(gi as u32);
+                }
+            }
+        }
+    }
+    // BFS from `from`'s successors except the direct edge to `to`
+    let mut seen = vec![false; n];
+    let mut queue: Vec<u32> = succs[from].iter().copied().filter(|&s| s as usize != to).collect();
+    while let Some(g) = queue.pop() {
+        let gi = g as usize;
+        if seen[gi] {
+            continue;
+        }
+        seen[gi] = true;
+        if gi == to {
+            return true;
+        }
+        for &s in &succs[gi] {
+            if !seen[s as usize] {
+                queue.push(s);
+            }
+        }
+    }
+    false
+}
+
+/// **Op fusion pass**: merge fusion groups `a` and `b` into one kernel.
+/// Valid only for same-kind groups with no indirect dependency path
+/// between them.
+pub fn fuse_comp_groups(spec: &mut JobSpec, a: usize, b: usize) -> Result<usize, PassError> {
+    let n = spec.fusion.groups.len();
+    if a >= n || b >= n {
+        return Err(PassError::OutOfRange);
+    }
+    if a == b {
+        return Err(PassError::SameGroup);
+    }
+    let ka = spec.model.ops[spec.fusion.groups[a][0] as usize].kind;
+    let kb = spec.model.ops[spec.fusion.groups[b][0] as usize].kind;
+    if ka != kb {
+        return Err(PassError::KindMismatch);
+    }
+    if indirect_path(spec, a, b) || indirect_path(spec, b, a) {
+        return Err(PassError::WouldCreateCycle);
+    }
+    let (keep, drop) = if a < b { (a, b) } else { (b, a) };
+    let dropped = spec.fusion.groups.remove(drop);
+    spec.fusion.groups[keep].extend(dropped);
+    spec.fusion.groups[keep].sort_unstable();
+    spec.fusion.rebuild_index(spec.model.ops.len());
+    Ok(keep)
+}
+
+/// **Tensor fusion pass**: merge comm groups `a` and `b` into one
+/// synchronization unit (partitions reset to the max of the two).
+pub fn fuse_tensor_groups(spec: &mut JobSpec, a: usize, b: usize) -> Result<usize, PassError> {
+    let n = spec.plan.groups.len();
+    if a >= n || b >= n {
+        return Err(PassError::OutOfRange);
+    }
+    if a == b {
+        return Err(PassError::SameGroup);
+    }
+    let (keep, drop) = if a < b { (a, b) } else { (b, a) };
+    let dropped = spec.plan.groups.remove(drop);
+    let kept = &mut spec.plan.groups[keep];
+    kept.partitions = kept.partitions.max(dropped.partitions);
+    kept.tensors.extend(dropped.tensors);
+    kept.tensors.sort_unstable();
+    Ok(keep)
+}
+
+/// **Tensor partition pass**: slice comm group `g` into `k` pieces.
+pub fn set_partitions(spec: &mut JobSpec, g: usize, k: usize) -> Result<(), PassError> {
+    if g >= spec.plan.groups.len() {
+        return Err(PassError::OutOfRange);
+    }
+    spec.plan.groups[g].partitions = k.max(1);
+    Ok(())
+}
+
+/// Comm group that synchronizes tensor `t`.
+pub fn comm_group_of_tensor(spec: &JobSpec, t: TensorId) -> Option<usize> {
+    spec.plan.groups.iter().position(|g| g.tensors.contains(&t))
+}
+
+/// Comm groups fed by fusion group `fg` (tensors produced by its members).
+pub fn comm_groups_of_fusion_group(spec: &JobSpec, fg: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    for &m in &spec.fusion.groups[fg] {
+        for &t in &spec.model.ops[m as usize].produces {
+            if let Some(cg) = comm_group_of_tensor(spec, t) {
+                if !out.contains(&cg) {
+                    out.push(cg);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fusion group that produces the tensors of comm group `cg` (the op the
+/// paper calls `p_n` for a communication op `q_n`). Returns the *latest*
+/// producer group if the comm group spans several.
+pub fn producer_fusion_group(spec: &JobSpec, cg: usize) -> Option<usize> {
+    spec.plan.groups[cg]
+        .tensors
+        .iter()
+        .filter_map(|&t| spec.model.producer_of(t))
+        .map(|op| spec.fusion.group_of[op as usize] as usize)
+        .max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+
+    fn spec() -> JobSpec {
+        JobSpec::standard("vgg16", "horovod", Transport::Rdma)
+    }
+
+    #[test]
+    fn fuse_adjacent_comp_ops() {
+        let mut s = spec();
+        // conv1_1 (op 0) and its relu (op 1) are directly dependent
+        let keep = fuse_comp_groups(&mut s, 0, 1).unwrap();
+        assert_eq!(s.fusion.groups[keep], vec![0, 1]);
+        assert_eq!(s.fusion.validate(&s.model), Ok(()));
+        // the fused kernel is faster than the sum of its parts
+        let gpu = &s.cluster.gpu;
+        let fused = s.fusion.duration(&s.model, gpu, keep);
+        let sum = s.model.ops[0].duration(gpu) + s.model.ops[1].duration(gpu);
+        assert!(fused < sum);
+    }
+
+    #[test]
+    fn fusion_rejects_kind_mismatch() {
+        let mut s = spec();
+        let n_fw = s.model.fw_ids().len();
+        // fusing a forward op with a backward op is invalid
+        let err = fuse_comp_groups(&mut s, 0, n_fw).unwrap_err();
+        assert_eq!(err, PassError::KindMismatch);
+    }
+
+    #[test]
+    fn fusion_rejects_indirect_path() {
+        let mut s = spec();
+        // op 0 -> op 1 -> op 2: fusing 0 and 2 would sandwich op 1
+        let err = fuse_comp_groups(&mut s, 0, 2).unwrap_err();
+        assert_eq!(err, PassError::WouldCreateCycle);
+    }
+
+    #[test]
+    fn chained_fusion_is_allowed() {
+        let mut s = spec();
+        let g = fuse_comp_groups(&mut s, 0, 1).unwrap();
+        // now group {0,1} is directly before op 2's group — fusable
+        let g2_group = s.fusion.group_of[2] as usize;
+        let kept = fuse_comp_groups(&mut s, g, g2_group).unwrap();
+        assert_eq!(s.fusion.groups[kept], vec![0, 1, 2]);
+        assert_eq!(s.fusion.validate(&s.model), Ok(()));
+    }
+
+    #[test]
+    fn tensor_fusion_merges_groups() {
+        let mut s = spec();
+        let n0 = s.plan.groups.len();
+        let keep = fuse_tensor_groups(&mut s, 0, 1).unwrap();
+        assert_eq!(s.plan.groups.len(), n0 - 1);
+        assert_eq!(s.plan.groups[keep].tensors, vec![0, 1]);
+        assert_eq!(s.plan.validate(&s.model), Ok(()));
+    }
+
+    #[test]
+    fn partition_pass() {
+        let mut s = spec();
+        set_partitions(&mut s, 0, 8).unwrap();
+        assert_eq!(s.plan.groups[0].partitions, 8);
+        set_partitions(&mut s, 0, 0).unwrap();
+        assert_eq!(s.plan.groups[0].partitions, 1);
+        assert!(set_partitions(&mut s, 10_000, 2).is_err());
+    }
+
+    #[test]
+    fn producer_lookups_consistent() {
+        let s = spec();
+        // tensor 0 (conv1_1.weight) produced by BW.conv1_1, the last op
+        let cg = comm_group_of_tensor(&s, 0).unwrap();
+        let fg = producer_fusion_group(&s, cg).unwrap();
+        let member = s.fusion.groups[fg][0] as usize;
+        assert!(s.model.ops[member].produces.contains(&0));
+        let cgs = comm_groups_of_fusion_group(&s, fg);
+        assert!(cgs.contains(&cg));
+    }
+}

@@ -1,0 +1,127 @@
+//! Graph-Pass Registry (paper Fig. 3 + §8): the extension point through
+//! which developers register custom optimization strategies; the optimizer
+//! evaluates every registered pass by replaying its rewritten spec.
+//!
+//! Mixed-precision training is the built-in example the paper mentions.
+
+use crate::config::JobSpec;
+use crate::graph::{build_global, AnalyticCost};
+use crate::models::cost::Precision;
+use crate::replay::replay_once;
+use crate::util::Us;
+
+/// A whole-job rewrite whose benefit is judged by replay.
+pub trait GraphPass {
+    fn name(&self) -> &str;
+    /// Rewrite the spec (returning a candidate); `None` = not applicable.
+    fn apply(&self, spec: &JobSpec) -> Option<JobSpec>;
+}
+
+/// Built-in custom pass: flip compute-bound GEMM/conv ops to fp16
+/// (Micikevicius et al. 2018). Gradients shrink to half size as well.
+pub struct MixedPrecisionPass;
+
+impl GraphPass for MixedPrecisionPass {
+    fn name(&self) -> &str {
+        "mixed_precision"
+    }
+
+    fn apply(&self, spec: &JobSpec) -> Option<JobSpec> {
+        let mut s = spec.clone();
+        let mut flipped = 0;
+        for op in &mut s.model.ops {
+            // only compute-bound ops benefit from tensor cores
+            if op.flops > 0.0 {
+                op.precision = Precision::Fp16;
+                flipped += 1;
+            }
+        }
+        // fp16 gradients: half the synchronization volume
+        for t in &mut s.model.tensors {
+            t.bytes *= 0.5;
+        }
+        (flipped > 0).then_some(s)
+    }
+}
+
+/// The registry: evaluate every pass by replay, keep improvements.
+pub struct Registry {
+    passes: Vec<Box<dyn GraphPass>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry { passes: vec![Box::new(MixedPrecisionPass)] }
+    }
+}
+
+impl Registry {
+    pub fn empty() -> Registry {
+        Registry { passes: Vec::new() }
+    }
+
+    pub fn register(&mut self, pass: Box<dyn GraphPass>) {
+        self.passes.push(pass);
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Try every registered pass; return the best (name, spec, est) that
+    /// beats `baseline_us`, if any.
+    pub fn best_improvement(
+        &self,
+        spec: &JobSpec,
+        baseline_us: Us,
+    ) -> Option<(String, JobSpec, Us)> {
+        let mut best: Option<(String, JobSpec, Us)> = None;
+        for p in &self.passes {
+            if let Some(cand) = p.apply(spec) {
+                let g = build_global(&cand, &AnalyticCost::new(&cand));
+                let est = replay_once(&g).iteration_time;
+                if est < baseline_us && best.as_ref().map(|(_, _, b)| est < *b).unwrap_or(true) {
+                    best = Some((p.name().to_string(), cand, est));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transport;
+
+    #[test]
+    fn mixed_precision_speeds_up_compute_bound_model() {
+        let spec = JobSpec::standard("bert_base", "horovod", Transport::Rdma);
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let base = replay_once(&g).iteration_time;
+        let reg = Registry::default();
+        let (name, cand, est) = reg.best_improvement(&spec, base).expect("should improve");
+        assert_eq!(name, "mixed_precision");
+        assert!(est < base * 0.8, "base={base} est={est}");
+        // gradient volume halved
+        assert!(cand.model.param_bytes() < spec.model.param_bytes() * 0.6);
+    }
+
+    #[test]
+    fn custom_pass_registration() {
+        struct Noop;
+        impl GraphPass for Noop {
+            fn name(&self) -> &str {
+                "noop"
+            }
+            fn apply(&self, _: &JobSpec) -> Option<JobSpec> {
+                None
+            }
+        }
+        let mut reg = Registry::empty();
+        reg.register(Box::new(Noop));
+        assert_eq!(reg.names(), vec!["noop"]);
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        assert!(reg.best_improvement(&spec, 1.0).is_none());
+    }
+}

@@ -1,0 +1,546 @@
+//! The diagnosis & optimization search (paper Alg. 1): iteratively replay,
+//! extract the critical path of the execution graph, and apply op fusion /
+//! tensor fusion / tensor partition guided by Theorems 1–3 until the
+//! estimated iteration time converges or the budget runs out.
+
+use std::time::Instant;
+
+use crate::config::{CommScheme, JobSpec};
+use crate::graph::dfg::{NodeId, OpKind, TensorId};
+use crate::graph::{build_global_nameless, AnalyticCost, GlobalDfg};
+use crate::optimizer::memopt::{self, MemOpt};
+use crate::optimizer::{coarsen, passes, symmetry::SymmetryIndex};
+use crate::replay::partial::TsyncEstimator;
+use crate::replay::{replay_once, Replayer};
+use crate::util::Us;
+
+/// Search configuration; the three `use_*` flags are the paper's Table 5
+/// ablation axes.
+#[derive(Clone, Debug)]
+pub struct SearchOpts {
+    pub use_coarsened_view: bool,
+    pub use_partial_replay: bool,
+    pub use_symmetry: bool,
+    pub enable_op_fusion: bool,
+    pub enable_tensor_fusion: bool,
+    /// Tensor partition (paper: most valuable under PS). `None` = auto
+    /// (on for BytePS, off for Horovod).
+    pub enable_partition: Option<bool>,
+    pub memory_budget_bytes: Option<f64>,
+    pub max_rounds: usize,
+    /// Stop when the estimate improves < 0.5% over this many rounds.
+    pub converge_rounds: usize,
+    pub budget_wall_s: f64,
+    pub max_partitions: usize,
+}
+
+impl Default for SearchOpts {
+    fn default() -> Self {
+        SearchOpts {
+            use_coarsened_view: true,
+            use_partial_replay: true,
+            use_symmetry: true,
+            enable_op_fusion: true,
+            enable_tensor_fusion: true,
+            enable_partition: None,
+            memory_budget_bytes: None,
+            max_rounds: 40,
+            converge_rounds: 5,
+            budget_wall_s: 120.0,
+            max_partitions: 16,
+        }
+    }
+}
+
+impl SearchOpts {
+    /// The Table 5 "strawman": Alg. 1 with no acceleration technique.
+    pub fn strawman() -> SearchOpts {
+        SearchOpts {
+            use_coarsened_view: false,
+            use_partial_replay: false,
+            use_symmetry: false,
+            ..Default::default()
+        }
+    }
+
+    /// Only search op-fusion decisions (paper's dPRO_OPFS).
+    pub fn opfs_only() -> SearchOpts {
+        SearchOpts {
+            enable_tensor_fusion: false,
+            enable_partition: Some(false),
+            ..Default::default()
+        }
+    }
+
+    /// Only search tensor-fusion/partition decisions (paper's dPRO_TSFS).
+    pub fn tsfs_only() -> SearchOpts {
+        SearchOpts { enable_op_fusion: false, ..Default::default() }
+    }
+}
+
+/// Outcome of a search run.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub spec: JobSpec,
+    pub baseline_iteration_us: Us,
+    pub est_iteration_us: Us,
+    pub history: Vec<Us>,
+    pub mem_opt: MemOpt,
+    pub replays: usize,
+    pub full_replays_for_tsync: usize,
+    pub actions_applied: usize,
+    pub wall_s: f64,
+}
+
+impl SearchOutcome {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_iteration_us / self.est_iteration_us
+    }
+}
+
+/// A decision recorded during a critical-path walk, in *stable* ids
+/// (template ops / tensors) so it survives plan-index shifts.
+#[derive(Clone, Debug)]
+enum Decision {
+    /// fuse the fusion groups containing these two template ops + the comm
+    /// groups of their produced tensors (Theorems 1+3)
+    OpFuse(u32, u32),
+    /// fuse the comm groups containing these two tensors + their producer
+    /// fusion groups (Theorems 2+3)
+    TensorFuse(TensorId, TensorId),
+    /// set partition count of the comm group containing the tensor
+    Partition(TensorId, usize),
+}
+
+/// t_sync oracle: partial replay (fast, memoized) or full replay of the
+/// entire current job (the strawman's approach).
+struct Tsync {
+    partial: Option<TsyncEstimator>,
+    full_replays: usize,
+}
+
+impl Tsync {
+    fn new(spec: &JobSpec, partial: bool) -> Tsync {
+        Tsync {
+            partial: partial.then(|| TsyncEstimator::new(spec)),
+            full_replays: 0,
+        }
+    }
+
+    fn t_sync(&mut self, spec: &JobSpec, bytes: f64, k: usize) -> Us {
+        if let Some(p) = &mut self.partial {
+            return p.t_sync(bytes, k);
+        }
+        // strawman: replay the entire global DFG with a probe group spliced
+        // in as an extra tensor on the first comm group's producer
+        let mut s = spec.clone();
+        // emulate by replaying the full graph and measuring an equivalent
+        // group: rescale group 0 to the probe size
+        if s.plan.groups.is_empty() {
+            return 0.0;
+        }
+        s.plan.groups[0].partitions = k.max(1);
+        let scale_t = s.plan.groups[0].tensors[0] as usize;
+        let orig = s.model.tensors[scale_t].bytes;
+        let group_rest: f64 = s.plan.groups[0]
+            .tensors
+            .iter()
+            .skip(1)
+            .map(|&t| s.model.tensors[t as usize].bytes)
+            .sum();
+        s.model.tensors[scale_t].bytes = (bytes - group_rest).max(1.0);
+        let _ = orig;
+        let g = build_global_nameless(&s, &AnalyticCost::new(&s));
+        let r = replay_once(&g);
+        self.full_replays += 1;
+        let mut t_in = f64::INFINITY;
+        let mut t_out: f64 = 0.0;
+        for &n in &g.group_nodes[0] {
+            let node = g.dfg.node(n);
+            match node.kind {
+                OpKind::In => t_in = t_in.min(r.end[n as usize]),
+                OpKind::Out => t_out = t_out.max(r.end[n as usize]),
+                _ => {}
+            }
+        }
+        (t_out - t_in).max(0.0)
+    }
+
+    fn opt_part_num(&mut self, spec: &JobSpec, bytes: f64, max_k: usize) -> (usize, Us) {
+        let mut best = (1usize, f64::INFINITY);
+        for k in 1..=max_k.max(1) {
+            let t = self.t_sync(spec, bytes, k);
+            if t < best.1 {
+                best = (k, t);
+            }
+        }
+        best
+    }
+}
+
+/// Run Alg. 1 on a job spec.
+pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
+    let t0 = Instant::now();
+    let mut spec = spec0.clone();
+    let mut replays = 0usize;
+
+    // baseline estimate (deployed plan, before any dPRO strategy)
+    let baseline = {
+        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
+        replays += 1;
+        replay_once(&g).iteration_time
+    };
+
+    // ---- memory passes (Alg. 1 line 1) ----
+    let mut mem_opt = MemOpt::None;
+    if let Some(budget) = opts.memory_budget_bytes {
+        let (chosen, _) = memopt::choose(&spec, budget);
+        mem_opt = chosen;
+        spec = memopt::apply(&spec, chosen);
+    }
+
+    // ---- Coarsened View (Alg. 1 line 2) ----
+    if opts.use_coarsened_view {
+        coarsen::coarsen(&mut spec);
+    }
+
+    let partition_enabled = opts
+        .enable_partition
+        .unwrap_or(matches!(spec.scheme, CommScheme::Ps(_)));
+    let sym = opts.use_symmetry.then(|| SymmetryIndex::new(&spec.model));
+    let mut tsync = Tsync::new(&spec, opts.use_partial_replay);
+
+    let mut history: Vec<Us> = Vec::new();
+    let mut best = f64::INFINITY;
+    let mut best_spec = spec.clone();
+    let mut stale = 0usize;
+    let mut actions_applied = 0usize;
+
+    for _round in 0..opts.max_rounds {
+        if t0.elapsed().as_secs_f64() > opts.budget_wall_s {
+            break;
+        }
+        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
+        let mut rp = Replayer::new(&g);
+        let result = rp.replay(&g);
+        replays += 1;
+        let est = result.iteration_time;
+        history.push(est);
+        if est < best * 0.995 {
+            best = est;
+            best_spec = spec.clone();
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= opts.converge_rounds {
+                break;
+            }
+        }
+
+        // ---- walk the critical path and collect decisions ----
+        let path = result.critical_path();
+        let decisions = collect_decisions(&spec, &g, &path, &result.end, &mut tsync, opts, partition_enabled);
+        if decisions.is_empty() {
+            break;
+        }
+
+        // ---- apply (with symmetry propagation) ----
+        let mut applied = 0usize;
+        for d in decisions {
+            applied += apply_decision(&mut spec, &d, sym.as_ref(), opts);
+        }
+        actions_applied += applied;
+        if applied == 0 {
+            break;
+        }
+    }
+
+    // final estimate on the best spec found
+    let g = build_global_nameless(&best_spec, &AnalyticCost::new(&best_spec));
+    replays += 1;
+    let est = replay_once(&g).iteration_time;
+
+    SearchOutcome {
+        spec: best_spec,
+        baseline_iteration_us: baseline,
+        est_iteration_us: est.min(best),
+        history,
+        mem_opt,
+        replays,
+        full_replays_for_tsync: tsync.full_replays,
+        actions_applied,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Walk the path per Alg. 1 (lines 5–25) and collect fusion/partition
+/// decisions in stable ids.
+#[allow(clippy::too_many_arguments)]
+fn collect_decisions(
+    spec: &JobSpec,
+    g: &GlobalDfg,
+    path: &[NodeId],
+    end: &[f64],
+    tsync: &mut Tsync,
+    opts: &SearchOpts,
+    partition_enabled: bool,
+) -> Vec<Decision> {
+    let gpu = &spec.cluster.gpu;
+    let mut out = Vec::new();
+    // Alg. 1 walks the whole critical path each round; decisions are in
+    // stable ids so applying a batch cannot invalidate later ones
+    let max_decisions = usize::MAX;
+
+    // group-level end times for q^e (max end over the group's comm chain)
+    let group_end = |cg: usize| -> f64 {
+        g.group_nodes[cg].iter().map(|&n| end[n as usize]).fold(0.0, f64::max)
+    };
+
+    for w in path.windows(2) {
+        if out.len() >= max_decisions {
+            break;
+        }
+        let (a, b) = (g.dfg.node(w[0]), g.dfg.node(w[1]));
+
+        // ---- computation-bound segment: consecutive comp ops ----
+        if opts.enable_op_fusion
+            && a.kind == b.kind
+            && (a.kind == OpKind::Backward || a.kind == OpKind::Forward)
+            && a.owner == b.owner
+        {
+            let (Some(fa), Some(fb)) = (a.template_id, b.template_id) else { continue };
+            if fa == fb {
+                continue;
+            }
+            let da = spec.fusion.duration(&spec.model, gpu, fa as usize);
+            let db = spec.fusion.duration(&spec.model, gpu, fb as usize);
+            let fused = gpu.fused_time(&[da, db]);
+            // q_{n-1}: sync of the tensors produced by the earlier group
+            let cgs = passes::comm_groups_of_fusion_group(spec, fa as usize);
+            let q_d = cgs
+                .iter()
+                .map(|&cg| {
+                    let bytes = spec.plan.group_bytes(&spec.model, cg);
+                    tsync.t_sync(spec, bytes, spec.plan.groups[cg].partitions)
+                })
+                .fold(0.0, f64::max);
+            // Theorem 1
+            if q_d <= da + db - fused {
+                let op_a = spec.fusion.groups[fa as usize][0];
+                let op_b = spec.fusion.groups[fb as usize][0];
+                out.push(Decision::OpFuse(op_a, op_b));
+            }
+            continue;
+        }
+
+        // ---- communication-bound segment: consecutive comm ops ----
+        if opts.enable_tensor_fusion && a.kind.is_comm() && b.kind.is_comm() {
+            let (Some(ta), Some(tb)) = (a.tensor, b.tensor) else { continue };
+            let (ca, cb) = (ta.tensor_id as usize, tb.tensor_id as usize);
+            if ca == cb || ca >= spec.plan.groups.len() || cb >= spec.plan.groups.len() {
+                continue;
+            }
+            let sa = spec.plan.group_bytes(&spec.model, ca);
+            let sb = spec.plan.group_bytes(&spec.model, cb);
+            let max_k = if partition_enabled { opts.max_partitions } else { 1 };
+            let (k_f, t_f) = tsync.opt_part_num(spec, sa + sb, max_k);
+            let (_k_b, t_b) = tsync.opt_part_num(spec, sb, max_k);
+            let q_prev_end = group_end(ca);
+            // p_n^e: end of the producer comp group of cb on this worker
+            let p_end = passes::producer_fusion_group(spec, cb)
+                .and_then(|fg| g.comp_node.get(&(b.owner, fg as u32)))
+                .map(|&n| end[n as usize])
+                .unwrap_or(0.0);
+            // Theorem 2
+            if q_prev_end > p_end + t_f - t_b {
+                let t_first = spec.plan.groups[ca].tensors[0];
+                let t_second = spec.plan.groups[cb].tensors[0];
+                out.push(Decision::TensorFuse(t_first, t_second));
+                if partition_enabled && k_f > 1 {
+                    out.push(Decision::Partition(t_first, k_f));
+                }
+            } else if partition_enabled {
+                let (k_n, _) = tsync.opt_part_num(spec, sb, max_k);
+                if k_n != spec.plan.groups[cb].partitions {
+                    out.push(Decision::Partition(spec.plan.groups[cb].tensors[0], k_n));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Apply one decision (+ its Theorem-3 companions and symmetry analogs).
+/// Returns the number of primitive passes applied.
+fn apply_decision(
+    spec: &mut JobSpec,
+    d: &Decision,
+    sym: Option<&SymmetryIndex>,
+    opts: &SearchOpts,
+) -> usize {
+    let mut n = 0usize;
+    match *d {
+        Decision::OpFuse(op_a, op_b) => {
+            n += fuse_ops_and_tensors(spec, op_a, op_b, opts);
+            if let Some(sym) = sym {
+                for (x, y) in sym.analog_pairs(op_a, op_b) {
+                    n += fuse_ops_and_tensors(spec, x, y, opts);
+                }
+            }
+        }
+        Decision::TensorFuse(ta, tb) => {
+            n += fuse_tensors_and_ops(spec, ta, tb, opts);
+            if let Some(sym) = sym {
+                let pa = spec.model.producer_of(ta);
+                let pb = spec.model.producer_of(tb);
+                if let (Some(pa), Some(pb)) = (pa, pb) {
+                    for (x, y) in sym.analog_pairs(pa, pb) {
+                        // fuse the first produced tensors of the analogs
+                        let tx = spec.model.ops[x as usize].produces.first().copied();
+                        let ty = spec.model.ops[y as usize].produces.first().copied();
+                        if let (Some(tx), Some(ty)) = (tx, ty) {
+                            n += fuse_tensors_and_ops(spec, tx, ty, opts);
+                        }
+                    }
+                }
+            }
+        }
+        Decision::Partition(t, k) => {
+            if let Some(cg) = passes::comm_group_of_tensor(spec, t) {
+                if spec.plan.groups[cg].partitions != k
+                    && passes::set_partitions(spec, cg, k).is_ok()
+                {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// Theorem 1 + 3: fuse two fusion groups and the comm groups they feed.
+fn fuse_ops_and_tensors(spec: &mut JobSpec, op_a: u32, op_b: u32, opts: &SearchOpts) -> usize {
+    let fa = spec.fusion.group_of[op_a as usize] as usize;
+    let fb = spec.fusion.group_of[op_b as usize] as usize;
+    if fa == fb {
+        return 0;
+    }
+    let mut n = 0;
+    let cgs_a = passes::comm_groups_of_fusion_group(spec, fa);
+    let cgs_b = passes::comm_groups_of_fusion_group(spec, fb);
+    if passes::fuse_comp_groups(spec, fa, fb).is_ok() {
+        n += 1;
+        // companion tensor fusion (Theorem 3)
+        if opts.enable_tensor_fusion {
+            if let (Some(&ca), Some(&cb)) = (cgs_a.first(), cgs_b.first()) {
+                // indices may have shifted only for fusion groups, not comm
+                if ca != cb && passes::fuse_tensor_groups(spec, ca, cb).is_ok() {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// Theorem 2 + 3: fuse two comm groups and their producer fusion groups.
+fn fuse_tensors_and_ops(spec: &mut JobSpec, ta: TensorId, tb: TensorId, opts: &SearchOpts) -> usize {
+    let Some(ca) = passes::comm_group_of_tensor(spec, ta) else { return 0 };
+    let Some(cb) = passes::comm_group_of_tensor(spec, tb) else { return 0 };
+    if ca == cb {
+        return 0;
+    }
+    let pa = passes::producer_fusion_group(spec, ca);
+    let pb = passes::producer_fusion_group(spec, cb);
+    let mut n = 0;
+    if passes::fuse_tensor_groups(spec, ca, cb).is_ok() {
+        n += 1;
+        if opts.enable_op_fusion {
+            if let (Some(pa), Some(pb)) = (pa, pb) {
+                if pa != pb && passes::fuse_comp_groups(spec, pa, pb).is_ok() {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transport;
+
+    fn quick_opts() -> SearchOpts {
+        SearchOpts { max_rounds: 8, budget_wall_s: 30.0, ..Default::default() }
+    }
+
+    #[test]
+    fn search_improves_resnet_horovod() {
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let out = optimize(&spec, &quick_opts());
+        assert!(
+            out.est_iteration_us < out.baseline_iteration_us,
+            "no improvement: base={} est={}",
+            out.baseline_iteration_us,
+            out.est_iteration_us
+        );
+        assert!(out.actions_applied > 0);
+        assert_eq!(out.spec.plan.validate(&out.spec.model), Ok(()));
+        assert_eq!(out.spec.fusion.validate(&out.spec.model), Ok(()));
+    }
+
+    #[test]
+    fn optimized_spec_faster_on_testbed_too() {
+        // the claim that matters: strategies found on the replayer must
+        // speed up the *ground truth*
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let out = optimize(&spec, &quick_opts());
+        let tb_base = crate::testbed::run(
+            &spec,
+            &crate::testbed::TestbedOpts { iterations: 4, ..Default::default() },
+        )
+        .avg_iter();
+        let tb_opt = crate::testbed::run(
+            &out.spec,
+            &crate::testbed::TestbedOpts { iterations: 4, ..Default::default() },
+        )
+        .avg_iter();
+        assert!(
+            tb_opt < tb_base,
+            "testbed: base={tb_base} opt={tb_opt}"
+        );
+    }
+
+    #[test]
+    fn partial_replay_avoids_full_replays() {
+        // tensor-fusion-only search on a comm-bound PS job forces t_sync
+        // queries; partial replay answers them without full replays.
+        let spec = JobSpec::standard("vgg16", "byteps", Transport::Tcp);
+        let mut fast = SearchOpts::tsfs_only();
+        fast.max_rounds = 3;
+        fast.budget_wall_s = 60.0;
+        let with = optimize(&spec, &fast);
+        let mut slow = fast.clone();
+        slow.use_partial_replay = false;
+        let without = optimize(&spec, &slow);
+        assert_eq!(with.full_replays_for_tsync, 0);
+        assert!(
+            without.full_replays_for_tsync > 0,
+            "strawman did {} full replays",
+            without.full_replays_for_tsync
+        );
+        assert!(with.wall_s <= without.wall_s + 0.5, "with={} without={}", with.wall_s, without.wall_s);
+    }
+
+    #[test]
+    fn opfs_only_never_touches_comm_plan() {
+        let spec = JobSpec::standard("inception_v3", "horovod", Transport::Rdma);
+        let n_groups = spec.plan.groups.len();
+        let mut o = SearchOpts::opfs_only();
+        o.max_rounds = 4;
+        o.use_coarsened_view = false; // coarsening fuses tensors by design
+        let out = optimize(&spec, &o);
+        assert_eq!(out.spec.plan.groups.len(), n_groups);
+    }
+}

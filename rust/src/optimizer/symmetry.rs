@@ -1,0 +1,119 @@
+//! Symmetry acceleration (paper §5.3): state-of-the-art DNNs repeat
+//! identical blocks (BERT's 12 transformer blocks, ResNet's stages), so a
+//! fusion decision found on the critical path inside one block can be
+//! propagated to every analogous position without re-searching.
+//!
+//! Analogy is structural: op names are `<block>_<role>` (e.g.
+//! `blk03_ff1`, `s2b1_conv1`); two ops are analogous if they share the
+//! role and differ only in block.
+
+use std::collections::HashMap;
+
+use crate::models::ModelGraph;
+
+/// Split a template op name into (kind prefix, block, role).
+/// `BW.blk03_ff1` → ("BW", "blk03", "ff1"). Returns None for unblocked
+/// names (no '_' separator).
+fn split_name(name: &str) -> Option<(&str, &str, &str)> {
+    let (kind, rest) = name.split_once('.')?;
+    let (block, role) = rest.split_once('_')?;
+    Some((kind, block, role))
+}
+
+/// Index of (kind, block, role) → op id, plus the set of blocks.
+pub struct SymmetryIndex {
+    by_key: HashMap<(String, String, String), u32>,
+    /// op id → (kind, block, role)
+    parts: Vec<Option<(String, String, String)>>,
+    blocks: Vec<String>,
+}
+
+impl SymmetryIndex {
+    pub fn new(model: &ModelGraph) -> SymmetryIndex {
+        let mut by_key = HashMap::new();
+        let mut parts = Vec::with_capacity(model.ops.len());
+        let mut blocks: Vec<String> = Vec::new();
+        for (i, op) in model.ops.iter().enumerate() {
+            match split_name(&op.name) {
+                Some((k, b, r)) => {
+                    let key = (k.to_string(), b.to_string(), r.to_string());
+                    by_key.insert(key.clone(), i as u32);
+                    if !blocks.contains(&key.1) {
+                        blocks.push(key.1.clone());
+                    }
+                    parts.push(Some(key));
+                }
+                None => parts.push(None),
+            }
+        }
+        SymmetryIndex { by_key, parts, blocks }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// All analogous op pairs of (a, b) in *other* blocks. Only meaningful
+    /// when a and b live in the same block.
+    pub fn analog_pairs(&self, a: u32, b: u32) -> Vec<(u32, u32)> {
+        let (Some(pa), Some(pb)) = (&self.parts[a as usize], &self.parts[b as usize]) else {
+            return Vec::new();
+        };
+        if pa.1 != pb.1 {
+            return Vec::new(); // different blocks: no analogy to exploit
+        }
+        let mut out = Vec::new();
+        for blk in &self.blocks {
+            if *blk == pa.1 {
+                continue;
+            }
+            let ka = (pa.0.clone(), blk.clone(), pa.2.clone());
+            let kb = (pb.0.clone(), blk.clone(), pb.2.clone());
+            if let (Some(&x), Some(&y)) = (self.by_key.get(&ka), self.by_key.get(&kb)) {
+                out.push((x, y));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn bert_blocks_are_analogous() {
+        let m = models::by_name("bert_base", 8).unwrap();
+        let idx = SymmetryIndex::new(&m);
+        assert!(idx.n_blocks() >= 12);
+        // find FW.blk00_ff1 and FW.blk00_gelu
+        let a = m.ops.iter().position(|o| o.name == "FW.blk00_ff1").unwrap() as u32;
+        let b = m.ops.iter().position(|o| o.name == "FW.blk00_gelu").unwrap() as u32;
+        let pairs = idx.analog_pairs(a, b);
+        assert_eq!(pairs.len(), 11, "one pair per other block");
+        for (x, y) in pairs {
+            assert!(m.ops[x as usize].name.ends_with("_ff1"));
+            assert!(m.ops[y as usize].name.ends_with("_gelu"));
+            assert_ne!(x, a);
+            assert_ne!(y, b);
+        }
+    }
+
+    #[test]
+    fn cross_block_pairs_have_no_analogs() {
+        let m = models::by_name("bert_base", 8).unwrap();
+        let idx = SymmetryIndex::new(&m);
+        let a = m.ops.iter().position(|o| o.name == "FW.blk00_ff1").unwrap() as u32;
+        let b = m.ops.iter().position(|o| o.name == "FW.blk01_ff1").unwrap() as u32;
+        assert!(idx.analog_pairs(a, b).is_empty());
+    }
+
+    #[test]
+    fn resnet_stage_blocks_indexed() {
+        let m = models::by_name("resnet50", 8).unwrap();
+        let idx = SymmetryIndex::new(&m);
+        // s1b1..s4b3 = 16 blocks (+ stem etc.)
+        assert!(idx.n_blocks() >= 16);
+    }
+}

@@ -1,0 +1,53 @@
+//! The profitability predicates of paper §5.1 as standalone functions —
+//! exactly the inequalities of Theorems 1 and 2 (Theorem 3 is structural:
+//! fusing companions never hurts, and is applied by the search directly).
+
+use crate::util::Us;
+
+/// **Theorem 1 (Op Fusion).** Fusing computation ops `p_{n-1}` and `p_n`
+/// improves `T_n` iff the previous tensor's synchronization hides inside
+/// the fused kernel's saving:
+/// `q_{n-1}^d ≤ p_{n-1}^d + p_n^d − opfs_time(p_{n-1}, p_n)`.
+pub fn op_fusion_profitable(q_prev_sync: Us, p_prev: Us, p_cur: Us, fused: Us) -> bool {
+    q_prev_sync <= p_prev + p_cur - fused
+}
+
+/// **Theorem 2 (Tensor Fusion/Partition).** Fusing tensors `q_{n-1}` and
+/// `q_n` improves `T_n` iff
+/// `q_{n-1}^e > p_n^e + t_sync(s_{n-1}+s_n, k*) − t_sync(s_n, k*[s_n])`.
+pub fn tensor_fusion_profitable(
+    q_prev_end: Us,
+    p_cur_end: Us,
+    t_sync_fused_opt: Us,
+    t_sync_cur_opt: Us,
+) -> bool {
+    q_prev_end > p_cur_end + t_sync_fused_opt - t_sync_cur_opt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem1_boundary() {
+        // saving = 10+10-15 = 5; sync of 4 hides, sync of 6 does not
+        assert!(op_fusion_profitable(4.0, 10.0, 10.0, 15.0));
+        assert!(op_fusion_profitable(5.0, 10.0, 10.0, 15.0));
+        assert!(!op_fusion_profitable(6.0, 10.0, 10.0, 15.0));
+    }
+
+    #[test]
+    fn theorem1_fusion_never_profitable_when_kernel_grows() {
+        // a "fused" kernel slower than its parts can never win
+        assert!(!op_fusion_profitable(1.0, 10.0, 10.0, 25.0));
+    }
+
+    #[test]
+    fn theorem2_boundary() {
+        // prev sync ends at 100; cur producer ends at 60; fusing costs
+        // 50 vs 20 ⇒ threshold 60 + 30 = 90 < 100 ⇒ fuse
+        assert!(tensor_fusion_profitable(100.0, 60.0, 50.0, 20.0));
+        // if prev sync already ended early (80 < 90), don't fuse
+        assert!(!tensor_fusion_profitable(80.0, 60.0, 50.0, 20.0));
+    }
+}

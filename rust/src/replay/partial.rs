@@ -1,0 +1,142 @@
+//! Partial replay (paper §5.3): estimate `t_sync(s, k)` — the time to
+//! synchronize a tensor of `s` bytes split into `k` partitions — by
+//! replaying only the communication subgraph of a single tensor group,
+//! instead of the whole global DFG.
+//!
+//! Results are memoized on (scheme, rounded size, k); the optimizer calls
+//! this inside `OptPartNum` grid search thousands of times.
+
+use std::collections::HashMap;
+
+use crate::config::{CommPlan, FusionPlan, JobSpec, TensorGroup};
+use crate::graph::{build_global_nameless, AnalyticCost};
+use crate::models::{ModelBuilder, ModelGraph};
+use crate::util::Us;
+
+/// Memoizing t_sync estimator for one job configuration.
+pub struct TsyncEstimator {
+    /// Job skeleton with a single-op model; we rewrite the single group's
+    /// size/partitions and replay the (tiny) comm subgraph.
+    spec: JobSpec,
+    cache: HashMap<(u64, usize), Us>,
+    pub replays: usize,
+}
+
+/// A minimal model with one backward op producing one tensor of `bytes`.
+fn one_tensor_model(bytes: f64) -> ModelGraph {
+    let mut b = ModelBuilder::new("probe", 1);
+    b.op("probe", &[], 0.0, 8.0, 1.0, 0.0, &[("t", bytes / 4.0)]);
+    b.finish()
+}
+
+impl TsyncEstimator {
+    pub fn new(job: &JobSpec) -> TsyncEstimator {
+        let mut spec = job.clone();
+        spec.model = one_tensor_model(4096.0);
+        spec.plan = CommPlan::per_tensor(&spec.model);
+        spec.fusion = FusionPlan::singletons(&spec.model);
+        TsyncEstimator { spec, cache: HashMap::new(), replays: 0 }
+    }
+
+    /// `t_sync(s, k)`: complete synchronization time of an `s`-byte tensor
+    /// in `k` partitions on an otherwise idle network.
+    pub fn t_sync(&mut self, bytes: f64, k: usize) -> Us {
+        // quantize size to 1 KB buckets for memoization
+        let key = ((bytes / 1024.0).round() as u64, k.max(1));
+        if let Some(&v) = self.cache.get(&key) {
+            return v;
+        }
+        self.spec.model = one_tensor_model((key.0 as f64) * 1024.0);
+        self.spec.fusion = FusionPlan::singletons(&self.spec.model);
+        self.spec.plan = CommPlan {
+            groups: vec![TensorGroup { tensors: vec![0], partitions: k.max(1) }],
+        };
+        let g = build_global_nameless(&self.spec, &AnalyticCost::new(&self.spec));
+        let r = crate::replay::replay_once(&g);
+        self.replays += 1;
+        // synchronization time = from the In ops (time 0; the probe op is
+        // ~free) to the last Out — minus the probe/update tails.
+        let mut t = 0.0f64;
+        for i in g.dfg.ids() {
+            let n = g.dfg.node(i);
+            if n.kind == crate::graph::OpKind::Out {
+                t = t.max(r.end[i as usize]);
+            }
+        }
+        self.cache.insert(key, t);
+        t
+    }
+
+    /// Optimal partition count via grid search (paper: "obtained through
+    /// grid search"), and its t_sync.
+    pub fn opt_part_num(&mut self, bytes: f64, max_k: usize) -> (usize, Us) {
+        let mut best = (1usize, f64::INFINITY);
+        for k in 1..=max_k.max(1) {
+            let t = self.t_sync(bytes, k);
+            if t < best.1 {
+                best = (k, t);
+            }
+        }
+        best
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+
+    #[test]
+    fn tsync_monotone_in_size() {
+        let job = JobSpec::standard("resnet50", "byteps", Transport::Rdma);
+        let mut est = TsyncEstimator::new(&job);
+        let small = est.t_sync(1.0e6, 1);
+        let large = est.t_sync(64.0e6, 1);
+        assert!(large > small * 4.0, "small={small} large={large}");
+    }
+
+    #[test]
+    fn partitioning_helps_large_ps_tensors() {
+        // PS push/pull pipeline: partitions overlap push and pull.
+        let job = JobSpec::standard("vgg16", "byteps", Transport::Rdma);
+        let mut est = TsyncEstimator::new(&job);
+        let whole = est.t_sync(400.0e6, 1);
+        let parts = est.t_sync(400.0e6, 8);
+        assert!(parts < whole, "k=1: {whole}, k=8: {parts}");
+    }
+
+    #[test]
+    fn too_many_partitions_hurt() {
+        // per-message overhead dominates tiny partitions
+        let job = JobSpec::standard("resnet50", "byteps", Transport::Tcp);
+        let mut est = TsyncEstimator::new(&job);
+        let reasonable = est.t_sync(4.0e6, 2);
+        let absurd = est.t_sync(4.0e6, 256);
+        assert!(absurd > reasonable, "k=2: {reasonable}, k=256: {absurd}");
+    }
+
+    #[test]
+    fn opt_part_num_beats_endpoints() {
+        let job = JobSpec::standard("vgg16", "byteps", Transport::Rdma);
+        let mut est = TsyncEstimator::new(&job);
+        let (k, t) = est.opt_part_num(100.0e6, 16);
+        assert!(k >= 1 && k <= 16);
+        assert!(t <= est.t_sync(100.0e6, 1));
+        assert!(t <= est.t_sync(100.0e6, 16));
+    }
+
+    #[test]
+    fn cache_hits_avoid_replays() {
+        let job = JobSpec::standard("resnet50", "byteps", Transport::Rdma);
+        let mut est = TsyncEstimator::new(&job);
+        est.t_sync(8.0e6, 4);
+        let replays = est.replays;
+        est.t_sync(8.0e6, 4);
+        assert_eq!(est.replays, replays);
+        assert!(est.cache_len() >= 1);
+    }
+}

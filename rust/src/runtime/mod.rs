@@ -1,0 +1,161 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust. Python is never on
+//! this path — the HLO text is parsed, compiled and run by the `xla`
+//! crate's PJRT CPU client (see /opt/xla-example/load_hlo).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// A compiled executable plus its name (for reporting).
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; the artifact returns one tuple (aot.py
+    /// lowers with `return_tuple=True`) which is decomposed into leaves.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT client wrapper; one per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Artifact {
+            name: path.file_name().unwrap().to_string_lossy().to_string(),
+            exe,
+        })
+    }
+}
+
+/// Parameter metadata from `gpt_<cfg>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GptMeta {
+    pub config: String,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub n_state_leaves: usize,
+    pub params: Vec<ParamMeta>,
+}
+
+impl GptMeta {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|p| p.size).sum()
+    }
+
+    pub fn load(dir: &Path, config: &str) -> Result<GptMeta> {
+        let path = dir.join(format!("gpt_{config}.meta.json"));
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(|p| ParamMeta {
+                name: p.str("name").to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_f64().unwrap() as usize)
+                    .collect(),
+                size: p.f64("size") as usize,
+            })
+            .collect();
+        Ok(GptMeta {
+            config: j.str("config").to_string(),
+            batch_size: j.f64("batch_size") as usize,
+            seq_len: j.f64("seq_len") as usize,
+            hidden: j.f64("hidden") as usize,
+            layers: j.f64("layers") as usize,
+            heads: j.f64("heads") as usize,
+            vocab: j.f64("vocab") as usize,
+            n_state_leaves: j.f64("n_state_leaves") as usize,
+            params,
+        })
+    }
+}
+
+/// The full artifact bundle for one model config.
+pub struct GptArtifacts {
+    pub meta: GptMeta,
+    pub init: Artifact,
+    pub grad: Artifact,
+    pub apply: Artifact,
+    pub train: Artifact,
+}
+
+impl GptArtifacts {
+    pub fn load(rt: &Runtime, dir: impl Into<PathBuf>, config: &str) -> Result<GptArtifacts> {
+        let dir: PathBuf = dir.into();
+        let meta = GptMeta::load(&dir, config)?;
+        let load = |kind: &str| rt.load(&dir.join(format!("gpt_{config}.{kind}.hlo.txt")));
+        Ok(GptArtifacts {
+            meta,
+            init: load("init")?,
+            grad: load("grad")?,
+            apply: load("apply")?,
+            train: load("train")?,
+        })
+    }
+}
+
+/// Build an `[batch, seq]` i32 literal from row-major token ids.
+pub fn tokens_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    Ok(xla::Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])?)
+}
+
+/// Extract a scalar f32 (e.g. the loss) from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}

@@ -1,0 +1,447 @@
+//! Ground-truth testbed: a discrete-event simulator standing in for the
+//! paper's 16-server V100 cluster (see DESIGN.md §Substitutions).
+//!
+//! It executes a [`JobSpec`]'s global DFG with *stochastic, protocol-aware*
+//! semantics — per-kernel jitter, FIFO engines, NIC serialization, TCP
+//! incast spikes, Horovod negotiation cycles, stragglers — and emits the
+//! *measured* trace a real profiler would see: timestamps shifted by
+//! per-machine clock drift, RECV durations inflated by the launch-time
+//! error (§2.2). dPRO's replayer/optimizer only ever see this trace, never
+//! the simulator's internals — the same information asymmetry as on real
+//! hardware.
+
+pub mod memory;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{CommScheme, JobSpec, Transport};
+use crate::graph::{build_global, AnalyticCost, GlobalDfg};
+use crate::graph::dfg::{DeviceKey, NodeId, OpKind, COORD_PROC};
+use crate::trace::{GTrace, TraceEvent};
+use crate::util::rng::Pcg;
+use crate::util::Us;
+
+/// TCP retransmit/incast stall model: probability and additive delay
+/// bounds (us) per message.
+pub const TCP_SPIKE_P: f64 = 0.015;
+pub const TCP_SPIKE_LO: f64 = 100.0;
+pub const TCP_SPIKE_HI: f64 = 900.0;
+
+/// Injected performance faults (used by the diagnosis example and tests).
+#[derive(Clone, Debug)]
+pub enum Straggler {
+    /// GPU `worker` runs all computation `factor`× slower.
+    SlowGpu { worker: usize, factor: f64 },
+    /// The NIC of `machine` transfers `factor`× slower.
+    SlowLink { machine: usize, factor: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct TestbedOpts {
+    /// Measured iterations (paper averages over 10 after warm-up).
+    pub iterations: usize,
+    pub seed: u64,
+    pub stragglers: Vec<Straggler>,
+}
+
+impl Default for TestbedOpts {
+    fn default() -> Self {
+        TestbedOpts { iterations: 10, seed: 1, stragglers: Vec::new() }
+    }
+}
+
+/// Ground-truth outcome of running a job on the testbed.
+#[derive(Clone, Debug)]
+pub struct TestbedResult {
+    /// True per-iteration times (us).
+    pub iter_times: Vec<Us>,
+    /// The measured trace (drifted clocks, RECV launch error).
+    pub trace: GTrace,
+    /// True FW / BW busy time per iteration on worker 0 (us).
+    pub fw_time: Us,
+    pub bw_time: Us,
+    /// Ground-truth peak memory per worker (bytes).
+    pub peak_memory: f64,
+}
+
+impl TestbedResult {
+    pub fn avg_iter(&self) -> Us {
+        crate::util::stats::mean(&self.iter_times)
+    }
+}
+
+/// Run a job on the testbed. Deterministic for a given (spec, opts) pair.
+pub fn run(spec: &JobSpec, opts: &TestbedOpts) -> TestbedResult {
+    let g = build_global(spec, &AnalyticCost::new(spec));
+    run_on(spec, &g, opts)
+}
+
+/// Run on a pre-built global DFG (lets callers reuse the skeleton).
+pub fn run_on(spec: &JobSpec, g: &GlobalDfg, opts: &TestbedOpts) -> TestbedResult {
+    let mut rng = Pcg::new(spec.cluster.seed ^ opts.seed, 7);
+    let n = g.dfg.len();
+
+    // --- intern devices ---
+    let mut dev_ids: std::collections::HashMap<DeviceKey, usize> = std::collections::HashMap::new();
+    let mut node_dev: Vec<usize> = Vec::with_capacity(n);
+    for node in &g.dfg.nodes {
+        let next = dev_ids.len();
+        let id = *dev_ids.entry(node.device).or_insert(next);
+        node_dev.push(id);
+    }
+    let n_dev = dev_ids.len();
+
+    // --- per-machine clock offsets (same machine ⇒ same clock) ---
+    let n_machines = spec.cluster.n_machines();
+    let drift_std = spec.cluster.clock.drift_std_us;
+    let clock_offset: Vec<Us> = (0..n_machines)
+        .map(|m| if m == 0 || n_machines == 1 { 0.0 } else { rng.gauss(0.0, drift_std) })
+        .collect();
+    let machine_of_proc = |proc: u16| -> u16 {
+        if proc == COORD_PROC {
+            0
+        } else if (proc as usize) < spec.cluster.n_workers {
+            spec.cluster.machine_of(proc as usize) as u16
+        } else {
+            // PS server s is colocated on machine s % n_machines
+            ((proc as usize - spec.cluster.n_workers) % n_machines) as u16
+        }
+    };
+
+    // straggler lookups
+    let mut gpu_slow = vec![1.0f64; spec.cluster.n_workers];
+    let mut link_slow = vec![1.0f64; n_machines];
+    for s in &opts.stragglers {
+        match *s {
+            Straggler::SlowGpu { worker, factor } => gpu_slow[worker] = factor,
+            Straggler::SlowLink { machine, factor } => link_slow[machine] = factor,
+        }
+    }
+
+    let net_cv = match spec.cluster.network.transport {
+        Transport::Tcp => 0.10,
+        Transport::Rdma => 0.03,
+    };
+    let comp_cv = spec.cluster.gpu.duration_cv;
+    let cycle = match &spec.scheme {
+        CommScheme::AllReduce(ar) => ar.cycle_time_us,
+        CommScheme::Ps(_) => 0.0,
+    };
+
+    // --- event-driven execution, one iteration at a time ---
+    let mut events: Vec<TraceEvent> = Vec::with_capacity(n * opts.iterations);
+    let mut iter_times: Vec<Us> = Vec::with_capacity(opts.iterations);
+    let mut fw_time = 0.0;
+    let mut bw_time = 0.0;
+    let mut peak_memory: f64 = 0.0;
+    let mut clock_base: Us = 0.0;
+
+    // reusable buffers
+    let base_indeg: Vec<u32> = g.dfg.ids().map(|i| g.dfg.preds(i).len() as u32).collect();
+    let mut start = vec![0.0f64; n];
+    let mut prev_dev_end = vec![0.0f64; n];
+    let mut end = vec![0.0f64; n];
+    let mut launch = vec![0.0f64; n];
+
+    for it in 0..opts.iterations as u32 {
+        let mut indeg = base_indeg.clone();
+        let mut ready_at = vec![0.0f64; n];
+        let mut dev_busy = vec![false; n_dev];
+        let mut dev_queue: Vec<std::collections::VecDeque<NodeId>> =
+            vec![std::collections::VecDeque::new(); n_dev];
+        let mut dev_last_end = vec![0.0f64; n_dev];
+        let mut heap: BinaryHeap<Reverse<(u64, NodeId)>> = BinaryHeap::new();
+        let key = |t: f64| (t.max(0.0) * 1024.0) as u64; // fixed-point heap key
+
+        let mut iter_end: Us = 0.0;
+        let mut finished = 0usize;
+
+        // sample this iteration's durations
+        let mut dur = vec![0.0f64; n];
+        for (i, node) in g.dfg.nodes.iter().enumerate() {
+            let base = node.duration;
+            dur[i] = match node.kind {
+                OpKind::Forward | OpKind::Backward | OpKind::Update => {
+                    base * rng.jitter(comp_cv) * gpu_slow[node.owner as usize]
+                }
+                OpKind::Negotiate => {
+                    // waiting for the next coordinator cycle: uniform in
+                    // (0.1, 1.0) of a cycle, mean ≈ the analytic 0.55·cycle
+                    if cycle > 0.0 { rng.uniform(0.1, 1.0) * cycle } else { 0.0 }
+                }
+                OpKind::Send | OpKind::Recv => {
+                    let m = machine_of_proc(node.proc) as usize;
+                    let mut d = base * rng.jitter(net_cv) * link_slow[m];
+                    // TCP: occasional incast/retransmit stall — additive
+                    // (a timeout costs fixed time, not a multiple of size)
+                    if spec.cluster.network.transport == Transport::Tcp && rng.f64() < TCP_SPIKE_P {
+                        d += rng.uniform(TCP_SPIKE_LO, TCP_SPIKE_HI);
+                    }
+                    d
+                }
+                OpKind::Aggregate => base * rng.jitter(comp_cv),
+                OpKind::In | OpKind::Out => 0.0,
+            };
+        }
+
+        // seed sources
+        let mut stack: Vec<NodeId> = Vec::new();
+        for i in g.dfg.ids() {
+            if indeg[i as usize] == 0 {
+                stack.push(i);
+            }
+        }
+        // helper to finish zero-device (virtual) nodes immediately
+        macro_rules! enqueue {
+            ($node:expr, $t:expr) => {{
+                let node = $node;
+                let t: f64 = $t;
+                let d = node_dev[node as usize];
+                if g.dfg.node(node).device == DeviceKey::Null {
+                    if dur[node as usize] > 0.0 {
+                        // timed but non-queuing (e.g. negotiation delay)
+                        start[node as usize] = t;
+                        end[node as usize] = t + dur[node as usize];
+                        heap.push(Reverse((key(end[node as usize]), node)));
+                    } else {
+                        // virtual: completes instantly
+                        start[node as usize] = t;
+                        end[node as usize] = t;
+                        launch[node as usize] = t;
+                        finished += 1;
+                        iter_end = iter_end.max(t);
+                        for &s in g.dfg.succs(node) {
+                            indeg[s as usize] -= 1;
+                            ready_at[s as usize] = ready_at[s as usize].max(t);
+                            if indeg[s as usize] == 0 {
+                                stack.push(s);
+                            }
+                        }
+                    }
+                } else {
+                    dev_queue[d].push_back(node);
+                    if !dev_busy[d] {
+                        let nd = dev_queue[d].pop_front().unwrap();
+                        let st = ready_at[nd as usize].max(t).max(dev_last_end[d]);
+                        prev_dev_end[nd as usize] = dev_last_end[d];
+                        start[nd as usize] = st;
+                        end[nd as usize] = st + dur[nd as usize];
+                        dev_busy[d] = true;
+                        heap.push(Reverse((key(end[nd as usize]), nd)));
+                    }
+                }
+            }};
+        }
+
+        while finished < n {
+            // drain ready stack (virtual nodes may cascade)
+            while let Some(node) = stack.pop() {
+                let t = ready_at[node as usize];
+                enqueue!(node, t);
+            }
+            let Some(Reverse((_, node))) = heap.pop() else {
+                break;
+            };
+            let t = end[node as usize];
+            finished += 1;
+            iter_end = iter_end.max(t);
+            let d = node_dev[node as usize];
+            dev_busy[d] = false;
+            dev_last_end[d] = t;
+            // successors
+            for &s in g.dfg.succs(node) {
+                indeg[s as usize] -= 1;
+                ready_at[s as usize] = ready_at[s as usize].max(t);
+                if indeg[s as usize] == 0 {
+                    stack.push(s);
+                }
+            }
+            // start next queued op on this device
+            if let Some(nd) = dev_queue[d].pop_front() {
+                let st = ready_at[nd as usize].max(t);
+                prev_dev_end[nd as usize] = dev_last_end[d];
+                start[nd as usize] = st;
+                end[nd as usize] = st + dur[nd as usize];
+                dev_busy[d] = true;
+                heap.push(Reverse((key(end[nd as usize]), nd)));
+            }
+        }
+        assert_eq!(finished, n, "testbed deadlock: {} of {} ops ran", finished, n);
+
+        // RECV launch time: when the op was posted — after its *local*
+        // (same-proc) predecessors and the previous op on its device, but
+        // NOT the remote SEND. The profiler reports this as the start.
+        for i in g.dfg.ids() {
+            let node = g.dfg.node(i);
+            if node.kind != OpKind::Recv {
+                launch[i as usize] = start[i as usize];
+                continue;
+            }
+            let mut l: f64 = 0.0;
+            for &p in g.dfg.preds(i) {
+                if g.dfg.node(p).proc == node.proc {
+                    l = l.max(end[p as usize]);
+                }
+            }
+            launch[i as usize] = l.max(prev_dev_end[i as usize]).min(start[i as usize]);
+        }
+
+        // emit measured trace
+        for i in g.dfg.ids() {
+            let node = g.dfg.node(i);
+            if node.kind.is_virtual() {
+                continue;
+            }
+            let m = machine_of_proc(node.proc);
+            let off = clock_offset[m as usize];
+            let (ts, dur_meas) = if node.kind == OpKind::Recv && spec.cluster.clock.recv_launch_error
+            {
+                (launch[i as usize], end[i as usize] - launch[i as usize])
+            } else {
+                (start[i as usize], end[i as usize] - start[i as usize])
+            };
+            events.push(TraceEvent {
+                name: node.name.clone(),
+                kind: node.kind,
+                ts: clock_base + ts + off,
+                dur: dur_meas,
+                proc: node.proc,
+                machine: m,
+                iter: it,
+                txid: node.txid,
+            });
+        }
+
+        iter_times.push(iter_end);
+        clock_base += iter_end + rng.uniform(150.0, 400.0); // inter-iteration gap
+
+        if it == 0 {
+            // true FW/BW busy time + ground-truth peak memory (worker 0)
+            for i in g.dfg.ids() {
+                let node = g.dfg.node(i);
+                if node.owner == 0 && node.proc == 0 {
+                    match node.kind {
+                        OpKind::Forward => fw_time += end[i as usize] - start[i as usize],
+                        OpKind::Backward => bw_time += end[i as usize] - start[i as usize],
+                        _ => {}
+                    }
+                }
+            }
+            peak_memory = memory::ground_truth_peak(spec, g, &start, &end);
+        }
+    }
+
+    let n_procs = spec.cluster.n_workers
+        + match &spec.scheme {
+            CommScheme::Ps(ps) => ps.n_servers,
+            CommScheme::AllReduce(_) => 0,
+        };
+    TestbedResult {
+        iter_times,
+        trace: GTrace {
+            events,
+            n_workers: spec.cluster.n_workers,
+            n_procs,
+            iterations: opts.iterations,
+        },
+        fw_time,
+        bw_time,
+        peak_memory,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+
+    fn job() -> JobSpec {
+        let mut j = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        j.model = crate::models::by_name("resnet50", 32).unwrap();
+        j
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let spec = job();
+        let opts = TestbedOpts { iterations: 2, ..Default::default() };
+        let a = run(&spec, &opts);
+        let b = run(&spec, &opts);
+        assert_eq!(a.iter_times, b.iter_times);
+        assert_eq!(a.trace.events.len(), b.trace.events.len());
+    }
+
+    #[test]
+    fn iteration_time_exceeds_compute_time() {
+        let spec = job();
+        let r = run(&spec, &TestbedOpts { iterations: 3, ..Default::default() });
+        let iter = r.avg_iter();
+        // iteration > FW+BW (communication adds), but far below serial sum
+        assert!(iter > r.fw_time + r.bw_time, "iter={iter} fw+bw={}", r.fw_time + r.bw_time);
+        assert!(iter < (r.fw_time + r.bw_time) * 4.0, "iter={iter}");
+    }
+
+    #[test]
+    fn tcp_slower_than_rdma_when_comm_is_exposed() {
+        // With one fully-fused tensor group, synchronization of VGG16's
+        // 550 MB of gradients starts only after backprop finishes, so the
+        // wire time is exposed and the transport matters. (With per-tensor
+        // granularity both transports hide behind compute — correctly.)
+        let mut tcp = JobSpec::standard("vgg16", "horovod", Transport::Tcp);
+        tcp.plan = crate::config::CommPlan {
+            groups: vec![crate::config::TensorGroup {
+                tensors: (0..tcp.model.tensors.len() as u32).collect(),
+                partitions: 1,
+            }],
+        };
+        let mut rdma = tcp.clone();
+        rdma.cluster.network = crate::config::NetworkSpec::rdma_100g();
+        let t = run(&tcp, &TestbedOpts { iterations: 3, ..Default::default() }).avg_iter();
+        let r = run(&rdma, &TestbedOpts { iterations: 3, ..Default::default() }).avg_iter();
+        assert!(t > r * 1.15, "tcp={t} rdma={r}");
+    }
+
+    #[test]
+    fn straggler_slows_training() {
+        let spec = job();
+        let base = run(&spec, &TestbedOpts { iterations: 2, ..Default::default() }).avg_iter();
+        let slow = run(
+            &spec,
+            &TestbedOpts {
+                iterations: 2,
+                stragglers: vec![Straggler::SlowGpu { worker: 3, factor: 1.8 }],
+                ..Default::default()
+            },
+        )
+        .avg_iter();
+        assert!(slow > base * 1.2, "base={base} slow={slow}");
+    }
+
+    #[test]
+    fn recv_durations_inflated_by_launch_error() {
+        let spec = job();
+        let r = run(&spec, &TestbedOpts { iterations: 2, ..Default::default() });
+        // measured RECV durations should on average exceed the analytic
+        // wire time because they include sender wait
+        let recvs: Vec<f64> = r
+            .trace
+            .events
+            .iter()
+            .filter(|e| e.kind == crate::graph::OpKind::Recv && e.name.contains("RECV"))
+            .map(|e| e.dur)
+            .collect();
+        assert!(!recvs.is_empty());
+    }
+
+    #[test]
+    fn clock_drift_disabled_on_single_machine() {
+        let mut spec = job();
+        spec.cluster.n_workers = 8;
+        spec.cluster.gpus_per_machine = 8;
+        spec.plan = crate::config::CommPlan::per_tensor(&spec.model);
+        let r = run(&spec, &TestbedOpts { iterations: 1, ..Default::default() });
+        // all events from machine 0
+        assert!(r.trace.events.iter().all(|e| e.machine == 0));
+    }
+}

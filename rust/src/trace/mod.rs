@@ -1,0 +1,271 @@
+//! gTrace: the global trace format the profiler emits and the replayer
+//! consumes (paper §3). Events carry *measured* timestamps in the clock of
+//! the process that recorded them — i.e. including per-machine clock drift
+//! and the RECV launch-time error the alignment stage (§4.2) corrects.
+//!
+//! Serialization is Chrome-trace-format JSON (`ph:"X"` complete events), so
+//! dumps load directly into `chrome://tracing` / Perfetto.
+
+use std::collections::HashMap;
+
+use crate::graph::dfg::OpKind;
+use crate::util::json::{parse, Json};
+use crate::util::Us;
+
+/// One measured op execution.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Op name — identical to the global-DFG node name, so traces join
+    /// back onto the graph skeleton.
+    pub name: String,
+    pub kind: OpKind,
+    /// Measured start in the recording process's clock (us).
+    pub ts: Us,
+    /// Measured duration (us). For RECV ops this includes sender wait when
+    /// the profiler can only observe the launch time (§2.2).
+    pub dur: Us,
+    /// Recording process (worker id, `n_workers + s` for server s,
+    /// `u16::MAX` for the coordinator).
+    pub proc: u16,
+    /// Physical machine hosting `proc` (same machine ⇒ same clock).
+    pub machine: u16,
+    /// Training iteration the event belongs to.
+    pub iter: u32,
+    /// SEND↔RECV matching id (paper §4.1's transaction id).
+    pub txid: Option<u64>,
+}
+
+/// A full multi-iteration global trace.
+#[derive(Clone, Debug, Default)]
+pub struct GTrace {
+    pub events: Vec<TraceEvent>,
+    pub n_workers: usize,
+    pub n_procs: usize,
+    pub iterations: usize,
+}
+
+impl GTrace {
+    /// Average measured duration per op name — the per-op estimate the
+    /// replayer uses ("averaging op execution time over 10 training
+    /// iterations", §4.3).
+    pub fn profile_db(&self) -> ProfileDb {
+        let mut agg: HashMap<String, (f64, u32)> = HashMap::new();
+        for e in &self.events {
+            let ent = agg.entry(e.name.clone()).or_insert((0.0, 0));
+            ent.0 += e.dur;
+            ent.1 += 1;
+        }
+        ProfileDb {
+            avg: agg.into_iter().map(|(k, (s, c))| (k, s / c as f64)).collect(),
+        }
+    }
+
+    /// Events of one iteration.
+    pub fn iter_events(&self, iter: u32) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(move |e| e.iter == iter)
+    }
+
+    /// Serialize to Chrome trace format.
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("name", Json::Str(e.name.clone()));
+                o.set("ph", Json::Str("X".into()));
+                o.set("ts", Json::Num(e.ts));
+                o.set("dur", Json::Num(e.dur));
+                o.set("pid", Json::Num(e.machine as f64));
+                o.set("tid", Json::Num(e.proc as f64));
+                let mut args = Json::obj();
+                args.set("kind", Json::Str(kind_str(e.kind).into()));
+                args.set("iter", Json::Num(e.iter as f64));
+                if let Some(t) = e.txid {
+                    args.set("txid", Json::Num(t as f64));
+                }
+                o.set("args", args);
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("traceEvents", Json::Arr(events));
+        let mut meta = Json::obj();
+        meta.set("n_workers", Json::Num(self.n_workers as f64));
+        meta.set("n_procs", Json::Num(self.n_procs as f64));
+        meta.set("iterations", Json::Num(self.iterations as f64));
+        root.set("dpro", meta);
+        root
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn from_json(j: &Json) -> Result<GTrace, String> {
+        let meta = j.get("dpro").ok_or("missing dpro metadata")?;
+        let events = j
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or("missing traceEvents")?;
+        let mut out = GTrace {
+            events: Vec::with_capacity(events.len()),
+            n_workers: meta.f64("n_workers") as usize,
+            n_procs: meta.f64("n_procs") as usize,
+            iterations: meta.f64("iterations") as usize,
+        };
+        for e in events {
+            let args = e.get("args").ok_or("event missing args")?;
+            out.events.push(TraceEvent {
+                name: e.str("name").to_string(),
+                kind: kind_from_str(args.str("kind"))?,
+                ts: e.f64("ts"),
+                dur: e.f64("dur"),
+                proc: e.f64("tid") as u16,
+                machine: e.f64("pid") as u16,
+                iter: args.f64("iter") as u32,
+                txid: args.get("txid").and_then(Json::as_f64).map(|x| x as u64),
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &str) -> Result<GTrace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        GTrace::from_json(&parse(&text)?)
+    }
+}
+
+/// Per-op average durations from a trace.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileDb {
+    avg: HashMap<String, f64>,
+}
+
+impl ProfileDb {
+    pub fn get(&self, name: &str) -> Option<Us> {
+        self.avg.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.avg.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.avg.is_empty()
+    }
+
+    pub fn insert(&mut self, name: String, dur: Us) {
+        self.avg.insert(name, dur);
+    }
+
+    /// Overwrite the durations of a global DFG's nodes with profiled
+    /// averages (nodes without a measurement keep their analytic value).
+    pub fn apply(&self, g: &mut crate::graph::GlobalDfg) -> usize {
+        let mut applied = 0;
+        for n in &mut g.dfg.nodes {
+            if let Some(d) = self.get(&n.name) {
+                n.duration = d;
+                applied += 1;
+            }
+        }
+        applied
+    }
+}
+
+pub fn kind_str(k: OpKind) -> &'static str {
+    match k {
+        OpKind::Forward => "FW",
+        OpKind::Backward => "BW",
+        OpKind::Update => "UPD",
+        OpKind::Negotiate => "NEG",
+        OpKind::Send => "SEND",
+        OpKind::Recv => "RECV",
+        OpKind::Aggregate => "AGG",
+        OpKind::In => "IN",
+        OpKind::Out => "OUT",
+    }
+}
+
+pub fn kind_from_str(s: &str) -> Result<OpKind, String> {
+    Ok(match s {
+        "FW" => OpKind::Forward,
+        "BW" => OpKind::Backward,
+        "UPD" => OpKind::Update,
+        "NEG" => OpKind::Negotiate,
+        "SEND" => OpKind::Send,
+        "RECV" => OpKind::Recv,
+        "AGG" => OpKind::Aggregate,
+        "IN" => OpKind::In,
+        "OUT" => OpKind::Out,
+        other => return Err(format!("unknown op kind {other:?}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, iter: u32, dur: f64) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            kind: OpKind::Forward,
+            ts: 0.0,
+            dur,
+            proc: 0,
+            machine: 0,
+            iter,
+            txid: None,
+        }
+    }
+
+    #[test]
+    fn profile_db_averages_over_iterations() {
+        let trace = GTrace {
+            events: vec![ev("a", 0, 10.0), ev("a", 1, 14.0), ev("b", 0, 5.0)],
+            n_workers: 1,
+            n_procs: 1,
+            iterations: 2,
+        };
+        let db = trace.profile_db();
+        assert_eq!(db.get("a"), Some(12.0));
+        assert_eq!(db.get("b"), Some(5.0));
+        assert_eq!(db.get("c"), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut e = ev("w0.FW.conv1", 3, 42.5);
+        e.txid = Some(77);
+        e.kind = OpKind::Recv;
+        let trace = GTrace { events: vec![e], n_workers: 2, n_procs: 3, iterations: 4 };
+        let j = trace.to_json();
+        let back = GTrace::from_json(&j).unwrap();
+        assert_eq!(back.events.len(), 1);
+        let b = &back.events[0];
+        assert_eq!(b.name, "w0.FW.conv1");
+        assert_eq!(b.kind, OpKind::Recv);
+        assert_eq!(b.dur, 42.5);
+        assert_eq!(b.iter, 3);
+        assert_eq!(b.txid, Some(77));
+        assert_eq!(back.n_procs, 3);
+    }
+
+    #[test]
+    fn kind_str_roundtrip() {
+        for k in [
+            OpKind::Forward,
+            OpKind::Backward,
+            OpKind::Update,
+            OpKind::Negotiate,
+            OpKind::Send,
+            OpKind::Recv,
+            OpKind::Aggregate,
+            OpKind::In,
+            OpKind::Out,
+        ] {
+            assert_eq!(kind_from_str(kind_str(k)).unwrap(), k);
+        }
+        assert!(kind_from_str("nope").is_err());
+    }
+}

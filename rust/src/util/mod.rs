@@ -1,0 +1,158 @@
+//! Substrate utilities: seeded RNG, JSON, statistics, CLI arg parsing.
+//!
+//! The build image is fully offline with only the `xla` crate's dependency
+//! closure available, so `rand`, `serde`, `clap` and `criterion` are
+//! re-implemented here at the scale this project needs.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::collections::BTreeMap;
+
+/// Microseconds, the time unit used across the whole crate (profilers emit
+/// microsecond timestamps; iteration times are tens-to-hundreds of ms).
+pub type Us = f64;
+
+/// Tiny argv parser: positional args plus `--key value` / `--flag` options.
+/// Sufficient for the `dpro` CLI and examples; errors on unknown '--' keys
+/// are left to the caller so subcommands can define their own sets.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(a) = argv.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if argv.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = argv.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Format a microsecond duration human-readably (for reports).
+pub fn fmt_us(us: Us) -> String {
+    if us >= 1e6 {
+        format!("{:.2} s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.2} ms", us / 1e3)
+    } else {
+        format!("{us:.1} us")
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn args_positional_and_options() {
+        let a = parse(&["replay", "--trace", "t.json", "--iters", "10", "fast"]);
+        assert_eq!(a.positional, vec!["replay", "fast"]);
+        assert_eq!(a.get("trace"), Some("t.json"));
+        assert_eq!(a.usize("iters", 1), 10);
+    }
+
+    #[test]
+    fn args_eq_form_and_flags() {
+        let a = parse(&["--mode=ps", "--verbose", "--k", "3"]);
+        assert_eq!(a.get("mode"), Some("ps"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("k", 0), 3);
+        assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_us(12.3), "12.3 us");
+        assert_eq!(fmt_us(12_300.0), "12.30 ms");
+        assert_eq!(fmt_us(2_000_000.0), "2.00 s");
+        assert_eq!(fmt_bytes(4.0e6), "4.00 MB");
+    }
+}
+
+/// Print a padded ASCII table (bench harness output).
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}

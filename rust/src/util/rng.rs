@@ -1,0 +1,190 @@
+//! Seeded PCG-64 style pseudo-random number generator.
+//!
+//! The image has no `rand` crate, and the testbed simulator needs a small,
+//! deterministic, splittable RNG for jitter / drift / straggler injection.
+//! This is the PCG-XSH-RR 64/32 generator (O'Neill 2014) extended with a
+//! convenience layer for the distributions we use.
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output, period 2^64 per stream.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Create a generator from a seed and stream id. Different stream ids
+    /// yield statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator; used to give each simulated
+    /// device its own stream so event ordering never perturbs the draws.
+    pub fn split(&mut self, salt: u64) -> Pcg {
+        let seed = self.next_u64() ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+        Pcg::new(seed, salt.wrapping_add(0x632BE59BD9B4E019))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for our n << 2^32.
+        ((self.next_u32() as u64 * n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (we do not cache the second value to
+    /// keep the generator state a pure function of the draw count).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean / std.
+    pub fn gauss(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal multiplicative jitter centered at 1.0 with the given
+    /// coefficient of variation; models GPU kernel duration noise.
+    pub fn jitter(&mut self, cv: f64) -> f64 {
+        if cv <= 0.0 {
+            return 1.0;
+        }
+        let sigma = (1.0 + cv * cv).ln().sqrt();
+        let mu = -0.5 * sigma * sigma;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg::seeded(42);
+        let mut b = Pcg::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg::new(42, 1);
+        let mut b = Pcg::new(42, 2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg::seeded(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::seeded(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn jitter_centered_at_one() {
+        let mut rng = Pcg::seeded(3);
+        let n = 50_000;
+        let mean = (0..n).map(|_| rng.jitter(0.05)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+        // zero-cv jitter is exactly 1
+        assert_eq!(rng.jitter(0.0), 1.0);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut rng = Pcg::seeded(5);
+        for _ in 0..10_000 {
+            assert!(rng.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::seeded(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_independent() {
+        let mut root = Pcg::seeded(1);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+}

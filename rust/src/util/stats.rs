@@ -1,0 +1,120 @@
+//! Small statistics helpers shared by the replayer, alignment and benches.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance; 0.0 for len < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Relative error |est - truth| / truth, in percent.
+pub fn rel_err_pct(est: f64, truth: f64) -> f64 {
+    if truth == 0.0 {
+        return 0.0;
+    }
+    100.0 * (est - truth).abs() / truth.abs()
+}
+
+/// Simple online timer summary used by the custom bench harness.
+#[derive(Default, Clone, Debug)]
+pub struct Summary {
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stddev(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn rel_err() {
+        assert!((rel_err_pct(105.0, 100.0) - 5.0).abs() < 1e-12);
+        assert!((rel_err_pct(95.0, 100.0) - 5.0).abs() < 1e-12);
+        assert_eq!(rel_err_pct(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn minmax() {
+        let xs = [3.0, -1.0, 2.0];
+        assert_eq!(min(&xs), -1.0);
+        assert_eq!(max(&xs), 3.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Property-based tests over the core invariants, driven by the crate's
+//! own seeded PCG (the image has no proptest): randomized pass sequences,
+//! cluster shapes and trace perturbations must never break the
+//! replayer/optimizer contracts.
+
+use dpro::config::{ClusterSpec, CommPlan, CommScheme, FusionPlan, JobSpec, NetworkSpec, Transport};
+use dpro::graph::{build_global, AnalyticCost};
+use dpro::optimizer::passes;
+use dpro::replay::replay_once;
+use dpro::util::rng::Pcg;
+
+fn random_job(rng: &mut Pcg) -> JobSpec {
+    let models = ["resnet50", "vgg16", "inception_v3", "bert_base", "gpt_mini"];
+    let model = models[rng.below(models.len())];
+    let scheme = if rng.f64() < 0.5 { "horovod" } else { "byteps" };
+    let transport = if rng.f64() < 0.5 { Transport::Rdma } else { Transport::Tcp };
+    let mut spec = JobSpec::standard(model, scheme, transport);
+    let workers = [4usize, 8, 16, 24][rng.below(4)];
+    spec.cluster = ClusterSpec::new(
+        workers,
+        [2usize, 4, 8][rng.below(3)],
+        if transport == Transport::Tcp { NetworkSpec::tcp_100g() } else { NetworkSpec::rdma_100g() },
+    );
+    if let CommScheme::Ps(ps) = &mut spec.scheme {
+        ps.n_servers = spec.cluster.n_machines().max(1);
+    }
+    spec
+}
+
+/// Apply a random sequence of passes, checking validity is preserved.
+fn random_passes(rng: &mut Pcg, spec: &mut JobSpec, n: usize) -> usize {
+    let mut applied = 0;
+    for _ in 0..n {
+        match rng.below(3) {
+            0 => {
+                let a = rng.below(spec.fusion.groups.len());
+                let b = rng.below(spec.fusion.groups.len());
+                if a != b && passes::fuse_comp_groups(spec, a, b).is_ok() {
+                    applied += 1;
+                }
+            }
+            1 => {
+                let a = rng.below(spec.plan.groups.len());
+                let b = rng.below(spec.plan.groups.len());
+                if a != b && passes::fuse_tensor_groups(spec, a, b).is_ok() {
+                    applied += 1;
+                }
+            }
+            _ => {
+                let g = rng.below(spec.plan.groups.len());
+                let k = 1 + rng.below(16);
+                if passes::set_partitions(spec, g, k).is_ok() {
+                    applied += 1;
+                }
+            }
+        }
+    }
+    applied
+}
+
+#[test]
+fn random_pass_sequences_preserve_invariants() {
+    let mut rng = Pcg::seeded(2024);
+    for case in 0..12 {
+        let mut spec = random_job(&mut rng);
+        let applied = random_passes(&mut rng, &mut spec, 60);
+        assert!(applied > 0, "case {case}: nothing applied");
+        // plans stay valid partitions of tensors / ops
+        assert_eq!(spec.plan.validate(&spec.model), Ok(()), "case {case}");
+        assert_eq!(spec.fusion.validate(&spec.model), Ok(()), "case {case}");
+        // the rewritten job still builds an acyclic global DFG that replays
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        assert!(g.dfg.is_dag(), "case {case}: cycle after passes");
+        let r = replay_once(&g);
+        assert!(r.iteration_time.is_finite() && r.iteration_time > 0.0, "case {case}");
+    }
+}
+
+#[test]
+fn replay_is_deterministic_across_clones() {
+    let mut rng = Pcg::seeded(7);
+    for _ in 0..6 {
+        let spec = random_job(&mut rng);
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let a = replay_once(&g).iteration_time;
+        let b = replay_once(&g).iteration_time;
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn fusion_monotonically_reduces_group_counts() {
+    let mut rng = Pcg::seeded(99);
+    let mut spec = random_job(&mut rng);
+    let mut last_plan = spec.plan.groups.len();
+    let mut last_fusion = spec.fusion.groups.len();
+    for _ in 0..40 {
+        random_passes(&mut rng, &mut spec, 1);
+        assert!(spec.plan.groups.len() <= last_plan);
+        assert!(spec.fusion.groups.len() <= last_fusion);
+        last_plan = spec.plan.groups.len();
+        last_fusion = spec.fusion.groups.len();
+    }
+}
+
+#[test]
+fn replay_never_beats_critical_work_lower_bound() {
+    // iteration time >= max over devices of its total busy time
+    let mut rng = Pcg::seeded(31);
+    for _ in 0..6 {
+        let spec = random_job(&mut rng);
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        let r = replay_once(&g);
+        let mut busy: std::collections::HashMap<dpro::graph::DeviceKey, f64> = Default::default();
+        for i in g.dfg.ids() {
+            let n = g.dfg.node(i);
+            if n.device != dpro::graph::DeviceKey::Null {
+                *busy.entry(n.device).or_default() += n.duration;
+            }
+        }
+        let lower = busy.values().cloned().fold(0.0, f64::max);
+        assert!(
+            r.iteration_time >= lower - 1e-6,
+            "iteration {} < device lower bound {}",
+            r.iteration_time,
+            lower
+        );
+    }
+}
+
+#[test]
+fn testbed_trace_always_joinable() {
+    // every non-virtual node of the skeleton appears in the trace, for
+    // random jobs — the contract that makes replay-from-trace possible
+    let mut rng = Pcg::seeded(55);
+    for _ in 0..4 {
+        let spec = random_job(&mut rng);
+        let tb = dpro::testbed::run(
+            &spec,
+            &dpro::testbed::TestbedOpts { iterations: 2, ..Default::default() },
+        );
+        let db = tb.trace.profile_db();
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        for i in g.dfg.ids() {
+            let n = g.dfg.node(i);
+            if !n.kind.is_virtual() {
+                assert!(db.get(&n.name).is_some(), "missing {}", n.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn json_fuzz_roundtrip() {
+    // random JSON trees survive write→parse→write
+    use dpro::util::json::{parse, Json};
+    let mut rng = Pcg::seeded(123);
+    fn gen(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+            3 => Json::Str(format!("s{}\n\"{}", rng.below(1000), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for k in 0..rng.below(5) {
+                    o.set(&format!("k{k}"), gen(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    for _ in 0..200 {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).unwrap_or_else(|e| panic!("parse {text}: {e}"));
+        assert_eq!(back, v, "text: {text}");
+        assert_eq!(parse(&back.to_string_pretty()).unwrap(), v);
+    }
+}
+
+#[test]
+fn alignment_identity_on_driftless_traces() {
+    // a single-machine job has one clock: θ must stay ~0 for every proc
+    let mut spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+    spec.cluster = ClusterSpec::new(8, 8, NetworkSpec::rdma_100g());
+    spec.plan = CommPlan::per_tensor(&spec.model);
+    spec.fusion = FusionPlan::singletons(&spec.model);
+    let tb = dpro::testbed::run(
+        &spec,
+        &dpro::testbed::TestbedOpts { iterations: 4, ..Default::default() },
+    );
+    let a = dpro::alignment::align(&tb.trace, 1.0, 1.0);
+    for (&proc, &theta) in &a.theta {
+        assert!(theta.abs() < 500.0, "proc {proc} drifted to {theta}");
+    }
+}
