@@ -1,15 +1,20 @@
 //! §Perf microbenchmarks of the L3 hot paths: global-DFG construction,
-//! replay throughput (ops/s), partial replay, alignment solve, and one
-//! full search. Used for the before/after log in EXPERIMENTS.md §Perf.
+//! replay throughput (ops/s), partial replay, alignment solve, search
+//! rounds (from-scratch rebuild vs incremental splice + cone replay), and
+//! one full search. Emits `BENCH_perf_hotpath.json` so the perf
+//! trajectory is tracked across PRs; used for the before/after log in
+//! EXPERIMENTS.md §Perf.
 
 use std::time::Instant;
 
 use dpro::baselines::deployed_default;
 use dpro::config::{ClusterSpec, CommPlan, FusionPlan, JobSpec, NetworkSpec, Transport};
-use dpro::graph::{build_global, AnalyticCost};
-use dpro::optimizer::{optimize, SearchOpts};
+use dpro::graph::{build_global, build_global_nameless, AnalyticCost, MutableGraph};
+use dpro::optimizer::{optimize, passes, SearchOpts};
+use dpro::replay::incremental::IncrementalReplayer;
 use dpro::replay::Replayer;
 use dpro::testbed::{run, TestbedOpts};
+use dpro::util::json::Json;
 use dpro::util::print_table;
 
 fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -18,15 +23,79 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// The scripted "search round" mix both paths replay: tensor fusions of
+/// the head groups interleaved with re-partitioning, the same edit kinds
+/// Alg. 1 emits.
+#[derive(Clone, Copy)]
+enum Round {
+    Fuse(usize, usize),
+    Partition(usize, usize),
+}
+
+fn round_script(n_rounds: usize) -> Vec<Round> {
+    (0..n_rounds)
+        .map(|i| if i % 3 == 2 { Round::Partition(0, (i % 4) + 1) } else { Round::Fuse(0, 1) })
+        .collect()
+}
+
+/// From-scratch baseline: every round mutates the spec, rebuilds the
+/// global DFG, allocates a fresh replayer, and replays.
+fn rounds_from_scratch(spec: &JobSpec, script: &[Round]) -> f64 {
+    let mut s = spec.clone();
+    let t0 = Instant::now();
+    for r in script {
+        match *r {
+            Round::Fuse(a, b) => {
+                let _ = passes::fuse_tensor_groups(&mut s, a, b);
+            }
+            Round::Partition(g, k) => {
+                let _ = passes::set_partitions(&mut s, g, k);
+            }
+        }
+        let g = build_global_nameless(&s, &AnalyticCost::new(&s));
+        let mut rp = Replayer::new(&g);
+        rp.replay(&g);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Incremental path: one long-lived mutable graph + engine; rounds splice
+/// in place and replay only the affected cone.
+fn rounds_incremental(spec: &JobSpec, script: &[Round]) -> (f64, usize) {
+    let mut mg = MutableGraph::new(spec.clone());
+    let mut eng = IncrementalReplayer::new();
+    let log = mg.commit();
+    eng.replay_incremental(&mg, &log);
+    let mut cone_total = 0usize;
+    let t0 = Instant::now();
+    for r in script {
+        match *r {
+            Round::Fuse(a, b) => {
+                let _ = mg.fuse_tensor_groups(a, b);
+            }
+            Round::Partition(g, k) => {
+                let _ = mg.set_partitions(g, k);
+            }
+        }
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        cone_total += eng.last_recomputed();
+    }
+    (t0.elapsed().as_secs_f64(), cone_total / script.len().max(1))
+}
+
 fn main() {
+    let mut report = Json::obj();
     let mut rows = Vec::new();
+    let mut graph_rows = Vec::new();
     for (model, gpus) in [("resnet50", 16usize), ("bert_base", 16), ("resnet50", 128)] {
         let mut spec = JobSpec::standard(model, "horovod", Transport::Rdma);
         spec.cluster = ClusterSpec::new(gpus, 8, NetworkSpec::rdma_100g());
         spec.plan = CommPlan::per_tensor(&spec.model);
         spec.fusion = FusionPlan::singletons(&spec.model);
         let (g, t_build) = time(|| build_global(&spec, &AnalyticCost::new(&spec)));
-        let (_, t_nameless) = time(|| dpro::graph::build_global_nameless(&spec, &AnalyticCost::new(&spec)));
+        let (_, t_nameless) =
+            time(|| dpro::graph::build_global_nameless(&spec, &AnalyticCost::new(&spec)));
         let mut rp = Replayer::new(&g);
         // warm
         rp.replay(&g);
@@ -45,19 +114,89 @@ fn main() {
             format!("{:.2}", per_replay * 1e3),
             format!("{:.2}M", g.dfg.len() as f64 / per_replay / 1e6),
         ]);
+        let mut jrow = Json::obj();
+        jrow.set("graph", Json::Str(format!("{model}@{gpus}")));
+        jrow.set("nodes", Json::Num(g.dfg.len() as f64));
+        jrow.set("build_ms", Json::Num(t_build * 1e3));
+        jrow.set("build_nameless_ms", Json::Num(t_nameless * 1e3));
+        jrow.set("replay_ms", Json::Num(per_replay * 1e3));
+        jrow.set("replays_per_s", Json::Num(1.0 / per_replay));
+        graph_rows.push(jrow);
     }
     println!("\n=== replayer hot path ===\n");
-    print_table(&["graph", "nodes", "build (ms)", "build nameless (ms)", "replay (ms)", "ops/s"], &rows);
+    print_table(
+        &["graph", "nodes", "build (ms)", "build nameless (ms)", "replay (ms)", "ops/s"],
+        &rows,
+    );
+    report.set("replayer", Json::Arr(graph_rows));
+
+    // ---- search rounds: from-scratch rebuild vs incremental splice ----
+    println!("\n=== search rounds: full rebuild vs incremental ===\n");
+    let n_rounds = 30usize;
+    let script = round_script(n_rounds);
+    let mut round_rows = Vec::new();
+    let mut jrounds = Vec::new();
+    for (model, scheme) in [("resnet50", "horovod"), ("vgg16", "byteps")] {
+        let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+        let t_full = rounds_from_scratch(&spec, &script);
+        let (t_inc, avg_cone) = rounds_incremental(&spec, &script);
+        let full_rps = n_rounds as f64 / t_full;
+        let inc_rps = n_rounds as f64 / t_inc;
+        round_rows.push(vec![
+            format!("{model}/{scheme}"),
+            format!("{:.1}", full_rps),
+            format!("{:.1}", inc_rps),
+            format!("{:.1}x", inc_rps / full_rps),
+            format!("{avg_cone}"),
+        ]);
+        let mut j = Json::obj();
+        j.set("job", Json::Str(format!("{model}/{scheme}")));
+        j.set("rounds", Json::Num(n_rounds as f64));
+        j.set("full_rounds_per_s", Json::Num(full_rps));
+        j.set("incremental_rounds_per_s", Json::Num(inc_rps));
+        j.set("speedup", Json::Num(inc_rps / full_rps));
+        j.set("avg_cone_nodes", Json::Num(avg_cone as f64));
+        jrounds.push(j);
+    }
+    print_table(
+        &["job", "full rounds/s", "incremental rounds/s", "speedup", "avg cone (nodes)"],
+        &round_rows,
+    );
+    report.set("search_rounds", Json::Arr(jrounds));
 
     // alignment solve
     let spec = deployed_default(&JobSpec::standard("resnet50", "horovod", Transport::Tcp));
     let tb = run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
     let (a, t_align) = time(|| dpro::alignment::align(&tb.trace, 1.0, 1.0));
-    println!("\nalignment: {} offsets from {} events in {:.2}s ({} iters)",
-             a.theta.len(), tb.trace.events.len(), t_align, a.iterations);
+    println!(
+        "\nalignment: {} offsets from {} events in {:.2}s ({} iters)",
+        a.theta.len(),
+        tb.trace.events.len(),
+        t_align,
+        a.iterations
+    );
+    let mut jalign = Json::obj();
+    jalign.set("events", Json::Num(tb.trace.events.len() as f64));
+    jalign.set("solve_s", Json::Num(t_align));
+    report.set("alignment", jalign);
 
     // end-to-end search
-    let (out, t_search) = time(|| optimize(&spec, &SearchOpts { budget_wall_s: 60.0, ..Default::default() }));
-    println!("search: {:.2}s wall, {} replays, {} actions, speedup {:.2}x",
-             t_search, out.replays, out.actions_applied, out.speedup());
+    let (out, t_search) =
+        time(|| optimize(&spec, &SearchOpts { budget_wall_s: 60.0, ..Default::default() }));
+    println!(
+        "search: {:.2}s wall, {} replays, {} actions, {} builds in rounds, speedup {:.2}x",
+        t_search, out.replays, out.actions_applied, out.builds_during_search, out.speedup()
+    );
+    let mut jsearch = Json::obj();
+    jsearch.set("wall_s", Json::Num(t_search));
+    jsearch.set("replays", Json::Num(out.replays as f64));
+    jsearch.set("actions", Json::Num(out.actions_applied as f64));
+    jsearch.set("builds_during_search", Json::Num(out.builds_during_search as f64));
+    jsearch.set("speedup", Json::Num(out.speedup()));
+    report.set("search", jsearch);
+
+    match std::fs::write("BENCH_perf_hotpath.json", report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_perf_hotpath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_perf_hotpath.json: {e}"),
+    }
 }

@@ -173,6 +173,17 @@ fn cmd_optimize(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> i32 {
+    eprintln!(
+        "`dpro train` drives the live PJRT path, which is feature-gated: \
+         rebuild with `--features pjrt` in an environment that provides \
+         the xla/anyhow/log crates (see rust/README.md)."
+    );
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> i32 {
     let cfg = crate::coordinator::TrainCfg {
         artifacts_dir: args.get_or("artifacts", "artifacts").into(),

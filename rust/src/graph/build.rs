@@ -12,6 +12,21 @@ use crate::config::{ClusterSpec, CommScheme, JobSpec};
 use crate::graph::dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorMeta};
 use crate::util::Us;
 
+thread_local! {
+    /// Count of full global-DFG constructions (named and nameless) on this
+    /// thread. The optimizer's hot loop must perform none after its setup
+    /// phase — the incremental subsystem ([`crate::graph::mutable`]) edits
+    /// the graph in place instead — and tests assert that through this
+    /// counter. Thread-local so concurrently running tests cannot pollute
+    /// each other's deltas.
+    static BUILD_COUNT: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
+
+/// Monotonic number of global-DFG constructions so far on this thread.
+pub fn build_count() -> usize {
+    BUILD_COUNT.with(|c| c.get())
+}
+
 /// Supplies op durations during construction. `AnalyticCost` derives them
 /// from the cluster spec; the profiler swaps in measured averages.
 pub trait CostProvider {
@@ -146,6 +161,7 @@ pub fn build_global_nameless(spec: &JobSpec, cost: &dyn CostProvider) -> GlobalD
 }
 
 fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) -> GlobalDfg {
+    BUILD_COUNT.with(|c| c.set(c.get() + 1));
     let cluster = &spec.cluster;
     let model = &spec.model;
     let n_workers = cluster.n_workers;
@@ -225,47 +241,11 @@ fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) 
             group_nodes[gi].push(id);
         }
 
-        let k = group.partitions.max(1);
-        let pbytes = gbytes / k as f64;
         let mut out_per_worker: Vec<Vec<NodeId>> = vec![Vec::new(); n_workers];
-
-        match &spec.scheme {
-            CommScheme::AllReduce(_) => {
-                // negotiation op: coordinator serializes group scheduling
-                let neg = dfg.add(Node {
-                    name: name!("neg.g{gi}"),
-                    kind: OpKind::Negotiate,
-                    // a delay, not an exclusive resource: Null device means
-                    // "elapses without queuing" in testbed and replayer
-                    device: DeviceKey::Null,
-                    duration: cost.negotiate(),
-                    owner: 0,
-                    proc: crate::graph::dfg::COORD_PROC,
-                    tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
-                    txid: None,
-                    template_id: None,
-                });
-                for &i in &in_ops {
-                    dfg.edge(i, neg);
-                }
-                group_nodes[gi].push(neg);
-                for p in 0..k {
-                    build_allreduce_partition(
-                        &mut dfg, cluster, cost, with_names, gi, p, pbytes, neg,
-                        &mut out_per_worker, &mut group_nodes[gi], &mut txid,
-                    );
-                }
-            }
-            CommScheme::Ps(ps) => {
-                for p in 0..k {
-                    let server = (gi + p) % ps.n_servers;
-                    build_ps_partition(
-                        &mut dfg, cluster, cost, with_names, gi, p, pbytes, server, &in_ops,
-                        &mut out_per_worker, &mut group_nodes[gi], &mut txid,
-                    );
-                }
-            }
-        }
+        build_group_comm(
+            &mut dfg, spec, cost, with_names, gi, &in_ops,
+            &mut out_per_worker, &mut group_nodes[gi], &mut txid,
+        );
 
         // Out virtual op + update per worker
         for w in 0..n_workers as u16 {
@@ -297,6 +277,81 @@ fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) 
 
     debug_assert!(dfg.is_dag());
     GlobalDfg { dfg, comp_node, group_nodes, group_out, update_node, n_workers }
+}
+
+/// Build the communication topology of one tensor group — the negotiation
+/// op (AllReduce) plus the per-partition chains — appending to `dfg` and
+/// wiring from the group's In ops. `out_per_worker` collects the chain
+/// tails that feed each worker's Out op; `gnodes` records every created
+/// node in canonical creation order. Shared by the full builder above and
+/// by the in-place comm-chain splice of [`crate::graph::mutable`], so an
+/// incrementally rewritten group is structurally identical to a fresh
+/// build of the same spec.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn build_group_comm(
+    dfg: &mut Dfg,
+    spec: &JobSpec,
+    cost: &dyn CostProvider,
+    with_names: bool,
+    gi: usize,
+    in_ops: &[NodeId],
+    out_per_worker: &mut [Vec<NodeId>],
+    gnodes: &mut Vec<NodeId>,
+    txid: &mut u64,
+) {
+    let cluster = &spec.cluster;
+    let gbytes = spec.plan.group_bytes(&spec.model, gi);
+    let group = &spec.plan.groups[gi];
+    let k = group.partitions.max(1);
+    let pbytes = gbytes / k as f64;
+    macro_rules! name {
+        ($($arg:tt)*) => {
+            if with_names { format!($($arg)*) } else { String::new() }
+        };
+    }
+    match &spec.scheme {
+        CommScheme::AllReduce(_) => {
+            // negotiation op: coordinator serializes group scheduling
+            let neg = dfg.add(Node {
+                name: name!("neg.g{gi}"),
+                kind: OpKind::Negotiate,
+                // a delay, not an exclusive resource: Null device means
+                // "elapses without queuing" in testbed and replayer
+                device: DeviceKey::Null,
+                duration: cost.negotiate(),
+                owner: 0,
+                proc: crate::graph::dfg::COORD_PROC,
+                tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
+                txid: None,
+                template_id: None,
+            });
+            for &i in in_ops {
+                dfg.edge(i, neg);
+            }
+            gnodes.push(neg);
+            for p in 0..k {
+                build_allreduce_partition(
+                    dfg, cluster, cost, with_names, gi, p, pbytes, neg,
+                    out_per_worker, gnodes, txid,
+                );
+            }
+        }
+        CommScheme::Ps(ps) => {
+            for p in 0..k {
+                // Server assignment is keyed by the group's first tensor
+                // id, not its plan index: tensor ids are stable under
+                // tensor fusion, so an in-place chain splice and a fresh
+                // rebuild agree on placement even after earlier groups
+                // were merged away (plan indices shift, tensor ids never
+                // do).
+                let server = (group.tensors[0] as usize + p) % ps.n_servers;
+                build_ps_partition(
+                    dfg, cluster, cost, with_names, gi, p, pbytes, server, in_ops,
+                    out_per_worker, gnodes, txid,
+                );
+            }
+        }
+    }
 }
 
 /// AllReduce for one partition, modeled as NCCL models it: NVLink reduce

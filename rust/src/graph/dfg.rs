@@ -160,6 +160,37 @@ impl Dfg {
         }
     }
 
+    /// Remove a directed edge if present (no-op otherwise). Adjacency lists
+    /// are sets, not sequences: `swap_remove` is safe because nothing in the
+    /// crate depends on neighbor order for its *values* (replay start times
+    /// are max-reductions over predecessors).
+    pub fn remove_edge(&mut self, from: NodeId, to: NodeId) {
+        if let Some(p) = self.succs[from as usize].iter().position(|&s| s == to) {
+            self.succs[from as usize].swap_remove(p);
+        }
+        if let Some(p) = self.preds[to as usize].iter().position(|&s| s == from) {
+            self.preds[to as usize].swap_remove(p);
+        }
+    }
+
+    /// Disconnect a node from every neighbor. Tombstoning support for the
+    /// mutable-plan layer ([`crate::graph::mutable`]): the node stays in the
+    /// arena (ids are stable) but no longer participates in any dependency.
+    pub fn detach(&mut self, id: NodeId) {
+        let succs = std::mem::take(&mut self.succs[id as usize]);
+        for s in succs {
+            if let Some(p) = self.preds[s as usize].iter().position(|&x| x == id) {
+                self.preds[s as usize].swap_remove(p);
+            }
+        }
+        let preds = std::mem::take(&mut self.preds[id as usize]);
+        for p in preds {
+            if let Some(q) = self.succs[p as usize].iter().position(|&x| x == id) {
+                self.succs[p as usize].swap_remove(q);
+            }
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
@@ -284,6 +315,26 @@ mod tests {
         g.edge(a, b);
         assert_eq!(g.succs(a).len(), 1);
         assert_eq!(g.preds(b).len(), 1);
+    }
+
+    #[test]
+    fn remove_edge_and_detach() {
+        let mut g = Dfg::new();
+        let a = g.add(comp("a", 1.0));
+        let b = g.add(comp("b", 1.0));
+        let c = g.add(comp("c", 1.0));
+        g.edge(a, b);
+        g.edge(b, c);
+        g.edge(a, c);
+        g.remove_edge(a, c);
+        assert_eq!(g.succs(a), &[b]);
+        assert_eq!(g.preds(c), &[b]);
+        g.remove_edge(a, c); // no-op on absent edge
+        g.detach(b);
+        assert!(g.succs(b).is_empty() && g.preds(b).is_empty());
+        assert!(g.succs(a).is_empty());
+        assert!(g.preds(c).is_empty());
+        assert!(g.is_dag());
     }
 
     #[test]

@@ -3,6 +3,10 @@
 
 pub mod build;
 pub mod dfg;
+pub mod mutable;
 
-pub use build::{build_global, build_global_nameless, AnalyticCost, CostProvider, GlobalDfg};
+pub use build::{
+    build_count, build_global, build_global_nameless, AnalyticCost, CostProvider, GlobalDfg,
+};
 pub use dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorId, TensorMeta};
+pub use mutable::{ChangeLog, MutableGraph};

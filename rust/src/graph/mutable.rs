@@ -1,0 +1,514 @@
+//! Mutable-plan layer: apply optimizer decisions (op fusion, tensor
+//! fusion, tensor partition) as **in-place edits** of an already-built
+//! global DFG, instead of round-tripping through `JobSpec` →
+//! [`crate::graph::build_global_nameless`] on every search round.
+//!
+//! The three primitive edits mirror [`crate::optimizer::passes`] (which
+//! stays the source of truth for *plan* validity — every edit first goes
+//! through the corresponding pass on the owned [`JobSpec`], then replays
+//! the same rewrite on the graph):
+//!
+//! - **op fusion** — per worker, the dropped group's comp node is merged
+//!   into the kept one: edges redirected, duration set to the fused-kernel
+//!   time, the dropped node tombstoned;
+//! - **tensor fusion** — the dropped group's whole synchronization subgraph
+//!   (In/chain/Out/update) is tombstoned, the kept group's In ops gain the
+//!   merged producers, and the kept chain is re-spliced at the fused size;
+//! - **tensor partition** — the group's comm chain is re-spliced with the
+//!   new partition count.
+//!
+//! Chain splices call the exact same [`build_group_comm`] the full builder
+//! uses, so an incrementally-edited graph is *structurally identical* (up
+//! to node numbering) to a fresh build of the mutated spec — the invariant
+//! the `incremental` equivalence tests pin down. Tombstoned nodes stay in
+//! the arena (ids are stable) but are detached, zero-duration, and
+//! device-less; the incremental replayer skips them via [`Self::alive`].
+//!
+//! Every edit is logged into a [`ChangeLog`] (tombstoned ids, touched ids,
+//! append watermark) that [`crate::replay::incremental::IncrementalReplayer`]
+//! drains to confine its recomputation to the affected cone.
+
+use crate::config::JobSpec;
+use crate::graph::build::{build_group_comm, AnalyticCost, CostProvider};
+use crate::graph::dfg::{DeviceKey, Dfg, NodeId, OpKind};
+use crate::graph::{build_global_nameless, GlobalDfg};
+use crate::optimizer::passes::{self, PassError};
+
+/// Canonical rank of a node: a total order shared by incrementally-edited
+/// and freshly-built graphs of the same spec, used by the incremental
+/// replayer to break exact ties deterministically. Encoded as
+/// `class << 60 | major << 32 | minor`:
+///
+/// - comp ops:   `(0, worker, fusion-group index)`
+/// - comm nodes: `(1, comm-group index, creation order within the group)`
+/// - update ops: `(2, comm-group index, worker)`
+///
+/// The rank is *dependency-consistent on every device for simultaneous
+/// ops*: within a chain, creation order follows dependencies, and any
+/// cross-class dependency passes through an op of positive duration, so
+/// equal-time ties can only occur between rank-ordered pairs.
+#[inline]
+fn canon_rank(class: u64, major: u64, minor: u64) -> u64 {
+    debug_assert!(class < 8 && major < (1 << 28) && minor < (1 << 32));
+    (class << 60) | (major << 32) | minor
+}
+
+/// What changed since the last [`MutableGraph::commit`]: the incremental
+/// replayer's repair seeds.
+#[derive(Clone, Debug, Default)]
+pub struct ChangeLog {
+    /// Tombstoned node ids (graph edits never reuse ids).
+    pub removed: Vec<NodeId>,
+    /// Surviving nodes whose duration or predecessor set changed.
+    pub touched: Vec<NodeId>,
+    /// Nodes with id `>= added_from` were appended since the last commit.
+    pub added_from: NodeId,
+}
+
+impl ChangeLog {
+    pub fn is_empty(&self, n_now: usize) -> bool {
+        self.removed.is_empty()
+            && self.touched.is_empty()
+            && self.added_from as usize >= n_now
+    }
+}
+
+/// A global DFG plus the [`JobSpec`] it was built from, kept mutually
+/// consistent under in-place plan edits. See module docs.
+pub struct MutableGraph {
+    spec: JobSpec,
+    dfg: Dfg,
+    n_workers: usize,
+    /// false for tombstoned nodes
+    alive: Vec<bool>,
+    /// comp node of (worker, fusion group): `comp[w][g]`
+    comp: Vec<Vec<NodeId>>,
+    /// per comm group, in canonical creation order:
+    in_ops: Vec<Vec<NodeId>>,
+    chain: Vec<Vec<NodeId>>,
+    out_ops: Vec<Vec<NodeId>>,
+    upd_ops: Vec<Vec<NodeId>>,
+    /// canonical ranks, refreshed by [`Self::commit`]
+    canon: Vec<u64>,
+    /// transaction-id counter continuing past the initial build
+    txid: u64,
+    // accumulated changelog
+    removed: Vec<NodeId>,
+    touched: Vec<NodeId>,
+    added_from: NodeId,
+}
+
+impl MutableGraph {
+    /// Build the global DFG for `spec` (one full construction — the last
+    /// one the search loop will ever do) and index it for mutation.
+    pub fn new(spec: JobSpec) -> MutableGraph {
+        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
+        MutableGraph::from_built(spec, g)
+    }
+
+    /// Index an already-built global DFG (must have been built from `spec`).
+    pub fn from_built(spec: JobSpec, g: GlobalDfg) -> MutableGraph {
+        let GlobalDfg { dfg, comp_node, group_nodes, update_node, n_workers, .. } = g;
+        let n = dfg.len();
+        let n_groups = spec.plan.groups.len();
+        let n_fusion = spec.fusion.groups.len();
+
+        let mut comp = vec![vec![0 as NodeId; n_fusion]; n_workers];
+        for ((w, gi), id) in comp_node {
+            comp[w as usize][gi as usize] = id;
+        }
+
+        let mut in_ops = vec![Vec::new(); n_groups];
+        let mut chain = vec![Vec::new(); n_groups];
+        let mut out_ops = vec![Vec::new(); n_groups];
+        for (gi, nodes) in group_nodes.into_iter().enumerate() {
+            // group_nodes is [In ops (worker order)] ++ [chain, creation
+            // order] ++ [Out ops (worker order)] by construction
+            for id in nodes {
+                match dfg.node(id).kind {
+                    OpKind::In => in_ops[gi].push(id),
+                    OpKind::Out => out_ops[gi].push(id),
+                    _ => chain[gi].push(id),
+                }
+            }
+        }
+        let mut upd_ops = vec![vec![0 as NodeId; n_workers]; n_groups];
+        for ((w, gi), id) in update_node {
+            upd_ops[gi][w as usize] = id;
+        }
+
+        let mut mg = MutableGraph {
+            spec,
+            dfg,
+            n_workers,
+            alive: vec![true; n],
+            comp,
+            in_ops,
+            chain,
+            out_ops,
+            upd_ops,
+            canon: vec![u64::MAX; n],
+            // initial build starts txids at 1; continue safely past any of
+            // them (txids only matter for trace joins, never for replay)
+            txid: 1u64 << 32,
+            removed: Vec::new(),
+            touched: Vec::new(),
+            added_from: 0, // first commit() reports the whole graph as new
+        };
+        mg.refresh();
+        mg
+    }
+
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    pub fn dfg(&self) -> &Dfg {
+        &self.dfg
+    }
+
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn canon_ranks(&self) -> &[u64] {
+        &self.canon
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.spec.plan.groups.len()
+    }
+
+    /// Comp node executing fusion group `fg` on `worker`, if in range.
+    pub fn comp_node(&self, worker: u16, fg: u32) -> Option<NodeId> {
+        self.comp.get(worker as usize).and_then(|row| row.get(fg as usize)).copied()
+    }
+
+    /// All live nodes of comm group `gi` (In ops, chain, Out ops).
+    pub fn group_nodes_iter(&self, gi: usize) -> impl Iterator<Item = NodeId> + '_ {
+        self.in_ops[gi]
+            .iter()
+            .chain(self.chain[gi].iter())
+            .chain(self.out_ops[gi].iter())
+            .copied()
+    }
+
+    /// Update op of (worker, comm group).
+    pub fn update_node(&self, worker: u16, gi: usize) -> NodeId {
+        self.upd_ops[gi][worker as usize]
+    }
+
+    // ---- primitive edits ----------------------------------------------
+
+    /// **Op fusion**: merge fusion groups `a` and `b` (same validity rules
+    /// as [`passes::fuse_comp_groups`]); per worker the two comp nodes
+    /// collapse into one fused-kernel node. Returns the kept group index.
+    pub fn fuse_comp_groups(&mut self, a: usize, b: usize) -> Result<usize, PassError> {
+        let keep = passes::fuse_comp_groups(&mut self.spec, a, b)?;
+        let drop = a.max(b); // passes keeps the smaller index
+        debug_assert_eq!(keep, a.min(b));
+        let fused_dur =
+            self.spec.fusion.duration(&self.spec.model, &self.spec.cluster.gpu, keep);
+        for w in 0..self.n_workers {
+            let ka = self.comp[w][keep];
+            let kb = self.comp[w][drop];
+            let preds: Vec<NodeId> = self.dfg.preds(kb).to_vec();
+            let succs: Vec<NodeId> = self.dfg.succs(kb).to_vec();
+            self.tombstone(kb);
+            for p in preds {
+                if p != ka {
+                    self.dfg.edge(p, ka);
+                }
+            }
+            for s in succs {
+                if s != ka {
+                    self.dfg.edge(ka, s);
+                    self.touched.push(s);
+                }
+            }
+            self.dfg.node_mut(ka).duration = fused_dur;
+            self.touched.push(ka);
+        }
+        for w in 0..self.n_workers {
+            self.comp[w].remove(drop);
+        }
+        Ok(keep)
+    }
+
+    /// **Tensor fusion**: merge comm groups `a` and `b` into one
+    /// synchronization unit; the dropped group's subgraph is tombstoned
+    /// and the kept chain re-spliced at the fused size. Returns the kept
+    /// group index.
+    pub fn fuse_tensor_groups(&mut self, a: usize, b: usize) -> Result<usize, PassError> {
+        let keep = passes::fuse_tensor_groups(&mut self.spec, a, b)?;
+        let drop = a.max(b);
+        debug_assert_eq!(keep, a.min(b));
+        // tombstone the dropped group's entire synchronization subgraph
+        let doomed: Vec<NodeId> = self.in_ops[drop]
+            .iter()
+            .chain(self.chain[drop].iter())
+            .chain(self.out_ops[drop].iter())
+            .chain(self.upd_ops[drop].iter())
+            .copied()
+            .collect();
+        for id in doomed {
+            self.tombstone(id);
+        }
+        self.in_ops.remove(drop);
+        self.chain.remove(drop);
+        self.out_ops.remove(drop);
+        self.upd_ops.remove(drop);
+        // kept In ops now wait on every producer of the merged tensor set
+        for w in 0..self.n_workers {
+            let in_op = self.in_ops[keep][w];
+            for ti in 0..self.spec.plan.groups[keep].tensors.len() {
+                let t = self.spec.plan.groups[keep].tensors[ti];
+                let Some(op) = self.spec.model.producer_of(t) else { continue };
+                let pg = self.spec.fusion.group_of[op as usize] as usize;
+                self.dfg.edge(self.comp[w][pg], in_op);
+            }
+            self.touched.push(in_op);
+        }
+        self.rebuild_chain(keep);
+        Ok(keep)
+    }
+
+    /// **Tensor partition**: slice comm group `g` into `k` pieces,
+    /// re-splicing its chain if the count actually changes.
+    pub fn set_partitions(&mut self, g: usize, k: usize) -> Result<(), PassError> {
+        let old = self
+            .spec
+            .plan
+            .groups
+            .get(g)
+            .map(|gr| gr.partitions)
+            .ok_or(PassError::OutOfRange)?;
+        passes::set_partitions(&mut self.spec, g, k)?;
+        if self.spec.plan.groups[g].partitions != old {
+            self.rebuild_chain(g);
+        }
+        Ok(())
+    }
+
+    // ---- bookkeeping ---------------------------------------------------
+
+    /// Detach a node from the graph and mark it dead. Ids stay stable; the
+    /// arena is never compacted (a 40-round search grows it by well under
+    /// 2x, and the replayer's cost scales with *live* nodes).
+    fn tombstone(&mut self, id: NodeId) {
+        if !self.alive[id as usize] {
+            return;
+        }
+        self.alive[id as usize] = false;
+        self.dfg.detach(id);
+        let node = self.dfg.node_mut(id);
+        node.device = DeviceKey::Null;
+        node.duration = 0.0;
+        node.template_id = None;
+        self.removed.push(id);
+    }
+
+    /// Tombstone group `gi`'s comm chain and rebuild it from the current
+    /// spec via the same builder the full construction uses.
+    fn rebuild_chain(&mut self, gi: usize) {
+        for &id in self.chain[gi].clone().iter() {
+            self.tombstone(id);
+        }
+        self.chain[gi].clear();
+
+        let mut out_per_worker: Vec<Vec<NodeId>> = vec![Vec::new(); self.n_workers];
+        let mut gnodes: Vec<NodeId> = Vec::new();
+        {
+            let cost = AnalyticCost::new(&self.spec);
+            build_group_comm(
+                &mut self.dfg,
+                &self.spec,
+                &cost,
+                false,
+                gi,
+                &self.in_ops[gi],
+                &mut out_per_worker,
+                &mut gnodes,
+                &mut self.txid,
+            );
+        }
+        self.chain[gi] = gnodes;
+        let n = self.dfg.len();
+        self.alive.resize(n, true);
+        self.canon.resize(n, u64::MAX);
+
+        let gbytes = self.spec.plan.group_bytes(&self.spec.model, gi);
+        let upd_dur = AnalyticCost::new(&self.spec).update(gbytes);
+        for w in 0..self.n_workers {
+            let out = self.out_ops[gi][w];
+            for &o in &out_per_worker[w] {
+                self.dfg.edge(o, out);
+            }
+            self.touched.push(out);
+            if let Some(t) = &mut self.dfg.node_mut(out).tensor {
+                t.bytes = gbytes;
+            }
+            let in_op = self.in_ops[gi][w];
+            if let Some(t) = &mut self.dfg.node_mut(in_op).tensor {
+                t.bytes = gbytes;
+            }
+            let upd = self.upd_ops[gi][w];
+            self.dfg.node_mut(upd).duration = upd_dur;
+            if let Some(t) = &mut self.dfg.node_mut(upd).tensor {
+                t.bytes = gbytes;
+            }
+            self.touched.push(upd);
+        }
+    }
+
+    /// Re-derive the per-node fields that depend on *current* plan indices
+    /// (canonical ranks, comp `template_id`, comm `tensor_id`) and return
+    /// the accumulated [`ChangeLog`]. Call once per round, after applying
+    /// a batch of decisions and before replaying; every returned log must
+    /// be forwarded to the engine's next `replay_incremental` (dropping
+    /// one would hide its edits from the repair passes).
+    pub fn commit(&mut self) -> ChangeLog {
+        self.refresh();
+        let log = ChangeLog {
+            removed: std::mem::take(&mut self.removed),
+            touched: std::mem::take(&mut self.touched),
+            added_from: self.added_from,
+        };
+        self.added_from = self.dfg.len() as NodeId;
+        log
+    }
+
+    fn refresh(&mut self) {
+        let n = self.dfg.len();
+        self.alive.resize(n, true);
+        self.canon.resize(n, u64::MAX);
+        for w in 0..self.n_workers {
+            for g in 0..self.comp[w].len() {
+                let id = self.comp[w][g];
+                self.canon[id as usize] = canon_rank(0, w as u64, g as u64);
+                self.dfg.node_mut(id).template_id = Some(g as u32);
+            }
+        }
+        for gi in 0..self.in_ops.len() {
+            let mut seq = 0u64;
+            for part in 0..3 {
+                let len = match part {
+                    0 => self.in_ops[gi].len(),
+                    1 => self.chain[gi].len(),
+                    _ => self.out_ops[gi].len(),
+                };
+                for k in 0..len {
+                    let id = match part {
+                        0 => self.in_ops[gi][k],
+                        1 => self.chain[gi][k],
+                        _ => self.out_ops[gi][k],
+                    };
+                    self.canon[id as usize] = canon_rank(1, gi as u64, seq);
+                    seq += 1;
+                    if let Some(t) = &mut self.dfg.node_mut(id).tensor {
+                        t.tensor_id = gi as u32;
+                    }
+                }
+            }
+            for w in 0..self.n_workers {
+                let id = self.upd_ops[gi][w];
+                self.canon[id as usize] = canon_rank(2, gi as u64, w as u64);
+                if let Some(t) = &mut self.dfg.node_mut(id).tensor {
+                    t.tensor_id = gi as u32;
+                }
+            }
+        }
+    }
+
+    /// Count of live (non-tombstoned) nodes.
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Debug validation: the spec's plans stay valid partitions and the
+    /// graph stays acyclic.
+    pub fn validate(&self) -> Result<(), String> {
+        self.spec.plan.validate(&self.spec.model)?;
+        self.spec.fusion.validate(&self.spec.model)?;
+        if !self.dfg.is_dag() {
+            return Err("mutable graph has a cycle".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transport;
+
+    fn mg(model: &str, scheme: &str) -> MutableGraph {
+        MutableGraph::new(JobSpec::standard(model, scheme, Transport::Rdma))
+    }
+
+    #[test]
+    fn op_fusion_merges_comp_nodes_in_place() {
+        let mut m = mg("vgg16", "horovod");
+        let n0 = m.dfg().len();
+        let keep = m.fuse_comp_groups(0, 1).unwrap();
+        assert_eq!(keep, 0);
+        assert_eq!(m.dfg().len(), n0, "op fusion must not allocate nodes");
+        assert_eq!(m.n_alive(), n0 - m.n_workers());
+        assert_eq!(m.validate(), Ok(()));
+        let log = m.commit();
+        assert_eq!(log.removed.len(), m.n_workers());
+        assert!(!log.touched.is_empty());
+    }
+
+    #[test]
+    fn tensor_fusion_splices_chain() {
+        let mut m = mg("resnet50", "horovod");
+        let groups0 = m.n_groups();
+        m.fuse_tensor_groups(0, 1).unwrap();
+        assert_eq!(m.n_groups(), groups0 - 1);
+        assert_eq!(m.validate(), Ok(()));
+        // the kept group's In ops wait on both producers
+        let in0 = m.in_ops[0][0];
+        assert!(!m.dfg().preds(in0).is_empty());
+        // tombstones are detached
+        let log = m.commit();
+        for &r in &log.removed {
+            assert!(m.dfg().preds(r).is_empty() && m.dfg().succs(r).is_empty());
+        }
+    }
+
+    #[test]
+    fn partition_rebuilds_only_that_chain() {
+        let mut m = mg("vgg16", "byteps");
+        let chain_len0 = m.chain[3].len();
+        m.set_partitions(3, 4).unwrap();
+        assert_eq!(m.spec().plan.groups[3].partitions, 4);
+        assert!(m.chain[3].len() > chain_len0, "4-way chain has more nodes");
+        // setting the same count again is a no-op
+        let _ = m.commit();
+        m.set_partitions(3, 4).unwrap();
+        let log = m.commit();
+        assert!(log.is_empty(m.dfg().len()));
+        assert_eq!(m.validate(), Ok(()));
+    }
+
+    #[test]
+    fn canon_ranks_unique_among_live_nodes() {
+        let mut m = mg("resnet50", "byteps");
+        m.fuse_tensor_groups(2, 5).unwrap();
+        m.fuse_comp_groups(0, 1).unwrap();
+        m.set_partitions(0, 3).unwrap();
+        let _ = m.commit();
+        let mut seen = std::collections::HashSet::new();
+        for i in m.dfg().ids() {
+            if m.alive()[i as usize] {
+                assert!(seen.insert(m.canon_ranks()[i as usize]), "duplicate canon rank");
+            }
+        }
+        assert_eq!(m.validate(), Ok(()));
+    }
+}

@@ -19,7 +19,12 @@
 pub mod alignment;
 pub mod baselines;
 pub mod cli;
+/// Live data-parallel training coordinator. Requires the `pjrt` feature
+/// (and an environment providing the `xla`/`anyhow`/`log` crates); the
+/// default offline build compiles everything else.
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod config;
 pub mod testbed;

@@ -4,6 +4,12 @@
 //! template itself — op fusion is a partition over template ops, tensor
 //! fusion a partition over tensors — so every rewrite is cheap and
 //! reversible by cloning the spec.
+//!
+//! These functions are the *plan-level* source of truth (validity rules,
+//! index bookkeeping). The search's hot path applies them through
+//! [`crate::graph::mutable::MutableGraph`], which mirrors each pass as an
+//! in-place edit of the already-built global DFG so no round ever
+//! reconstructs the graph from the spec.
 
 use crate::config::JobSpec;
 use crate::graph::dfg::TensorId;

@@ -2,16 +2,26 @@
 //! extract the critical path of the execution graph, and apply op fusion /
 //! tensor fusion / tensor partition guided by Theorems 1–3 until the
 //! estimated iteration time converges or the budget runs out.
+//!
+//! The loop holds **one long-lived** [`MutableGraph`] +
+//! [`IncrementalReplayer`] across all rounds: decisions apply as in-place
+//! graph edits and each round's replay recomputes only the affected cone.
+//! After setup, a search performs **zero** global-DFG constructions
+//! (tracked by [`crate::graph::build_count`] and pinned by tests) — the
+//! Table 5 speedups come precisely from decoupling per-candidate
+//! simulation cost from graph-construction cost.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::config::{CommScheme, JobSpec};
 use crate::graph::dfg::{NodeId, OpKind, TensorId};
-use crate::graph::{build_global_nameless, AnalyticCost, GlobalDfg};
+use crate::graph::{build_global_nameless, AnalyticCost, MutableGraph};
 use crate::optimizer::memopt::{self, MemOpt};
 use crate::optimizer::{coarsen, passes, symmetry::SymmetryIndex};
+use crate::replay::incremental::IncrementalReplayer;
 use crate::replay::partial::TsyncEstimator;
-use crate::replay::{replay_once, Replayer};
+use crate::replay::replay_once;
 use crate::util::Us;
 
 /// Search configuration; the three `use_*` flags are the paper's Table 5
@@ -89,6 +99,10 @@ pub struct SearchOutcome {
     pub replays: usize,
     pub full_replays_for_tsync: usize,
     pub actions_applied: usize,
+    /// Global-DFG constructions performed by the round loop itself. Zero
+    /// whenever partial replay is on (the strawman t_sync oracle is the
+    /// only remaining builder, and it is what Table 5 ablated away).
+    pub builds_during_search: usize,
     pub wall_s: f64,
 }
 
@@ -112,36 +126,52 @@ enum Decision {
     Partition(TensorId, usize),
 }
 
-/// t_sync oracle: partial replay (fast, memoized) or full replay of the
-/// entire current job (the strawman's approach).
+/// t_sync oracle: partial replay (fast, never builds) or full replay of
+/// the entire current job (the strawman's approach, memoized on
+/// `(bytes_bucket, k)` so repeated probes within a round do not repeat
+/// builds — the cache is cleared each round because a strawman probe
+/// measures the *current* mutating job, not an idle network).
 struct Tsync {
     partial: Option<TsyncEstimator>,
+    strawman_cache: HashMap<(u64, usize), Us>,
     full_replays: usize,
 }
 
 impl Tsync {
-    fn new(spec: &JobSpec, partial: bool) -> Tsync {
-        Tsync {
-            partial: partial.then(|| TsyncEstimator::new(spec)),
-            full_replays: 0,
-        }
+    fn new(spec: &JobSpec, partial: bool, max_k: usize) -> Tsync {
+        let partial = partial.then(|| {
+            // pre-instantiate every partition count a round can query: the
+            // grid range plus whatever the deployed plan already uses —
+            // after this, t_sync never constructs a graph
+            let mut ks: Vec<usize> = (1..=max_k.max(1)).collect();
+            ks.extend(spec.plan.groups.iter().map(|g| g.partitions.max(1)));
+            TsyncEstimator::with_prebuilt(spec, ks)
+        });
+        Tsync { partial, strawman_cache: HashMap::new(), full_replays: 0 }
+    }
+
+    /// Invalidate measurements that depend on the evolving job (the
+    /// partial-replay estimator probes an idle network and stays valid).
+    fn new_round(&mut self) {
+        self.strawman_cache.clear();
     }
 
     fn t_sync(&mut self, spec: &JobSpec, bytes: f64, k: usize) -> Us {
         if let Some(p) = &mut self.partial {
             return p.t_sync(bytes, k);
         }
-        // strawman: replay the entire global DFG with a probe group spliced
-        // in as an extra tensor on the first comm group's producer
-        let mut s = spec.clone();
-        // emulate by replaying the full graph and measuring an equivalent
-        // group: rescale group 0 to the probe size
-        if s.plan.groups.is_empty() {
+        let key = ((bytes / 1024.0).round() as u64, k.max(1));
+        if let Some(&v) = self.strawman_cache.get(&key) {
+            return v;
+        }
+        // strawman: rebuild and replay the entire current job with group 0
+        // rescaled to the probe size
+        if spec.plan.groups.is_empty() {
             return 0.0;
         }
+        let mut s = spec.clone();
         s.plan.groups[0].partitions = k.max(1);
         let scale_t = s.plan.groups[0].tensors[0] as usize;
-        let orig = s.model.tensors[scale_t].bytes;
         let group_rest: f64 = s.plan.groups[0]
             .tensors
             .iter()
@@ -149,7 +179,6 @@ impl Tsync {
             .map(|&t| s.model.tensors[t as usize].bytes)
             .sum();
         s.model.tensors[scale_t].bytes = (bytes - group_rest).max(1.0);
-        let _ = orig;
         let g = build_global_nameless(&s, &AnalyticCost::new(&s));
         let r = replay_once(&g);
         self.full_replays += 1;
@@ -163,7 +192,9 @@ impl Tsync {
                 _ => {}
             }
         }
-        (t_out - t_in).max(0.0)
+        let t = (t_out - t_in).max(0.0);
+        self.strawman_cache.insert(key, t);
+        t
     }
 
     fn opt_part_num(&mut self, spec: &JobSpec, bytes: f64, max_k: usize) -> (usize, Us) {
@@ -181,38 +212,62 @@ impl Tsync {
 /// Run Alg. 1 on a job spec.
 pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
     let t0 = Instant::now();
-    let mut spec = spec0.clone();
     let mut replays = 0usize;
 
-    // baseline estimate (deployed plan, before any dPRO strategy)
+    // baseline estimate (deployed plan, before any dPRO strategy); the
+    // graph is kept — if no setup pass changes the spec it becomes the
+    // search's long-lived state instead of being rebuilt
+    let mut base_mg = MutableGraph::new(spec0.clone());
+    let mut base_eng = IncrementalReplayer::new();
     let baseline = {
-        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
+        let log = base_mg.commit();
         replays += 1;
-        replay_once(&g).iteration_time
+        base_eng.replay_incremental(&base_mg, &log).iteration_time
     };
+
+    let mut spec = spec0.clone();
+    let mut spec_dirty = false;
 
     // ---- memory passes (Alg. 1 line 1) ----
     let mut mem_opt = MemOpt::None;
     if let Some(budget) = opts.memory_budget_bytes {
         let (chosen, _) = memopt::choose(&spec, budget);
         mem_opt = chosen;
-        spec = memopt::apply(&spec, chosen);
+        if chosen != MemOpt::None {
+            spec = memopt::apply(&spec, chosen);
+            spec_dirty = true;
+        }
     }
 
     // ---- Coarsened View (Alg. 1 line 2) ----
     if opts.use_coarsened_view {
-        coarsen::coarsen(&mut spec);
+        let stats = coarsen::coarsen(&mut spec);
+        spec_dirty |= stats.op_fusions + stats.tensor_fusions > 0;
     }
 
     let partition_enabled = opts
         .enable_partition
         .unwrap_or(matches!(spec.scheme, CommScheme::Ps(_)));
     let sym = opts.use_symmetry.then(|| SymmetryIndex::new(&spec.model));
-    let mut tsync = Tsync::new(&spec, opts.use_partial_replay);
+    let mut tsync = Tsync::new(
+        &spec,
+        opts.use_partial_replay,
+        if partition_enabled { opts.max_partitions } else { 1 },
+    );
+
+    // ---- long-lived incremental replay state: built once (or adopted
+    // from the baseline), then only edited in place for the rest of the
+    // search ----
+    let (mut mg, mut eng) = if spec_dirty {
+        (MutableGraph::new(spec), IncrementalReplayer::new())
+    } else {
+        (base_mg, base_eng)
+    };
+    let builds_before_rounds = crate::graph::build_count();
 
     let mut history: Vec<Us> = Vec::new();
     let mut best = f64::INFINITY;
-    let mut best_spec = spec.clone();
+    let mut best_spec = mg.spec().clone();
     let mut stale = 0usize;
     let mut actions_applied = 0usize;
 
@@ -220,15 +275,15 @@ pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
         if t0.elapsed().as_secs_f64() > opts.budget_wall_s {
             break;
         }
-        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
-        let mut rp = Replayer::new(&g);
-        let result = rp.replay(&g);
+        tsync.new_round();
+        let log = mg.commit();
+        let result = eng.replay_incremental(&mg, &log);
         replays += 1;
         let est = result.iteration_time;
         history.push(est);
         if est < best * 0.995 {
             best = est;
-            best_spec = spec.clone();
+            best_spec = mg.spec().clone();
             stale = 0;
         } else {
             stale += 1;
@@ -239,68 +294,71 @@ pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
 
         // ---- walk the critical path and collect decisions ----
         let path = result.critical_path();
-        let decisions = collect_decisions(&spec, &g, &path, &result.end, &mut tsync, opts, partition_enabled);
+        let decisions =
+            collect_decisions(&mg, &path, &result.end, &mut tsync, opts, partition_enabled);
         if decisions.is_empty() {
             break;
         }
 
-        // ---- apply (with symmetry propagation) ----
+        // ---- apply in place (with symmetry propagation) ----
         let mut applied = 0usize;
-        for d in decisions {
-            applied += apply_decision(&mut spec, &d, sym.as_ref(), opts);
+        for d in &decisions {
+            applied += apply_decision(&mut mg, d, sym.as_ref(), opts);
         }
         actions_applied += applied;
         if applied == 0 {
             break;
         }
     }
+    let builds_during_search = crate::graph::build_count() - builds_before_rounds;
 
-    // final estimate on the best spec found
-    let g = build_global_nameless(&best_spec, &AnalyticCost::new(&best_spec));
-    replays += 1;
-    let est = replay_once(&g).iteration_time;
+    // a zero-round run (budget/max_rounds exhausted up front) still owes
+    // the caller an estimate of the unmodified plan
+    if !best.is_finite() {
+        let log = mg.commit();
+        replays += 1;
+        best = eng.replay_incremental(&mg, &log).iteration_time;
+        best_spec = mg.spec().clone();
+    }
 
     SearchOutcome {
         spec: best_spec,
         baseline_iteration_us: baseline,
-        est_iteration_us: est.min(best),
+        est_iteration_us: best,
         history,
         mem_opt,
         replays,
         full_replays_for_tsync: tsync.full_replays,
         actions_applied,
+        builds_during_search,
         wall_s: t0.elapsed().as_secs_f64(),
     }
 }
 
 /// Walk the path per Alg. 1 (lines 5–25) and collect fusion/partition
 /// decisions in stable ids.
-#[allow(clippy::too_many_arguments)]
 fn collect_decisions(
-    spec: &JobSpec,
-    g: &GlobalDfg,
+    mg: &MutableGraph,
     path: &[NodeId],
     end: &[f64],
     tsync: &mut Tsync,
     opts: &SearchOpts,
     partition_enabled: bool,
 ) -> Vec<Decision> {
+    let spec = mg.spec();
+    let dfg = mg.dfg();
     let gpu = &spec.cluster.gpu;
     let mut out = Vec::new();
-    // Alg. 1 walks the whole critical path each round; decisions are in
-    // stable ids so applying a batch cannot invalidate later ones
-    let max_decisions = usize::MAX;
 
     // group-level end times for q^e (max end over the group's comm chain)
     let group_end = |cg: usize| -> f64 {
-        g.group_nodes[cg].iter().map(|&n| end[n as usize]).fold(0.0, f64::max)
+        mg.group_nodes_iter(cg).map(|n| end[n as usize]).fold(0.0, f64::max)
     };
 
+    // Alg. 1 walks the whole critical path each round; decisions are in
+    // stable ids so applying a batch cannot invalidate later ones
     for w in path.windows(2) {
-        if out.len() >= max_decisions {
-            break;
-        }
-        let (a, b) = (g.dfg.node(w[0]), g.dfg.node(w[1]));
+        let (a, b) = (dfg.node(w[0]), dfg.node(w[1]));
 
         // ---- computation-bound segment: consecutive comp ops ----
         if opts.enable_op_fusion
@@ -348,8 +406,8 @@ fn collect_decisions(
             let q_prev_end = group_end(ca);
             // p_n^e: end of the producer comp group of cb on this worker
             let p_end = passes::producer_fusion_group(spec, cb)
-                .and_then(|fg| g.comp_node.get(&(b.owner, fg as u32)))
-                .map(|&n| end[n as usize])
+                .and_then(|fg| mg.comp_node(b.owner, fg as u32))
+                .map(|n| end[n as usize])
                 .unwrap_or(0.0);
             // Theorem 2
             if q_prev_end > p_end + t_f - t_b {
@@ -370,10 +428,10 @@ fn collect_decisions(
     out
 }
 
-/// Apply one decision (+ its Theorem-3 companions and symmetry analogs).
-/// Returns the number of primitive passes applied.
+/// Apply one decision (+ its Theorem-3 companions and symmetry analogs) as
+/// in-place graph edits. Returns the number of primitive passes applied.
 fn apply_decision(
-    spec: &mut JobSpec,
+    mg: &mut MutableGraph,
     d: &Decision,
     sym: Option<&SymmetryIndex>,
     opts: &SearchOpts,
@@ -381,34 +439,33 @@ fn apply_decision(
     let mut n = 0usize;
     match *d {
         Decision::OpFuse(op_a, op_b) => {
-            n += fuse_ops_and_tensors(spec, op_a, op_b, opts);
+            n += fuse_ops_and_tensors(mg, op_a, op_b, opts);
             if let Some(sym) = sym {
                 for (x, y) in sym.analog_pairs(op_a, op_b) {
-                    n += fuse_ops_and_tensors(spec, x, y, opts);
+                    n += fuse_ops_and_tensors(mg, x, y, opts);
                 }
             }
         }
         Decision::TensorFuse(ta, tb) => {
-            n += fuse_tensors_and_ops(spec, ta, tb, opts);
+            n += fuse_tensors_and_ops(mg, ta, tb, opts);
             if let Some(sym) = sym {
-                let pa = spec.model.producer_of(ta);
-                let pb = spec.model.producer_of(tb);
+                let pa = mg.spec().model.producer_of(ta);
+                let pb = mg.spec().model.producer_of(tb);
                 if let (Some(pa), Some(pb)) = (pa, pb) {
                     for (x, y) in sym.analog_pairs(pa, pb) {
                         // fuse the first produced tensors of the analogs
-                        let tx = spec.model.ops[x as usize].produces.first().copied();
-                        let ty = spec.model.ops[y as usize].produces.first().copied();
+                        let tx = mg.spec().model.ops[x as usize].produces.first().copied();
+                        let ty = mg.spec().model.ops[y as usize].produces.first().copied();
                         if let (Some(tx), Some(ty)) = (tx, ty) {
-                            n += fuse_tensors_and_ops(spec, tx, ty, opts);
+                            n += fuse_tensors_and_ops(mg, tx, ty, opts);
                         }
                     }
                 }
             }
         }
         Decision::Partition(t, k) => {
-            if let Some(cg) = passes::comm_group_of_tensor(spec, t) {
-                if spec.plan.groups[cg].partitions != k
-                    && passes::set_partitions(spec, cg, k).is_ok()
+            if let Some(cg) = passes::comm_group_of_tensor(mg.spec(), t) {
+                if mg.spec().plan.groups[cg].partitions != k && mg.set_partitions(cg, k).is_ok()
                 {
                     n += 1;
                 }
@@ -419,22 +476,22 @@ fn apply_decision(
 }
 
 /// Theorem 1 + 3: fuse two fusion groups and the comm groups they feed.
-fn fuse_ops_and_tensors(spec: &mut JobSpec, op_a: u32, op_b: u32, opts: &SearchOpts) -> usize {
-    let fa = spec.fusion.group_of[op_a as usize] as usize;
-    let fb = spec.fusion.group_of[op_b as usize] as usize;
+fn fuse_ops_and_tensors(mg: &mut MutableGraph, op_a: u32, op_b: u32, opts: &SearchOpts) -> usize {
+    let fa = mg.spec().fusion.group_of[op_a as usize] as usize;
+    let fb = mg.spec().fusion.group_of[op_b as usize] as usize;
     if fa == fb {
         return 0;
     }
     let mut n = 0;
-    let cgs_a = passes::comm_groups_of_fusion_group(spec, fa);
-    let cgs_b = passes::comm_groups_of_fusion_group(spec, fb);
-    if passes::fuse_comp_groups(spec, fa, fb).is_ok() {
+    let cgs_a = passes::comm_groups_of_fusion_group(mg.spec(), fa);
+    let cgs_b = passes::comm_groups_of_fusion_group(mg.spec(), fb);
+    if mg.fuse_comp_groups(fa, fb).is_ok() {
         n += 1;
         // companion tensor fusion (Theorem 3)
         if opts.enable_tensor_fusion {
             if let (Some(&ca), Some(&cb)) = (cgs_a.first(), cgs_b.first()) {
                 // indices may have shifted only for fusion groups, not comm
-                if ca != cb && passes::fuse_tensor_groups(spec, ca, cb).is_ok() {
+                if ca != cb && mg.fuse_tensor_groups(ca, cb).is_ok() {
                     n += 1;
                 }
             }
@@ -444,20 +501,25 @@ fn fuse_ops_and_tensors(spec: &mut JobSpec, op_a: u32, op_b: u32, opts: &SearchO
 }
 
 /// Theorem 2 + 3: fuse two comm groups and their producer fusion groups.
-fn fuse_tensors_and_ops(spec: &mut JobSpec, ta: TensorId, tb: TensorId, opts: &SearchOpts) -> usize {
-    let Some(ca) = passes::comm_group_of_tensor(spec, ta) else { return 0 };
-    let Some(cb) = passes::comm_group_of_tensor(spec, tb) else { return 0 };
+fn fuse_tensors_and_ops(
+    mg: &mut MutableGraph,
+    ta: TensorId,
+    tb: TensorId,
+    opts: &SearchOpts,
+) -> usize {
+    let Some(ca) = passes::comm_group_of_tensor(mg.spec(), ta) else { return 0 };
+    let Some(cb) = passes::comm_group_of_tensor(mg.spec(), tb) else { return 0 };
     if ca == cb {
         return 0;
     }
-    let pa = passes::producer_fusion_group(spec, ca);
-    let pb = passes::producer_fusion_group(spec, cb);
+    let pa = passes::producer_fusion_group(mg.spec(), ca);
+    let pb = passes::producer_fusion_group(mg.spec(), cb);
     let mut n = 0;
-    if passes::fuse_tensor_groups(spec, ca, cb).is_ok() {
+    if mg.fuse_tensor_groups(ca, cb).is_ok() {
         n += 1;
         if opts.enable_op_fusion {
             if let (Some(pa), Some(pb)) = (pa, pb) {
-                if pa != pb && passes::fuse_comp_groups(spec, pa, pb).is_ok() {
+                if pa != pb && mg.fuse_comp_groups(pa, pb).is_ok() {
                     n += 1;
                 }
             }
@@ -488,6 +550,27 @@ mod tests {
         assert!(out.actions_applied > 0);
         assert_eq!(out.spec.plan.validate(&out.spec.model), Ok(()));
         assert_eq!(out.spec.fusion.validate(&out.spec.model), Ok(()));
+    }
+
+    #[test]
+    fn search_performs_zero_builds_during_rounds() {
+        // the tentpole guarantee: after the initial construction, the
+        // round loop never rebuilds the global DFG from the spec
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let out = optimize(&spec, &quick_opts());
+        assert_eq!(
+            out.builds_during_search, 0,
+            "search rebuilt the world {} times",
+            out.builds_during_search
+        );
+        assert!(out.replays >= 2);
+        // the strawman, by contrast, rebuilds for its t_sync probes
+        let spec_ps = JobSpec::standard("vgg16", "byteps", Transport::Tcp);
+        let mut strawman = SearchOpts::tsfs_only();
+        strawman.use_partial_replay = false;
+        strawman.max_rounds = 2;
+        let out_strawman = optimize(&spec_ps, &strawman);
+        assert!(out_strawman.builds_during_search > 0);
     }
 
     #[test]

@@ -1,0 +1,491 @@
+//! Incremental replay engine over a [`MutableGraph`]: after a batch of
+//! in-place plan edits, recompute only the downstream cone whose times can
+//! actually change, reusing the previous schedule everywhere else
+//! (timestamp-dominance pruning — the same idea [`super::partial`] applies
+//! to a single tensor's chain, here for the full engine).
+//!
+//! ## Semantics: execution-graph replay
+//!
+//! The engine materializes the paper's *execution graph* (§4.3): every
+//! device serializes its ops in a **canonical static order** — ascending
+//! dependency-only ASAP time, ties broken by the graph's canonical rank
+//! ([`MutableGraph::canon_ranks`]) — which adds one implicit order edge
+//! between consecutive ops of a device. Start times are then the longest
+//! path over dependency + order edges:
+//!
+//! `start(v) = max( max_{p∈preds(v)} end(p),  end(device_prev(v)) )`
+//!
+//! Because every quantity is a pure max/plus reduction over its inputs and
+//! the tie-break rank is derived from the *plan*, not from node numbering,
+//! a replay of an incrementally-edited graph is **bit-identical** to a
+//! replay of a freshly built graph of the same spec — the equivalence
+//! guarantee the `incremental` test suite sweeps. (The event-driven
+//! [`super::Replayer`] keeps its FIFO semantics for the trace-driven
+//! profiler path; the search loop uses this engine.)
+//!
+//! ## Incrementality
+//!
+//! Per [`ChangeLog`] the engine repairs, in order:
+//! 1. device membership (tombstoned nodes leave, spliced nodes enter);
+//! 2. dependency-only ASAP times (one pass, with change detection);
+//! 3. the static order of only the devices whose member set or member
+//!    ASAP changed (re-sort + relink);
+//! 4. final times over the affected cone only: a node is recomputed iff
+//!    its duration/predecessors changed, its device predecessor changed,
+//!    or a recomputed input's `(start, end)` actually moved — unaffected
+//!    prefixes keep their previous schedule verbatim.
+//!
+//! All state (including the [`ReplayResult`]) is engine-owned and reused
+//! across replays; a steady-state round allocates nothing.
+
+use std::collections::HashMap;
+
+use crate::graph::dfg::{DeviceKey, NodeId};
+use crate::graph::mutable::{ChangeLog, MutableGraph};
+use crate::replay::ReplayResult;
+
+const NONE: NodeId = NodeId::MAX;
+const NULL_DEV: u32 = 0;
+
+/// Reusable incremental engine. See module docs.
+pub struct IncrementalReplayer {
+    n: usize,
+    // ---- device interning & static order ----
+    dev_ids: HashMap<DeviceKey, u32>,
+    n_dev: usize,
+    node_dev: Vec<u32>,
+    dev_list: Vec<Vec<NodeId>>,
+    dev_pending: Vec<Vec<NodeId>>,
+    dev_dirty: Vec<bool>,
+    dev_prev: Vec<NodeId>,
+    dev_next: Vec<NodeId>,
+    // ---- cached per-node state ----
+    asap: Vec<f64>,
+    result: ReplayResult,
+    // ---- scratch ----
+    indeg: Vec<u32>,
+    order: Vec<NodeId>,
+    stack: Vec<NodeId>,
+    /// affected-cone epoch marks (node is in this replay's cone iff
+    /// `aff[i] == epoch`)
+    aff: Vec<u64>,
+    epoch: u64,
+    // ---- stats ----
+    replays: usize,
+    last_recomputed: usize,
+    ran_once: bool,
+}
+
+impl Default for IncrementalReplayer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IncrementalReplayer {
+    pub fn new() -> IncrementalReplayer {
+        let mut dev_ids = HashMap::new();
+        dev_ids.insert(DeviceKey::Null, NULL_DEV);
+        IncrementalReplayer {
+            n: 0,
+            dev_ids,
+            n_dev: 1,
+            node_dev: Vec::new(),
+            dev_list: vec![Vec::new()],
+            dev_pending: vec![Vec::new()],
+            dev_dirty: vec![false],
+            dev_prev: Vec::new(),
+            dev_next: Vec::new(),
+            asap: Vec::new(),
+            result: ReplayResult {
+                iteration_time: 0.0,
+                start: Vec::new(),
+                end: Vec::new(),
+                crit_pred: Vec::new(),
+                last: 0,
+            },
+            indeg: Vec::new(),
+            order: Vec::new(),
+            stack: Vec::new(),
+            aff: Vec::new(),
+            epoch: 0,
+            replays: 0,
+            last_recomputed: 0,
+            ran_once: false,
+        }
+    }
+
+    /// The schedule of the last replay.
+    pub fn result(&self) -> &ReplayResult {
+        &self.result
+    }
+
+    /// Total replays performed (cache-hit fast paths included).
+    pub fn replays(&self) -> usize {
+        self.replays
+    }
+
+    /// Nodes whose times were recomputed in the last replay — the cone
+    /// size the dominance pruning achieved.
+    pub fn last_recomputed(&self) -> usize {
+        self.last_recomputed
+    }
+
+    fn intern(&mut self, dev: DeviceKey) -> u32 {
+        let next = self.dev_ids.len() as u32;
+        let id = *self.dev_ids.entry(dev).or_insert(next);
+        while self.n_dev <= id as usize {
+            self.n_dev += 1;
+            self.dev_list.push(Vec::new());
+            self.dev_pending.push(Vec::new());
+            self.dev_dirty.push(false);
+        }
+        id
+    }
+
+    /// Replay after the edits described by `changes` (obtained from
+    /// [`MutableGraph::commit`]). The first call — or a `ChangeLog` whose
+    /// `added_from` is 0 — performs a full replay.
+    pub fn replay_incremental(
+        &mut self,
+        mg: &MutableGraph,
+        changes: &ChangeLog,
+    ) -> &ReplayResult {
+        let dfg = mg.dfg();
+        let alive = mg.alive();
+        let canon = mg.canon_ranks();
+        let n = dfg.len();
+        self.replays += 1;
+
+        if self.ran_once && changes.is_empty(n) {
+            self.last_recomputed = 0;
+            return &self.result;
+        }
+        // the first replay is always a full one, whatever the changelog
+        // says (a caller may have committed more than once before ever
+        // replaying)
+        let added_from = if self.ran_once { changes.added_from as usize } else { 0 };
+        self.ran_once = true;
+        self.epoch += 1;
+
+        // ---- 1. sync arrays & device membership ----
+        if n > self.n {
+            self.node_dev.resize(n, NULL_DEV);
+            self.asap.resize(n, 0.0);
+            self.result.start.resize(n, 0.0);
+            self.result.end.resize(n, 0.0);
+            self.result.crit_pred.resize(n, None);
+            self.dev_prev.resize(n, NONE);
+            self.dev_next.resize(n, NONE);
+            self.indeg.resize(n, 0);
+            self.aff.resize(n, 0);
+        }
+        self.n = n;
+        for k in 0..changes.removed.len() {
+            let r = changes.removed[k] as usize;
+            let d = self.node_dev[r];
+            if d != NULL_DEV {
+                self.dev_dirty[d as usize] = true;
+                self.node_dev[r] = NULL_DEV;
+            }
+            // a tombstone keeps its last schedule entry; it is excluded
+            // from every pass below because it is not `alive`
+        }
+        for i in added_from..n {
+            if !alive[i] {
+                continue;
+            }
+            let d = self.intern(dfg.node(i as NodeId).device);
+            self.node_dev[i] = d;
+            if d != NULL_DEV {
+                self.dev_pending[d as usize].push(i as NodeId);
+                self.dev_dirty[d as usize] = true;
+            }
+            self.aff[i] = self.epoch;
+        }
+        for k in 0..changes.touched.len() {
+            let t = changes.touched[k] as usize;
+            if alive[t] {
+                self.aff[t] = self.epoch;
+            }
+        }
+
+        // ---- 2. dependency-only topological order over live nodes ----
+        self.order.clear();
+        self.stack.clear();
+        let mut alive_count = 0usize;
+        for i in 0..n {
+            self.indeg[i] = dfg.preds(i as NodeId).len() as u32;
+            if alive[i] {
+                alive_count += 1;
+                if self.indeg[i] == 0 {
+                    self.stack.push(i as NodeId);
+                }
+            }
+        }
+        while let Some(i) = self.stack.pop() {
+            self.order.push(i);
+            for &s in dfg.succs(i) {
+                self.indeg[s as usize] -= 1;
+                if self.indeg[s as usize] == 0 {
+                    self.stack.push(s);
+                }
+            }
+        }
+        assert_eq!(self.order.len(), alive_count, "cycle in live DFG");
+
+        // ---- 3. ASAP pass (dependency-only longest path) ----
+        // Recomputed for every live node (pure float max/plus — cheap);
+        // devices with any moved member are marked for re-sorting.
+        for k in 0..self.order.len() {
+            let i = self.order[k];
+            let iu = i as usize;
+            let mut t = 0.0f64;
+            for &p in dfg.preds(i) {
+                let e = self.asap[p as usize] + dfg.node(p).duration;
+                if e > t {
+                    t = e;
+                }
+            }
+            if t != self.asap[iu] {
+                self.asap[iu] = t;
+                let d = self.node_dev[iu];
+                if d != NULL_DEV {
+                    self.dev_dirty[d as usize] = true;
+                }
+            }
+        }
+
+        // ---- 4. repair the static order of dirty devices ----
+        for d in 1..self.n_dev {
+            if !self.dev_dirty[d] {
+                continue;
+            }
+            self.dev_dirty[d] = false;
+            let mut list = std::mem::take(&mut self.dev_list[d]);
+            list.retain(|&x| self.node_dev[x as usize] == d as u32);
+            let mut pending = std::mem::take(&mut self.dev_pending[d]);
+            list.append(&mut pending);
+            self.dev_pending[d] = pending;
+            {
+                let asap = &self.asap;
+                list.sort_unstable_by(|&x, &y| {
+                    asap[x as usize]
+                        .total_cmp(&asap[y as usize])
+                        .then(canon[x as usize].cmp(&canon[y as usize]))
+                });
+            }
+            let mut prev = NONE;
+            for k in 0..list.len() {
+                let x = list[k];
+                let xu = x as usize;
+                if self.dev_prev[xu] != prev {
+                    self.dev_prev[xu] = prev;
+                    self.aff[xu] = self.epoch;
+                }
+                if prev != NONE {
+                    self.dev_next[prev as usize] = x;
+                }
+                prev = x;
+            }
+            if prev != NONE {
+                self.dev_next[prev as usize] = NONE;
+            }
+            self.dev_list[d] = list;
+        }
+
+        // ---- 5. topological order over dependency + device-order edges ----
+        self.order.clear();
+        self.stack.clear();
+        for i in 0..n {
+            if !alive[i] {
+                self.indeg[i] = 0;
+                continue;
+            }
+            self.indeg[i] =
+                dfg.preds(i as NodeId).len() as u32 + (self.dev_prev[i] != NONE) as u32;
+            if self.indeg[i] == 0 {
+                self.stack.push(i as NodeId);
+            }
+        }
+        while let Some(i) = self.stack.pop() {
+            self.order.push(i);
+            for &s in dfg.succs(i) {
+                self.indeg[s as usize] -= 1;
+                if self.indeg[s as usize] == 0 {
+                    self.stack.push(s);
+                }
+            }
+            let nx = self.dev_next[i as usize];
+            if nx != NONE {
+                self.indeg[nx as usize] -= 1;
+                if self.indeg[nx as usize] == 0 {
+                    self.stack.push(nx);
+                }
+            }
+        }
+        assert_eq!(
+            self.order.len(),
+            alive_count,
+            "device order contradicts dependencies (canonical-rank invariant broken)"
+        );
+
+        // ---- 6. final times over the affected cone ----
+        let mut recomputed = 0usize;
+        let mut max_end = f64::NEG_INFINITY;
+        let mut last: NodeId = 0;
+        let mut last_canon = u64::MAX;
+        for k in 0..self.order.len() {
+            let i = self.order[k];
+            let iu = i as usize;
+            if self.aff[iu] == self.epoch {
+                recomputed += 1;
+                let mut ready = 0.0f64;
+                let mut best = NONE;
+                let mut best_end = f64::NEG_INFINITY;
+                let mut best_canon = u64::MAX;
+                for &p in dfg.preds(i) {
+                    let e = self.result.end[p as usize];
+                    if e > ready {
+                        ready = e;
+                    }
+                    if e > best_end || (e == best_end && canon[p as usize] < best_canon) {
+                        best_end = e;
+                        best = p;
+                        best_canon = canon[p as usize];
+                    }
+                }
+                let dp = self.dev_prev[iu];
+                let (st, crit) = if dp != NONE && self.result.end[dp as usize] > ready {
+                    (self.result.end[dp as usize], Some(dp))
+                } else if best != NONE {
+                    (ready, Some(best))
+                } else {
+                    (ready, None)
+                };
+                let en = st + dfg.node(i).duration;
+                if st != self.result.start[iu] || en != self.result.end[iu] {
+                    // the schedule moved: dependents join the cone
+                    for &s in dfg.succs(i) {
+                        self.aff[s as usize] = self.epoch;
+                    }
+                    let nx = self.dev_next[iu];
+                    if nx != NONE {
+                        self.aff[nx as usize] = self.epoch;
+                    }
+                }
+                self.result.start[iu] = st;
+                self.result.end[iu] = en;
+                self.result.crit_pred[iu] = crit;
+            }
+            let en = self.result.end[iu];
+            if en > max_end || (en == max_end && canon[iu] < last_canon) {
+                max_end = en;
+                last = i;
+                last_canon = canon[iu];
+            }
+        }
+        self.result.iteration_time = max_end.max(0.0);
+        self.result.last = last;
+        self.last_recomputed = recomputed;
+        &self.result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+    use crate::graph::MutableGraph;
+
+    fn replay_fresh(spec: &JobSpec) -> (MutableGraph, IncrementalReplayer) {
+        let mut mg = MutableGraph::new(spec.clone());
+        let mut eng = IncrementalReplayer::new();
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        (mg, eng)
+    }
+
+    #[test]
+    fn full_replay_respects_dependencies_and_devices() {
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let (mg, eng) = replay_fresh(&spec);
+        let r = eng.result();
+        assert!(r.iteration_time > 0.0);
+        let dfg = mg.dfg();
+        for i in dfg.ids() {
+            if !mg.alive()[i as usize] {
+                continue;
+            }
+            for &p in dfg.preds(i) {
+                assert!(
+                    r.end[p as usize] <= r.start[i as usize] + 1e-9,
+                    "dependency violated"
+                );
+            }
+        }
+        // per-device serialization
+        let mut per_dev: std::collections::HashMap<crate::graph::DeviceKey, Vec<(f64, f64)>> =
+            Default::default();
+        for i in dfg.ids() {
+            if mg.alive()[i as usize] && dfg.node(i).device != crate::graph::DeviceKey::Null {
+                per_dev
+                    .entry(dfg.node(i).device)
+                    .or_default()
+                    .push((r.start[i as usize], r.end[i as usize]));
+            }
+        }
+        for (_, mut spans) in per_dev {
+            spans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for w in spans.windows(2) {
+                assert!(w[0].1 <= w[1].0 + 1e-9, "device overlap {:?} {:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn no_change_replay_hits_fast_path() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let (mut mg, mut eng) = replay_fresh(&spec);
+        let t0 = eng.result().iteration_time;
+        let log = mg.commit(); // nothing happened
+        let t1 = eng.replay_incremental(&mg, &log).iteration_time;
+        assert_eq!(t0, t1);
+        assert_eq!(eng.last_recomputed(), 0);
+    }
+
+    #[test]
+    fn incremental_matches_from_scratch_after_edits() {
+        let spec = JobSpec::standard("resnet50", "byteps", Transport::Rdma);
+        let (mut mg, mut eng) = replay_fresh(&spec);
+        mg.fuse_tensor_groups(0, 1).unwrap();
+        mg.fuse_comp_groups(2, 3).unwrap();
+        mg.set_partitions(0, 4).unwrap();
+        let log = mg.commit();
+        let inc = eng.replay_incremental(&mg, &log).iteration_time;
+        assert!(eng.last_recomputed() > 0);
+        // from scratch on the mutated spec
+        let (_, eng2) = replay_fresh(mg.spec());
+        let fresh = eng2.result().iteration_time;
+        assert_eq!(inc, fresh, "incremental {inc} != from-scratch {fresh}");
+    }
+
+    #[test]
+    fn cone_is_smaller_than_graph_for_late_edits() {
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let (mut mg, mut eng) = replay_fresh(&spec);
+        let n_live = mg.n_alive();
+        // fuse two late tensor groups (early in backward time, late in id
+        // order the cone is still bounded by the affected chains)
+        let g = mg.n_groups();
+        mg.fuse_tensor_groups(g - 2, g - 1).unwrap();
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        assert!(
+            eng.last_recomputed() < n_live,
+            "cone {} should be below live nodes {}",
+            eng.last_recomputed(),
+            n_live
+        );
+    }
+}

@@ -7,8 +7,13 @@
 //! and estimates **peak memory** from the replayed schedule.
 //!
 //! This is the hot path of strategy search (thousands of replays per
-//! search), so the engine reuses all scratch buffers across replays.
+//! search), so the engine reuses all scratch buffers across replays —
+//! including the result arrays: [`Replayer::replay`] returns a borrow of
+//! engine-owned storage and allocates nothing per call. The strategy
+//! search itself uses the even cheaper [`incremental`] engine, which also
+//! skips recomputation outside the edited cone.
 
+pub mod incremental;
 pub mod partial;
 
 use std::cmp::Reverse;
@@ -78,6 +83,8 @@ pub struct Replayer {
     queues: Vec<std::collections::VecDeque<NodeId>>,
     stack: Vec<NodeId>,
     heap: BinaryHeap<Reverse<(u64, NodeId)>>,
+    /// engine-owned result storage, overwritten by every replay
+    result: ReplayResult,
 }
 
 impl Replayer {
@@ -110,7 +117,19 @@ impl Replayer {
             queues: vec![std::collections::VecDeque::new(); n_dev],
             stack: Vec::with_capacity(64),
             heap: BinaryHeap::with_capacity(256),
+            result: ReplayResult {
+                iteration_time: 0.0,
+                start: vec![0.0; n],
+                end: vec![0.0; n],
+                crit_pred: vec![None; n],
+                last: 0,
+            },
         }
+    }
+
+    /// Take ownership of the last replay's result (for one-shot callers).
+    pub fn into_result(self) -> ReplayResult {
+        self.result
     }
 
     /// Refresh durations from the (possibly profile-updated) graph.
@@ -129,12 +148,14 @@ impl Replayer {
         self.durations[id as usize]
     }
 
-    /// Replay one iteration.
-    pub fn replay(&mut self, g: &GlobalDfg) -> ReplayResult {
+    /// Replay one iteration. The returned schedule borrows engine-owned
+    /// storage (no per-call allocation); clone it or use
+    /// [`Replayer::into_result`] if it must outlive the engine.
+    pub fn replay(&mut self, g: &GlobalDfg) -> &ReplayResult {
         let n = self.n;
-        let mut start = vec![0.0; n];
-        let mut end = vec![0.0; n];
-        let mut crit_pred: Vec<Option<NodeId>> = vec![None; n];
+        self.result.start.iter_mut().for_each(|x| *x = 0.0);
+        self.result.end.iter_mut().for_each(|x| *x = 0.0);
+        self.result.crit_pred.iter_mut().for_each(|x| *x = None);
 
         self.indeg.copy_from_slice(&self.base_indeg);
         self.ready_at.iter_mut().for_each(|x| *x = 0.0);
@@ -195,15 +216,15 @@ impl Replayer {
                 let ready = self.ready_at[i];
                 let free = self.dev_free[d];
                 let st = if free > ready {
-                    crit_pred[i] = self.dev_tail[d];
+                    self.result.crit_pred[i] = self.dev_tail[d];
                     free
                 } else {
-                    crit_pred[i] = self.ready_pred[i];
+                    self.result.crit_pred[i] = self.ready_pred[i];
                     ready
                 };
-                start[i] = st;
+                self.result.start[i] = st;
                 let en = st + self.durations[i];
-                end[i] = en;
+                self.result.end[i] = en;
                 self.dev_tail[d] = Some(nd);
                 self.dev_free[d] = en;
                 self.dev_busy[d] = true;
@@ -219,10 +240,10 @@ impl Replayer {
                 if d as u32 == self.null_dev {
                     // non-queuing op (virtual or negotiation delay)
                     let t = self.ready_at[i];
-                    crit_pred[i] = self.ready_pred[i];
-                    start[i] = t;
+                    self.result.crit_pred[i] = self.ready_pred[i];
+                    self.result.start[i] = t;
                     let dur = self.durations[i];
-                    end[i] = t + dur;
+                    self.result.end[i] = t + dur;
                     if dur == 0.0 {
                         propagate!(node, t);
                     } else {
@@ -237,7 +258,7 @@ impl Replayer {
 
             let Some(Reverse((_, node))) = self.heap.pop() else { break };
             let i = node as usize;
-            let t = end[i];
+            let t = self.result.end[i];
             let d = self.node_dev[i] as usize;
             if d as u32 != self.null_dev {
                 self.dev_busy[d] = false;
@@ -251,13 +272,17 @@ impl Replayer {
         }
         debug_assert_eq!(finished, n, "replay deadlock: {finished}/{n}");
 
-        ReplayResult { iteration_time: max_end.max(0.0), start, end, crit_pred, last }
+        self.result.iteration_time = max_end.max(0.0);
+        self.result.last = last;
+        &self.result
     }
 }
 
 /// Convenience: build + replay in one call.
 pub fn replay_once(g: &GlobalDfg) -> ReplayResult {
-    Replayer::new(g).replay(g)
+    let mut rp = Replayer::new(g);
+    rp.replay(g);
+    rp.into_result()
 }
 
 /// Peak-memory estimate from a replayed schedule (paper Table 3): the same

@@ -3,24 +3,24 @@
 //! replaying only the communication subgraph of a single tensor group,
 //! instead of the whole global DFG.
 //!
-//! Results are memoized on (scheme, rounded size, k); the optimizer calls
-//! this inside `OptPartNum` grid search thousands of times.
+//! The estimator never constructs graphs on the query path: for each
+//! partition count `k` it keeps one *probe engine* — the tiny comm
+//! subgraph plus per-node affine duration coefficients `(α, β)` extracted
+//! from two reference sizes (every cost-model term is affine in the moved
+//! bytes: wire time and aggregation are linear, per-message overheads and
+//! latencies constant). A query sets `duration_i = α_i + β_i·s` on the
+//! long-lived [`Replayer`] and replays in place, so the optimizer's
+//! `OptPartNum` grid search costs zero builds and zero allocations after
+//! warm-up. Results are additionally memoized on (rounded size, k).
 
 use std::collections::HashMap;
 
 use crate::config::{CommPlan, FusionPlan, JobSpec, TensorGroup};
-use crate::graph::{build_global_nameless, AnalyticCost};
+use crate::graph::dfg::NodeId;
+use crate::graph::{build_global_nameless, AnalyticCost, GlobalDfg, OpKind};
 use crate::models::{ModelBuilder, ModelGraph};
+use crate::replay::Replayer;
 use crate::util::Us;
-
-/// Memoizing t_sync estimator for one job configuration.
-pub struct TsyncEstimator {
-    /// Job skeleton with a single-op model; we rewrite the single group's
-    /// size/partitions and replay the (tiny) comm subgraph.
-    spec: JobSpec,
-    cache: HashMap<(u64, usize), Us>,
-    pub replays: usize,
-}
 
 /// A minimal model with one backward op producing one tensor of `bytes`.
 fn one_tensor_model(bytes: f64) -> ModelGraph {
@@ -29,13 +29,80 @@ fn one_tensor_model(bytes: f64) -> ModelGraph {
     b.finish()
 }
 
+/// The reference sizes the affine coefficients are extracted from. Any two
+/// distinct sizes give the exact same coefficients (the model is affine);
+/// these are far apart to keep the division well-conditioned.
+const PROBE_S0: f64 = 1.0e6;
+const PROBE_S1: f64 = 17.0e6;
+
+/// One partition count's reusable probe: graph + engine + coefficients.
+struct ProbeEngine {
+    g: GlobalDfg,
+    rp: Replayer,
+    alpha: Vec<f64>,
+    beta: Vec<f64>,
+    out_nodes: Vec<NodeId>,
+}
+
+fn probe_engine(job: &JobSpec, k: usize) -> ProbeEngine {
+    let mut s = job.clone();
+    s.model = one_tensor_model(PROBE_S0);
+    s.fusion = FusionPlan::singletons(&s.model);
+    s.plan = CommPlan {
+        groups: vec![TensorGroup { tensors: vec![0], partitions: k.max(1) }],
+    };
+    let g0 = build_global_nameless(&s, &AnalyticCost::new(&s));
+    s.model = one_tensor_model(PROBE_S1);
+    s.fusion = FusionPlan::singletons(&s.model);
+    let g1 = build_global_nameless(&s, &AnalyticCost::new(&s));
+    debug_assert_eq!(g0.dfg.len(), g1.dfg.len());
+    let n = g0.dfg.len();
+    let mut alpha = vec![0.0f64; n];
+    let mut beta = vec![0.0f64; n];
+    for i in 0..n {
+        let d0 = g0.dfg.node(i as NodeId).duration;
+        let d1 = g1.dfg.node(i as NodeId).duration;
+        let b = (d1 - d0) / (PROBE_S1 - PROBE_S0);
+        beta[i] = b;
+        alpha[i] = d0 - b * PROBE_S0;
+    }
+    let out_nodes: Vec<NodeId> =
+        g0.dfg.ids().filter(|&i| g0.dfg.node(i).kind == OpKind::Out).collect();
+    let rp = Replayer::new(&g0);
+    ProbeEngine { g: g0, rp, alpha, beta, out_nodes }
+}
+
+/// Memoizing t_sync estimator for one job configuration.
+pub struct TsyncEstimator {
+    /// Job skeleton (cluster + scheme); the probe model is substituted
+    /// when an engine for a new partition count is instantiated.
+    spec: JobSpec,
+    engines: HashMap<usize, ProbeEngine>,
+    cache: HashMap<(u64, usize), Us>,
+    pub replays: usize,
+}
+
 impl TsyncEstimator {
     pub fn new(job: &JobSpec) -> TsyncEstimator {
-        let mut spec = job.clone();
-        spec.model = one_tensor_model(4096.0);
-        spec.plan = CommPlan::per_tensor(&spec.model);
-        spec.fusion = FusionPlan::singletons(&spec.model);
-        TsyncEstimator { spec, cache: HashMap::new(), replays: 0 }
+        TsyncEstimator {
+            spec: job.clone(),
+            engines: HashMap::new(),
+            cache: HashMap::new(),
+            replays: 0,
+        }
+    }
+
+    /// Estimator with probe engines for every `k` in `ks` built up front,
+    /// so no query inside a search round ever constructs a graph (the
+    /// optimizer passes its grid range plus the partition counts already
+    /// present in the deployed plan).
+    pub fn with_prebuilt(job: &JobSpec, ks: impl IntoIterator<Item = usize>) -> TsyncEstimator {
+        let mut est = TsyncEstimator::new(job);
+        for k in ks {
+            let k = k.max(1);
+            est.engines.entry(k).or_insert_with(|| probe_engine(&est.spec, k));
+        }
+        est
     }
 
     /// `t_sync(s, k)`: complete synchronization time of an `s`-byte tensor
@@ -46,23 +113,23 @@ impl TsyncEstimator {
         if let Some(&v) = self.cache.get(&key) {
             return v;
         }
-        self.spec.model = one_tensor_model((key.0 as f64) * 1024.0);
-        self.spec.fusion = FusionPlan::singletons(&self.spec.model);
-        self.spec.plan = CommPlan {
-            groups: vec![TensorGroup { tensors: vec![0], partitions: k.max(1) }],
-        };
-        let g = build_global_nameless(&self.spec, &AnalyticCost::new(&self.spec));
-        let r = crate::replay::replay_once(&g);
-        self.replays += 1;
-        // synchronization time = from the In ops (time 0; the probe op is
-        // ~free) to the last Out — minus the probe/update tails.
-        let mut t = 0.0f64;
-        for i in g.dfg.ids() {
-            let n = g.dfg.node(i);
-            if n.kind == crate::graph::OpKind::Out {
-                t = t.max(r.end[i as usize]);
+        let b = key.0 as f64 * 1024.0;
+        let t = {
+            let eng = self
+                .engines
+                .entry(key.1)
+                .or_insert_with(|| probe_engine(&self.spec, key.1));
+            for i in 0..eng.alpha.len() {
+                eng.rp.set_duration(i as NodeId, eng.alpha[i] + eng.beta[i] * b);
             }
-        }
+            let r = eng.rp.replay(&eng.g);
+            let mut t = 0.0f64;
+            for &o in &eng.out_nodes {
+                t = t.max(r.end[o as usize]);
+            }
+            t
+        };
+        self.replays += 1;
         self.cache.insert(key, t);
         t
     }
@@ -82,6 +149,11 @@ impl TsyncEstimator {
 
     pub fn cache_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Probe engines instantiated so far (one per partition count).
+    pub fn engines_built(&self) -> usize {
+        self.engines.len()
     }
 }
 
@@ -138,5 +210,45 @@ mod tests {
         est.t_sync(8.0e6, 4);
         assert_eq!(est.replays, replays);
         assert!(est.cache_len() >= 1);
+    }
+
+    #[test]
+    fn queries_never_build_beyond_prebuilt_engines() {
+        let job = JobSpec::standard("vgg16", "byteps", Transport::Rdma);
+        let mut est = TsyncEstimator::with_prebuilt(&job, 1..=8);
+        assert_eq!(est.engines_built(), 8);
+        let b0 = crate::graph::build_count();
+        for k in 1..=8 {
+            est.t_sync(32.0e6, k);
+            est.t_sync(9.0e6, k);
+        }
+        assert_eq!(crate::graph::build_count(), b0, "queries must not build graphs");
+    }
+
+    #[test]
+    fn affine_probe_matches_direct_build() {
+        // the affine evaluation must agree with building the probe graph
+        // at the queried size directly
+        // a 1 KB-bucket-exact size, so memo quantization is a no-op and
+        // the two paths evaluate the same operating point
+        let bytes = 8192.0 * 1024.0;
+        let job = JobSpec::standard("resnet50", "byteps", Transport::Rdma);
+        let mut est = TsyncEstimator::new(&job);
+        let via_affine = est.t_sync(bytes, 4);
+        let mut s = job.clone();
+        s.model = one_tensor_model(bytes);
+        s.fusion = FusionPlan::singletons(&s.model);
+        s.plan =
+            CommPlan { groups: vec![TensorGroup { tensors: vec![0], partitions: 4 }] };
+        let g = build_global_nameless(&s, &AnalyticCost::new(&s));
+        let r = crate::replay::replay_once(&g);
+        let mut direct = 0.0f64;
+        for i in g.dfg.ids() {
+            if g.dfg.node(i).kind == OpKind::Out {
+                direct = direct.max(r.end[i as usize]);
+            }
+        }
+        let rel = (via_affine - direct).abs() / direct.max(1e-9);
+        assert!(rel < 1e-9, "affine {via_affine} vs direct {direct}");
     }
 }

@@ -111,49 +111,52 @@ fn trace_roundtrip_through_disk() {
     let _ = std::fs::remove_file(path);
 }
 
-// ---- PJRT runtime path (requires `make artifacts`) ----
+// ---- PJRT runtime path (requires the `pjrt` feature + `make artifacts`) ----
 
-fn artifacts_available() -> bool {
-    std::path::Path::new("artifacts/gpt_tiny.train.hlo.txt").exists()
-}
-
-#[test]
-fn pjrt_live_training_loss_finite_and_moving() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
+#[cfg(feature = "pjrt")]
+mod pjrt_path {
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/gpt_tiny.train.hlo.txt").exists()
     }
-    let cfg = dpro::coordinator::TrainCfg {
-        config: "tiny".into(),
-        steps: 6,
-        n_workers: 2,
-        log_every: 0,
-        ..Default::default()
-    };
-    let report = dpro::coordinator::train(&cfg).expect("training");
-    assert_eq!(report.losses.len(), 6);
-    assert!(report.losses.iter().all(|l| l.is_finite()));
-    // parameters actually change: loss at init ≈ ln(vocab)=5.55, and the
-    // sequence must not be constant
-    let first = report.losses[0];
-    assert!((4.0..7.0).contains(&first), "init loss {first}");
-    assert!(report.losses.iter().any(|&l| (l - first).abs() > 1e-4));
-    // the trace contains per-worker comp events + comm + update
-    assert!(report.trace.events.len() >= 6 * (2 + 2));
-}
 
-#[test]
-fn pjrt_deterministic_init() {
-    if !artifacts_available() {
-        return;
+    #[test]
+    fn pjrt_live_training_loss_finite_and_moving() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let cfg = dpro::coordinator::TrainCfg {
+            config: "tiny".into(),
+            steps: 6,
+            n_workers: 2,
+            log_every: 0,
+            ..Default::default()
+        };
+        let report = dpro::coordinator::train(&cfg).expect("training");
+        assert_eq!(report.losses.len(), 6);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+        // parameters actually change: loss at init ≈ ln(vocab)=5.55, and the
+        // sequence must not be constant
+        let first = report.losses[0];
+        assert!((4.0..7.0).contains(&first), "init loss {first}");
+        assert!(report.losses.iter().any(|&l| (l - first).abs() > 1e-4));
+        // the trace contains per-worker comp events + comm + update
+        assert!(report.trace.events.len() >= 6 * (2 + 2));
     }
-    let rt = dpro::runtime::Runtime::cpu().unwrap();
-    let art = dpro::runtime::GptArtifacts::load(&rt, "artifacts", "tiny").unwrap();
-    let a = art.init.run(&[xla::Literal::scalar(7i32)]).unwrap();
-    let b = art.init.run(&[xla::Literal::scalar(7i32)]).unwrap();
-    let va = a[0].to_vec::<f32>().unwrap();
-    let vb = b[0].to_vec::<f32>().unwrap();
-    assert_eq!(va, vb);
-    let c = art.init.run(&[xla::Literal::scalar(8i32)]).unwrap();
-    assert_ne!(va, c[0].to_vec::<f32>().unwrap());
+
+    #[test]
+    fn pjrt_deterministic_init() {
+        if !artifacts_available() {
+            return;
+        }
+        let rt = dpro::runtime::Runtime::cpu().unwrap();
+        let art = dpro::runtime::GptArtifacts::load(&rt, "artifacts", "tiny").unwrap();
+        let a = art.init.run(&[xla::Literal::scalar(7i32)]).unwrap();
+        let b = art.init.run(&[xla::Literal::scalar(7i32)]).unwrap();
+        let va = a[0].to_vec::<f32>().unwrap();
+        let vb = b[0].to_vec::<f32>().unwrap();
+        assert_eq!(va, vb);
+        let c = art.init.run(&[xla::Literal::scalar(8i32)]).unwrap();
+        assert_ne!(va, c[0].to_vec::<f32>().unwrap());
+    }
 }
