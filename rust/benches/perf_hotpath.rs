@@ -131,12 +131,18 @@ fn main() {
     report.set("replayer", Json::Arr(graph_rows));
 
     // ---- search rounds: from-scratch rebuild vs incremental splice ----
+    // every registered scheme rides the same mutable-graph splice path
     println!("\n=== search rounds: full rebuild vs incremental ===\n");
     let n_rounds = 30usize;
     let script = round_script(n_rounds);
     let mut round_rows = Vec::new();
     let mut jrounds = Vec::new();
-    for (model, scheme) in [("resnet50", "horovod"), ("vgg16", "byteps")] {
+    for (model, scheme) in [
+        ("resnet50", "horovod"),
+        ("vgg16", "byteps"),
+        ("vgg16", "ring"),
+        ("vgg16", "ps-tree"),
+    ] {
         let spec = JobSpec::standard(model, scheme, Transport::Rdma);
         let t_full = rounds_from_scratch(&spec, &script);
         let (t_inc, avg_cone) = rounds_incremental(&spec, &script);
@@ -180,9 +186,13 @@ fn main() {
     jalign.set("solve_s", Json::Num(t_align));
     report.set("alignment", jalign);
 
-    // end-to-end search
+    // end-to-end search (budget overridable so CI smoke runs stay short)
+    let budget_s = std::env::var("DPRO_BENCH_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60.0);
     let (out, t_search) =
-        time(|| optimize(&spec, &SearchOpts { budget_wall_s: 60.0, ..Default::default() }));
+        time(|| optimize(&spec, &SearchOpts { budget_wall_s: budget_s, ..Default::default() }));
     println!(
         "search: {:.2}s wall, {} replays, {} actions, {} builds in rounds, speedup {:.2}x",
         t_search, out.replays, out.actions_applied, out.builds_during_search, out.speedup()

@@ -4,7 +4,7 @@
 //! bandwidth` — no queuing, no negotiation, no protocol efficiency, no
 //! per-message overhead (paper §2.2 + Fig. 1).
 
-use crate::config::{CommScheme, JobSpec};
+use crate::config::JobSpec;
 use crate::graph::dfg::{DeviceKey, Dfg, Node, OpKind, TensorMeta};
 use crate::trace::ProfileDb;
 use crate::util::Us;
@@ -16,7 +16,6 @@ use crate::util::Us;
 pub fn estimate(spec: &JobSpec, profile: Option<&ProfileDb>) -> DaydreamEstimate {
     let model = &spec.model;
     let gpu = &spec.cluster.gpu;
-    let n = spec.cluster.n_workers as f64;
     let nominal_bw = spec.cluster.network.nic_gbps * 1e9 / 8.0; // bytes/s
 
     let mut dfg = Dfg::new();
@@ -45,14 +44,18 @@ pub fn estimate(spec: &JobSpec, profile: Option<&ProfileDb>) -> DaydreamEstimate
         comp_ids.push(id);
     }
 
-    // one coarse comm op per tensor: size/bandwidth, with the standard
-    // algorithm-bandwidth factor for the chosen scheme
-    let factor = match &spec.scheme {
-        // ring allreduce moves 2(N-1)/N of the data over the slowest link
-        CommScheme::AllReduce(_) => 2.0 * (n - 1.0) / n,
-        // PS: push + pull over the worker's NIC
-        CommScheme::Ps(_) => 2.0,
-    };
+    // One coarse comm op per tensor: size/bandwidth, with the standard
+    // algorithm-bandwidth factor of the chosen scheme. The factor is the
+    // wire bytes a gradient byte traverses on the plan's critical path —
+    // 2(N−1)/N for the ring schemes, 2 (push+pull) for the PS schemes —
+    // derived from the scheme's lowered plan, so Daydream stays exactly as
+    // naive as the paper describes for any pluggable scheme. A plan with
+    // no Send stages at all (single-machine hierarchical AllReduce) falls
+    // back to the textbook ring factor: Daydream has no intra-node model
+    // and would otherwise price communication at zero.
+    let n = spec.cluster.n_workers as f64;
+    let props_factor = crate::graph::plan_props(spec).critical_path_wire_factor;
+    let factor = if props_factor > 0.0 { props_factor } else { 2.0 * (n - 1.0) / n };
     for (t, tensor) in model.tensors.iter().enumerate() {
         let dur: Us = tensor.bytes * factor / nominal_bw * 1e6;
         let comm = dfg.add(Node {

@@ -14,7 +14,7 @@
 
 pub mod daydream;
 
-use crate::config::{CommPlan, CommScheme, FusionPlan, JobSpec, TensorGroup};
+use crate::config::{CommPlan, FusionPlan, JobSpec, TensorGroup};
 use crate::graph::dfg::{OpKind, TensorId};
 use crate::models::cost::GpuModel;
 use crate::models::ModelGraph;
@@ -140,9 +140,12 @@ pub fn xla_auto_cluster(model: &ModelGraph) -> FusionPlan {
 /// ground-truth configuration in Figs. 1 and 7 and the baseline in Fig. 9.
 pub fn deployed_default(spec: &JobSpec) -> JobSpec {
     let mut s = spec.clone();
-    s.plan = match &s.scheme {
-        CommScheme::AllReduce(_) => horovod_default_plan(&s.model, &s.cluster.gpu),
-        CommScheme::Ps(_) => byteps_default_plan(&s.model),
+    // server-family schemes ship with BytePS's fixed 4 MB partitions,
+    // collective-family schemes with Horovod's fusion buckets
+    s.plan = if s.scheme.uses_servers() {
+        byteps_default_plan(&s.model)
+    } else {
+        horovod_default_plan(&s.model, &s.cluster.gpu)
     };
     s
 }

@@ -4,10 +4,15 @@
 //! dpro profile  --model resnet50 --scheme horovod --transport rdma -o trace.json
 //! dpro replay   --model resnet50 --scheme horovod --transport rdma --trace trace.json
 //! dpro align    --trace trace.json
-//! dpro optimize --model resnet50 --scheme horovod --transport rdma
+//! dpro optimize --model resnet50 --scheme ps-tree --transport rdma
 //! dpro train    --config mini --workers 4 --steps 50
-//! dpro report   --model bert_base
+//! dpro report   --model bert_base --scheme ring
 //! ```
+//!
+//! `--scheme` accepts any registered communication scheme (`horovod`,
+//! `ring`, `byteps`, `ps-tree` + aliases) — see the `parse` constructor on
+//! [`crate::config::CommScheme`]; adding a scheme automatically extends
+//! every command.
 
 use crate::baselines;
 use crate::config::{JobSpec, Transport};
@@ -48,7 +53,7 @@ fn usage() {
          train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n  \
          report   --model M [--scheme S] [--transport T]\n\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
-         schemes: horovod byteps   transports: rdma tcp",
+         schemes: horovod ring byteps ps-tree   transports: rdma tcp",
         crate::version()
     );
 }

@@ -146,21 +146,94 @@ impl ClusterSpec {
 }
 
 /// Gradient-synchronization architecture.
+///
+/// The enum is deliberately *opaque* outside this module and the planner
+/// module ([`crate::graph::comm_plan`]): every other layer keys off the
+/// property accessors below (or off [`crate::graph::comm_plan::PlanProps`]
+/// derived from the lowered plan), never off the variants, so adding a
+/// scheme touches only the two scheme-owning modules.
 #[derive(Clone, Debug)]
 pub enum CommScheme {
-    /// Horovod-style collective AllReduce (hierarchical ring across
-    /// machines, NVLink reduce/broadcast within a machine).
+    /// Horovod-style collective AllReduce (hierarchical: NVLink
+    /// reduce/broadcast within a machine, flat ring across machine NICs).
     AllReduce(ArSpec),
-    /// BytePS-style parameter servers (PUSH/PULL with tensor partitions).
+    /// Flat ring AllReduce over *workers* — no NVLink hierarchy; `2(n−1)`
+    /// chunk steps around the full worker ring, intra-machine hops on
+    /// NVLink, machine-boundary hops on the NIC.
+    Ring(ArSpec),
+    /// BytePS-style parameter servers (per-worker PUSH/PULL with tensor
+    /// partitions).
     Ps(PsSpec),
+    /// Tree/hierarchical PS: machine-local NVLink aggregation first, then
+    /// one PUSH/PULL per *machine* to the server.
+    PsTree(PsSpec),
 }
+
+/// Scheme names accepted by [`CommScheme::parse`] / the CLI `--scheme`
+/// flag, one canonical spelling per scheme.
+pub const ALL_SCHEMES: [&str; 4] = ["horovod", "ring", "byteps", "ps-tree"];
 
 impl CommScheme {
     pub fn name(&self) -> &'static str {
         match self {
             CommScheme::AllReduce(_) => "Horovod",
+            CommScheme::Ring(_) => "Ring",
             CommScheme::Ps(_) => "BytePS",
+            CommScheme::PsTree(_) => "PS-Tree",
         }
+    }
+
+    /// Parse a CLI/config scheme name. Server-based schemes size their
+    /// server fleet from the cluster (colocated mode).
+    pub fn parse(name: &str, cluster: &ClusterSpec) -> Option<CommScheme> {
+        Some(match name {
+            "horovod" | "allreduce" | "hier" => CommScheme::AllReduce(ArSpec::default()),
+            "ring" | "flat-ring" => CommScheme::Ring(ArSpec::default()),
+            "byteps" | "ps" => CommScheme::Ps(PsSpec::for_cluster(cluster)),
+            "ps-tree" | "pstree" | "byteps-tree" => {
+                CommScheme::PsTree(PsSpec::for_cluster(cluster))
+            }
+            _ => return None,
+        })
+    }
+
+    /// Collective-family parameters, if this scheme negotiates collectives.
+    pub fn ar_spec(&self) -> Option<&ArSpec> {
+        match self {
+            CommScheme::AllReduce(ar) | CommScheme::Ring(ar) => Some(ar),
+            _ => None,
+        }
+    }
+
+    /// Server-family parameters, if this scheme uses parameter servers.
+    pub fn ps_spec(&self) -> Option<&PsSpec> {
+        match self {
+            CommScheme::Ps(ps) | CommScheme::PsTree(ps) => Some(ps),
+            _ => None,
+        }
+    }
+
+    /// Coordinator negotiation cycle (0 for schemes without a coordinator).
+    pub fn cycle_time_us(&self) -> Us {
+        self.ar_spec().map_or(0.0, |ar| ar.cycle_time_us)
+    }
+
+    /// Server-side aggregation throughput, if servers exist.
+    pub fn agg_bytes_per_s(&self) -> Option<f64> {
+        self.ps_spec().map(|ps| ps.agg_bytes_per_s)
+    }
+
+    /// Number of extra (non-worker) processes the scheme runs — PS server
+    /// processes; 0 for collective schemes.
+    pub fn n_servers(&self) -> usize {
+        self.ps_spec().map_or(0, |ps| ps.n_servers)
+    }
+
+    /// Whether synchronization routes through parameter-server processes.
+    /// (Also derivable from the lowered plan — see
+    /// [`crate::graph::comm_plan::PlanProps`]; a test pins the agreement.)
+    pub fn uses_servers(&self) -> bool {
+        self.ps_spec().is_some()
     }
 }
 
@@ -342,11 +415,19 @@ impl JobSpec {
         let model = crate::models::by_name(model_name, 32)
             .unwrap_or_else(|| panic!("unknown model {model_name}"));
         let cluster = ClusterSpec::default_16(transport);
-        let scheme = match scheme_name {
-            "horovod" | "allreduce" => CommScheme::AllReduce(ArSpec::default()),
-            "byteps" | "ps" => CommScheme::Ps(PsSpec::for_cluster(&cluster)),
-            other => panic!("unknown scheme {other}"),
-        };
+        JobSpec::with_scheme_name(model, cluster, scheme_name)
+    }
+
+    /// Job from an explicit model + cluster and a scheme *name* — the
+    /// constructor non-scheme-owning code uses so the `CommScheme` variants
+    /// stay private to `config`/`comm_plan`.
+    pub fn with_scheme_name(
+        model: ModelGraph,
+        cluster: ClusterSpec,
+        scheme_name: &str,
+    ) -> JobSpec {
+        let scheme = CommScheme::parse(scheme_name, &cluster)
+            .unwrap_or_else(|| panic!("unknown scheme {scheme_name}"));
         JobSpec::new(model, cluster, scheme)
     }
 }
@@ -397,12 +478,40 @@ mod tests {
 
     #[test]
     fn standard_jobs_construct() {
-        for scheme in ["horovod", "byteps"] {
+        for scheme in ALL_SCHEMES {
             for transport in [Transport::Tcp, Transport::Rdma] {
                 let j = JobSpec::standard("resnet50", scheme, transport);
                 assert_eq!(j.cluster.n_workers, 16);
                 assert_eq!(j.plan.validate(&j.model), Ok(()));
             }
         }
+    }
+
+    #[test]
+    fn scheme_properties_consistent() {
+        let c = ClusterSpec::default_16(Transport::Rdma);
+        for name in ALL_SCHEMES {
+            let s = CommScheme::parse(name, &c).unwrap();
+            // servers and coordinators are mutually exclusive families
+            assert_eq!(s.uses_servers(), s.ps_spec().is_some(), "{name}");
+            assert_eq!(s.uses_servers(), s.n_servers() > 0, "{name}");
+            assert_eq!(!s.uses_servers(), s.ar_spec().is_some(), "{name}");
+            assert_eq!(s.uses_servers(), s.agg_bytes_per_s().is_some(), "{name}");
+            // server-family schemes have no coordinator cycle (a collective
+            // scheme with cycle 0 is valid — don't assert the converse)
+            if s.uses_servers() {
+                assert_eq!(s.cycle_time_us(), 0.0, "{name}");
+            }
+        }
+        assert!(CommScheme::parse("carrier-pigeon", &c).is_none());
+        // aliases resolve to the same scheme
+        assert_eq!(
+            CommScheme::parse("allreduce", &c).unwrap().name(),
+            CommScheme::parse("horovod", &c).unwrap().name()
+        );
+        assert_eq!(
+            CommScheme::parse("pstree", &c).unwrap().name(),
+            CommScheme::parse("ps-tree", &c).unwrap().name()
+        );
     }
 }

@@ -3,12 +3,17 @@
 //! scheme, via In/Out virtual ops and producer/consumer (SEND/RECV) pairs
 //! labelled with transaction ids.
 //!
+//! This file is *scheme-blind*: the per-group communication topology comes
+//! from the scheme's [`crate::graph::comm_plan::CommPlanner`] through the
+//! shared lowering routine [`crate::graph::comm_plan::build_group_comm`].
+//!
 //! Op names are deterministic and shared with the testbed's trace emitter,
 //! so measured traces can be joined back onto the skeleton by name.
 
 use std::collections::HashMap;
 
-use crate::config::{ClusterSpec, CommScheme, JobSpec};
+use crate::config::JobSpec;
+use crate::graph::comm_plan::build_group_comm;
 use crate::graph::dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorMeta};
 use crate::util::Us;
 
@@ -88,10 +93,9 @@ impl CostProvider for AnalyticCost<'_> {
     }
 
     fn negotiate(&self) -> Us {
-        match &self.spec.scheme {
-            CommScheme::AllReduce(ar) => ar.cycle_time_us * 0.5,
-            CommScheme::Ps(_) => 0.0,
-        }
+        // a ready tensor waits on average half a coordinator cycle; 0 for
+        // schemes without a coordinator
+        self.spec.scheme.cycle_time_us() * 0.5
     }
 
     fn reduce_local(&self, bytes: f64, n_gpus: usize) -> Us {
@@ -111,10 +115,7 @@ impl CostProvider for AnalyticCost<'_> {
     }
 
     fn aggregate(&self, bytes: f64) -> Us {
-        match &self.spec.scheme {
-            CommScheme::Ps(ps) => bytes / ps.agg_bytes_per_s * 1e6,
-            CommScheme::AllReduce(_) => 0.0,
-        }
+        self.spec.scheme.agg_bytes_per_s().map_or(0.0, |rate| bytes / rate * 1e6)
     }
 
     fn update(&self, bytes: f64) -> Us {
@@ -279,380 +280,15 @@ fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) 
     GlobalDfg { dfg, comp_node, group_nodes, group_out, update_node, n_workers }
 }
 
-/// Build the communication topology of one tensor group — the negotiation
-/// op (AllReduce) plus the per-partition chains — appending to `dfg` and
-/// wiring from the group's In ops. `out_per_worker` collects the chain
-/// tails that feed each worker's Out op; `gnodes` records every created
-/// node in canonical creation order. Shared by the full builder above and
-/// by the in-place comm-chain splice of [`crate::graph::mutable`], so an
-/// incrementally rewritten group is structurally identical to a fresh
-/// build of the same spec.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn build_group_comm(
-    dfg: &mut Dfg,
-    spec: &JobSpec,
-    cost: &dyn CostProvider,
-    with_names: bool,
-    gi: usize,
-    in_ops: &[NodeId],
-    out_per_worker: &mut [Vec<NodeId>],
-    gnodes: &mut Vec<NodeId>,
-    txid: &mut u64,
-) {
-    let cluster = &spec.cluster;
-    let gbytes = spec.plan.group_bytes(&spec.model, gi);
-    let group = &spec.plan.groups[gi];
-    let k = group.partitions.max(1);
-    let pbytes = gbytes / k as f64;
-    macro_rules! name {
-        ($($arg:tt)*) => {
-            if with_names { format!($($arg)*) } else { String::new() }
-        };
-    }
-    match &spec.scheme {
-        CommScheme::AllReduce(_) => {
-            // negotiation op: coordinator serializes group scheduling
-            let neg = dfg.add(Node {
-                name: name!("neg.g{gi}"),
-                kind: OpKind::Negotiate,
-                // a delay, not an exclusive resource: Null device means
-                // "elapses without queuing" in testbed and replayer
-                device: DeviceKey::Null,
-                duration: cost.negotiate(),
-                owner: 0,
-                proc: crate::graph::dfg::COORD_PROC,
-                tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: gbytes }),
-                txid: None,
-                template_id: None,
-            });
-            for &i in in_ops {
-                dfg.edge(i, neg);
-            }
-            gnodes.push(neg);
-            for p in 0..k {
-                build_allreduce_partition(
-                    dfg, cluster, cost, with_names, gi, p, pbytes, neg,
-                    out_per_worker, gnodes, txid,
-                );
-            }
-        }
-        CommScheme::Ps(ps) => {
-            for p in 0..k {
-                // Server assignment is keyed by the group's first tensor
-                // id, not its plan index: tensor ids are stable under
-                // tensor fusion, so an in-place chain splice and a fresh
-                // rebuild agree on placement even after earlier groups
-                // were merged away (plan indices shift, tensor ids never
-                // do).
-                let server = (group.tensors[0] as usize + p) % ps.n_servers;
-                build_ps_partition(
-                    dfg, cluster, cost, with_names, gi, p, pbytes, server, in_ops,
-                    out_per_worker, gnodes, txid,
-                );
-            }
-        }
-    }
-}
-
-/// AllReduce for one partition, modeled as NCCL models it: NVLink reduce
-/// within each machine, then a flat-ring equivalent across machine NICs —
-/// `2(N−1)` pipelined chunk steps of `bytes/N` each, so every NIC crossing
-/// carries the full `2(N−1)/N × bytes` ring volume with per-chunk latency
-/// — and an NVLink broadcast back to local GPUs.
-#[allow(clippy::too_many_arguments)]
-fn build_allreduce_partition(
-    dfg: &mut Dfg,
-    cluster: &ClusterSpec,
-    cost: &dyn CostProvider,
-    with_names: bool,
-    gi: usize,
-    p: usize,
-    pbytes: f64,
-    neg: NodeId,
-    out_per_worker: &mut [Vec<NodeId>],
-    gnodes: &mut Vec<NodeId>,
-    txid: &mut u64,
-) {
-    let m_count = cluster.n_machines();
-    let meta = |bytes: f64| Some(TensorMeta { tensor_id: gi as u32, bytes });
-    macro_rules! name {
-        ($($arg:tt)*) => {
-            if with_names { format!($($arg)*) } else { String::new() }
-        };
-    }
-
-    // per-worker GPU reduce-scatter kernel, then NVLink reduce per machine
-    let mut reduced: Vec<NodeId> = Vec::with_capacity(m_count);
-    for m in 0..m_count {
-        let gpus = cluster.workers_on(m);
-        let mut rs_ops = Vec::with_capacity(gpus.len());
-        for &w in &gpus {
-            let rs = dfg.add(Node {
-                name: name!("w{w}.NCCL_RS.g{gi}.p{p}"),
-                kind: OpKind::Aggregate,
-                device: DeviceKey::Gpu(w as u16),
-                duration: cost.gpu_collective(pbytes),
-                owner: w as u16,
-                proc: w as u16,
-                tensor: meta(pbytes),
-                txid: None,
-                template_id: None,
-            });
-            dfg.edge(neg, rs);
-            rs_ops.push(rs);
-            gnodes.push(rs);
-        }
-        let id = dfg.add(Node {
-            name: name!("m{m}.RED.g{gi}.p{p}"),
-            kind: OpKind::Aggregate,
-            device: DeviceKey::NvLink(m as u16),
-            duration: cost.reduce_local(pbytes, gpus.len()),
-            owner: gpus[0] as u16,
-            proc: gpus[0] as u16,
-            tensor: meta(pbytes),
-            txid: None,
-            template_id: None,
-        });
-        for &rs in &rs_ops {
-            dfg.edge(rs, id);
-        }
-        reduced.push(id);
-        gnodes.push(id);
-    }
-
-    // ring across machines: 2(N-1) flat-ring chunk steps of bytes/N
-    let mut last_recv: Vec<NodeId> = reduced.clone();
-    if m_count > 1 {
-        let n = cluster.n_workers;
-        let chunk = pbytes / n as f64;
-        let steps = 2 * (n - 1);
-        let mut prev_send: Vec<Option<NodeId>> = vec![None; m_count];
-        for step in 0..steps {
-            let mut this_recv: Vec<NodeId> = vec![0; m_count];
-            for m in 0..m_count {
-                let dst = (m + 1) % m_count;
-                let tid = *txid;
-                *txid += 1;
-                let send = dfg.add(Node {
-                    name: name!("m{m}.SEND.g{gi}.p{p}.s{step}"),
-                    kind: OpKind::Send,
-                    device: DeviceKey::LinkTx(m as u16),
-                    duration: cost.send(chunk, false),
-                    owner: cluster.workers_on(m)[0] as u16,
-                    proc: cluster.workers_on(m)[0] as u16,
-                    tensor: meta(chunk),
-                    txid: Some(tid),
-                    template_id: None,
-                });
-                // forward what we received last step (or the local reduction)
-                dfg.edge(last_recv[m], send);
-                if let Some(ps) = prev_send[m] {
-                    dfg.edge(ps, send);
-                }
-                let recv = dfg.add(Node {
-                    name: name!("m{dst}.RECV.g{gi}.p{p}.s{step}"),
-                    kind: OpKind::Recv,
-                    device: DeviceKey::LinkRx(dst as u16),
-                    duration: cost.recv(chunk, false),
-                    owner: cluster.workers_on(dst)[0] as u16,
-                    proc: cluster.workers_on(dst)[0] as u16,
-                    tensor: meta(chunk),
-                    txid: Some(tid),
-                    template_id: None,
-                });
-                dfg.edge(send, recv);
-                this_recv[dst] = recv;
-                prev_send[m] = Some(send);
-                gnodes.push(send);
-                gnodes.push(recv);
-            }
-            last_recv = this_recv;
-        }
-    }
-
-    // local broadcast + per-worker GPU all-gather kernel feeding Out
-    for m in 0..m_count {
-        let gpus = cluster.workers_on(m);
-        let bc = dfg.add(Node {
-            name: name!("m{m}.BCAST.g{gi}.p{p}"),
-            kind: OpKind::Aggregate,
-            device: DeviceKey::NvLink(m as u16),
-            duration: cost.bcast_local(pbytes, gpus.len()),
-            owner: gpus[0] as u16,
-            proc: gpus[0] as u16,
-            tensor: meta(pbytes),
-            txid: None,
-            template_id: None,
-        });
-        dfg.edge(last_recv[m], bc);
-        gnodes.push(bc);
-        for w in gpus {
-            let ag = dfg.add(Node {
-                name: name!("w{w}.NCCL_AG.g{gi}.p{p}"),
-                kind: OpKind::Aggregate,
-                device: DeviceKey::Gpu(w as u16),
-                duration: cost.gpu_collective(pbytes),
-                owner: w as u16,
-                proc: w as u16,
-                tensor: meta(pbytes),
-                txid: None,
-                template_id: None,
-            });
-            dfg.edge(bc, ag);
-            gnodes.push(ag);
-            out_per_worker[w].push(ag);
-        }
-    }
-}
-
-/// PS PUSH/PULL for one partition on its assigned server: each worker
-/// pushes (SEND→RECV), the server aggregates each contribution, and once
-/// all contributions are in, each worker pulls (SEND→RECV).
-#[allow(clippy::too_many_arguments)]
-fn build_ps_partition(
-    dfg: &mut Dfg,
-    cluster: &ClusterSpec,
-    cost: &dyn CostProvider,
-    with_names: bool,
-    gi: usize,
-    p: usize,
-    pbytes: f64,
-    server: usize,
-    in_ops: &[NodeId],
-    out_per_worker: &mut [Vec<NodeId>],
-    gnodes: &mut Vec<NodeId>,
-    txid: &mut u64,
-) {
-    let n_workers = cluster.n_workers;
-    let meta = Some(TensorMeta { tensor_id: gi as u32, bytes: pbytes });
-    macro_rules! name {
-        ($($arg:tt)*) => {
-            if with_names { format!($($arg)*) } else { String::new() }
-        };
-    }
-    // PS `server` runs on machine `server` (colocated mode).
-    let server_machine = server % cluster.n_machines().max(1);
-    let mut aggs: Vec<NodeId> = Vec::with_capacity(n_workers);
-
-    for w in 0..n_workers {
-        let wm = cluster.machine_of(w);
-        let intra = wm == server_machine;
-        let tid = *txid;
-        *txid += 1;
-        let d2h = dfg.add(Node {
-            name: name!("w{w}.D2H.g{gi}.p{p}"),
-            kind: OpKind::Aggregate,
-            device: DeviceKey::Gpu(w as u16),
-            duration: cost.gpu_collective(pbytes),
-            owner: w as u16,
-            proc: w as u16,
-            tensor: meta,
-            txid: None,
-            template_id: None,
-        });
-        dfg.edge(in_ops[w], d2h);
-        gnodes.push(d2h);
-        let push_send = dfg.add(Node {
-            name: name!("w{w}.PUSH_SEND.g{gi}.p{p}"),
-            kind: OpKind::Send,
-            device: if intra { DeviceKey::NvLink(wm as u16) } else { DeviceKey::LinkTx(wm as u16) },
-            duration: cost.send(pbytes, intra),
-            owner: w as u16,
-            proc: w as u16,
-            tensor: meta,
-            txid: Some(tid),
-            template_id: None,
-        });
-        dfg.edge(d2h, push_send);
-        let push_recv = dfg.add(Node {
-            name: name!("s{server}.PUSH_RECV.g{gi}.p{p}.w{w}"),
-            kind: OpKind::Recv,
-            device: if intra {
-                DeviceKey::NvLink(server_machine as u16)
-            } else {
-                DeviceKey::LinkRx(server_machine as u16)
-            },
-            duration: if intra { 0.0 } else { cost.recv(pbytes, false) },
-            owner: w as u16,
-            proc: (cluster.n_workers + server) as u16,
-            tensor: meta,
-            txid: Some(tid),
-            template_id: None,
-        });
-        dfg.edge(push_send, push_recv);
-        let agg = dfg.add(Node {
-            name: name!("s{server}.AGG.g{gi}.p{p}.w{w}"),
-            kind: OpKind::Aggregate,
-            device: DeviceKey::PsCpu(server as u16),
-            duration: cost.aggregate(pbytes),
-            owner: w as u16,
-            proc: (cluster.n_workers + server) as u16,
-            tensor: meta,
-            txid: None,
-            template_id: None,
-        });
-        dfg.edge(push_recv, agg);
-        aggs.push(agg);
-        gnodes.extend_from_slice(&[push_send, push_recv, agg]);
-    }
-
-    for w in 0..n_workers {
-        let wm = cluster.machine_of(w);
-        let intra = wm == server_machine;
-        let tid = *txid;
-        *txid += 1;
-        let pull_send = dfg.add(Node {
-            name: name!("s{server}.PULL_SEND.g{gi}.p{p}.w{w}"),
-            kind: OpKind::Send,
-            device: if intra {
-                DeviceKey::NvLink(server_machine as u16)
-            } else {
-                DeviceKey::LinkTx(server_machine as u16)
-            },
-            duration: cost.send(pbytes, intra),
-            owner: w as u16,
-            proc: w as u16,
-            tensor: meta,
-            txid: Some(tid),
-            template_id: None,
-        });
-        // synchronous training: pull waits for every worker's contribution
-        for &a in &aggs {
-            dfg.edge(a, pull_send);
-        }
-        let pull_recv = dfg.add(Node {
-            name: name!("w{w}.PULL_RECV.g{gi}.p{p}"),
-            kind: OpKind::Recv,
-            device: if intra { DeviceKey::NvLink(wm as u16) } else { DeviceKey::LinkRx(wm as u16) },
-            duration: if intra { 0.0 } else { cost.recv(pbytes, false) },
-            owner: w as u16,
-            proc: w as u16,
-            tensor: meta,
-            txid: Some(tid),
-            template_id: None,
-        });
-        dfg.edge(pull_send, pull_recv);
-        let h2d = dfg.add(Node {
-            name: name!("w{w}.H2D.g{gi}.p{p}"),
-            kind: OpKind::Aggregate,
-            device: DeviceKey::Gpu(w as u16),
-            duration: cost.gpu_collective(pbytes),
-            owner: w as u16,
-            proc: w as u16,
-            tensor: meta,
-            txid: None,
-            template_id: None,
-        });
-        dfg.edge(pull_recv, h2d);
-        out_per_worker[w].push(h2d);
-        gnodes.extend_from_slice(&[pull_send, pull_recv, h2d]);
-    }
-}
+// The per-group communication topology is planned and lowered by
+// `graph::comm_plan` (one `CommPlanner` per scheme, one generic lowering
+// shared with `graph::mutable`'s in-place splice). Nothing below this line
+// knows which scheme is running.
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ArSpec, CommPlan, JobSpec, PsSpec, Transport};
+    use crate::config::{CommPlan, JobSpec, Transport};
     use crate::models;
 
     fn small_job(scheme: &str) -> JobSpec {
@@ -744,7 +380,7 @@ mod tests {
     fn single_machine_has_no_ring() {
         let model = models::by_name("vgg16", 8).unwrap();
         let cluster = crate::config::ClusterSpec::new(8, 8, crate::config::NetworkSpec::rdma_100g());
-        let spec = JobSpec::new(model, cluster, crate::config::CommScheme::AllReduce(ArSpec::default()));
+        let spec = JobSpec::with_scheme_name(model, cluster, "horovod");
         let g = build_global(&spec, &AnalyticCost::new(&spec));
         let sends = g.dfg.nodes.iter().filter(|n| n.kind == OpKind::Send).count();
         assert_eq!(sends, 0);
@@ -754,11 +390,84 @@ mod tests {
     #[test]
     fn ps_server_count_from_cluster() {
         let spec = small_job("byteps");
-        if let crate::config::CommScheme::Ps(ps) = &spec.scheme {
-            assert_eq!(ps.n_servers, 2);
-        } else {
-            panic!("expected PS");
+        assert!(spec.scheme.uses_servers());
+        assert_eq!(spec.scheme.n_servers(), 2);
+    }
+
+    #[test]
+    fn ring_dfg_has_flat_worker_ring() {
+        // 8 workers on 2 machines of 4: 2(8-1)=14 steps × 8 workers sends
+        // per group, machine-boundary hops on the NIC, the rest on NVLink
+        let model = models::by_name("vgg16", 8).unwrap();
+        let cluster =
+            crate::config::ClusterSpec::new(8, 4, crate::config::NetworkSpec::rdma_100g());
+        let spec = JobSpec::with_scheme_name(model, cluster, "ring");
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        assert!(g.dfg.is_dag());
+        let n_tensors = spec.model.tensors.len();
+        let sends: Vec<_> =
+            g.dfg.nodes.iter().filter(|n| n.kind == OpKind::Send).collect();
+        assert_eq!(sends.len(), n_tensors * 14 * 8);
+        let nic = sends
+            .iter()
+            .filter(|n| matches!(n.device, DeviceKey::LinkTx(_)))
+            .count();
+        assert_eq!(nic, n_tensors * 14 * 2, "2 machine-boundary hops per step");
+        // every send has a matching recv with the same txid
+        let g0_send = g.dfg.find("w0.RSEND.g0.p0.s0").unwrap();
+        let tid = g.dfg.node(g0_send).txid.unwrap();
+        assert!(g
+            .dfg
+            .nodes
+            .iter()
+            .any(|m| m.kind == OpKind::Recv && m.txid == Some(tid)));
+    }
+
+    #[test]
+    fn ps_tree_dfg_aggregates_per_machine() {
+        let spec = small_job("ps-tree");
+        let g = build_global(&spec, &AnalyticCost::new(&spec));
+        assert!(g.dfg.is_dag());
+        let m_count = spec.cluster.n_machines();
+        let n_tensors = spec.model.tensors.len();
+        // server ingress is one aggregate per *machine* per group
+        let aggs = g
+            .dfg
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.device, DeviceKey::PsCpu(_)))
+            .count();
+        assert_eq!(aggs, n_tensors * m_count);
+        // the pull of group 0 waits on every machine's contribution
+        let pull = g.dfg.find("s0.TPULL_SEND.g0.p0.m0").unwrap();
+        let agg_preds = g
+            .dfg
+            .preds(pull)
+            .iter()
+            .filter(|&&p| g.dfg.node(p).kind == OpKind::Aggregate)
+            .count();
+        assert_eq!(agg_preds, m_count);
+        // every worker's Out op is fed (an H2D tail exists per worker)
+        for w in 0..spec.cluster.n_workers {
+            assert!(g.dfg.find(&format!("w{w}.H2D.g0.p0")).is_some());
         }
-        let _ = PsSpec::for_cluster(&spec.cluster);
+    }
+
+    #[test]
+    fn all_schemes_build_replayable_dfgs() {
+        for scheme in crate::config::ALL_SCHEMES {
+            let spec = small_job(scheme);
+            let g = build_global(&spec, &AnalyticCost::new(&spec));
+            assert!(g.dfg.is_dag(), "{scheme}");
+            let r = crate::replay::replay_once(&g);
+            assert!(
+                r.iteration_time.is_finite() && r.iteration_time > 0.0,
+                "{scheme}: iteration {}",
+                r.iteration_time
+            );
+            // update ops exist and run after their group's Out
+            let upd = g.update_node[&(0u16, 0usize)];
+            assert!(r.end[upd as usize] > 0.0, "{scheme}");
+        }
     }
 }

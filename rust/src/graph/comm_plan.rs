@@ -1,0 +1,1327 @@
+//! Comm-plan IR: the scheme-neutral description of one tensor-group's
+//! synchronization, and the planners that produce it.
+//!
+//! dPRO's accuracy claim rests on modeling *fine-grained* communication ops
+//! per scheme (paper §4.1), but scheme logic must not leak across layers:
+//! a [`CommPlanner`] turns one tensor group into a [`GroupPlan`] — a small
+//! DAG of [`Stage`]s (op kind, device, duration, byte count, dependencies)
+//! — and exactly one generic lowering routine ([`build_group_comm`])
+//! materializes that plan into the global DFG. The from-scratch builder
+//! ([`crate::graph::build`]) and the in-place splicer
+//! ([`crate::graph::mutable::MutableGraph`]) both call the same routine, so
+//! an incrementally rewritten group stays structurally identical to a
+//! fresh build, for *every* scheme.
+//!
+//! The optimizer and the replay engines never look at the scheme enum:
+//! they key off [`PlanProps`] derived from the lowered plan itself (stage
+//! count, uses-servers, critical-path wire bytes) — see
+//! [`plan_props`].
+//!
+//! ## Invariants every planner must uphold
+//!
+//! 1. **Deps point backwards**: a stage depends only on the group's In ops
+//!    or on *earlier* stages, so stage order is a topological order of the
+//!    chain and the incremental replayer's canonical ranks (creation order
+//!    within a chain) stay dependency-consistent.
+//! 2. **Send/Recv pairing**: a `tx` tag is used by exactly two stages, the
+//!    `Send` first; lowering assigns them one shared transaction id (the
+//!    profiler joins SEND↔RECV by that id, §4.2).
+//! 3. **Every worker gets a tail**: at least one stage per worker carries
+//!    `out_for`, so each worker's Out op (and its update) is reachable.
+//! 4. **Durations affine in bytes**: every duration is `α + β·bytes` of
+//!    the cost model, which is what lets the partial-replay probe engines
+//!    ([`crate::replay::partial`]) answer `t_sync` queries without builds.
+//!
+//! [`GroupPlan::validate`] checks 1–3 (debug builds validate every
+//! lowering).
+
+use std::collections::HashMap;
+
+use crate::config::{ClusterSpec, CommScheme, JobSpec};
+use crate::graph::build::CostProvider;
+use crate::graph::dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorMeta, COORD_PROC};
+use crate::util::Us;
+
+/// Dependency of a [`Stage`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dep {
+    /// Worker `w`'s In virtual op (the group's gradient is ready there).
+    In(u16),
+    /// Every worker's In op (collective negotiation waits for all).
+    AllIn,
+    /// An earlier stage of the same plan (index into [`GroupPlan::stages`]).
+    Stage(u32),
+}
+
+/// One fine-grained communication op of a group's synchronization plan.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// DFG node name (empty when the plan is built nameless).
+    pub name: String,
+    pub kind: OpKind,
+    pub device: DeviceKey,
+    pub duration: Us,
+    pub owner: u16,
+    /// Process that executes and timestamps the op (worker id,
+    /// `n_workers + s` for server `s`, [`COORD_PROC`] for the coordinator).
+    pub proc: u16,
+    /// Bytes this op moves/touches (recorded in the node's `TensorMeta`).
+    pub bytes: f64,
+    /// Send↔Recv pairing tag, local to this plan; stages sharing a tag get
+    /// one transaction id at lowering time.
+    pub tx: Option<u32>,
+    pub deps: Vec<Dep>,
+    /// `Some(w)`: this stage is a chain tail feeding worker `w`'s Out op.
+    pub out_for: Option<u16>,
+}
+
+/// The scheme-neutral synchronization plan of one tensor group.
+#[derive(Clone, Debug, Default)]
+pub struct GroupPlan {
+    pub stages: Vec<Stage>,
+}
+
+impl GroupPlan {
+    /// Append a stage, returning its index for later `Dep::Stage` refs.
+    pub fn push(&mut self, stage: Stage) -> u32 {
+        self.stages.push(stage);
+        (self.stages.len() - 1) as u32
+    }
+
+    /// Check the planner invariants (module docs §1–3).
+    pub fn validate(&self, n_workers: usize) -> Result<(), String> {
+        // per tx tag: (opening Send's stage index, closed by a Recv yet?)
+        let mut tx_seen: HashMap<u32, (usize, bool)> = HashMap::new();
+        let mut covered = vec![false; n_workers];
+        for (i, st) in self.stages.iter().enumerate() {
+            for &d in &st.deps {
+                match d {
+                    Dep::In(w) => {
+                        if w as usize >= n_workers {
+                            return Err(format!("stage {i} deps In({w}) out of range"));
+                        }
+                    }
+                    Dep::AllIn => {}
+                    Dep::Stage(s) => {
+                        if s as usize >= i {
+                            return Err(format!("stage {i} deps forward on stage {s}"));
+                        }
+                    }
+                }
+            }
+            if let Some(tag) = st.tx {
+                match tx_seen.get(&tag).copied() {
+                    None => {
+                        if st.kind != OpKind::Send {
+                            return Err(format!("tx tag {tag} opened by non-Send stage {i}"));
+                        }
+                        tx_seen.insert(tag, (i, false));
+                    }
+                    Some((send_idx, false)) => {
+                        if st.kind != OpKind::Recv {
+                            return Err(format!("tx tag {tag} closed by non-Recv stage {i}"));
+                        }
+                        // pairing must be causal, not just positional: the
+                        // Recv has to wait for its Send or the replayer
+                        // starts it before the data was ever posted
+                        if !st.deps.contains(&Dep::Stage(send_idx as u32)) {
+                            return Err(format!(
+                                "tx tag {tag}: Recv stage {i} does not depend on its \
+                                 Send stage {send_idx}"
+                            ));
+                        }
+                        tx_seen.insert(tag, (send_idx, true));
+                    }
+                    Some((_, true)) => {
+                        return Err(format!("tx tag {tag} used more than twice"))
+                    }
+                }
+            }
+            if let Some(w) = st.out_for {
+                if w as usize >= n_workers {
+                    return Err(format!("stage {i} out_for({w}) out of range"));
+                }
+                covered[w as usize] = true;
+            }
+        }
+        if let Some((tag, _)) = tx_seen.iter().find(|(_, &(_, closed))| !closed) {
+            return Err(format!("tx tag {tag} has no matching Recv"));
+        }
+        if let Some(w) = covered.iter().position(|&c| !c) {
+            return Err(format!("no chain tail feeds worker {w}'s Out op"));
+        }
+        Ok(())
+    }
+
+    /// Whether any stage runs on a parameter-server process.
+    pub fn uses_servers(&self) -> bool {
+        self.stages.iter().any(|s| matches!(s.device, DeviceKey::PsCpu(_)))
+    }
+
+    /// Longest path through the stage DAG, weighting `Send` stages by
+    /// their byte count: the wire bytes a gradient byte must traverse
+    /// end-to-end (the "algorithm bandwidth" denominator coarse models
+    /// divide by).
+    pub fn critical_path_send_bytes(&self) -> f64 {
+        let mut cp = vec![0.0f64; self.stages.len()];
+        let mut best = 0.0f64;
+        for (i, st) in self.stages.iter().enumerate() {
+            let mut upstream = 0.0f64;
+            for &d in &st.deps {
+                if let Dep::Stage(s) = d {
+                    upstream = upstream.max(cp[s as usize]);
+                }
+            }
+            let w = if st.kind == OpKind::Send { st.bytes } else { 0.0 };
+            cp[i] = upstream + w;
+            best = best.max(cp[i]);
+        }
+        best
+    }
+}
+
+/// Everything a planner may read while planning one group. Planners never
+/// touch `JobSpec` directly — the context carries the group-local facts,
+/// which is what lets [`plan_props`] probe a scheme without a real plan.
+pub struct PlanCtx<'a> {
+    pub cluster: &'a ClusterSpec,
+    pub cost: &'a dyn CostProvider,
+    pub with_names: bool,
+    /// Comm-group index (naming only; never used for placement).
+    pub gi: usize,
+    /// Fused-tensor bytes of the whole group.
+    pub gbytes: f64,
+    /// Partition count (>= 1).
+    pub k: usize,
+    /// First (stable) tensor id of the group — the server-placement key:
+    /// tensor ids survive tensor fusion, plan indices do not, so in-place
+    /// splices and fresh rebuilds agree on placement.
+    pub first_tensor: u32,
+}
+
+impl PlanCtx<'_> {
+    /// Build a node name, or the empty string on the nameless fast path.
+    fn name(&self, f: impl FnOnce() -> String) -> String {
+        if self.with_names {
+            f()
+        } else {
+            String::new()
+        }
+    }
+}
+
+/// A communication scheme: plans one tensor group's synchronization.
+/// Implementations own *all* scheme-specific knowledge; everything
+/// downstream of [`build_group_comm`] is scheme-blind.
+pub trait CommPlanner {
+    /// Human-readable scheme name (reports/diagnostics).
+    fn scheme(&self) -> &'static str;
+    /// The full synchronization plan of one tensor group.
+    fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan;
+}
+
+/// The planner for a job's scheme — the only variant dispatch outside
+/// `config`.
+pub fn planner_for(scheme: &CommScheme) -> Box<dyn CommPlanner> {
+    match scheme {
+        CommScheme::AllReduce(_) => Box::new(HierAllReduce),
+        CommScheme::Ring(_) => Box::new(RingAllReduce),
+        CommScheme::Ps(ps) => Box::new(PsPushPull { n_servers: ps.n_servers.max(1) }),
+        CommScheme::PsTree(ps) => Box::new(PsTree { n_servers: ps.n_servers.max(1) }),
+    }
+}
+
+/// Plan-derived scheme properties: what the optimizer's heuristics key off
+/// instead of enum matches (ISSUE: "scheme-blind search").
+#[derive(Clone, Copy, Debug)]
+pub struct PlanProps {
+    pub scheme: &'static str,
+    /// Stages one unpartitioned group lowers to.
+    pub stages_per_group: usize,
+    /// Synchronization routes through PS processes. Partition search is
+    /// enabled by default exactly for these schemes: their per-partition
+    /// chains pipeline push against pull (paper §5.2).
+    pub uses_servers: bool,
+    /// Wire bytes on the critical path per gradient byte — the coarse
+    /// "algorithm bandwidth" factor (2(n−1)/n for rings, 2 for PS).
+    pub critical_path_wire_factor: f64,
+}
+
+/// Derive [`PlanProps`] by planning a unit probe group and inspecting the
+/// IR — no scheme enum involved, so a new planner gets correct heuristics
+/// for free. The probe materializes one group's stages (O(workers ×
+/// ring-steps) for the ring schemes); callers invoke it once per
+/// search/estimate, where the very next thing they do is build or replay
+/// a graph hundreds of times that size — don't call it per node or per
+/// round.
+pub fn plan_props(spec: &JobSpec) -> PlanProps {
+    struct ZeroCost;
+    impl CostProvider for ZeroCost {
+        fn comp(&self, _: usize, _: u32) -> Us {
+            0.0
+        }
+        fn send(&self, _: f64, _: bool) -> Us {
+            0.0
+        }
+        fn recv(&self, _: f64, _: bool) -> Us {
+            0.0
+        }
+        fn negotiate(&self) -> Us {
+            0.0
+        }
+        fn reduce_local(&self, _: f64, _: usize) -> Us {
+            0.0
+        }
+        fn bcast_local(&self, _: f64, _: usize) -> Us {
+            0.0
+        }
+        fn aggregate(&self, _: f64) -> Us {
+            0.0
+        }
+        fn update(&self, _: f64) -> Us {
+            0.0
+        }
+        fn gpu_collective(&self, _: f64) -> Us {
+            0.0
+        }
+    }
+    let planner = planner_for(&spec.scheme);
+    let ctx = PlanCtx {
+        cluster: &spec.cluster,
+        cost: &ZeroCost,
+        with_names: false,
+        gi: 0,
+        gbytes: 1.0,
+        k: 1,
+        first_tensor: 0,
+    };
+    let plan = planner.plan_group(&ctx);
+    PlanProps {
+        scheme: planner.scheme(),
+        stages_per_group: plan.stages.len(),
+        uses_servers: plan.uses_servers(),
+        critical_path_wire_factor: plan.critical_path_send_bytes(),
+    }
+}
+
+/// Plan + lower the communication topology of one tensor group, appending
+/// to `dfg` and wiring from the group's In ops. `out_per_worker` collects
+/// the chain tails that feed each worker's Out op; `gnodes` records every
+/// created node in canonical creation order. Shared by the full builder
+/// ([`crate::graph::build`]) and the in-place comm-chain splice of
+/// [`crate::graph::mutable`], so an incrementally rewritten group is
+/// structurally identical to a fresh build of the same spec.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn build_group_comm(
+    dfg: &mut Dfg,
+    spec: &JobSpec,
+    cost: &dyn CostProvider,
+    with_names: bool,
+    gi: usize,
+    in_ops: &[NodeId],
+    out_per_worker: &mut [Vec<NodeId>],
+    gnodes: &mut Vec<NodeId>,
+    txid: &mut u64,
+) {
+    let group = &spec.plan.groups[gi];
+    let ctx = PlanCtx {
+        cluster: &spec.cluster,
+        cost,
+        with_names,
+        gi,
+        gbytes: spec.plan.group_bytes(&spec.model, gi),
+        k: group.partitions.max(1),
+        first_tensor: group.tensors[0],
+    };
+    let plan = planner_for(&spec.scheme).plan_group(&ctx);
+    debug_assert_eq!(plan.validate(spec.cluster.n_workers), Ok(()));
+    lower_group_plan(dfg, plan, gi, in_ops, out_per_worker, gnodes, txid);
+}
+
+/// The one generic lowering: materialize a [`GroupPlan`] as DFG nodes and
+/// edges. Scheme-blind by construction.
+pub(crate) fn lower_group_plan(
+    dfg: &mut Dfg,
+    plan: GroupPlan,
+    gi: usize,
+    in_ops: &[NodeId],
+    out_per_worker: &mut [Vec<NodeId>],
+    gnodes: &mut Vec<NodeId>,
+    txid: &mut u64,
+) {
+    let mut tag_tx: HashMap<u32, u64> = HashMap::new();
+    let mut ids: Vec<NodeId> = Vec::with_capacity(plan.stages.len());
+    for st in plan.stages {
+        let tx = st.tx.map(|tag| {
+            *tag_tx.entry(tag).or_insert_with(|| {
+                let t = *txid;
+                *txid += 1;
+                t
+            })
+        });
+        let id = dfg.add(Node {
+            name: st.name,
+            kind: st.kind,
+            device: st.device,
+            duration: st.duration,
+            owner: st.owner,
+            proc: st.proc,
+            tensor: Some(TensorMeta { tensor_id: gi as u32, bytes: st.bytes }),
+            txid: tx,
+            template_id: None,
+        });
+        for &dep in &st.deps {
+            match dep {
+                Dep::In(w) => dfg.edge(in_ops[w as usize], id),
+                Dep::AllIn => {
+                    for &i in in_ops {
+                        dfg.edge(i, id);
+                    }
+                }
+                Dep::Stage(s) => dfg.edge(ids[s as usize], id),
+            }
+        }
+        gnodes.push(id);
+        if let Some(w) = st.out_for {
+            out_per_worker[w as usize].push(id);
+        }
+        ids.push(id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The four built-in planners.
+// ---------------------------------------------------------------------------
+
+/// Shared negotiation stage for the collective (Horovod-family) schemes:
+/// the coordinator serializes group scheduling; the op is a delay, not an
+/// exclusive resource (Null device never queues).
+fn negotiate_stage(ctx: &PlanCtx, plan: &mut GroupPlan) -> u32 {
+    let gi = ctx.gi;
+    plan.push(Stage {
+        name: ctx.name(|| format!("neg.g{gi}")),
+        kind: OpKind::Negotiate,
+        device: DeviceKey::Null,
+        duration: ctx.cost.negotiate(),
+        owner: 0,
+        proc: COORD_PROC,
+        bytes: ctx.gbytes,
+        tx: None,
+        deps: vec![Dep::AllIn],
+        out_for: None,
+    })
+}
+
+/// One directed hop of a ring (participant `i` → its successor), fully
+/// resolved to devices/durations/procs so [`ring_steps`] stays topology-
+/// agnostic (machine rings and worker rings differ only in their hops).
+struct RingHop {
+    dst: usize,
+    send_dev: DeviceKey,
+    recv_dev: DeviceKey,
+    send_dur: Us,
+    recv_dur: Us,
+    send_owner: u16,
+    send_proc: u16,
+    recv_owner: u16,
+    recv_proc: u16,
+}
+
+/// The shared pipelined ring kernel: `steps` chunk steps where participant
+/// `i` sends to `hops[i].dst` — each send waits on the chunk received last
+/// step (or the participant's seed stage) and on the participant's own
+/// previous send (pipelining). Returns the last-received stage per
+/// participant. Both AllReduce planners lower through this one loop, so
+/// the dependency wiring cannot diverge between them.
+#[allow(clippy::too_many_arguments)]
+fn ring_steps(
+    plan: &mut GroupPlan,
+    tag: &mut u32,
+    seeds: &[u32],
+    hops: &[RingHop],
+    chunk: f64,
+    steps: usize,
+    send_name: impl Fn(usize, usize) -> String,
+    recv_name: impl Fn(usize, usize) -> String,
+) -> Vec<u32> {
+    let n = seeds.len();
+    let mut last = seeds.to_vec();
+    let mut prev_send: Vec<Option<u32>> = vec![None; n];
+    for step in 0..steps {
+        let mut this_recv: Vec<u32> = vec![0; n];
+        for (i, hop) in hops.iter().enumerate() {
+            let t = *tag;
+            *tag += 1;
+            let mut deps = vec![Dep::Stage(last[i])];
+            if let Some(ps) = prev_send[i] {
+                deps.push(Dep::Stage(ps));
+            }
+            let send = plan.push(Stage {
+                name: send_name(i, step),
+                kind: OpKind::Send,
+                device: hop.send_dev,
+                duration: hop.send_dur,
+                owner: hop.send_owner,
+                proc: hop.send_proc,
+                bytes: chunk,
+                tx: Some(t),
+                deps,
+                out_for: None,
+            });
+            this_recv[hop.dst] = plan.push(Stage {
+                name: recv_name(hop.dst, step),
+                kind: OpKind::Recv,
+                device: hop.recv_dev,
+                duration: hop.recv_dur,
+                owner: hop.recv_owner,
+                proc: hop.recv_proc,
+                bytes: chunk,
+                tx: Some(t),
+                deps: vec![Dep::Stage(send)],
+                out_for: None,
+            });
+            prev_send[i] = Some(send);
+        }
+        last = this_recv;
+    }
+    last
+}
+
+/// Horovod-style hierarchical AllReduce, modeled as NCCL models it: NVLink
+/// reduce within each machine, a flat-ring equivalent across machine NICs
+/// — `2(N−1)` pipelined chunk steps of `bytes/N` each, so every NIC
+/// crossing carries the full `2(N−1)/N × bytes` ring volume with per-chunk
+/// latency — then an NVLink broadcast back to local GPUs.
+pub struct HierAllReduce;
+
+impl CommPlanner for HierAllReduce {
+    fn scheme(&self) -> &'static str {
+        "Horovod"
+    }
+
+    fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan {
+        let c = ctx.cluster;
+        let gi = ctx.gi;
+        let m_count = c.n_machines();
+        let pbytes = ctx.gbytes / ctx.k as f64;
+        let mut plan = GroupPlan::default();
+        let neg = negotiate_stage(ctx, &mut plan);
+        let mut tag = 0u32;
+        for p in 0..ctx.k {
+            // per-worker GPU reduce-scatter kernel, then NVLink reduce
+            let mut reduced: Vec<u32> = Vec::with_capacity(m_count);
+            for m in 0..m_count {
+                let gpus = c.workers_on(m);
+                let mut rs_ids = Vec::with_capacity(gpus.len());
+                for &w in &gpus {
+                    rs_ids.push(plan.push(Stage {
+                        name: ctx.name(|| format!("w{w}.NCCL_RS.g{gi}.p{p}")),
+                        kind: OpKind::Aggregate,
+                        device: DeviceKey::Gpu(w as u16),
+                        duration: ctx.cost.gpu_collective(pbytes),
+                        owner: w as u16,
+                        proc: w as u16,
+                        bytes: pbytes,
+                        tx: None,
+                        deps: vec![Dep::Stage(neg)],
+                        out_for: None,
+                    }));
+                }
+                reduced.push(plan.push(Stage {
+                    name: ctx.name(|| format!("m{m}.RED.g{gi}.p{p}")),
+                    kind: OpKind::Aggregate,
+                    device: DeviceKey::NvLink(m as u16),
+                    duration: ctx.cost.reduce_local(pbytes, gpus.len()),
+                    owner: gpus[0] as u16,
+                    proc: gpus[0] as u16,
+                    bytes: pbytes,
+                    tx: None,
+                    deps: rs_ids.into_iter().map(Dep::Stage).collect(),
+                    out_for: None,
+                }));
+            }
+
+            // ring across machines: 2(N-1) flat-ring chunk steps of bytes/N
+            let mut last_recv = reduced;
+            if m_count > 1 {
+                let n = c.n_workers;
+                let chunk = pbytes / n as f64;
+                let hops: Vec<RingHop> = (0..m_count)
+                    .map(|m| {
+                        let dst = (m + 1) % m_count;
+                        RingHop {
+                            dst,
+                            send_dev: DeviceKey::LinkTx(m as u16),
+                            recv_dev: DeviceKey::LinkRx(dst as u16),
+                            send_dur: ctx.cost.send(chunk, false),
+                            recv_dur: ctx.cost.recv(chunk, false),
+                            send_owner: c.workers_on(m)[0] as u16,
+                            send_proc: c.workers_on(m)[0] as u16,
+                            recv_owner: c.workers_on(dst)[0] as u16,
+                            recv_proc: c.workers_on(dst)[0] as u16,
+                        }
+                    })
+                    .collect();
+                last_recv = ring_steps(
+                    &mut plan,
+                    &mut tag,
+                    &last_recv,
+                    &hops,
+                    chunk,
+                    2 * (n - 1),
+                    |m, step| ctx.name(|| format!("m{m}.SEND.g{gi}.p{p}.s{step}")),
+                    |dst, step| ctx.name(|| format!("m{dst}.RECV.g{gi}.p{p}.s{step}")),
+                );
+            }
+
+            // local broadcast + per-worker GPU all-gather feeding Out
+            for m in 0..m_count {
+                let gpus = c.workers_on(m);
+                let bc = plan.push(Stage {
+                    name: ctx.name(|| format!("m{m}.BCAST.g{gi}.p{p}")),
+                    kind: OpKind::Aggregate,
+                    device: DeviceKey::NvLink(m as u16),
+                    duration: ctx.cost.bcast_local(pbytes, gpus.len()),
+                    owner: gpus[0] as u16,
+                    proc: gpus[0] as u16,
+                    bytes: pbytes,
+                    tx: None,
+                    deps: vec![Dep::Stage(last_recv[m])],
+                    out_for: None,
+                });
+                for w in gpus {
+                    plan.push(Stage {
+                        name: ctx.name(|| format!("w{w}.NCCL_AG.g{gi}.p{p}")),
+                        kind: OpKind::Aggregate,
+                        device: DeviceKey::Gpu(w as u16),
+                        duration: ctx.cost.gpu_collective(pbytes),
+                        owner: w as u16,
+                        proc: w as u16,
+                        bytes: pbytes,
+                        tx: None,
+                        deps: vec![Dep::Stage(bc)],
+                        out_for: Some(w as u16),
+                    });
+                }
+            }
+        }
+        plan
+    }
+}
+
+/// Flat ring AllReduce over *workers*: no NVLink hierarchy — all `n`
+/// workers form one ring and run `2(n−1)` pipelined chunk steps of
+/// `bytes/n`. Intra-machine hops ride NVLink, machine-boundary hops the
+/// NIC; each NIC still carries the `2(n−1)/n × bytes` ring volume, but the
+/// NVLink devices now serialize every intra-machine hop — exactly the
+/// hierarchy-blindness this scheme exists to model.
+pub struct RingAllReduce;
+
+impl CommPlanner for RingAllReduce {
+    fn scheme(&self) -> &'static str {
+        "Ring"
+    }
+
+    fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan {
+        let c = ctx.cluster;
+        let gi = ctx.gi;
+        let n = c.n_workers;
+        let pbytes = ctx.gbytes / ctx.k as f64;
+        let mut plan = GroupPlan::default();
+        let neg = negotiate_stage(ctx, &mut plan);
+        let mut tag = 0u32;
+        for p in 0..ctx.k {
+            let chunk = pbytes / n as f64;
+            // per-worker reduce-scatter kernel seeds the ring
+            let mut last: Vec<u32> = (0..n)
+                .map(|w| {
+                    plan.push(Stage {
+                        name: ctx.name(|| format!("w{w}.RING_RS.g{gi}.p{p}")),
+                        kind: OpKind::Aggregate,
+                        device: DeviceKey::Gpu(w as u16),
+                        duration: ctx.cost.gpu_collective(pbytes),
+                        owner: w as u16,
+                        proc: w as u16,
+                        bytes: pbytes,
+                        tx: None,
+                        deps: vec![Dep::Stage(neg)],
+                        out_for: None,
+                    })
+                })
+                .collect();
+            if n > 1 {
+                let hops: Vec<RingHop> = (0..n)
+                    .map(|w| {
+                        let dst = (w + 1) % n;
+                        let (wm, dm) = (c.machine_of(w), c.machine_of(dst));
+                        let intra = wm == dm;
+                        RingHop {
+                            dst,
+                            send_dev: if intra {
+                                DeviceKey::NvLink(wm as u16)
+                            } else {
+                                DeviceKey::LinkTx(wm as u16)
+                            },
+                            recv_dev: if intra {
+                                DeviceKey::NvLink(dm as u16)
+                            } else {
+                                DeviceKey::LinkRx(dm as u16)
+                            },
+                            send_dur: ctx.cost.send(chunk, intra),
+                            recv_dur: if intra { 0.0 } else { ctx.cost.recv(chunk, false) },
+                            send_owner: w as u16,
+                            send_proc: w as u16,
+                            recv_owner: dst as u16,
+                            recv_proc: dst as u16,
+                        }
+                    })
+                    .collect();
+                last = ring_steps(
+                    &mut plan,
+                    &mut tag,
+                    &last,
+                    &hops,
+                    chunk,
+                    2 * (n - 1),
+                    |w, step| ctx.name(|| format!("w{w}.RSEND.g{gi}.p{p}.s{step}")),
+                    |dst, step| ctx.name(|| format!("w{dst}.RRECV.g{gi}.p{p}.s{step}")),
+                );
+            }
+            for (w, &tail) in last.iter().enumerate() {
+                plan.push(Stage {
+                    name: ctx.name(|| format!("w{w}.RING_AG.g{gi}.p{p}")),
+                    kind: OpKind::Aggregate,
+                    device: DeviceKey::Gpu(w as u16),
+                    duration: ctx.cost.gpu_collective(pbytes),
+                    owner: w as u16,
+                    proc: w as u16,
+                    bytes: pbytes,
+                    tx: None,
+                    deps: vec![Dep::Stage(tail)],
+                    out_for: Some(w as u16),
+                });
+            }
+        }
+        plan
+    }
+}
+
+/// One PS client endpoint for [`push_pull_stages`]: whoever pushes a
+/// partition to the server and pulls it back — a worker for flat PS, a
+/// machine representative for tree PS.
+struct PsEndpoint {
+    /// The endpoint's already-created seed stage holding the local
+    /// contribution (D2H for flat PS, the machine-local reduce for tree).
+    seed: u32,
+    owner: u16,
+    proc: u16,
+    machine: usize,
+}
+
+/// The five server-facing stage roles, for the naming callback.
+enum PsWire {
+    PushSend,
+    PushRecv,
+    Agg,
+    PullSend,
+    PullRecv,
+}
+
+/// The shared PS round trip: every endpoint pushes (SEND → RECV →
+/// server-CPU aggregate), and — synchronous training — every pull waits on
+/// *all* aggregates before coming back (SEND → RECV). Intra-machine hops
+/// ride NVLink with zero-duration recvs, inter-machine hops the NIC. Both
+/// PS planners lower through this one routine, so the wiring and the
+/// device conventions cannot diverge between them. Returns each
+/// endpoint's PULL_RECV stage for the planner-specific tail (H2D fan-out
+/// or broadcast).
+#[allow(clippy::too_many_arguments)]
+fn push_pull_stages(
+    plan: &mut GroupPlan,
+    ctx: &PlanCtx,
+    tag: &mut u32,
+    server_machine: usize,
+    sproc: u16,
+    server: u16,
+    pbytes: f64,
+    endpoints: &[PsEndpoint],
+    name: impl Fn(PsWire, usize) -> String,
+) -> Vec<u32> {
+    let mut aggs: Vec<u32> = Vec::with_capacity(endpoints.len());
+    for (i, ep) in endpoints.iter().enumerate() {
+        let intra = ep.machine == server_machine;
+        let t = *tag;
+        *tag += 1;
+        let push_send = plan.push(Stage {
+            name: name(PsWire::PushSend, i),
+            kind: OpKind::Send,
+            device: if intra {
+                DeviceKey::NvLink(ep.machine as u16)
+            } else {
+                DeviceKey::LinkTx(ep.machine as u16)
+            },
+            duration: ctx.cost.send(pbytes, intra),
+            owner: ep.owner,
+            proc: ep.proc,
+            bytes: pbytes,
+            tx: Some(t),
+            deps: vec![Dep::Stage(ep.seed)],
+            out_for: None,
+        });
+        let push_recv = plan.push(Stage {
+            name: name(PsWire::PushRecv, i),
+            kind: OpKind::Recv,
+            device: if intra {
+                DeviceKey::NvLink(server_machine as u16)
+            } else {
+                DeviceKey::LinkRx(server_machine as u16)
+            },
+            duration: if intra { 0.0 } else { ctx.cost.recv(pbytes, false) },
+            owner: ep.owner,
+            proc: sproc,
+            bytes: pbytes,
+            tx: Some(t),
+            deps: vec![Dep::Stage(push_send)],
+            out_for: None,
+        });
+        aggs.push(plan.push(Stage {
+            name: name(PsWire::Agg, i),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::PsCpu(server),
+            duration: ctx.cost.aggregate(pbytes),
+            owner: ep.owner,
+            proc: sproc,
+            bytes: pbytes,
+            tx: None,
+            deps: vec![Dep::Stage(push_recv)],
+            out_for: None,
+        }));
+    }
+
+    let mut pulls: Vec<u32> = Vec::with_capacity(endpoints.len());
+    for (i, ep) in endpoints.iter().enumerate() {
+        let intra = ep.machine == server_machine;
+        let t = *tag;
+        *tag += 1;
+        let pull_send = plan.push(Stage {
+            name: name(PsWire::PullSend, i),
+            kind: OpKind::Send,
+            device: if intra {
+                DeviceKey::NvLink(server_machine as u16)
+            } else {
+                DeviceKey::LinkTx(server_machine as u16)
+            },
+            duration: ctx.cost.send(pbytes, intra),
+            owner: ep.owner,
+            proc: ep.proc,
+            bytes: pbytes,
+            tx: Some(t),
+            deps: aggs.iter().map(|&a| Dep::Stage(a)).collect(),
+            out_for: None,
+        });
+        pulls.push(plan.push(Stage {
+            name: name(PsWire::PullRecv, i),
+            kind: OpKind::Recv,
+            device: if intra {
+                DeviceKey::NvLink(ep.machine as u16)
+            } else {
+                DeviceKey::LinkRx(ep.machine as u16)
+            },
+            duration: if intra { 0.0 } else { ctx.cost.recv(pbytes, false) },
+            owner: ep.owner,
+            proc: ep.proc,
+            bytes: pbytes,
+            tx: Some(t),
+            deps: vec![Dep::Stage(pull_send)],
+            out_for: None,
+        }));
+    }
+    pulls
+}
+
+/// BytePS-style flat PS: every worker PUSHes each partition to its server
+/// (D2H → SEND → RECV → server-CPU aggregate), and once all contributions
+/// are in, PULLs it back (SEND → RECV → H2D). Server placement is keyed by
+/// the group's first tensor id (stable under fusion).
+pub struct PsPushPull {
+    pub n_servers: usize,
+}
+
+impl CommPlanner for PsPushPull {
+    fn scheme(&self) -> &'static str {
+        "BytePS"
+    }
+
+    fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan {
+        let c = ctx.cluster;
+        let gi = ctx.gi;
+        let n_workers = c.n_workers;
+        let pbytes = ctx.gbytes / ctx.k as f64;
+        let mut plan = GroupPlan::default();
+        let mut tag = 0u32;
+        for p in 0..ctx.k {
+            let server = (ctx.first_tensor as usize + p) % self.n_servers;
+            // PS `server` runs on machine `server` (colocated mode).
+            let server_machine = server % c.n_machines().max(1);
+            let sproc = (n_workers + server) as u16;
+
+            // every worker stages its contribution (D2H) and is its own
+            // push/pull endpoint
+            let endpoints: Vec<PsEndpoint> = (0..n_workers)
+                .map(|w| {
+                    let d2h = plan.push(Stage {
+                        name: ctx.name(|| format!("w{w}.D2H.g{gi}.p{p}")),
+                        kind: OpKind::Aggregate,
+                        device: DeviceKey::Gpu(w as u16),
+                        duration: ctx.cost.gpu_collective(pbytes),
+                        owner: w as u16,
+                        proc: w as u16,
+                        bytes: pbytes,
+                        tx: None,
+                        deps: vec![Dep::In(w as u16)],
+                        out_for: None,
+                    });
+                    PsEndpoint {
+                        seed: d2h,
+                        owner: w as u16,
+                        proc: w as u16,
+                        machine: c.machine_of(w),
+                    }
+                })
+                .collect();
+
+            let pulls = push_pull_stages(
+                &mut plan,
+                ctx,
+                &mut tag,
+                server_machine,
+                sproc,
+                server as u16,
+                pbytes,
+                &endpoints,
+                |wire, w| {
+                    ctx.name(|| match wire {
+                        PsWire::PushSend => format!("w{w}.PUSH_SEND.g{gi}.p{p}"),
+                        PsWire::PushRecv => format!("s{server}.PUSH_RECV.g{gi}.p{p}.w{w}"),
+                        PsWire::Agg => format!("s{server}.AGG.g{gi}.p{p}.w{w}"),
+                        PsWire::PullSend => format!("s{server}.PULL_SEND.g{gi}.p{p}.w{w}"),
+                        PsWire::PullRecv => format!("w{w}.PULL_RECV.g{gi}.p{p}"),
+                    })
+                },
+            );
+
+            for (w, &pull_recv) in pulls.iter().enumerate() {
+                plan.push(Stage {
+                    name: ctx.name(|| format!("w{w}.H2D.g{gi}.p{p}")),
+                    kind: OpKind::Aggregate,
+                    device: DeviceKey::Gpu(w as u16),
+                    duration: ctx.cost.gpu_collective(pbytes),
+                    owner: w as u16,
+                    proc: w as u16,
+                    bytes: pbytes,
+                    tx: None,
+                    deps: vec![Dep::Stage(pull_recv)],
+                    out_for: Some(w as u16),
+                });
+            }
+        }
+        plan
+    }
+}
+
+/// Tree/hierarchical PS: each machine first reduces the partition over
+/// NVLink (per-worker D2H → machine-local aggregate), then one
+/// representative per *machine* pushes to the server and pulls the result
+/// back, and an NVLink broadcast + per-worker H2D fans it out. Cuts the
+/// server's ingress from `n_workers` to `n_machines` messages.
+pub struct PsTree {
+    pub n_servers: usize,
+}
+
+impl CommPlanner for PsTree {
+    fn scheme(&self) -> &'static str {
+        "PS-Tree"
+    }
+
+    fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan {
+        let c = ctx.cluster;
+        let gi = ctx.gi;
+        let n_workers = c.n_workers;
+        let m_count = c.n_machines();
+        let pbytes = ctx.gbytes / ctx.k as f64;
+        let mut plan = GroupPlan::default();
+        let mut tag = 0u32;
+        for p in 0..ctx.k {
+            let server = (ctx.first_tensor as usize + p) % self.n_servers;
+            let server_machine = server % m_count.max(1);
+            let sproc = (n_workers + server) as u16;
+
+            // the tree: per-worker D2H, machine-local NVLink reduce, and
+            // one push/pull endpoint per *machine* (its representative)
+            let endpoints: Vec<PsEndpoint> = (0..m_count)
+                .map(|m| {
+                    let gpus = c.workers_on(m);
+                    let rep = gpus[0] as u16;
+                    let d2h_ids: Vec<u32> = gpus
+                        .iter()
+                        .map(|&w| {
+                            plan.push(Stage {
+                                name: ctx.name(|| format!("w{w}.D2H.g{gi}.p{p}")),
+                                kind: OpKind::Aggregate,
+                                device: DeviceKey::Gpu(w as u16),
+                                duration: ctx.cost.gpu_collective(pbytes),
+                                owner: w as u16,
+                                proc: w as u16,
+                                bytes: pbytes,
+                                tx: None,
+                                deps: vec![Dep::In(w as u16)],
+                                out_for: None,
+                            })
+                        })
+                        .collect();
+                    let tred = plan.push(Stage {
+                        name: ctx.name(|| format!("m{m}.TRED.g{gi}.p{p}")),
+                        kind: OpKind::Aggregate,
+                        device: DeviceKey::NvLink(m as u16),
+                        duration: ctx.cost.reduce_local(pbytes, gpus.len()),
+                        owner: rep,
+                        proc: rep,
+                        bytes: pbytes,
+                        tx: None,
+                        deps: d2h_ids.into_iter().map(Dep::Stage).collect(),
+                        out_for: None,
+                    });
+                    PsEndpoint { seed: tred, owner: rep, proc: rep, machine: m }
+                })
+                .collect();
+
+            let pulls = push_pull_stages(
+                &mut plan,
+                ctx,
+                &mut tag,
+                server_machine,
+                sproc,
+                server as u16,
+                pbytes,
+                &endpoints,
+                |wire, m| {
+                    ctx.name(|| match wire {
+                        PsWire::PushSend => format!("m{m}.TPUSH_SEND.g{gi}.p{p}"),
+                        PsWire::PushRecv => format!("s{server}.TPUSH_RECV.g{gi}.p{p}.m{m}"),
+                        PsWire::Agg => format!("s{server}.TAGG.g{gi}.p{p}.m{m}"),
+                        PsWire::PullSend => format!("s{server}.TPULL_SEND.g{gi}.p{p}.m{m}"),
+                        PsWire::PullRecv => format!("m{m}.TPULL_RECV.g{gi}.p{p}"),
+                    })
+                },
+            );
+
+            // machine-local broadcast + per-worker H2D fan-out feeding Out
+            for (m, &pull_recv) in pulls.iter().enumerate() {
+                let gpus = c.workers_on(m);
+                let rep = gpus[0] as u16;
+                let tbc = plan.push(Stage {
+                    name: ctx.name(|| format!("m{m}.TBC.g{gi}.p{p}")),
+                    kind: OpKind::Aggregate,
+                    device: DeviceKey::NvLink(m as u16),
+                    duration: ctx.cost.bcast_local(pbytes, gpus.len()),
+                    owner: rep,
+                    proc: rep,
+                    bytes: pbytes,
+                    tx: None,
+                    deps: vec![Dep::Stage(pull_recv)],
+                    out_for: None,
+                });
+                for w in gpus {
+                    plan.push(Stage {
+                        name: ctx.name(|| format!("w{w}.H2D.g{gi}.p{p}")),
+                        kind: OpKind::Aggregate,
+                        device: DeviceKey::Gpu(w as u16),
+                        duration: ctx.cost.gpu_collective(pbytes),
+                        owner: w as u16,
+                        proc: w as u16,
+                        bytes: pbytes,
+                        tx: None,
+                        deps: vec![Dep::Stage(tbc)],
+                        out_for: Some(w as u16),
+                    });
+                }
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, JobSpec, NetworkSpec, Transport, ALL_SCHEMES};
+    use crate::graph::build::AnalyticCost;
+
+    fn spec_for(scheme: &str) -> JobSpec {
+        JobSpec::standard("vgg16", scheme, Transport::Rdma)
+    }
+
+    fn ctx_plan(scheme: &str, gbytes: f64, k: usize) -> (JobSpec, GroupPlan) {
+        let spec = spec_for(scheme);
+        let plan = {
+            let cost = AnalyticCost::new(&spec);
+            let ctx = PlanCtx {
+                cluster: &spec.cluster,
+                cost: &cost,
+                with_names: true,
+                gi: 0,
+                gbytes,
+                k,
+                first_tensor: 0,
+            };
+            planner_for(&spec.scheme).plan_group(&ctx)
+        };
+        plan.validate(spec.cluster.n_workers).unwrap();
+        (spec, plan)
+    }
+
+    #[test]
+    fn every_scheme_plans_and_validates() {
+        for scheme in ALL_SCHEMES {
+            let (spec, plan) = ctx_plan(scheme, 8.0e6, 3);
+            assert!(!plan.stages.is_empty(), "{scheme}");
+            // every worker reachable, all deps backward (validate checked)
+            let tails = plan.stages.iter().filter(|s| s.out_for.is_some()).count();
+            assert_eq!(tails, spec.cluster.n_workers * 3, "{scheme}: one tail per worker per partition");
+        }
+    }
+
+    // ---- golden plans: stage counts, kinds, devices, byte splits ----
+
+    #[test]
+    fn golden_hier_allreduce_plan() {
+        // 16 workers / 2 machines, k=1: 1 neg + per machine (8 RS + 1 RED)
+        // + 2(16-1)=30 steps × 2 machines × (send+recv) + per machine
+        // (1 BCAST + 8 AG)
+        let (spec, plan) = ctx_plan("horovod", 16.0e6, 1);
+        let n = spec.cluster.n_workers;
+        assert_eq!(plan.stages.len(), 1 + 2 * 9 + 30 * 2 * 2 + 2 * 9);
+        assert_eq!(plan.stages[0].kind, OpKind::Negotiate);
+        assert_eq!(plan.stages[0].bytes, 16.0e6);
+        let sends: Vec<&Stage> =
+            plan.stages.iter().filter(|s| s.kind == OpKind::Send).collect();
+        assert_eq!(sends.len(), 30 * 2);
+        for s in &sends {
+            assert!(matches!(s.device, DeviceKey::LinkTx(_)), "ring sends cross NICs");
+            assert_eq!(s.bytes, 16.0e6 / n as f64, "chunk = bytes/N");
+        }
+        assert!(!plan.uses_servers());
+        // ring volume on the critical path: 2(N-1)/N of the bytes
+        let f = plan.critical_path_send_bytes() / 16.0e6;
+        let expect = 2.0 * (n as f64 - 1.0) / n as f64;
+        assert!((f - expect).abs() < 1e-9, "factor {f} vs {expect}");
+    }
+
+    #[test]
+    fn golden_ring_plan() {
+        // flat worker ring: 1 neg + 16 RS + 2(16-1)=30 steps × 16 workers
+        // × (send+recv) + 16 AG
+        let (spec, plan) = ctx_plan("ring", 16.0e6, 1);
+        let n = spec.cluster.n_workers;
+        assert_eq!(plan.stages.len(), 1 + n + 30 * n * 2 + n);
+        let sends: Vec<&Stage> =
+            plan.stages.iter().filter(|s| s.kind == OpKind::Send).collect();
+        assert_eq!(sends.len(), 30 * n);
+        // hierarchy-blind: most hops stay on NVLink, machine-boundary hops
+        // (2 of 16 per step) take the NIC
+        let nic = sends.iter().filter(|s| matches!(s.device, DeviceKey::LinkTx(_))).count();
+        let nvl = sends.iter().filter(|s| matches!(s.device, DeviceKey::NvLink(_))).count();
+        assert_eq!(nic, 30 * 2);
+        assert_eq!(nvl, 30 * (n - 2));
+        for s in &sends {
+            assert_eq!(s.bytes, 16.0e6 / n as f64, "chunk = bytes/n");
+        }
+        assert!(!plan.uses_servers());
+        let f = plan.critical_path_send_bytes() / 16.0e6;
+        let expect = 2.0 * (n as f64 - 1.0) / n as f64;
+        assert!((f - expect).abs() < 1e-9, "factor {f} vs {expect}");
+    }
+
+    #[test]
+    fn golden_ps_plan() {
+        // per worker: D2H, PUSH_SEND, PUSH_RECV, AGG then PULL_SEND,
+        // PULL_RECV, H2D — 7 stages × 16 workers, k=2 doubles it
+        let (spec, plan) = ctx_plan("byteps", 8.0e6, 2);
+        let n = spec.cluster.n_workers;
+        assert_eq!(plan.stages.len(), 7 * n * 2);
+        let aggs = plan
+            .stages
+            .iter()
+            .filter(|s| matches!(s.device, DeviceKey::PsCpu(_)))
+            .count();
+        assert_eq!(aggs, n * 2, "one server aggregate per worker per partition");
+        assert!(plan.uses_servers());
+        // partitions split the bytes evenly
+        for s in plan.stages.iter().filter(|s| s.kind == OpKind::Send) {
+            assert_eq!(s.bytes, 4.0e6, "pbytes = gbytes/k");
+        }
+        // push + pull on the critical path
+        let f = plan.critical_path_send_bytes() / 4.0e6;
+        assert!((f - 2.0).abs() < 1e-9, "factor {f}");
+        // k=2 places partitions on different servers
+        let servers: std::collections::HashSet<u16> = plan
+            .stages
+            .iter()
+            .filter_map(|s| match s.device {
+                DeviceKey::PsCpu(x) => Some(x),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(servers.len(), 2);
+    }
+
+    #[test]
+    fn golden_ps_tree_plan() {
+        // per machine: 8 D2H + TRED + TPUSH_SEND + TPUSH_RECV + TAGG, then
+        // TPULL_SEND + TPULL_RECV + TBC + 8 H2D — (8+4) + (3+8) per machine
+        let (spec, plan) = ctx_plan("ps-tree", 8.0e6, 1);
+        let m = spec.cluster.n_machines();
+        let g = spec.cluster.gpus_per_machine;
+        assert_eq!(plan.stages.len(), m * (g + 4) + m * (3 + g));
+        // the tree: server ingress is per machine, not per worker
+        let aggs = plan
+            .stages
+            .iter()
+            .filter(|s| matches!(s.device, DeviceKey::PsCpu(_)))
+            .count();
+        assert_eq!(aggs, m);
+        let sends = plan.stages.iter().filter(|s| s.kind == OpKind::Send).count();
+        assert_eq!(sends, 2 * m, "one push + one pull per machine");
+        assert!(plan.uses_servers());
+        let f = plan.critical_path_send_bytes() / 8.0e6;
+        assert!((f - 2.0).abs() < 1e-9, "factor {f}");
+        // machine-local reduce sized to the machine's GPU count
+        let treds = plan
+            .stages
+            .iter()
+            .filter(|s| matches!(s.device, DeviceKey::NvLink(_)) && s.kind == OpKind::Aggregate)
+            .count();
+        assert_eq!(treds, 2 * m, "one TRED + one TBC per machine");
+    }
+
+    #[test]
+    fn plan_props_agree_with_scheme_declarations() {
+        for scheme in ALL_SCHEMES {
+            let spec = spec_for(scheme);
+            let props = plan_props(&spec);
+            assert_eq!(
+                props.uses_servers,
+                spec.scheme.uses_servers(),
+                "{scheme}: IR-derived and declared uses_servers diverge"
+            );
+            assert!(props.stages_per_group > 0, "{scheme}");
+            assert!(
+                props.critical_path_wire_factor > 0.0
+                    && props.critical_path_wire_factor <= 2.0 + 1e-9,
+                "{scheme}: factor {}",
+                props.critical_path_wire_factor
+            );
+        }
+    }
+
+    #[test]
+    fn single_machine_plans_have_no_nic_traffic() {
+        for scheme in ["horovod", "ring"] {
+            let model = crate::models::by_name("vgg16", 8).unwrap();
+            let cluster = ClusterSpec::new(8, 8, NetworkSpec::rdma_100g());
+            let spec = JobSpec::with_scheme_name(model, cluster, scheme);
+            let cost = AnalyticCost::new(&spec);
+            let ctx = PlanCtx {
+                cluster: &spec.cluster,
+                cost: &cost,
+                with_names: false,
+                gi: 0,
+                gbytes: 4.0e6,
+                k: 1,
+                first_tensor: 0,
+            };
+            let plan = planner_for(&spec.scheme).plan_group(&ctx);
+            plan.validate(8).unwrap();
+            let nic = plan
+                .stages
+                .iter()
+                .filter(|s| matches!(s.device, DeviceKey::LinkTx(_) | DeviceKey::LinkRx(_)))
+                .count();
+            assert_eq!(nic, 0, "{scheme}: single machine must not touch the NIC");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_plans() {
+        let mut plan = GroupPlan::default();
+        plan.push(Stage {
+            name: String::new(),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::Gpu(0),
+            duration: 1.0,
+            owner: 0,
+            proc: 0,
+            bytes: 1.0,
+            tx: None,
+            deps: vec![Dep::Stage(5)], // forward reference
+            out_for: Some(0),
+        });
+        assert!(plan.validate(1).is_err());
+        let mut plan = GroupPlan::default();
+        plan.push(Stage {
+            name: String::new(),
+            kind: OpKind::Recv, // tx opened by a Recv
+            device: DeviceKey::LinkRx(0),
+            duration: 1.0,
+            owner: 0,
+            proc: 0,
+            bytes: 1.0,
+            tx: Some(0),
+            deps: vec![],
+            out_for: Some(0),
+        });
+        assert!(plan.validate(1).is_err());
+        // a worker with no chain tail
+        let mut plan = GroupPlan::default();
+        plan.push(Stage {
+            name: String::new(),
+            kind: OpKind::Aggregate,
+            device: DeviceKey::Gpu(0),
+            duration: 1.0,
+            owner: 0,
+            proc: 0,
+            bytes: 1.0,
+            tx: None,
+            deps: vec![],
+            out_for: Some(0),
+        });
+        assert!(plan.validate(2).is_err());
+        // a tx-paired Recv that does not causally depend on its Send
+        let mut plan = GroupPlan::default();
+        plan.push(Stage {
+            name: String::new(),
+            kind: OpKind::Send,
+            device: DeviceKey::LinkTx(0),
+            duration: 1.0,
+            owner: 0,
+            proc: 0,
+            bytes: 1.0,
+            tx: Some(7),
+            deps: vec![],
+            out_for: None,
+        });
+        plan.push(Stage {
+            name: String::new(),
+            kind: OpKind::Recv,
+            device: DeviceKey::LinkRx(0),
+            duration: 1.0,
+            owner: 0,
+            proc: 0,
+            bytes: 1.0,
+            tx: Some(7),
+            deps: vec![], // missing Dep::Stage(0)
+            out_for: Some(0),
+        });
+        assert!(plan.validate(1).is_err());
+    }
+}

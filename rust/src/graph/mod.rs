@@ -1,12 +1,15 @@
-//! Data-flow-graph layer: arena DFG, and global-DFG construction from a
-//! job spec (local DFGs × fine-grained communication topology, §4.1).
+//! Data-flow-graph layer: arena DFG, the comm-plan IR + per-scheme
+//! planners, and global-DFG construction from a job spec (local DFGs ×
+//! fine-grained communication topology, §4.1).
 
 pub mod build;
+pub mod comm_plan;
 pub mod dfg;
 pub mod mutable;
 
 pub use build::{
     build_count, build_global, build_global_nameless, AnalyticCost, CostProvider, GlobalDfg,
 };
+pub use comm_plan::{plan_props, CommPlanner, Dep, GroupPlan, PlanCtx, PlanProps, Stage};
 pub use dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorId, TensorMeta};
 pub use mutable::{ChangeLog, MutableGraph};

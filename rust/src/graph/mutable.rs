@@ -29,7 +29,8 @@
 //! drains to confine its recomputation to the affected cone.
 
 use crate::config::JobSpec;
-use crate::graph::build::{build_group_comm, AnalyticCost, CostProvider};
+use crate::graph::build::{AnalyticCost, CostProvider};
+use crate::graph::comm_plan::build_group_comm;
 use crate::graph::dfg::{DeviceKey, Dfg, NodeId, OpKind};
 use crate::graph::{build_global_nameless, GlobalDfg};
 use crate::optimizer::passes::{self, PassError};

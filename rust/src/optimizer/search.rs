@@ -14,9 +14,9 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::config::{CommScheme, JobSpec};
+use crate::config::JobSpec;
 use crate::graph::dfg::{NodeId, OpKind, TensorId};
-use crate::graph::{build_global_nameless, AnalyticCost, MutableGraph};
+use crate::graph::{build_global_nameless, plan_props, AnalyticCost, MutableGraph};
 use crate::optimizer::memopt::{self, MemOpt};
 use crate::optimizer::{coarsen, passes, symmetry::SymmetryIndex};
 use crate::replay::incremental::IncrementalReplayer;
@@ -33,8 +33,11 @@ pub struct SearchOpts {
     pub use_symmetry: bool,
     pub enable_op_fusion: bool,
     pub enable_tensor_fusion: bool,
-    /// Tensor partition (paper: most valuable under PS). `None` = auto
-    /// (on for BytePS, off for Horovod).
+    /// Tensor partition (paper: most valuable under PS). `None` = auto —
+    /// on when the scheme's lowered plan routes through servers (its
+    /// per-partition chains pipeline push against pull), off for
+    /// collective schemes. Decided from plan properties
+    /// ([`crate::graph::plan_props`]), never from the scheme enum.
     pub enable_partition: Option<bool>,
     pub memory_budget_bytes: Option<f64>,
     pub max_rounds: usize,
@@ -247,7 +250,7 @@ pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
 
     let partition_enabled = opts
         .enable_partition
-        .unwrap_or(matches!(spec.scheme, CommScheme::Ps(_)));
+        .unwrap_or_else(|| plan_props(&spec).uses_servers);
     let sym = opts.use_symmetry.then(|| SymmetryIndex::new(&spec.model));
     let mut tsync = Tsync::new(
         &spec,
@@ -614,6 +617,35 @@ mod tests {
             without.full_replays_for_tsync
         );
         assert!(with.wall_s <= without.wall_s + 0.5, "with={} without={}", with.wall_s, without.wall_s);
+    }
+
+    #[test]
+    fn search_is_scheme_blind() {
+        // the search loop must run unmodified on the pluggable schemes:
+        // zero rebuilds, valid plans, and no regression of the estimate
+        for scheme in ["ring", "ps-tree"] {
+            let spec = JobSpec::standard("vgg16", scheme, Transport::Rdma);
+            let mut o = quick_opts();
+            o.max_rounds = 3;
+            let out = optimize(&spec, &o);
+            assert_eq!(out.builds_during_search, 0, "{scheme}");
+            // mechanics, not magnitude: the estimate must stay in the
+            // baseline's ballpark (coarsening alone is allowed ~5% slack
+            // elsewhere in the suite)
+            assert!(
+                out.est_iteration_us <= out.baseline_iteration_us * 1.05,
+                "{scheme}: est {} vs base {}",
+                out.est_iteration_us,
+                out.baseline_iteration_us
+            );
+            assert_eq!(out.spec.plan.validate(&out.spec.model), Ok(()), "{scheme}");
+            assert_eq!(out.spec.fusion.validate(&out.spec.model), Ok(()), "{scheme}");
+        }
+        // auto partition-enabling keys off plan properties, not the enum
+        let ps_tree = JobSpec::standard("vgg16", "ps-tree", Transport::Rdma);
+        let ring = JobSpec::standard("vgg16", "ring", Transport::Rdma);
+        assert!(crate::graph::plan_props(&ps_tree).uses_servers);
+        assert!(!crate::graph::plan_props(&ring).uses_servers);
     }
 
     #[test]

@@ -38,9 +38,11 @@ pub fn corrected_profile(trace: &GTrace, alignment: &Alignment) -> ProfileDb {
     let mut order: Vec<usize> = (0..trace.events.len()).collect();
     order.sort_by(|&a, &b| {
         let (ea, eb) = (&trace.events[a], &trace.events[b]);
-        (ea.proc, ea.iter, ea.ts + ea.dur)
-            .partial_cmp(&(eb.proc, eb.iter, eb.ts + eb.dur))
-            .unwrap()
+        // total_cmp: a NaN timestamp in a hand-edited trace must not panic
+        // the profiler (NaNs sort last instead)
+        (ea.proc, ea.iter)
+            .cmp(&(eb.proc, eb.iter))
+            .then((ea.ts + ea.dur).total_cmp(&(eb.ts + eb.dur)))
     });
     let mut prev_end: Vec<f64> = vec![f64::NEG_INFINITY; trace.events.len()];
     let mut last: HashMap<(u16, u32), f64> = HashMap::new();

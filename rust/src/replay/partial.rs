@@ -6,12 +6,19 @@
 //! The estimator never constructs graphs on the query path: for each
 //! partition count `k` it keeps one *probe engine* — the tiny comm
 //! subgraph plus per-node affine duration coefficients `(α, β)` extracted
-//! from two reference sizes (every cost-model term is affine in the moved
-//! bytes: wire time and aggregation are linear, per-message overheads and
-//! latencies constant). A query sets `duration_i = α_i + β_i·s` on the
-//! long-lived [`Replayer`] and replays in place, so the optimizer's
+//! from two reference sizes. A query sets `duration_i = α_i + β_i·s` on
+//! the long-lived [`Replayer`] and replays in place, so the optimizer's
 //! `OptPartNum` grid search costs zero builds and zero allocations after
 //! warm-up. Results are additionally memoized on (rounded size, k).
+//!
+//! The engine is **scheme-blind**: the probe graph is lowered through the
+//! comm-plan IR like any other, and the affinity assumption is a planner
+//! contract ([`crate::graph::comm_plan`] module docs §4 — every stage
+//! duration is affine in the moved bytes, because every cost-model term
+//! is: wire time and aggregation linear, per-message overheads and
+//! latencies constant). Any scheme whose planner honors that contract gets
+//! exact `t_sync` probes for free; `affine_probe_matches_direct_build`
+//! pins it across all registered schemes.
 
 use std::collections::HashMap;
 
@@ -228,27 +235,49 @@ mod tests {
     #[test]
     fn affine_probe_matches_direct_build() {
         // the affine evaluation must agree with building the probe graph
-        // at the queried size directly
+        // at the queried size directly, for every registered scheme.
         // a 1 KB-bucket-exact size, so memo quantization is a no-op and
         // the two paths evaluate the same operating point
         let bytes = 8192.0 * 1024.0;
-        let job = JobSpec::standard("resnet50", "byteps", Transport::Rdma);
-        let mut est = TsyncEstimator::new(&job);
-        let via_affine = est.t_sync(bytes, 4);
-        let mut s = job.clone();
-        s.model = one_tensor_model(bytes);
-        s.fusion = FusionPlan::singletons(&s.model);
-        s.plan =
-            CommPlan { groups: vec![TensorGroup { tensors: vec![0], partitions: 4 }] };
-        let g = build_global_nameless(&s, &AnalyticCost::new(&s));
-        let r = crate::replay::replay_once(&g);
-        let mut direct = 0.0f64;
-        for i in g.dfg.ids() {
-            if g.dfg.node(i).kind == OpKind::Out {
-                direct = direct.max(r.end[i as usize]);
+        for scheme in crate::config::ALL_SCHEMES {
+            let job = JobSpec::standard("resnet50", scheme, Transport::Rdma);
+            let mut est = TsyncEstimator::new(&job);
+            let via_affine = est.t_sync(bytes, 4);
+            let mut s = job.clone();
+            s.model = one_tensor_model(bytes);
+            s.fusion = FusionPlan::singletons(&s.model);
+            s.plan =
+                CommPlan { groups: vec![TensorGroup { tensors: vec![0], partitions: 4 }] };
+            let g = build_global_nameless(&s, &AnalyticCost::new(&s));
+            let r = crate::replay::replay_once(&g);
+            let mut direct = 0.0f64;
+            for i in g.dfg.ids() {
+                if g.dfg.node(i).kind == OpKind::Out {
+                    direct = direct.max(r.end[i as usize]);
+                }
+            }
+            let rel = (via_affine - direct).abs() / direct.max(1e-9);
+            assert!(rel < 1e-9, "{scheme}: affine {via_affine} vs direct {direct}");
+        }
+    }
+
+    #[test]
+    fn tsync_scheme_blind_queries_never_build() {
+        // prebuilt probe engines answer queries with zero graph builds for
+        // every scheme, and partitioning helps large tensors under both PS
+        // variants (their per-partition chains pipeline push against pull)
+        for scheme in crate::config::ALL_SCHEMES {
+            let job = JobSpec::standard("vgg16", scheme, Transport::Rdma);
+            let mut est = TsyncEstimator::with_prebuilt(&job, 1..=4);
+            let b0 = crate::graph::build_count();
+            let t1 = est.t_sync(64.0e6, 1);
+            let t4 = est.t_sync(64.0e6, 4);
+            assert_eq!(crate::graph::build_count(), b0, "{scheme}: query built a graph");
+            assert!(t1.is_finite() && t1 > 0.0, "{scheme}: t1={t1}");
+            assert!(t4.is_finite() && t4 > 0.0, "{scheme}: t4={t4}");
+            if job.scheme.uses_servers() {
+                assert!(t4 < t1, "{scheme}: partitions should pipeline ({t4} !< {t1})");
             }
         }
-        let rel = (via_affine - direct).abs() / direct.max(1e-9);
-        assert!(rel < 1e-9, "affine {via_affine} vs direct {direct}");
     }
 }

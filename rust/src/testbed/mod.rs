@@ -15,7 +15,7 @@ pub mod memory;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::config::{CommScheme, JobSpec, Transport};
+use crate::config::{JobSpec, Transport};
 use crate::graph::{build_global, AnalyticCost, GlobalDfg};
 use crate::graph::dfg::{DeviceKey, NodeId, OpKind, COORD_PROC};
 use crate::trace::{GTrace, TraceEvent};
@@ -124,10 +124,7 @@ pub fn run_on(spec: &JobSpec, g: &GlobalDfg, opts: &TestbedOpts) -> TestbedResul
         Transport::Rdma => 0.03,
     };
     let comp_cv = spec.cluster.gpu.duration_cv;
-    let cycle = match &spec.scheme {
-        CommScheme::AllReduce(ar) => ar.cycle_time_us,
-        CommScheme::Ps(_) => 0.0,
-    };
+    let cycle = spec.scheme.cycle_time_us();
 
     // --- event-driven execution, one iteration at a time ---
     let mut events: Vec<TraceEvent> = Vec::with_capacity(n * opts.iterations);
@@ -332,11 +329,7 @@ pub fn run_on(spec: &JobSpec, g: &GlobalDfg, opts: &TestbedOpts) -> TestbedResul
         }
     }
 
-    let n_procs = spec.cluster.n_workers
-        + match &spec.scheme {
-            CommScheme::Ps(ps) => ps.n_servers,
-            CommScheme::AllReduce(_) => 0,
-        };
+    let n_procs = spec.cluster.n_workers + spec.scheme.n_servers();
     TestbedResult {
         iter_times,
         trace: GTrace {

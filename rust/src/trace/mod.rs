@@ -47,16 +47,21 @@ pub struct GTrace {
 impl GTrace {
     /// Average measured duration per op name — the per-op estimate the
     /// replayer uses ("averaging op execution time over 10 training
-    /// iterations", §4.3).
+    /// iterations", §4.3). Aggregates by `&str` so each distinct op name
+    /// is materialized once, not cloned per event (a 10-iteration trace
+    /// repeats every name 10×).
     pub fn profile_db(&self) -> ProfileDb {
-        let mut agg: HashMap<String, (f64, u32)> = HashMap::new();
+        let mut agg: HashMap<&str, (f64, u32)> = HashMap::new();
         for e in &self.events {
-            let ent = agg.entry(e.name.clone()).or_insert((0.0, 0));
+            let ent = agg.entry(e.name.as_str()).or_insert((0.0, 0));
             ent.0 += e.dur;
             ent.1 += 1;
         }
         ProfileDb {
-            avg: agg.into_iter().map(|(k, (s, c))| (k, s / c as f64)).collect(),
+            avg: agg
+                .into_iter()
+                .map(|(k, (s, c))| (k.to_string(), s / c as f64))
+                .collect(),
         }
     }
 

@@ -4,12 +4,16 @@
 //! replay of the mutated spec produces — bit-for-bit on `iteration_time`,
 //! within 1e-6 on every node's start/end (in practice: exactly equal).
 //!
-//! Swept across models × schemes × random decision sequences, mirroring
-//! the search's own edit mix (op fusion, tensor fusion, partition).
+//! Swept across models × **all registered comm schemes** × random decision
+//! sequences, mirroring the search's own edit mix (op fusion, tensor
+//! fusion, partition). The sweep is the proof obligation every new
+//! `CommPlanner` must meet: chain splices go through the same lowering as
+//! fresh builds, so the equivalence is scheme-independent by construction
+//! — this test keeps it that way.
 
 use std::collections::HashMap;
 
-use dpro::config::{JobSpec, Transport};
+use dpro::config::{JobSpec, Transport, ALL_SCHEMES};
 use dpro::graph::MutableGraph;
 use dpro::replay::incremental::IncrementalReplayer;
 use dpro::util::rng::Pcg;
@@ -66,52 +70,66 @@ fn random_decision(rng: &mut Pcg, mg: &mut MutableGraph) -> bool {
 #[test]
 fn incremental_replay_matches_from_scratch_across_models_and_schemes() {
     let mut rng = Pcg::seeded(4242);
-    for model in ["resnet50", "vgg16", "bert_base"] {
-        for scheme in ["horovod", "byteps"] {
-            let spec = JobSpec::standard(model, scheme, Transport::Rdma);
-            let (mut mg, mut eng) = full_replay(&spec);
-            for step in 0..6 {
-                // a burst of random decisions, like one search round
-                let want = 1 + rng.below(3);
-                let mut applied = 0;
-                for _ in 0..24 {
-                    if random_decision(&mut rng, &mut mg) {
-                        applied += 1;
-                        if applied >= want {
-                            break;
-                        }
+    // the case list is DERIVED from ALL_SCHEMES so a newly registered
+    // planner is swept the moment it exists; the ring scheme's flat worker
+    // ring lowers to much larger graphs, so its from-scratch ground truth
+    // gets fewer (still multi-edit) steps on smaller models
+    let models_for = |scheme: &str| -> Vec<(&'static str, i32)> {
+        match scheme {
+            "ring" => vec![("vgg16", 3), ("resnet50", 2)],
+            _ => vec![("resnet50", 6), ("vgg16", 6), ("bert_base", 6)],
+        }
+    };
+    let cases: Vec<(&str, &str, i32)> = ALL_SCHEMES
+        .iter()
+        .flat_map(|&scheme| {
+            models_for(scheme).into_iter().map(move |(m, s)| (m, scheme, s))
+        })
+        .collect();
+    for (model, scheme, n_steps) in cases {
+        let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+        let (mut mg, mut eng) = full_replay(&spec);
+        for step in 0..n_steps {
+            // a burst of random decisions, like one search round
+            let want = 1 + rng.below(3);
+            let mut applied = 0;
+            for _ in 0..24 {
+                if random_decision(&mut rng, &mut mg) {
+                    applied += 1;
+                    if applied >= want {
+                        break;
                     }
                 }
-                assert_eq!(mg.validate(), Ok(()), "{model}/{scheme} step {step}");
+            }
+            assert_eq!(mg.validate(), Ok(()), "{model}/{scheme} step {step}");
 
-                let log = mg.commit();
-                let inc = eng.replay_incremental(&mg, &log).iteration_time;
+            let log = mg.commit();
+            let inc = eng.replay_incremental(&mg, &log).iteration_time;
 
-                // ground truth: rebuild the world from the mutated spec
-                let (mg2, eng2) = full_replay(mg.spec());
-                let fresh = eng2.result().iteration_time;
-                assert_eq!(
-                    inc, fresh,
-                    "{model}/{scheme} step {step}: iteration_time diverged"
+            // ground truth: rebuild the world from the mutated spec
+            let (mg2, eng2) = full_replay(mg.spec());
+            let fresh = eng2.result().iteration_time;
+            assert_eq!(
+                inc, fresh,
+                "{model}/{scheme} step {step}: iteration_time diverged"
+            );
+
+            let a = schedule_by_canon(&mg, &eng);
+            let b = schedule_by_canon(&mg2, &eng2);
+            assert_eq!(
+                a.len(),
+                b.len(),
+                "{model}/{scheme} step {step}: live node counts differ"
+            );
+            for (c, &(s1, e1)) in &a {
+                let &(s2, e2) = b
+                    .get(c)
+                    .unwrap_or_else(|| panic!("{model}/{scheme}: rank {c:#x} missing"));
+                assert!(
+                    (s1 - s2).abs() <= 1e-6 && (e1 - e2).abs() <= 1e-6,
+                    "{model}/{scheme} step {step}: node times diverged \
+                     ({s1},{e1}) vs ({s2},{e2})"
                 );
-
-                let a = schedule_by_canon(&mg, &eng);
-                let b = schedule_by_canon(&mg2, &eng2);
-                assert_eq!(
-                    a.len(),
-                    b.len(),
-                    "{model}/{scheme} step {step}: live node counts differ"
-                );
-                for (c, &(s1, e1)) in &a {
-                    let &(s2, e2) = b
-                        .get(c)
-                        .unwrap_or_else(|| panic!("{model}/{scheme}: rank {c:#x} missing"));
-                    assert!(
-                        (s1 - s2).abs() <= 1e-6 && (e1 - e2).abs() <= 1e-6,
-                        "{model}/{scheme} step {step}: node times diverged \
-                         ({s1},{e1}) vs ({s2},{e2})"
-                    );
-                }
             }
         }
     }

@@ -89,6 +89,24 @@ fn scale_out_replay_accuracy_64_gpus() {
 }
 
 #[test]
+fn new_schemes_replay_accurately() {
+    // the comm-plan IR makes the whole pipeline scheme-blind: the two new
+    // schemes must flow through testbed → trace → alignment → replay with
+    // accuracy in the same ballpark as the original pair
+    for scheme in ["ring", "ps-tree"] {
+        let spec = baselines::deployed_default(&JobSpec::standard(
+            "resnet50",
+            scheme,
+            Transport::Rdma,
+        ));
+        let tb = testbed_run(&spec, &TestbedOpts { iterations: 6, ..Default::default() });
+        let est = profiler::estimate(&spec, &tb.trace, true);
+        let err = rel_err_pct(est.iteration_us(), tb.avg_iter());
+        assert!(err < 10.0, "{scheme}: replay err {err:.2}%");
+    }
+}
+
+#[test]
 fn ps_server_count_follows_machines() {
     let spec = JobSpec::standard("vgg16", "byteps", Transport::Rdma);
     match &spec.scheme {
