@@ -4,7 +4,8 @@
 //! dpro profile  --model resnet50 --scheme horovod --transport rdma -o trace.json
 //! dpro replay   --model resnet50 --scheme horovod --transport rdma --trace trace.json
 //! dpro align    --trace trace.json
-//! dpro optimize --model resnet50 --scheme ps-tree --transport rdma
+//! dpro optimize --model resnet50 --scheme ps-tree --transport rdma \
+//!               --strategies op-fuse,tensor-fuse,mixed-precision,recompute
 //! dpro train    --config mini --workers 4 --steps 50
 //! dpro report   --model bert_base --scheme ring
 //! ```
@@ -12,14 +13,23 @@
 //! `--scheme` accepts any registered communication scheme (`horovod`,
 //! `ring`, `byteps`, `ps-tree` + aliases) — see the `parse` constructor on
 //! [`crate::config::CommScheme`]; adding a scheme automatically extends
-//! every command.
+//! every command. `--strategies` accepts any registered optimization
+//! strategy ([`crate::optimizer::strategy::parse_strategies`]) — adding a
+//! strategy likewise extends `optimize`.
+//!
+//! Invalid argument values (an unparsable `--workers`, an unknown
+//! `--transport`/`--model`/`--scheme`/strategy name) are rejected with a
+//! message listing the valid values and exit code 2 — never silently
+//! replaced by a default. `replay`, `optimize` and `report` accept
+//! `--json` for machine-readable output on stdout.
 
 use crate::baselines;
-use crate::config::{JobSpec, Transport};
-use crate::optimizer::{optimize, SearchOpts};
+use crate::config::{ClusterSpec, CommScheme, JobSpec, Transport, ALL_SCHEMES};
+use crate::optimizer::{optimize, strategy, SearchOpts};
 use crate::profiler;
 use crate::testbed::{run as tb_run, TestbedOpts};
 use crate::trace::GTrace;
+use crate::util::json::Json;
 use crate::util::{fmt_bytes, fmt_us, Args};
 
 pub fn run(args: Args) -> i32 {
@@ -47,37 +57,82 @@ fn usage() {
         "dpro {} — profiling & optimization for distributed DNN training\n\n\
          commands:\n  \
          profile  --model M --scheme S --transport T [-o trace.json] [--iters 10]\n  \
-         replay   --model M --scheme S --transport T --trace trace.json [--no-align]\n  \
+         replay   --model M --scheme S --transport T --trace trace.json [--no-align] [--json]\n  \
          align    --trace trace.json\n  \
-         optimize --model M --scheme S --transport T [--budget-s 60] [--strawman]\n  \
+         optimize --model M --scheme S --transport T [--budget-s 60] [--strawman]\n           \
+         [--strategies {}] [--memory-budget-gb G] [--json]\n  \
          train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n  \
-         report   --model M [--scheme S] [--transport T]\n\n\
+         report   --model M [--scheme S] [--transport T] [--json]\n\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
-         schemes: horovod ring byteps ps-tree   transports: rdma tcp",
-        crate::version()
+         schemes: {}   transports: rdma tcp",
+        crate::version(),
+        strategy::STRATEGY_NAMES.join(","),
+        ALL_SCHEMES.join(" "),
     );
 }
 
-fn job_from_args(args: &Args) -> JobSpec {
+/// Build the job spec from CLI args, rejecting invalid values instead of
+/// silently substituting defaults.
+fn job_from_args(args: &Args) -> Result<JobSpec, String> {
     let model = args.get_or("model", "resnet50");
     let scheme = args.get_or("scheme", "horovod");
     let transport = match args.get_or("transport", "rdma").as_str() {
         "tcp" => Transport::Tcp,
-        _ => Transport::Rdma,
+        "rdma" => Transport::Rdma,
+        other => {
+            return Err(format!(
+                "invalid --transport {other:?}; valid values: rdma, tcp"
+            ))
+        }
     };
+    let workers = match args.get("workers") {
+        None => None,
+        Some(w) => match w.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => {
+                return Err(format!(
+                    "invalid --workers {w:?}; expected a positive integer"
+                ))
+            }
+        },
+    };
+    if crate::models::by_name(&model, 1).is_none() {
+        return Err(format!(
+            "unknown --model {model:?}; valid values: resnet50, vgg16, \
+             inception_v3, bert_base, gpt_mini"
+        ));
+    }
+    if CommScheme::parse(&scheme, &ClusterSpec::default_16(transport)).is_none() {
+        return Err(format!(
+            "unknown --scheme {scheme:?}; valid values: {}",
+            ALL_SCHEMES.join(", ")
+        ));
+    }
     let mut spec = JobSpec::standard(&model, &scheme, transport);
-    if let Some(w) = args.get("workers") {
-        let w: usize = w.parse().unwrap_or(16);
+    if let Some(w) = workers {
         spec.cluster.n_workers = w;
     }
     if args.flag("deployed") || !args.flag("per-tensor") {
         spec = baselines::deployed_default(&spec);
     }
-    spec
+    Ok(spec)
+}
+
+/// Unwrap a job spec or print the error and exit with code 2.
+macro_rules! job_or_exit {
+    ($args:expr) => {
+        match job_from_args($args) {
+            Ok(spec) => spec,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
 }
 
 fn cmd_profile(args: &Args) -> i32 {
-    let spec = job_from_args(args);
+    let spec = job_or_exit!(args);
     let iters = args.usize("iters", 10);
     let out = args.get_or("o", "trace.json");
     println!(
@@ -103,7 +158,7 @@ fn cmd_profile(args: &Args) -> i32 {
 }
 
 fn cmd_replay(args: &Args) -> i32 {
-    let spec = job_from_args(args);
+    let spec = job_or_exit!(args);
     let path = args.get_or("trace", "trace.json");
     let trace = match GTrace::load(&path) {
         Ok(t) => t,
@@ -114,6 +169,17 @@ fn cmd_replay(args: &Args) -> i32 {
     };
     let aligned = !args.flag("no-align");
     let est = profiler::estimate(&spec, &trace, aligned);
+    if args.flag("json") {
+        let mut j = Json::obj();
+        j.set("ops", Json::Num(est.graph.dfg.len() as f64));
+        j.set("aligned", Json::Bool(aligned));
+        j.set("iteration_us", Json::Num(est.iteration_us()));
+        j.set("fw_us", Json::Num(est.fw_us()));
+        j.set("bw_us", Json::Num(est.bw_us()));
+        j.set("est_peak_mem_bytes", Json::Num(est.peak_memory(&spec)));
+        println!("{}", j.to_string());
+        return 0;
+    }
     println!(
         "replayed {} ops (alignment: {})",
         est.graph.dfg.len(),
@@ -147,28 +213,63 @@ fn cmd_align(args: &Args) -> i32 {
 }
 
 fn cmd_optimize(args: &Args) -> i32 {
-    let spec = job_from_args(args);
+    let spec = job_or_exit!(args);
     let mut opts = if args.flag("strawman") { SearchOpts::strawman() } else { SearchOpts::default() };
     opts.budget_wall_s = args.f64("budget-s", 60.0);
     if let Some(b) = args.get("memory-budget-gb") {
-        opts.memory_budget_bytes = b.parse::<f64>().ok().map(|g| g * 1e9);
+        match b.parse::<f64>() {
+            Ok(g) if g > 0.0 => opts.memory_budget_bytes = Some(g * 1e9),
+            _ => {
+                eprintln!("invalid --memory-budget-gb {b:?}; expected a positive number");
+                return 2;
+            }
+        }
     }
-    println!(
-        "optimizing {} × {} workers ({}, {})...",
-        spec.model.name,
-        spec.cluster.n_workers,
-        spec.scheme.name(),
-        spec.cluster.network.transport.name()
-    );
+    if let Some(list) = args.get("strategies") {
+        // validate up front so a typo exits 2 with the valid names listed
+        if let Err(e) = strategy::parse_strategies(list) {
+            eprintln!("{e}");
+            return 2;
+        }
+        opts.strategies = Some(list.to_string());
+    }
+    let json = args.flag("json");
+    if !json {
+        println!(
+            "optimizing {} × {} workers ({}, {})...",
+            spec.model.name,
+            spec.cluster.n_workers,
+            spec.scheme.name(),
+            spec.cluster.network.transport.name()
+        );
+    }
     let out = optimize(&spec, &opts);
-    println!("baseline iteration (replayed): {}", fmt_us(out.baseline_iteration_us));
-    println!("optimized iteration (replayed): {}", fmt_us(out.est_iteration_us));
-    println!("speed-up: {:.2}x  ({} passes applied, {} replays, {:.1}s search)",
-             out.speedup(), out.actions_applied, out.replays, out.wall_s);
-    println!("memory pass: {}", out.mem_opt.name());
     // validate on the testbed
     let base = tb_run(&spec, &TestbedOpts { iterations: 5, ..Default::default() });
     let opt = tb_run(&out.spec, &TestbedOpts { iterations: 5, ..Default::default() });
+    if json {
+        let mut j = out.to_json();
+        j.set("model", Json::Str(spec.model.name.clone()));
+        j.set("scheme", Json::Str(spec.scheme.name().to_string()));
+        j.set("workers", Json::Num(spec.cluster.n_workers as f64));
+        j.set("testbed_base_us", Json::Num(base.avg_iter()));
+        j.set("testbed_opt_us", Json::Num(opt.avg_iter()));
+        j.set("testbed_speedup", Json::Num(base.avg_iter() / opt.avg_iter()));
+        println!("{}", j.to_string());
+        return 0;
+    }
+    println!("baseline iteration (replayed): {}", fmt_us(out.baseline_iteration_us));
+    println!("optimized iteration (replayed): {}", fmt_us(out.est_iteration_us));
+    println!(
+        "speed-up: {:.2}x  ({} passes applied, {}/{} candidates accepted, {} replays, {:.1}s search)",
+        out.speedup(),
+        out.actions_applied,
+        out.accepted.len(),
+        out.candidates_tried,
+        out.replays,
+        out.wall_s
+    );
+    println!("memory pass: {}", out.mem_opt.name());
     println!(
         "testbed validation: {} -> {} ({:.2}x real speed-up)",
         fmt_us(base.avg_iter()),
@@ -218,7 +319,7 @@ fn cmd_train(args: &Args) -> i32 {
 }
 
 fn cmd_report(args: &Args) -> i32 {
-    let spec = job_from_args(args);
+    let spec = job_or_exit!(args);
     let tb = tb_run(&spec, &TestbedOpts { iterations: 10, ..Default::default() });
     let est = profiler::estimate(&spec, &tb.trace, true);
     let dd = baselines::daydream::estimate(
@@ -226,6 +327,26 @@ fn cmd_report(args: &Args) -> i32 {
         Some(&profiler::corrected_profile(&tb.trace, &crate::alignment::Alignment::identity())),
     );
     let truth = tb.avg_iter();
+    if args.flag("json") {
+        let mut j = Json::obj();
+        j.set("model", Json::Str(spec.model.name.clone()));
+        j.set("scheme", Json::Str(spec.scheme.name().to_string()));
+        j.set("transport", Json::Str(spec.cluster.network.transport.name().to_string()));
+        j.set("workers", Json::Num(spec.cluster.n_workers as f64));
+        j.set("ground_truth_us", Json::Num(truth));
+        j.set("dpro_us", Json::Num(est.iteration_us()));
+        j.set(
+            "dpro_err_pct",
+            Json::Num(crate::util::stats::rel_err_pct(est.iteration_us(), truth)),
+        );
+        j.set("daydream_us", Json::Num(dd.iteration_us));
+        j.set(
+            "daydream_err_pct",
+            Json::Num(crate::util::stats::rel_err_pct(dd.iteration_us, truth)),
+        );
+        println!("{}", j.to_string());
+        return 0;
+    }
     println!("=== {} / {} / {} / {} workers ===",
              spec.model.name, spec.scheme.name(),
              spec.cluster.network.transport.name(), spec.cluster.n_workers);

@@ -372,13 +372,17 @@ pub(crate) fn lower_group_plan(
         });
         for &dep in &st.deps {
             match dep {
-                Dep::In(w) => dfg.edge(in_ops[w as usize], id),
+                Dep::In(w) => {
+                    dfg.edge(in_ops[w as usize], id);
+                }
                 Dep::AllIn => {
                     for &i in in_ops {
                         dfg.edge(i, id);
                     }
                 }
-                Dep::Stage(s) => dfg.edge(ids[s as usize], id),
+                Dep::Stage(s) => {
+                    dfg.edge(ids[s as usize], id);
+                }
             }
         }
         gnodes.push(id);

@@ -152,11 +152,18 @@ impl Dfg {
         id
     }
 
-    pub fn edge(&mut self, from: NodeId, to: NodeId) {
+    /// Insert a dependency edge. Returns `true` iff the edge was newly
+    /// inserted (duplicates are ignored) — the transaction journal of
+    /// [`crate::graph::mutable::MutableGraph`] records only real inserts so
+    /// a rollback never removes a pre-existing edge.
+    pub fn edge(&mut self, from: NodeId, to: NodeId) -> bool {
         debug_assert_ne!(from, to, "self edge on {}", self.nodes[from as usize].name);
         if !self.succs[from as usize].contains(&to) {
             self.succs[from as usize].push(to);
             self.preds[to as usize].push(from);
+            true
+        } else {
+            false
         }
     }
 

@@ -12,4 +12,4 @@ pub use build::{
 };
 pub use comm_plan::{plan_props, CommPlanner, Dep, GroupPlan, PlanCtx, PlanProps, Stage};
 pub use dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorId, TensorMeta};
-pub use mutable::{ChangeLog, MutableGraph};
+pub use mutable::{ChangeLog, MutableGraph, Txn};

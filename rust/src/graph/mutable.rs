@@ -24,15 +24,31 @@
 //! the arena (ids are stable) but are detached, zero-duration, and
 //! device-less; the incremental replayer skips them via [`Self::alive`].
 //!
-//! Every edit is logged into a [`ChangeLog`] (tombstoned ids, touched ids,
-//! append watermark) that [`crate::replay::incremental::IncrementalReplayer`]
-//! drains to confine its recomputation to the affected cone.
+//! Every edit is logged into a [`ChangeLog`] (tombstoned ids, revived ids,
+//! touched ids, append watermark) that
+//! [`crate::replay::incremental::IncrementalReplayer`] drains to confine
+//! its recomputation to the affected cone.
+//!
+//! ## Transactions
+//!
+//! The optimizer's accept/reject loop evaluates every candidate decision by
+//! applying it, replaying, and *keeping or discarding* it. Discarding must
+//! not rebuild anything, so every primitive edit performed inside an open
+//! transaction ([`MutableGraph::begin`]) additionally records its **inverse**
+//! in an edit journal: tombstones save the node's fields and adjacency,
+//! spec rewrites save the displaced groups (moved, not spec-cloned), chain
+//! splices save the appended-node watermark and the displaced index rows.
+//! [`MutableGraph::rollback`] replays the journal in reverse, restoring the
+//! graph, the spec, and the plan indices bit-for-bit — a rejected candidate
+//! costs one cone repair on the next replay and nothing else. Nodes revived
+//! by a rollback are reported to the engine through [`ChangeLog::revived`].
 
 use crate::config::JobSpec;
 use crate::graph::build::{AnalyticCost, CostProvider};
 use crate::graph::comm_plan::build_group_comm;
 use crate::graph::dfg::{DeviceKey, Dfg, NodeId, OpKind};
 use crate::graph::{build_global_nameless, GlobalDfg};
+use crate::models::ModelGraph;
 use crate::optimizer::passes::{self, PassError};
 
 /// Canonical rank of a node: a total order shared by incrementally-edited
@@ -60,6 +76,9 @@ fn canon_rank(class: u64, major: u64, minor: u64) -> u64 {
 pub struct ChangeLog {
     /// Tombstoned node ids (graph edits never reuse ids).
     pub removed: Vec<NodeId>,
+    /// Previously-tombstoned nodes brought back by a transaction rollback;
+    /// the engine re-interns their device membership like fresh additions.
+    pub revived: Vec<NodeId>,
     /// Surviving nodes whose duration or predecessor set changed.
     pub touched: Vec<NodeId>,
     /// Nodes with id `>= added_from` were appended since the last commit.
@@ -69,9 +88,68 @@ pub struct ChangeLog {
 impl ChangeLog {
     pub fn is_empty(&self, n_now: usize) -> bool {
         self.removed.is_empty()
+            && self.revived.is_empty()
             && self.touched.is_empty()
             && self.added_from as usize >= n_now
     }
+}
+
+/// Inverse of one primitive mutation, recorded while a transaction is open
+/// and replayed (in reverse order) by [`MutableGraph::rollback`].
+enum UndoOp {
+    /// `plan.groups[g].partitions` was `old`.
+    SpecPartitions { g: usize, old: usize },
+    /// `passes::fuse_tensor_groups(keep, drop)` displaced these groups.
+    SpecTensorFuse {
+        keep: usize,
+        drop: usize,
+        old_kept: crate::config::TensorGroup,
+        dropped: crate::config::TensorGroup,
+    },
+    /// `passes::fuse_comp_groups(keep, drop)` displaced these groups.
+    SpecOpFuse { keep: usize, drop: usize, old_kept: Vec<u32>, dropped: Vec<u32> },
+    /// [`MutableGraph::swap_model`] displaced this template (moved in, not
+    /// cloned — the undo record owns the old model).
+    SpecModel { old: ModelGraph },
+    /// A dependency edge was newly inserted.
+    EdgeAdded { from: NodeId, to: NodeId },
+    /// A live node was tombstoned; fields + adjacency as of that moment.
+    Tombstoned {
+        id: NodeId,
+        device: DeviceKey,
+        duration: f64,
+        template_id: Option<u32>,
+        preds: Vec<NodeId>,
+        succs: Vec<NodeId>,
+    },
+    /// A node was appended by a chain splice (undo kills it for good —
+    /// ids are never reused).
+    Appended { id: NodeId },
+    /// A node's duration was overwritten.
+    Duration { id: NodeId, old: f64 },
+    /// A node's tensor-meta byte count was overwritten.
+    TensorBytes { id: NodeId, old: f64 },
+    /// `comp[w].remove(drop)` for every worker; `col[w]` is the removed id.
+    CompColumn { drop: usize, col: Vec<NodeId> },
+    /// The four per-group index rows removed for a dropped comm group.
+    GroupIndex {
+        drop: usize,
+        in_ops: Vec<NodeId>,
+        chain: Vec<NodeId>,
+        out_ops: Vec<NodeId>,
+        upd: Vec<NodeId>,
+    },
+    /// `chain[gi]` was overwritten by a splice.
+    Chain { gi: usize, old: Vec<NodeId> },
+}
+
+/// Token for one open transaction (see [`MutableGraph::begin`]). Consumed
+/// by [`MutableGraph::commit_txn`] / [`MutableGraph::rollback`] so a
+/// transaction cannot be resolved twice; dropping it without resolving is a
+/// bug the next `begin` panics on.
+#[must_use = "resolve the transaction with commit_txn() or rollback()"]
+pub struct Txn {
+    _priv: (),
 }
 
 /// A global DFG plus the [`JobSpec`] it was built from, kept mutually
@@ -95,8 +173,12 @@ pub struct MutableGraph {
     txid: u64,
     // accumulated changelog
     removed: Vec<NodeId>,
+    revived: Vec<NodeId>,
     touched: Vec<NodeId>,
     added_from: NodeId,
+    // open-transaction state: inverse edits, recorded only while open
+    journal: Vec<UndoOp>,
+    txn_open: bool,
 }
 
 impl MutableGraph {
@@ -153,8 +235,11 @@ impl MutableGraph {
             // them (txids only matter for trace joins, never for replay)
             txid: 1u64 << 32,
             removed: Vec::new(),
+            revived: Vec::new(),
             touched: Vec::new(),
             added_from: 0, // first commit() reports the whole graph as new
+            journal: Vec::new(),
+            txn_open: false,
         };
         mg.refresh();
         mg
@@ -209,9 +294,22 @@ impl MutableGraph {
     /// as [`passes::fuse_comp_groups`]); per worker the two comp nodes
     /// collapse into one fused-kernel node. Returns the kept group index.
     pub fn fuse_comp_groups(&mut self, a: usize, b: usize) -> Result<usize, PassError> {
+        let n = self.spec.fusion.groups.len();
+        if a >= n || b >= n {
+            return Err(PassError::OutOfRange);
+        }
+        let saved = self.txn_open.then(|| {
+            (
+                self.spec.fusion.groups[a.min(b)].clone(),
+                self.spec.fusion.groups[a.max(b)].clone(),
+            )
+        });
         let keep = passes::fuse_comp_groups(&mut self.spec, a, b)?;
         let drop = a.max(b); // passes keeps the smaller index
         debug_assert_eq!(keep, a.min(b));
+        if let Some((old_kept, dropped)) = saved {
+            self.journal.push(UndoOp::SpecOpFuse { keep, drop, old_kept, dropped });
+        }
         let fused_dur =
             self.spec.fusion.duration(&self.spec.model, &self.spec.cluster.gpu, keep);
         for w in 0..self.n_workers {
@@ -222,17 +320,21 @@ impl MutableGraph {
             self.tombstone(kb);
             for p in preds {
                 if p != ka {
-                    self.dfg.edge(p, ka);
+                    self.edge_j(p, ka);
                 }
             }
             for s in succs {
                 if s != ka {
-                    self.dfg.edge(ka, s);
+                    self.edge_j(ka, s);
                     self.touched.push(s);
                 }
             }
-            self.dfg.node_mut(ka).duration = fused_dur;
+            self.set_duration_j(ka, fused_dur);
             self.touched.push(ka);
+        }
+        if self.txn_open {
+            let col: Vec<NodeId> = (0..self.n_workers).map(|w| self.comp[w][drop]).collect();
+            self.journal.push(UndoOp::CompColumn { drop, col });
         }
         for w in 0..self.n_workers {
             self.comp[w].remove(drop);
@@ -245,9 +347,22 @@ impl MutableGraph {
     /// and the kept chain re-spliced at the fused size. Returns the kept
     /// group index.
     pub fn fuse_tensor_groups(&mut self, a: usize, b: usize) -> Result<usize, PassError> {
+        let n = self.spec.plan.groups.len();
+        if a >= n || b >= n {
+            return Err(PassError::OutOfRange);
+        }
+        let saved = self.txn_open.then(|| {
+            (
+                self.spec.plan.groups[a.min(b)].clone(),
+                self.spec.plan.groups[a.max(b)].clone(),
+            )
+        });
         let keep = passes::fuse_tensor_groups(&mut self.spec, a, b)?;
         let drop = a.max(b);
         debug_assert_eq!(keep, a.min(b));
+        if let Some((old_kept, dropped)) = saved {
+            self.journal.push(UndoOp::SpecTensorFuse { keep, drop, old_kept, dropped });
+        }
         // tombstone the dropped group's entire synchronization subgraph
         let doomed: Vec<NodeId> = self.in_ops[drop]
             .iter()
@@ -258,6 +373,15 @@ impl MutableGraph {
             .collect();
         for id in doomed {
             self.tombstone(id);
+        }
+        if self.txn_open {
+            self.journal.push(UndoOp::GroupIndex {
+                drop,
+                in_ops: self.in_ops[drop].clone(),
+                chain: self.chain[drop].clone(),
+                out_ops: self.out_ops[drop].clone(),
+                upd: self.upd_ops[drop].clone(),
+            });
         }
         self.in_ops.remove(drop);
         self.chain.remove(drop);
@@ -270,7 +394,8 @@ impl MutableGraph {
                 let t = self.spec.plan.groups[keep].tensors[ti];
                 let Some(op) = self.spec.model.producer_of(t) else { continue };
                 let pg = self.spec.fusion.group_of[op as usize] as usize;
-                self.dfg.edge(self.comp[w][pg], in_op);
+                let comp = self.comp[w][pg];
+                self.edge_j(comp, in_op);
             }
             self.touched.push(in_op);
         }
@@ -290,19 +415,186 @@ impl MutableGraph {
             .ok_or(PassError::OutOfRange)?;
         passes::set_partitions(&mut self.spec, g, k)?;
         if self.spec.plan.groups[g].partitions != old {
+            if self.txn_open {
+                self.journal.push(UndoOp::SpecPartitions { g, old });
+            }
             self.rebuild_chain(g);
         }
         Ok(())
+    }
+
+    /// **Template swap**: replace the model with a structurally-identical
+    /// rewrite (same op and tensor counts — e.g. the mixed-precision pass,
+    /// re-computation, or a half-batch gradient-accumulation template) and
+    /// mirror it on the graph: every comp node's duration is refreshed and
+    /// every comm chain whose fused byte size changed is re-spliced. The
+    /// current fusion and comm plans are kept — a template swap composes
+    /// with whatever fusions the search has already accepted.
+    pub fn swap_model(&mut self, new_model: ModelGraph) -> Result<(), PassError> {
+        if new_model.ops.len() != self.spec.model.ops.len()
+            || new_model.tensors.len() != self.spec.model.tensors.len()
+        {
+            return Err(PassError::KindMismatch);
+        }
+        let old_bytes: Vec<f64> = (0..self.spec.plan.groups.len())
+            .map(|gi| self.spec.plan.group_bytes(&self.spec.model, gi))
+            .collect();
+        let old_model = std::mem::replace(&mut self.spec.model, new_model);
+        if self.txn_open {
+            self.journal.push(UndoOp::SpecModel { old: old_model });
+        }
+        // refresh every comp node's duration from the new template
+        for g in 0..self.spec.fusion.groups.len() {
+            let dur =
+                self.spec.fusion.duration(&self.spec.model, &self.spec.cluster.gpu, g);
+            for w in 0..self.n_workers {
+                let id = self.comp[w][g];
+                self.set_duration_j(id, dur);
+                self.touched.push(id);
+            }
+        }
+        // re-splice only the chains whose synchronized bytes moved
+        for gi in 0..self.spec.plan.groups.len() {
+            let nb = self.spec.plan.group_bytes(&self.spec.model, gi);
+            if nb != old_bytes[gi] {
+                self.rebuild_chain(gi);
+            }
+        }
+        Ok(())
+    }
+
+    // ---- transactions ---------------------------------------------------
+
+    /// Open a transaction: every subsequent primitive edit records its
+    /// inverse until the returned token is resolved with
+    /// [`Self::commit_txn`] (keep the edits) or [`Self::rollback`] (undo
+    /// them all, with no rebuild and no spec clone).
+    pub fn begin(&mut self) -> Txn {
+        assert!(!self.txn_open, "nested MutableGraph transaction");
+        self.txn_open = true;
+        self.journal.clear();
+        Txn { _priv: () }
+    }
+
+    /// True while a transaction is open.
+    pub fn in_txn(&self) -> bool {
+        self.txn_open
+    }
+
+    /// Accept the open transaction's edits: the journal is discarded and
+    /// the edits become permanent.
+    pub fn commit_txn(&mut self, txn: Txn) {
+        let Txn { _priv: () } = txn;
+        debug_assert!(self.txn_open);
+        self.txn_open = false;
+        self.journal.clear();
+    }
+
+    /// Reject the open transaction: replay the inverse-edit journal in
+    /// reverse, restoring nodes, durations, plan indices and comm splices
+    /// exactly as they were at [`Self::begin`]. Nodes appended by the
+    /// transaction are tombstoned (ids are never reused); nodes it
+    /// tombstoned are revived and reported via [`ChangeLog::revived`] so
+    /// the incremental engine re-interns them.
+    pub fn rollback(&mut self, txn: Txn) {
+        let Txn { _priv: () } = txn;
+        debug_assert!(self.txn_open);
+        self.txn_open = false; // undo edits below must not re-journal
+        while let Some(op) = self.journal.pop() {
+            match op {
+                UndoOp::SpecPartitions { g, old } => {
+                    self.spec.plan.groups[g].partitions = old;
+                }
+                UndoOp::SpecTensorFuse { keep, drop, old_kept, dropped } => {
+                    self.spec.plan.groups[keep] = old_kept;
+                    self.spec.plan.groups.insert(drop, dropped);
+                }
+                UndoOp::SpecOpFuse { keep, drop, old_kept, dropped } => {
+                    self.spec.fusion.groups[keep] = old_kept;
+                    self.spec.fusion.groups.insert(drop, dropped);
+                    self.spec.fusion.rebuild_index(self.spec.model.ops.len());
+                }
+                UndoOp::SpecModel { old } => {
+                    self.spec.model = old;
+                }
+                UndoOp::EdgeAdded { from, to } => {
+                    self.dfg.remove_edge(from, to);
+                    self.touched.push(to);
+                }
+                UndoOp::Tombstoned { id, device, duration, template_id, preds, succs } => {
+                    self.alive[id as usize] = true;
+                    let node = self.dfg.node_mut(id);
+                    node.device = device;
+                    node.duration = duration;
+                    node.template_id = template_id;
+                    for p in preds {
+                        self.dfg.edge(p, id);
+                    }
+                    for s in succs {
+                        self.dfg.edge(id, s);
+                        self.touched.push(s);
+                    }
+                    self.revived.push(id);
+                }
+                UndoOp::Appended { id } => {
+                    // kill for good: detach and mark dead, like a tombstone
+                    // but outside the (now closed) journal
+                    self.alive[id as usize] = false;
+                    self.dfg.detach(id);
+                    let node = self.dfg.node_mut(id);
+                    node.device = DeviceKey::Null;
+                    node.duration = 0.0;
+                    node.template_id = None;
+                    self.removed.push(id);
+                }
+                UndoOp::Duration { id, old } => {
+                    self.dfg.node_mut(id).duration = old;
+                    self.touched.push(id);
+                }
+                UndoOp::TensorBytes { id, old } => {
+                    if let Some(t) = &mut self.dfg.node_mut(id).tensor {
+                        t.bytes = old;
+                    }
+                }
+                UndoOp::CompColumn { drop, col } => {
+                    for w in 0..self.n_workers {
+                        self.comp[w].insert(drop, col[w]);
+                    }
+                }
+                UndoOp::GroupIndex { drop, in_ops, chain, out_ops, upd } => {
+                    self.in_ops.insert(drop, in_ops);
+                    self.chain.insert(drop, chain);
+                    self.out_ops.insert(drop, out_ops);
+                    self.upd_ops.insert(drop, upd);
+                }
+                UndoOp::Chain { gi, old } => {
+                    self.chain[gi] = old;
+                }
+            }
+        }
     }
 
     // ---- bookkeeping ---------------------------------------------------
 
     /// Detach a node from the graph and mark it dead. Ids stay stable; the
     /// arena is never compacted (a 40-round search grows it by well under
-    /// 2x, and the replayer's cost scales with *live* nodes).
+    /// 2x, and the replayer's cost scales with *live* nodes). Inside a
+    /// transaction, the node's fields and adjacency are journaled so a
+    /// rollback can revive it verbatim.
     fn tombstone(&mut self, id: NodeId) {
         if !self.alive[id as usize] {
             return;
+        }
+        if self.txn_open {
+            let node = self.dfg.node(id);
+            self.journal.push(UndoOp::Tombstoned {
+                id,
+                device: node.device,
+                duration: node.duration,
+                template_id: node.template_id,
+                preds: self.dfg.preds(id).to_vec(),
+                succs: self.dfg.succs(id).to_vec(),
+            });
         }
         self.alive[id as usize] = false;
         self.dfg.detach(id);
@@ -313,14 +605,49 @@ impl MutableGraph {
         self.removed.push(id);
     }
 
+    /// Insert an edge, journaling the inverse iff it was newly inserted.
+    fn edge_j(&mut self, from: NodeId, to: NodeId) {
+        if self.dfg.edge(from, to) && self.txn_open {
+            self.journal.push(UndoOp::EdgeAdded { from, to });
+        }
+    }
+
+    /// Overwrite a node's duration, journaling the old value on change.
+    fn set_duration_j(&mut self, id: NodeId, dur: f64) {
+        let old = self.dfg.node(id).duration;
+        if old != dur {
+            if self.txn_open {
+                self.journal.push(UndoOp::Duration { id, old });
+            }
+            self.dfg.node_mut(id).duration = dur;
+        }
+    }
+
+    /// Overwrite a node's tensor-meta bytes, journaling the old value.
+    fn set_tensor_bytes_j(&mut self, id: NodeId, bytes: f64) {
+        let Some(old) = self.dfg.node(id).tensor.map(|t| t.bytes) else { return };
+        if old != bytes {
+            if self.txn_open {
+                self.journal.push(UndoOp::TensorBytes { id, old });
+            }
+            if let Some(t) = &mut self.dfg.node_mut(id).tensor {
+                t.bytes = bytes;
+            }
+        }
+    }
+
     /// Tombstone group `gi`'s comm chain and rebuild it from the current
     /// spec via the same builder the full construction uses.
     fn rebuild_chain(&mut self, gi: usize) {
+        if self.txn_open {
+            self.journal.push(UndoOp::Chain { gi, old: self.chain[gi].clone() });
+        }
         for &id in self.chain[gi].clone().iter() {
             self.tombstone(id);
         }
         self.chain[gi].clear();
 
+        let watermark = self.dfg.len() as NodeId;
         let mut out_per_worker: Vec<Vec<NodeId>> = vec![Vec::new(); self.n_workers];
         let mut gnodes: Vec<NodeId> = Vec::new();
         {
@@ -341,27 +668,30 @@ impl MutableGraph {
         let n = self.dfg.len();
         self.alive.resize(n, true);
         self.canon.resize(n, u64::MAX);
+        if self.txn_open {
+            // edges created by the lowering are always incident to at least
+            // one appended node, so killing the appended nodes on rollback
+            // removes them all — only the appends themselves are journaled
+            for id in watermark..n as NodeId {
+                self.journal.push(UndoOp::Appended { id });
+            }
+        }
 
         let gbytes = self.spec.plan.group_bytes(&self.spec.model, gi);
         let upd_dur = AnalyticCost::new(&self.spec).update(gbytes);
         for w in 0..self.n_workers {
             let out = self.out_ops[gi][w];
-            for &o in &out_per_worker[w] {
-                self.dfg.edge(o, out);
+            for ti in 0..out_per_worker[w].len() {
+                let o = out_per_worker[w][ti];
+                self.edge_j(o, out);
             }
             self.touched.push(out);
-            if let Some(t) = &mut self.dfg.node_mut(out).tensor {
-                t.bytes = gbytes;
-            }
+            self.set_tensor_bytes_j(out, gbytes);
             let in_op = self.in_ops[gi][w];
-            if let Some(t) = &mut self.dfg.node_mut(in_op).tensor {
-                t.bytes = gbytes;
-            }
+            self.set_tensor_bytes_j(in_op, gbytes);
             let upd = self.upd_ops[gi][w];
-            self.dfg.node_mut(upd).duration = upd_dur;
-            if let Some(t) = &mut self.dfg.node_mut(upd).tensor {
-                t.bytes = gbytes;
-            }
+            self.set_duration_j(upd, upd_dur);
+            self.set_tensor_bytes_j(upd, gbytes);
             self.touched.push(upd);
         }
     }
@@ -373,9 +703,20 @@ impl MutableGraph {
     /// be forwarded to the engine's next `replay_incremental` (dropping
     /// one would hide its edits from the repair passes).
     pub fn commit(&mut self) -> ChangeLog {
+        // note: calling commit() with a transaction open is the designed
+        // flow — the candidate is replayed on the committed changelog, then
+        // kept (commit_txn) or undone (rollback, whose inverse effects land
+        // in the *next* changelog)
         self.refresh();
+        let mut removed = std::mem::take(&mut self.removed);
+        let mut revived = std::mem::take(&mut self.revived);
+        // a node tombstoned and revived (or vice versa) within one commit
+        // window must reach the engine only under its *final* state
+        removed.retain(|&id| !self.alive[id as usize]);
+        revived.retain(|&id| self.alive[id as usize]);
         let log = ChangeLog {
-            removed: std::mem::take(&mut self.removed),
+            removed,
+            revived,
             touched: std::mem::take(&mut self.touched),
             added_from: self.added_from,
         };

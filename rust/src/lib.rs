@@ -8,9 +8,12 @@
 //!   the global timeline; [`alignment`] corrects clock drift, §4.2).
 //! - **Replayer** ([`replay`]): per-device-queue simulation of the global
 //!   DFG, critical path, partial replay, peak-memory estimation (§4.3).
-//! - **Optimizer** ([`optimizer`]): graph-pass registry + the critical-path
-//!   search of Alg. 1 with Coarsened View / partial replay / symmetry
-//!   accelerations (§5), validated against [`baselines`].
+//! - **Optimizer** ([`optimizer`]): one Strategy API
+//!   ([`optimizer::strategy`]) through which the critical-path search of
+//!   Alg. 1, the graph-pass registry, and the memory passes all run as
+//!   transactional decisions on the incremental engine, with Coarsened
+//!   View / partial replay / symmetry accelerations (§5), validated
+//!   against [`baselines`].
 //!
 //! The live end-to-end path ([`runtime`] + [`coordinator`]) executes a JAX
 //! (+Pallas) transformer AOT-compiled to HLO through PJRT, with Python

@@ -1,21 +1,50 @@
-//! The dPRO optimizer (paper §5): a Graph-Pass Registry plus the
-//! critical-path search of Alg. 1.
+//! The dPRO optimizer (paper §5 + §8): one **Strategy API** through which
+//! every optimization strategy — the critical-path search of Alg. 1, the
+//! Graph-Pass Registry's whole-job rewrites, and the memory passes — plugs
+//! into the same transactional, incrementally-replayed accept/reject loop.
 //!
-//! - [`passes`] — op fusion / tensor fusion / tensor partition rewrites
+//! The architecture mirrors the comm-plan IR one layer up: just as every
+//! communication scheme lowers to one [`crate::graph::comm_plan`] IR,
+//! every optimization strategy proposes one [`strategy::Decision`] IR,
+//! applied through [`crate::graph::MutableGraph`] transactions and judged
+//! by [`crate::replay::incremental`] — so a new strategy gets the
+//! incremental engine, rollback, and the joint search for free:
+//!
+//! ```text
+//!   Strategy::candidates(&SearchCtx)      ← per-strategy logic
+//!                  │
+//!             Vec<Decision>   (the decision IR: OpFuse / TensorFuse /
+//!                  │           Partition / WholeJob / Memory)
+//!   MutableGraph::begin → Strategy::apply → commit → incremental replay
+//!                  │
+//!     better(candidate, current)?  → commit_txn  (keep)
+//!                                  → rollback    (inverse-edit journal:
+//!                                    no rebuild, no spec re-clone)
+//! ```
+//!
+//! - [`strategy`] — the Strategy API: decision IR, [`strategy::Strategy`]
+//!   trait, the three built-ins (critical path / registry / memory), and
+//!   strategy-set parsing (`--strategies`)
+//! - [`search`] — the strategy-agnostic round loop of Alg. 1 with the
+//!   three Table 5 accelerations
+//! - [`passes`] — op fusion / tensor fusion / tensor partition plan
+//!   rewrites (the plan-level source of truth)
 //! - [`theorems`] — the fusion-profitability predicates of Theorems 1–3
 //! - [`coarsen`] — Coarsened View construction (§5.3)
 //! - [`symmetry`] — block-analogy propagation (§5.3)
-//! - [`memopt`] — re-computation / gradient-accumulation passes (Table 4)
-//! - [`search`] — Alg. 1 with the three search accelerations
-//! - [`registry`] — the extension point for custom strategies (§8), with
-//!   mixed-precision as the built-in example
+//! - [`memopt`] — re-computation / gradient-accumulation passes (Table 4),
+//!   searched in-loop through [`strategy::MemoryStrategy`]
+//! - [`registry`] — the Graph-Pass Registry (§8), searched in-loop through
+//!   [`strategy::RegistryStrategy`]
 
 pub mod coarsen;
 pub mod memopt;
 pub mod passes;
 pub mod registry;
 pub mod search;
+pub mod strategy;
 pub mod symmetry;
 pub mod theorems;
 
-pub use search::{optimize, SearchOpts, SearchOutcome};
+pub use search::{optimize, optimize_with, SearchOpts, SearchOutcome};
+pub use strategy::{Decision, Strategy};

@@ -1,8 +1,18 @@
 //! Graph-Pass Registry (paper Fig. 3 + §8): the extension point through
-//! which developers register custom optimization strategies; the optimizer
-//! evaluates every registered pass by replaying its rewritten spec.
+//! which developers register custom whole-job rewrites; mixed-precision
+//! training is the built-in example the paper mentions.
 //!
-//! Mixed-precision training is the built-in example the paper mentions.
+//! Registered passes participate in the search's round loop through
+//! [`crate::optimizer::strategy::RegistryStrategy`], which proposes each
+//! pass as a [`crate::optimizer::strategy::Decision::WholeJob`] candidate:
+//! the rewrite is applied as an in-place template swap on the long-lived
+//! [`crate::graph::MutableGraph`], judged by incremental replay, and kept
+//! or rolled back — no global-DFG construction either way. For that
+//! in-loop path a pass must be **template-level**: it may rewrite
+//! `spec.model` (op costs, precisions, tensor bytes) but must keep the op
+//! and tensor counts, and its plan/fusion/cluster changes are ignored.
+//! [`Registry::best_improvement`] remains as the standalone
+//! build-and-replay evaluator for passes that do rewrite plans.
 
 use crate::config::JobSpec;
 use crate::graph::{build_global, AnalyticCost};
@@ -66,6 +76,14 @@ impl Registry {
 
     pub fn names(&self) -> Vec<&str> {
         self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Pass registered under `name`, if any. The strategy layer
+    /// ([`crate::optimizer::strategy::RegistryStrategy`]) resolves
+    /// [`crate::optimizer::strategy::Decision::WholeJob`] decisions through
+    /// this lookup when applying them inside the search's round loop.
+    pub fn get(&self, name: &str) -> Option<&dyn GraphPass> {
+        self.passes.iter().find(|p| p.name() == name).map(|b| b.as_ref())
     }
 
     /// Try every registered pass; return the best (name, spec, est) that

@@ -1,27 +1,31 @@
 //! The diagnosis & optimization search (paper Alg. 1): iteratively replay,
-//! extract the critical path of the execution graph, and apply op fusion /
-//! tensor fusion / tensor partition guided by Theorems 1–3 until the
-//! estimated iteration time converges or the budget runs out.
+//! let every registered [`Strategy`] propose decisions from the replayed
+//! critical path, and keep each candidate only if an incremental replay
+//! judges it an improvement — until the estimate converges or the budget
+//! runs out.
 //!
-//! The loop holds **one long-lived** [`MutableGraph`] +
-//! [`IncrementalReplayer`] across all rounds: decisions apply as in-place
-//! graph edits and each round's replay recomputes only the affected cone.
-//! After setup, a search performs **zero** global-DFG constructions
-//! (tracked by [`crate::graph::build_count`] and pinned by tests) — the
-//! Table 5 speedups come precisely from decoupling per-candidate
-//! simulation cost from graph-construction cost.
+//! The loop is **strategy-agnostic**: all candidate generation goes through
+//! the [`Strategy`] trait ([`crate::optimizer::strategy`]), and every
+//! candidate — fusion, partition, registry pass, memory pass alike — is
+//! applied inside a [`MutableGraph`] transaction, replayed incrementally,
+//! and committed or rolled back. The loop holds **one long-lived**
+//! [`MutableGraph`] + [`IncrementalReplayer`] across all rounds; after
+//! setup, a search performs **zero** global-DFG constructions (tracked by
+//! [`crate::graph::build_count`] and pinned by tests) — the Table 5
+//! speedups come precisely from decoupling per-candidate simulation cost
+//! from graph-construction cost.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::config::JobSpec;
-use crate::graph::dfg::{NodeId, OpKind, TensorId};
-use crate::graph::{build_global_nameless, plan_props, AnalyticCost, MutableGraph};
-use crate::optimizer::memopt::{self, MemOpt};
-use crate::optimizer::{coarsen, passes, symmetry::SymmetryIndex};
+use crate::graph::{plan_props, MutableGraph};
+use crate::optimizer::memopt::MemOpt;
+use crate::optimizer::strategy::{
+    self, ApplyCtx, CandidateEval, Decision, SearchCtx, Strategy, Tsync,
+};
+use crate::optimizer::{coarsen, symmetry::SymmetryIndex};
 use crate::replay::incremental::IncrementalReplayer;
-use crate::replay::partial::TsyncEstimator;
-use crate::replay::replay_once;
+use crate::util::json::Json;
 use crate::util::Us;
 
 /// Search configuration; the three `use_*` flags are the paper's Table 5
@@ -40,6 +44,11 @@ pub struct SearchOpts {
     /// ([`crate::graph::plan_props`]), never from the scheme enum.
     pub enable_partition: Option<bool>,
     pub memory_budget_bytes: Option<f64>,
+    /// Explicit strategy set as a comma-separated name list (the CLI's
+    /// `--strategies`; see [`strategy::parse_strategies`]). `None` = the
+    /// critical-path walker per the enable flags above, plus the memory
+    /// passes whenever a budget is set.
+    pub strategies: Option<String>,
     pub max_rounds: usize,
     /// Stop when the estimate improves < 0.5% over this many rounds.
     pub converge_rounds: usize,
@@ -57,6 +66,7 @@ impl Default for SearchOpts {
             enable_tensor_fusion: true,
             enable_partition: None,
             memory_budget_bytes: None,
+            strategies: None,
             max_rounds: 40,
             converge_rounds: 5,
             budget_wall_s: 120.0,
@@ -97,8 +107,17 @@ pub struct SearchOutcome {
     pub spec: JobSpec,
     pub baseline_iteration_us: Us,
     pub est_iteration_us: Us,
+    /// Estimated peak memory of the chosen plan (0 unless a memory budget
+    /// was set — the peak walk only runs for budgeted searches).
+    pub est_mem_bytes: f64,
     pub history: Vec<Us>,
+    /// The memory pass the round loop accepted, if any (derived from
+    /// [`Self::accepted`]).
     pub mem_opt: MemOpt,
+    /// Every accepted decision, in acceptance order.
+    pub accepted: Vec<Decision>,
+    /// Candidates evaluated (accepted + rolled back).
+    pub candidates_tried: usize,
     pub replays: usize,
     pub full_replays_for_tsync: usize,
     pub actions_applied: usize,
@@ -113,107 +132,63 @@ impl SearchOutcome {
     pub fn speedup(&self) -> f64 {
         self.baseline_iteration_us / self.est_iteration_us
     }
-}
 
-/// A decision recorded during a critical-path walk, in *stable* ids
-/// (template ops / tensors) so it survives plan-index shifts.
-#[derive(Clone, Debug)]
-enum Decision {
-    /// fuse the fusion groups containing these two template ops + the comm
-    /// groups of their produced tensors (Theorems 1+3)
-    OpFuse(u32, u32),
-    /// fuse the comm groups containing these two tensors + their producer
-    /// fusion groups (Theorems 2+3)
-    TensorFuse(TensorId, TensorId),
-    /// set partition count of the comm group containing the tensor
-    Partition(TensorId, usize),
-}
-
-/// t_sync oracle: partial replay (fast, never builds) or full replay of
-/// the entire current job (the strawman's approach, memoized on
-/// `(bytes_bucket, k)` so repeated probes within a round do not repeat
-/// builds — the cache is cleared each round because a strawman probe
-/// measures the *current* mutating job, not an idle network).
-struct Tsync {
-    partial: Option<TsyncEstimator>,
-    strawman_cache: HashMap<(u64, usize), Us>,
-    full_replays: usize,
-}
-
-impl Tsync {
-    fn new(spec: &JobSpec, partial: bool, max_k: usize) -> Tsync {
-        let partial = partial.then(|| {
-            // pre-instantiate every partition count a round can query: the
-            // grid range plus whatever the deployed plan already uses —
-            // after this, t_sync never constructs a graph
-            let mut ks: Vec<usize> = (1..=max_k.max(1)).collect();
-            ks.extend(spec.plan.groups.iter().map(|g| g.partitions.max(1)));
-            TsyncEstimator::with_prebuilt(spec, ks)
-        });
-        Tsync { partial, strawman_cache: HashMap::new(), full_replays: 0 }
-    }
-
-    /// Invalidate measurements that depend on the evolving job (the
-    /// partial-replay estimator probes an idle network and stays valid).
-    fn new_round(&mut self) {
-        self.strawman_cache.clear();
-    }
-
-    fn t_sync(&mut self, spec: &JobSpec, bytes: f64, k: usize) -> Us {
-        if let Some(p) = &mut self.partial {
-            return p.t_sync(bytes, k);
-        }
-        let key = ((bytes / 1024.0).round() as u64, k.max(1));
-        if let Some(&v) = self.strawman_cache.get(&key) {
-            return v;
-        }
-        // strawman: rebuild and replay the entire current job with group 0
-        // rescaled to the probe size
-        if spec.plan.groups.is_empty() {
-            return 0.0;
-        }
-        let mut s = spec.clone();
-        s.plan.groups[0].partitions = k.max(1);
-        let scale_t = s.plan.groups[0].tensors[0] as usize;
-        let group_rest: f64 = s.plan.groups[0]
-            .tensors
-            .iter()
-            .skip(1)
-            .map(|&t| s.model.tensors[t as usize].bytes)
-            .sum();
-        s.model.tensors[scale_t].bytes = (bytes - group_rest).max(1.0);
-        let g = build_global_nameless(&s, &AnalyticCost::new(&s));
-        let r = replay_once(&g);
-        self.full_replays += 1;
-        let mut t_in = f64::INFINITY;
-        let mut t_out: f64 = 0.0;
-        for &n in &g.group_nodes[0] {
-            let node = g.dfg.node(n);
-            match node.kind {
-                OpKind::In => t_in = t_in.min(r.end[n as usize]),
-                OpKind::Out => t_out = t_out.max(r.end[n as usize]),
-                _ => {}
-            }
-        }
-        let t = (t_out - t_in).max(0.0);
-        self.strawman_cache.insert(key, t);
-        t
-    }
-
-    fn opt_part_num(&mut self, spec: &JobSpec, bytes: f64, max_k: usize) -> (usize, Us) {
-        let mut best = (1usize, f64::INFINITY);
-        for k in 1..=max_k.max(1) {
-            let t = self.t_sync(spec, bytes, k);
-            if t < best.1 {
-                best = (k, t);
-            }
-        }
-        best
+    /// Machine-readable form (CLI `--json`, benches, CI).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("baseline_iteration_us", Json::Num(self.baseline_iteration_us));
+        j.set("est_iteration_us", Json::Num(self.est_iteration_us));
+        j.set("speedup", Json::Num(self.speedup()));
+        j.set("est_mem_bytes", Json::Num(self.est_mem_bytes));
+        j.set("mem_opt", Json::Str(self.mem_opt.name().to_string()));
+        j.set(
+            "history_us",
+            Json::Arr(self.history.iter().map(|&h| Json::Num(h)).collect()),
+        );
+        j.set(
+            "accepted",
+            Json::Arr(self.accepted.iter().map(|d| Json::Str(d.to_string())).collect()),
+        );
+        j.set("candidates_tried", Json::Num(self.candidates_tried as f64));
+        j.set("replays", Json::Num(self.replays as f64));
+        j.set(
+            "full_replays_for_tsync",
+            Json::Num(self.full_replays_for_tsync as f64),
+        );
+        j.set("actions_applied", Json::Num(self.actions_applied as f64));
+        j.set(
+            "builds_during_search",
+            Json::Num(self.builds_during_search as f64),
+        );
+        j.set("wall_s", Json::Num(self.wall_s));
+        j
     }
 }
 
-/// Run Alg. 1 on a job spec.
+/// Round-level convergence check: a feasibility change always counts as
+/// progress; otherwise require a > 0.5% time improvement.
+fn round_improves(new: &CandidateEval, best: &CandidateEval, budget: Option<f64>) -> bool {
+    let slack = CandidateEval { time_us: best.time_us * 0.995, ..*best };
+    strategy::better(new, &slack, budget)
+}
+
+/// Run Alg. 1 on a job spec with the default strategy set (see
+/// [`strategy::strategies_from_opts`]).
 pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
+    optimize_with(spec0, opts, strategy::strategies_from_opts(opts))
+}
+
+/// Run Alg. 1 with an explicit strategy set. The loop body is the whole
+/// public contract: per round, replay the current state once, collect
+/// candidates from every strategy, then for each candidate open a
+/// transaction, apply, replay incrementally, and keep or roll back under
+/// the uniform objective [`strategy::better`]. No strategy-specific logic
+/// lives here.
+pub fn optimize_with(
+    spec0: &JobSpec,
+    opts: &SearchOpts,
+    mut strategies: Vec<Box<dyn Strategy>>,
+) -> SearchOutcome {
     let t0 = Instant::now();
     let mut replays = 0usize;
 
@@ -231,23 +206,13 @@ pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
     let mut spec = spec0.clone();
     let mut spec_dirty = false;
 
-    // ---- memory passes (Alg. 1 line 1) ----
-    let mut mem_opt = MemOpt::None;
-    if let Some(budget) = opts.memory_budget_bytes {
-        let (chosen, _) = memopt::choose(&spec, budget);
-        mem_opt = chosen;
-        if chosen != MemOpt::None {
-            spec = memopt::apply(&spec, chosen);
-            spec_dirty = true;
-        }
-    }
-
     // ---- Coarsened View (Alg. 1 line 2) ----
     if opts.use_coarsened_view {
         let stats = coarsen::coarsen(&mut spec);
         spec_dirty |= stats.op_fusions + stats.tensor_fusions > 0;
     }
 
+    let budget = opts.memory_budget_bytes;
     let partition_enabled = opts
         .enable_partition
         .unwrap_or_else(|| plan_props(&spec).uses_servers);
@@ -269,266 +234,165 @@ pub fn optimize(spec0: &JobSpec, opts: &SearchOpts) -> SearchOutcome {
     let builds_before_rounds = crate::graph::build_count();
 
     let mut history: Vec<Us> = Vec::new();
-    let mut best = f64::INFINITY;
-    let mut best_spec = mg.spec().clone();
+    let mut best: Option<(CandidateEval, JobSpec)> = None;
     let mut stale = 0usize;
     let mut actions_applied = 0usize;
+    let mut candidates_tried = 0usize;
+    // accepted decisions with their proposing strategy: an accepted
+    // decision's cost hint (Strategy::evaluate — e.g. gradient
+    // accumulation's +18% and accumulated-gradient buffer) is a property
+    // of the resulting *state*, so it must keep adjusting every later
+    // evaluation, not just the one that judged it
+    let mut accepted: Vec<(usize, Decision)> = Vec::new();
+    // evaluation of the current (last accepted) state, for the post-loop
+    // fold — acceptances between round starts are not yet in `best`
+    let mut final_eval: Option<CandidateEval> = None;
 
-    for _round in 0..opts.max_rounds {
+    'rounds: for round in 0..opts.max_rounds {
         if t0.elapsed().as_secs_f64() > opts.budget_wall_s {
             break;
         }
         tsync.new_round();
+
+        // ---- one replay of the current accepted state ----
         let log = mg.commit();
-        let result = eng.replay_incremental(&mg, &log);
-        replays += 1;
-        let est = result.iteration_time;
-        history.push(est);
-        if est < best * 0.995 {
-            best = est;
-            best_spec = mg.spec().clone();
-            stale = 0;
-        } else {
-            stale += 1;
-            if stale >= opts.converge_rounds {
-                break;
+        let cur0;
+        let path;
+        let mut cands: Vec<(usize, Decision)> = Vec::new();
+        {
+            let r = eng.replay_incremental(&mg, &log);
+            replays += 1;
+            let mut e = strategy::eval_state(&mg, r, budget);
+            for (asi, ad) in &accepted {
+                e = strategies[*asi].evaluate(ad, e, &mg);
+            }
+            cur0 = e;
+            history.push(cur0.time_us);
+            let improved = match &best {
+                None => true,
+                Some((b, _)) => round_improves(&cur0, b, budget),
+            };
+            if improved {
+                best = Some((cur0, mg.spec().clone()));
+                stale = 0;
+            } else {
+                stale += 1;
+                if stale >= opts.converge_rounds {
+                    break;
+                }
+            }
+
+            // ---- collect candidates from every strategy ----
+            path = r.critical_path();
+            let mut ctx = SearchCtx {
+                mg: &mg,
+                end: &r.end,
+                path: &path,
+                tsync: &mut tsync,
+                opts,
+                partition_enabled,
+                budget_bytes: budget,
+                cur: cur0,
+                round,
+            };
+            for (si, s) in strategies.iter_mut().enumerate() {
+                for d in s.candidates(&mut ctx) {
+                    cands.push((si, d));
+                }
             }
         }
-
-        // ---- walk the critical path and collect decisions ----
-        let path = result.critical_path();
-        let decisions =
-            collect_decisions(&mg, &path, &result.end, &mut tsync, opts, partition_enabled);
-        if decisions.is_empty() {
+        if cands.is_empty() {
             break;
         }
 
-        // ---- apply in place (with symmetry propagation) ----
-        let mut applied = 0usize;
-        for d in &decisions {
-            applied += apply_decision(&mut mg, d, sym.as_ref(), opts);
+        // ---- transactional accept/reject, judged by incremental replay ----
+        let actx = ApplyCtx { sym: sym.as_ref() };
+        let mut cur = cur0;
+        let mut round_applied = 0usize;
+        for (si, d) in cands {
+            if t0.elapsed().as_secs_f64() > opts.budget_wall_s {
+                break 'rounds;
+            }
+            candidates_tried += 1;
+            let txn = mg.begin();
+            let n = strategies[si].apply(&mut mg, &d, &actx);
+            if n == 0 {
+                // decision not applicable in the current state
+                mg.rollback(txn);
+                continue;
+            }
+            let log = mg.commit();
+            let mut raw = {
+                let res = eng.replay_incremental(&mg, &log);
+                replays += 1;
+                strategy::eval_state(&mg, res, budget)
+            };
+            // re-apply the cost hints of every previously accepted decision
+            // (they describe the state, which still contains those rewrites)
+            for (asi, ad) in &accepted {
+                raw = strategies[*asi].evaluate(ad, raw, &mg);
+            }
+            let cand = strategies[si].evaluate(&d, raw, &mg);
+            if strategy::better(&cand, &cur, budget) {
+                mg.commit_txn(txn);
+                cur = cand;
+                final_eval = Some(cand);
+                round_applied += n;
+                strategies[si].decided(&d, true);
+                accepted.push((si, d));
+            } else {
+                mg.rollback(txn);
+                strategies[si].decided(&d, false);
+            }
         }
-        actions_applied += applied;
-        if applied == 0 {
+        actions_applied += round_applied;
+        if round_applied == 0 {
             break;
         }
     }
     let builds_during_search = crate::graph::build_count() - builds_before_rounds;
 
-    // a zero-round run (budget/max_rounds exhausted up front) still owes
-    // the caller an estimate of the unmodified plan
-    if !best.is_finite() {
-        let log = mg.commit();
-        replays += 1;
-        best = eng.replay_incremental(&mg, &log).iteration_time;
-        best_spec = mg.spec().clone();
+    // fold the final accepted state into the best tracking (the loop may
+    // exit before re-evaluating it at a round start)
+    if let Some(fe) = final_eval {
+        let fold = match &best {
+            None => true,
+            Some((b, _)) => strategy::better(&fe, b, budget),
+        };
+        if fold {
+            best = Some((fe, mg.spec().clone()));
+        }
     }
 
+    // a zero-round run (budget/max_rounds exhausted up front) still owes
+    // the caller an estimate of the unmodified plan
+    let (best_eval, best_spec) = match best {
+        Some((e, s)) => (e, s),
+        None => {
+            let log = mg.commit();
+            replays += 1;
+            let r = eng.replay_incremental(&mg, &log);
+            let e = strategy::eval_state(&mg, r, budget);
+            (e, mg.spec().clone())
+        }
+    };
+
+    let accepted: Vec<Decision> = accepted.into_iter().map(|(_, d)| d).collect();
     SearchOutcome {
         spec: best_spec,
         baseline_iteration_us: baseline,
-        est_iteration_us: best,
+        est_iteration_us: best_eval.time_us,
+        est_mem_bytes: best_eval.mem_bytes,
         history,
-        mem_opt,
+        mem_opt: strategy::accepted_mem_opt(&accepted),
+        accepted,
+        candidates_tried,
         replays,
-        full_replays_for_tsync: tsync.full_replays,
+        full_replays_for_tsync: tsync.full_replays(),
         actions_applied,
         builds_during_search,
         wall_s: t0.elapsed().as_secs_f64(),
     }
-}
-
-/// Walk the path per Alg. 1 (lines 5–25) and collect fusion/partition
-/// decisions in stable ids.
-fn collect_decisions(
-    mg: &MutableGraph,
-    path: &[NodeId],
-    end: &[f64],
-    tsync: &mut Tsync,
-    opts: &SearchOpts,
-    partition_enabled: bool,
-) -> Vec<Decision> {
-    let spec = mg.spec();
-    let dfg = mg.dfg();
-    let gpu = &spec.cluster.gpu;
-    let mut out = Vec::new();
-
-    // group-level end times for q^e (max end over the group's comm chain)
-    let group_end = |cg: usize| -> f64 {
-        mg.group_nodes_iter(cg).map(|n| end[n as usize]).fold(0.0, f64::max)
-    };
-
-    // Alg. 1 walks the whole critical path each round; decisions are in
-    // stable ids so applying a batch cannot invalidate later ones
-    for w in path.windows(2) {
-        let (a, b) = (dfg.node(w[0]), dfg.node(w[1]));
-
-        // ---- computation-bound segment: consecutive comp ops ----
-        if opts.enable_op_fusion
-            && a.kind == b.kind
-            && (a.kind == OpKind::Backward || a.kind == OpKind::Forward)
-            && a.owner == b.owner
-        {
-            let (Some(fa), Some(fb)) = (a.template_id, b.template_id) else { continue };
-            if fa == fb {
-                continue;
-            }
-            let da = spec.fusion.duration(&spec.model, gpu, fa as usize);
-            let db = spec.fusion.duration(&spec.model, gpu, fb as usize);
-            let fused = gpu.fused_time(&[da, db]);
-            // q_{n-1}: sync of the tensors produced by the earlier group
-            let cgs = passes::comm_groups_of_fusion_group(spec, fa as usize);
-            let q_d = cgs
-                .iter()
-                .map(|&cg| {
-                    let bytes = spec.plan.group_bytes(&spec.model, cg);
-                    tsync.t_sync(spec, bytes, spec.plan.groups[cg].partitions)
-                })
-                .fold(0.0, f64::max);
-            // Theorem 1
-            if q_d <= da + db - fused {
-                let op_a = spec.fusion.groups[fa as usize][0];
-                let op_b = spec.fusion.groups[fb as usize][0];
-                out.push(Decision::OpFuse(op_a, op_b));
-            }
-            continue;
-        }
-
-        // ---- communication-bound segment: consecutive comm ops ----
-        if opts.enable_tensor_fusion && a.kind.is_comm() && b.kind.is_comm() {
-            let (Some(ta), Some(tb)) = (a.tensor, b.tensor) else { continue };
-            let (ca, cb) = (ta.tensor_id as usize, tb.tensor_id as usize);
-            if ca == cb || ca >= spec.plan.groups.len() || cb >= spec.plan.groups.len() {
-                continue;
-            }
-            let sa = spec.plan.group_bytes(&spec.model, ca);
-            let sb = spec.plan.group_bytes(&spec.model, cb);
-            let max_k = if partition_enabled { opts.max_partitions } else { 1 };
-            let (k_f, t_f) = tsync.opt_part_num(spec, sa + sb, max_k);
-            let (_k_b, t_b) = tsync.opt_part_num(spec, sb, max_k);
-            let q_prev_end = group_end(ca);
-            // p_n^e: end of the producer comp group of cb on this worker
-            let p_end = passes::producer_fusion_group(spec, cb)
-                .and_then(|fg| mg.comp_node(b.owner, fg as u32))
-                .map(|n| end[n as usize])
-                .unwrap_or(0.0);
-            // Theorem 2
-            if q_prev_end > p_end + t_f - t_b {
-                let t_first = spec.plan.groups[ca].tensors[0];
-                let t_second = spec.plan.groups[cb].tensors[0];
-                out.push(Decision::TensorFuse(t_first, t_second));
-                if partition_enabled && k_f > 1 {
-                    out.push(Decision::Partition(t_first, k_f));
-                }
-            } else if partition_enabled {
-                let (k_n, _) = tsync.opt_part_num(spec, sb, max_k);
-                if k_n != spec.plan.groups[cb].partitions {
-                    out.push(Decision::Partition(spec.plan.groups[cb].tensors[0], k_n));
-                }
-            }
-        }
-    }
-    out
-}
-
-/// Apply one decision (+ its Theorem-3 companions and symmetry analogs) as
-/// in-place graph edits. Returns the number of primitive passes applied.
-fn apply_decision(
-    mg: &mut MutableGraph,
-    d: &Decision,
-    sym: Option<&SymmetryIndex>,
-    opts: &SearchOpts,
-) -> usize {
-    let mut n = 0usize;
-    match *d {
-        Decision::OpFuse(op_a, op_b) => {
-            n += fuse_ops_and_tensors(mg, op_a, op_b, opts);
-            if let Some(sym) = sym {
-                for (x, y) in sym.analog_pairs(op_a, op_b) {
-                    n += fuse_ops_and_tensors(mg, x, y, opts);
-                }
-            }
-        }
-        Decision::TensorFuse(ta, tb) => {
-            n += fuse_tensors_and_ops(mg, ta, tb, opts);
-            if let Some(sym) = sym {
-                let pa = mg.spec().model.producer_of(ta);
-                let pb = mg.spec().model.producer_of(tb);
-                if let (Some(pa), Some(pb)) = (pa, pb) {
-                    for (x, y) in sym.analog_pairs(pa, pb) {
-                        // fuse the first produced tensors of the analogs
-                        let tx = mg.spec().model.ops[x as usize].produces.first().copied();
-                        let ty = mg.spec().model.ops[y as usize].produces.first().copied();
-                        if let (Some(tx), Some(ty)) = (tx, ty) {
-                            n += fuse_tensors_and_ops(mg, tx, ty, opts);
-                        }
-                    }
-                }
-            }
-        }
-        Decision::Partition(t, k) => {
-            if let Some(cg) = passes::comm_group_of_tensor(mg.spec(), t) {
-                if mg.spec().plan.groups[cg].partitions != k && mg.set_partitions(cg, k).is_ok()
-                {
-                    n += 1;
-                }
-            }
-        }
-    }
-    n
-}
-
-/// Theorem 1 + 3: fuse two fusion groups and the comm groups they feed.
-fn fuse_ops_and_tensors(mg: &mut MutableGraph, op_a: u32, op_b: u32, opts: &SearchOpts) -> usize {
-    let fa = mg.spec().fusion.group_of[op_a as usize] as usize;
-    let fb = mg.spec().fusion.group_of[op_b as usize] as usize;
-    if fa == fb {
-        return 0;
-    }
-    let mut n = 0;
-    let cgs_a = passes::comm_groups_of_fusion_group(mg.spec(), fa);
-    let cgs_b = passes::comm_groups_of_fusion_group(mg.spec(), fb);
-    if mg.fuse_comp_groups(fa, fb).is_ok() {
-        n += 1;
-        // companion tensor fusion (Theorem 3)
-        if opts.enable_tensor_fusion {
-            if let (Some(&ca), Some(&cb)) = (cgs_a.first(), cgs_b.first()) {
-                // indices may have shifted only for fusion groups, not comm
-                if ca != cb && mg.fuse_tensor_groups(ca, cb).is_ok() {
-                    n += 1;
-                }
-            }
-        }
-    }
-    n
-}
-
-/// Theorem 2 + 3: fuse two comm groups and their producer fusion groups.
-fn fuse_tensors_and_ops(
-    mg: &mut MutableGraph,
-    ta: TensorId,
-    tb: TensorId,
-    opts: &SearchOpts,
-) -> usize {
-    let Some(ca) = passes::comm_group_of_tensor(mg.spec(), ta) else { return 0 };
-    let Some(cb) = passes::comm_group_of_tensor(mg.spec(), tb) else { return 0 };
-    if ca == cb {
-        return 0;
-    }
-    let pa = passes::producer_fusion_group(mg.spec(), ca);
-    let pb = passes::producer_fusion_group(mg.spec(), cb);
-    let mut n = 0;
-    if mg.fuse_tensor_groups(ca, cb).is_ok() {
-        n += 1;
-        if opts.enable_op_fusion {
-            if let (Some(pa), Some(pb)) = (pa, pb) {
-                if pa != pb && mg.fuse_comp_groups(pa, pb).is_ok() {
-                    n += 1;
-                }
-            }
-        }
-    }
-    n
 }
 
 #[cfg(test)]
@@ -551,6 +415,8 @@ mod tests {
             out.est_iteration_us
         );
         assert!(out.actions_applied > 0);
+        assert!(!out.accepted.is_empty());
+        assert!(out.candidates_tried >= out.accepted.len());
         assert_eq!(out.spec.plan.validate(&out.spec.model), Ok(()));
         assert_eq!(out.spec.fusion.validate(&out.spec.model), Ok(()));
     }
@@ -558,7 +424,8 @@ mod tests {
     #[test]
     fn search_performs_zero_builds_during_rounds() {
         // the tentpole guarantee: after the initial construction, the
-        // round loop never rebuilds the global DFG from the spec
+        // round loop never rebuilds the global DFG from the spec — and
+        // rejected candidates roll back without a rebuild either
         let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
         let out = optimize(&spec, &quick_opts());
         assert_eq!(
@@ -657,5 +524,57 @@ mod tests {
         o.use_coarsened_view = false; // coarsening fuses tensors by design
         let out = optimize(&spec, &o);
         assert_eq!(out.spec.plan.groups.len(), n_groups);
+    }
+
+    #[test]
+    fn rejected_candidates_leave_no_trace() {
+        // a search driven only by a strategy whose candidates always lose
+        // must end bit-identical to its baseline: every transaction rolled
+        // back, zero builds, nothing accepted
+        struct Pessimizer;
+        impl crate::optimizer::registry::GraphPass for Pessimizer {
+            fn name(&self) -> &str {
+                "pessimize"
+            }
+            fn apply(&self, spec: &JobSpec) -> Option<JobSpec> {
+                let mut s = spec.clone();
+                for op in &mut s.model.ops {
+                    op.flops *= 3.0;
+                    op.bytes *= 3.0;
+                }
+                Some(s)
+            }
+        }
+        let mut reg = crate::optimizer::registry::Registry::empty();
+        reg.register(Box::new(Pessimizer));
+        let strategies: Vec<Box<dyn Strategy>> =
+            vec![Box::new(crate::optimizer::strategy::RegistryStrategy::new(reg))];
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let opts = SearchOpts {
+            max_rounds: 3,
+            use_coarsened_view: false,
+            ..Default::default()
+        };
+        let out = optimize_with(&spec, &opts, strategies);
+        assert!(out.accepted.is_empty());
+        assert_eq!(out.candidates_tried, 1, "settled after one rejection");
+        assert_eq!(out.builds_during_search, 0);
+        assert_eq!(
+            out.est_iteration_us, out.baseline_iteration_us,
+            "rollback must restore the exact baseline estimate"
+        );
+    }
+
+    #[test]
+    fn to_json_roundtrips() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let mut o = quick_opts();
+        o.max_rounds = 2;
+        let out = optimize(&spec, &o);
+        let j = out.to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.f64("builds_during_search"), 0.0);
+        assert!(parsed.f64("speedup") > 0.0);
+        assert!(parsed.get("accepted").unwrap().as_arr().is_some());
     }
 }

@@ -26,7 +26,8 @@
 //! ## Incrementality
 //!
 //! Per [`ChangeLog`] the engine repairs, in order:
-//! 1. device membership (tombstoned nodes leave, spliced nodes enter);
+//! 1. device membership (tombstoned nodes leave; spliced nodes and nodes
+//!    revived by a transaction rollback enter);
 //! 2. dependency-only ASAP times (one pass, with change detection);
 //! 3. the static order of only the devices whose member set or member
 //!    ASAP changed (re-sort + relink);
@@ -191,6 +192,21 @@ impl IncrementalReplayer {
             // a tombstone keeps its last schedule entry; it is excluded
             // from every pass below because it is not `alive`
         }
+        // nodes revived by a transaction rollback re-enter exactly like
+        // fresh additions: re-intern the device, queue for the order repair
+        for k in 0..changes.revived.len() {
+            let i = changes.revived[k] as usize;
+            if i >= n || !alive[i] {
+                continue;
+            }
+            let d = self.intern(dfg.node(i as NodeId).device);
+            self.node_dev[i] = d;
+            if d != NULL_DEV {
+                self.dev_pending[d as usize].push(i as NodeId);
+                self.dev_dirty[d as usize] = true;
+            }
+            self.aff[i] = self.epoch;
+        }
         for i in added_from..n {
             if !alive[i] {
                 continue;
@@ -275,6 +291,10 @@ impl IncrementalReplayer {
                         .then(canon[x as usize].cmp(&canon[y as usize]))
                 });
             }
+            // a revived node may already sit in the retained list *and* in
+            // pending (it was never removed from the engine's perspective);
+            // identical ids sort adjacent (equal keys), so dedup here
+            list.dedup();
             let mut prev = NONE;
             for k in 0..list.len() {
                 let x = list[k];

@@ -296,6 +296,15 @@ pub fn estimate_peak_memory(spec: &JobSpec, g: &GlobalDfg, result: &ReplayResult
         + crate::testbed::memory::RUNTIME_OVERHEAD * 0.92
 }
 
+/// The same estimate over a live [`crate::graph::MutableGraph`] schedule —
+/// what the optimizer's round loop uses to judge memory strategies without
+/// constructing a [`GlobalDfg`].
+pub fn estimate_peak_memory_mut(mg: &crate::graph::MutableGraph, end: &[f64]) -> f64 {
+    crate::testbed::memory::peak_from_mutable(mg, end)
+        * crate::testbed::memory::FRAGMENTATION
+        + crate::testbed::memory::RUNTIME_OVERHEAD * 0.92
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -6,8 +6,8 @@
 //! simulated schedule via [`peak_from_schedule`].
 
 use crate::config::JobSpec;
-use crate::graph::dfg::OpKind;
-use crate::graph::GlobalDfg;
+use crate::graph::dfg::{Node, NodeId, OpKind};
+use crate::graph::{GlobalDfg, MutableGraph};
 
 /// Fixed per-process GPU overhead a profiler-side estimate does not model:
 /// CUDA context, cuDNN handles, framework arenas (bytes).
@@ -22,12 +22,42 @@ pub const FRAGMENTATION: f64 = 1.045;
 /// their forward op's completion to their mirrored backward's completion;
 /// gradients live from their producing backward to the group's update.
 pub fn peak_from_schedule(spec: &JobSpec, g: &GlobalDfg, end: &[f64]) -> f64 {
+    peak_core(
+        spec,
+        end,
+        g.dfg.ids().map(|i| (i, g.dfg.node(i))),
+        &|fg| g.comp_node.get(&(0u16, fg)).copied(),
+        &|gi| g.update_node.get(&(0u16, gi)).copied(),
+    )
+}
+
+/// Same accounting walk over a live [`MutableGraph`] — the optimizer's
+/// accept/reject loop judges memory strategies on the incrementally-edited
+/// graph with zero `build_global*` calls.
+pub fn peak_from_mutable(mg: &MutableGraph, end: &[f64]) -> f64 {
+    let dfg = mg.dfg();
+    let alive = mg.alive();
+    peak_core(
+        mg.spec(),
+        end,
+        dfg.ids().filter(|&i| alive[i as usize]).map(|i| (i, dfg.node(i))),
+        &|fg| mg.comp_node(0, fg),
+        &|gi| Some(mg.update_node(0, gi)),
+    )
+}
+
+fn peak_core<'a>(
+    spec: &JobSpec,
+    end: &[f64],
+    nodes: impl Iterator<Item = (NodeId, &'a Node)>,
+    comp_of: &dyn Fn(u32) -> Option<NodeId>,
+    update_of: &dyn Fn(usize) -> Option<NodeId>,
+) -> f64 {
     let model = &spec.model;
     // (time, delta) events
     let mut deltas: Vec<(f64, f64)> = Vec::new();
 
-    for i in g.dfg.ids() {
-        let node = g.dfg.node(i);
+    for (i, node) in nodes {
         if node.owner != 0 || node.proc != 0 {
             continue;
         }
@@ -40,7 +70,7 @@ pub fn peak_from_schedule(spec: &JobSpec, g: &GlobalDfg, end: &[f64]) -> f64 {
                     deltas.push((end[i as usize], op.activation_bytes));
                     if let Some(mi) = op.mirror {
                         let bw_group = spec.fusion.group_of[mi as usize];
-                        if let Some(&bw) = g.comp_node.get(&(0u16, bw_group)) {
+                        if let Some(bw) = comp_of(bw_group) {
                             deltas.push((end[bw as usize], -op.activation_bytes));
                         }
                     }
@@ -58,7 +88,7 @@ pub fn peak_from_schedule(spec: &JobSpec, g: &GlobalDfg, end: &[f64]) -> f64 {
                             .map(|&t| model.tensors[t as usize].bytes)
                             .sum();
                         if b > 0.0 {
-                            if let Some(&upd) = g.update_node.get(&(0u16, gi)) {
+                            if let Some(upd) = update_of(gi) {
                                 deltas.push((end[upd as usize], -b));
                             }
                         }

@@ -1,0 +1,261 @@
+//! Strategy-API guarantees:
+//!
+//! 1. **Transactional rollback is exact**: for random decision sequences
+//!    with interleaved rollbacks, the long-lived [`MutableGraph`] +
+//!    incremental engine stay bit-identical to a from-scratch build +
+//!    replay of the accepted-only spec, across every registered comm
+//!    scheme. (A rollback is a pure inverse-journal replay — no rebuild,
+//!    no spec re-clone — so any divergence here is a journal bug.)
+//! 2. **Registry and memory strategies are first-class search
+//!    participants**: mixed precision and a memory pass win/lose inside
+//!    the round loop via incremental replay, with
+//!    `builds_during_search == 0` preserved.
+
+use std::collections::HashMap;
+
+use dpro::config::{CommPlan, FusionPlan, JobSpec, Transport, ALL_SCHEMES};
+use dpro::graph::MutableGraph;
+use dpro::optimizer::memopt::{self, MemOpt};
+use dpro::optimizer::registry::{GraphPass, MixedPrecisionPass};
+use dpro::optimizer::strategy::Decision;
+use dpro::optimizer::{optimize, SearchOpts};
+use dpro::replay::incremental::IncrementalReplayer;
+use dpro::util::rng::Pcg;
+
+fn full_replay(spec: &JobSpec) -> (MutableGraph, IncrementalReplayer) {
+    let mut mg = MutableGraph::new(spec.clone());
+    let mut eng = IncrementalReplayer::new();
+    let log = mg.commit();
+    eng.replay_incremental(&mg, &log);
+    (mg, eng)
+}
+
+/// Live-node schedule keyed by canonical rank — the node identity shared
+/// between an incrementally-edited graph and a fresh build of its spec.
+fn schedule_by_canon(mg: &MutableGraph, eng: &IncrementalReplayer) -> HashMap<u64, (f64, f64)> {
+    let r = eng.result();
+    let mut m = HashMap::new();
+    for i in mg.dfg().ids() {
+        let iu = i as usize;
+        if mg.alive()[iu] {
+            let prev = m.insert(mg.canon_ranks()[iu], (r.start[iu], r.end[iu]));
+            assert!(prev.is_none(), "duplicate canonical rank");
+        }
+    }
+    m
+}
+
+/// One random primitive edit (the search's own mix, plus whole-job
+/// template swaps); returns the number of passes applied.
+fn random_edit(rng: &mut Pcg, mg: &mut MutableGraph) -> usize {
+    match rng.below(5) {
+        0 => {
+            let n = mg.spec().fusion.groups.len();
+            let (a, b) = (rng.below(n), rng.below(n));
+            (a != b && mg.fuse_comp_groups(a, b).is_ok()) as usize
+        }
+        1 => {
+            let n = mg.n_groups();
+            if n < 2 {
+                return 0;
+            }
+            let (a, b) = (rng.below(n), rng.below(n));
+            (a != b && mg.fuse_tensor_groups(a, b).is_ok()) as usize
+        }
+        2 | 3 => {
+            let n = mg.n_groups();
+            let g = rng.below(n);
+            let k = 1 + rng.below(8);
+            let before = mg.spec().plan.groups[g].partitions;
+            (mg.set_partitions(g, k).is_ok() && before != k.max(1)) as usize
+        }
+        _ => {
+            // whole-job template swap (mixed precision — repeated
+            // applications keep shrinking tensors, which is fine here: the
+            // equivalence obligation is against whatever spec results)
+            match MixedPrecisionPass.apply(mg.spec()) {
+                Some(cand) => mg.swap_model(cand.model).is_ok() as usize,
+                None => 0,
+            }
+        }
+    }
+}
+
+/// The incremental state must equal a from-scratch build of the current
+/// (accepted-only) spec, bit-for-bit.
+fn assert_matches_fresh(
+    mg: &MutableGraph,
+    eng: &IncrementalReplayer,
+    label: &str,
+) {
+    let inc = eng.result().iteration_time;
+    let (mg2, eng2) = full_replay(mg.spec());
+    let fresh = eng2.result().iteration_time;
+    assert_eq!(inc, fresh, "{label}: iteration_time diverged");
+    let a = schedule_by_canon(mg, eng);
+    let b = schedule_by_canon(&mg2, &eng2);
+    assert_eq!(a.len(), b.len(), "{label}: live node counts differ");
+    for (c, &(s1, e1)) in &a {
+        let &(s2, e2) =
+            b.get(c).unwrap_or_else(|| panic!("{label}: rank {c:#x} missing in fresh build"));
+        assert!(
+            (s1 - s2).abs() <= 1e-6 && (e1 - e2).abs() <= 1e-6,
+            "{label}: node times diverged ({s1},{e1}) vs ({s2},{e2})"
+        );
+    }
+}
+
+#[test]
+fn rollback_restores_accepted_only_state_across_schemes() {
+    let mut rng = Pcg::seeded(20260730);
+    let models_for = |scheme: &str| -> Vec<(&'static str, usize)> {
+        match scheme {
+            // the flat worker ring lowers to much larger graphs: fewer
+            // (still multi-edit) steps keep the from-scratch oracle cheap
+            "ring" => vec![("vgg16", 3)],
+            _ => vec![("vgg16", 5), ("resnet50", 4)],
+        }
+    };
+    for scheme in ALL_SCHEMES {
+        for (model, n_steps) in models_for(scheme) {
+            let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+            let (mut mg, mut eng) = full_replay(&spec);
+            for step in 0..n_steps {
+                let label = format!("{model}/{scheme} step {step}");
+                let txn = mg.begin();
+                let want = 1 + rng.below(3);
+                let mut applied = 0usize;
+                for _ in 0..24 {
+                    applied += random_edit(&mut rng, &mut mg);
+                    if applied >= want {
+                        break;
+                    }
+                }
+                // replay the candidate state (as the search does), then
+                // randomly keep or reject it
+                let log = mg.commit();
+                eng.replay_incremental(&mg, &log);
+                let keep = applied > 0 && rng.below(2) == 0;
+                if keep {
+                    mg.commit_txn(txn);
+                } else {
+                    mg.rollback(txn);
+                    let log = mg.commit();
+                    eng.replay_incremental(&mg, &log);
+                }
+                assert_eq!(mg.validate(), Ok(()), "{label}");
+                assert!(!mg.in_txn(), "{label}");
+                assert_matches_fresh(&mg, &eng, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn rollback_of_multi_edit_transaction_is_exact() {
+    // one transaction mixing every decision kind, rejected as a whole:
+    // the post-rollback state must equal the never-applied state exactly
+    let spec = JobSpec::standard("resnet50", "byteps", Transport::Tcp);
+    let (mut mg, mut eng) = full_replay(&spec);
+    let before = eng.result().iteration_time;
+    let n0 = mg.dfg().len();
+
+    let txn = mg.begin();
+    assert!(mg.in_txn());
+    mg.fuse_tensor_groups(0, 1).unwrap();
+    mg.fuse_comp_groups(2, 3).unwrap();
+    mg.set_partitions(0, 4).unwrap();
+    let cand = MixedPrecisionPass.apply(mg.spec()).unwrap();
+    mg.swap_model(cand.model).unwrap();
+    let log = mg.commit();
+    let mid = eng.replay_incremental(&mg, &log).iteration_time;
+    assert_ne!(mid, before, "the transaction must have had an effect");
+
+    mg.rollback(txn);
+    let log = mg.commit();
+    let after = eng.replay_incremental(&mg, &log).iteration_time;
+    assert_eq!(after, before, "rollback must be bit-exact");
+    assert_eq!(mg.validate(), Ok(()));
+    assert_matches_fresh(&mg, &eng, "multi-edit rollback");
+    // appended-then-killed splice nodes stay as tombstones (ids are never
+    // reused) but the arena must not have exploded from one rejection
+    assert!(mg.dfg().len() < n0 * 3, "arena grew {n0} -> {}", mg.dfg().len());
+}
+
+/// The memory-constrained job of the paper's Table 4 (BERT-Base at batch
+/// 64 on a 16 GB V100).
+fn bert64() -> JobSpec {
+    let mut s = JobSpec::standard("bert_base", "horovod", Transport::Rdma);
+    s.model = dpro::models::bert::bert_base(64, 128);
+    s.plan = CommPlan::per_tensor(&s.model);
+    s.fusion = FusionPlan::singletons(&s.model);
+    s.cluster.gpu = dpro::models::cost::GpuModel::v100_16gb();
+    s
+}
+
+#[test]
+fn registry_and_memory_strategies_win_inside_the_round_loop() {
+    let spec = bert64();
+    // a budget below the unoptimized peak forces a memory pass; mixed
+    // precision alone cannot close the gap (it halves gradients, not
+    // activations)
+    let budget = memopt::evaluate(&spec, MemOpt::None).mem_bytes * 0.8;
+    let opts = SearchOpts {
+        max_rounds: 6,
+        budget_wall_s: 90.0,
+        memory_budget_bytes: Some(budget),
+        strategies: Some("op-fuse,tensor-fuse,mixed-precision,recompute".into()),
+        ..Default::default()
+    };
+    let out = optimize(&spec, &opts);
+
+    // zero rebuilds even with registry + memory strategies in the loop
+    assert_eq!(
+        out.builds_during_search, 0,
+        "registry/memory participation rebuilt the world {} times",
+        out.builds_during_search
+    );
+    // the memory pass won a round-loop decision and restored feasibility
+    assert_eq!(out.mem_opt, MemOpt::Recomputation);
+    assert!(
+        out.accepted.contains(&Decision::Memory(MemOpt::Recomputation)),
+        "accepted: {:?}",
+        out.accepted
+    );
+    assert!(
+        out.est_mem_bytes <= budget,
+        "est mem {:.2} GB over budget {:.2} GB",
+        out.est_mem_bytes / 1e9,
+        budget / 1e9
+    );
+    // mixed precision won too (compute-bound BERT)
+    assert!(
+        out.accepted.iter().any(|d| matches!(d, Decision::WholeJob(n) if n == "mixed_precision")),
+        "accepted: {:?}",
+        out.accepted
+    );
+    assert!(out.candidates_tried >= out.accepted.len());
+    assert_eq!(out.spec.plan.validate(&out.spec.model), Ok(()));
+    assert_eq!(out.spec.fusion.validate(&out.spec.model), Ok(()));
+}
+
+#[test]
+fn memory_strategy_stays_quiet_under_a_generous_budget() {
+    let spec = bert64();
+    let budget = memopt::evaluate(&spec, MemOpt::None).mem_bytes * 2.0;
+    let opts = SearchOpts {
+        max_rounds: 4,
+        budget_wall_s: 60.0,
+        memory_budget_bytes: Some(budget),
+        ..Default::default()
+    };
+    let out = optimize(&spec, &opts);
+    assert_eq!(out.mem_opt, MemOpt::None);
+    assert!(
+        !out.accepted.iter().any(|d| matches!(d, Decision::Memory(_))),
+        "accepted: {:?}",
+        out.accepted
+    );
+    assert!(out.est_mem_bytes > 0.0, "budgeted searches report peak memory");
+    assert!(out.est_mem_bytes <= budget);
+}
