@@ -29,6 +29,7 @@ pub struct Alignment {
     pub theta: HashMap<u16, f64>,
     /// Final objective value (for convergence reporting).
     pub objective: f64,
+    /// Solver iterations performed.
     pub iterations: usize,
 }
 
@@ -38,6 +39,7 @@ impl Alignment {
         Alignment { theta: HashMap::new(), objective: 0.0, iterations: 0 }
     }
 
+    /// Solved clock offset θ of a process (0.0 for unseen processes).
     pub fn offset(&self, proc: u16) -> f64 {
         self.theta.get(&proc).copied().unwrap_or(0.0)
     }
@@ -55,11 +57,17 @@ impl Alignment {
 /// One RECV observation joined with its SEND (by transaction id + iter).
 #[derive(Clone, Debug)]
 pub struct RecvObs {
+    /// RECV-op family id (same op name across iterations).
     pub family: u32,
+    /// Receiving process.
     pub recv_proc: u16,
+    /// Sending process.
     pub send_proc: u16,
+    /// Measured RECV start (receiver clock).
     pub recv_st: f64,
+    /// Measured RECV end (receiver clock).
     pub recv_ed: f64,
+    /// The SEND's completion time (sender clock) — the clip point.
     pub send_st: f64,
 }
 
@@ -67,7 +75,9 @@ pub struct RecvObs {
 pub struct Problem {
     /// Number of processes (θ dimension). Process ids are remapped densely.
     pub procs: Vec<u16>,
+    /// Machine hosting each dense process index (O₂ ties same machines).
     pub machine_of: Vec<u16>,
+    /// All joined SEND↔RECV observations.
     pub obs: Vec<RecvObs>,
     /// Cross-process dependency constraints (i, t_i, j, t_j): require
     /// `t_i + θ_i ≤ t_j + θ_j` (op on i happens-before op on j).

@@ -14,9 +14,13 @@
 
 use super::Problem;
 
+/// Solver output: θ per dense process index, plus convergence info.
 pub struct Solution {
+    /// Solved clock offsets, indexed like [`Problem::procs`].
     pub theta: Vec<f64>,
+    /// Final objective value.
     pub objective: f64,
+    /// Iterations performed before convergence or the cap.
     pub iterations: usize,
 }
 

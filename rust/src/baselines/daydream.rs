@@ -104,10 +104,14 @@ pub fn estimate(spec: &JobSpec, profile: Option<&ProfileDb>) -> DaydreamEstimate
     }
 }
 
+/// Daydream's replay estimate for one job.
 #[derive(Clone, Copy, Debug)]
 pub struct DaydreamEstimate {
+    /// Estimated iteration time (us).
     pub iteration_us: Us,
+    /// Worker 0's forward busy time (us).
     pub fw_us: Us,
+    /// Worker 0's backward busy time (us).
     pub bw_us: Us,
 }
 

@@ -1,14 +1,22 @@
 //! Command-line interface (paper §6 "APIs and Commands").
 //!
 //! ```text
-//! dpro profile  --model resnet50 --scheme horovod --transport rdma -o trace.json
-//! dpro replay   --model resnet50 --scheme horovod --transport rdma --trace trace.json
-//! dpro align    --trace trace.json
+//! dpro profile  --model resnet50 --scheme horovod --transport rdma --dump-dir trace/
+//! dpro replay   --trace-dir trace/ --json
+//! dpro align    --trace-dir trace/ --json
 //! dpro optimize --model resnet50 --scheme ps-tree --transport rdma \
 //!               --strategies op-fuse,tensor-fuse,mixed-precision,recompute
 //! dpro train    --config mini --workers 4 --steps 50
 //! dpro report   --model bert_base --scheme ring
 //! ```
+//!
+//! `profile --dump-dir` writes a per-process Chrome-trace directory (see
+//! `docs/TRACE_FORMAT.md`) that `replay`/`align` ingest back with
+//! `--trace-dir` — including externally produced or hand-edited dumps
+//! (the what-if workflow). A dump's `metadata.json` carries the job
+//! descriptor, so `dpro replay --trace-dir` needs no `--model/--scheme`
+//! flags; explicit flags still win when given. The legacy single-file
+//! `-o trace.json` / `--trace trace.json` forms remain supported.
 //!
 //! `--scheme` accepts any registered communication scheme (`horovod`,
 //! `ring`, `byteps`, `ps-tree` + aliases) — see the `parse` constructor on
@@ -23,15 +31,20 @@
 //! replaced by a default. `replay`, `optimize` and `report` accept
 //! `--json` for machine-readable output on stdout.
 
+use crate::alignment::Alignment;
 use crate::baselines;
 use crate::config::{ClusterSpec, CommScheme, JobSpec, Transport, ALL_SCHEMES};
 use crate::optimizer::{optimize, strategy, SearchOpts};
 use crate::profiler;
 use crate::testbed::{run as tb_run, TestbedOpts};
+use crate::trace::io::{dump_dir_with_job, load_dir, JobMeta};
+use crate::trace::validate::TraceReport;
 use crate::trace::GTrace;
 use crate::util::json::Json;
 use crate::util::{fmt_bytes, fmt_us, Args};
+use std::path::Path;
 
+/// Dispatch a parsed command line; returns the process exit code.
 pub fn run(args: Args) -> i32 {
     match args.positional.first().map(String::as_str) {
         Some("profile") => cmd_profile(&args),
@@ -56,15 +69,19 @@ fn usage() {
     println!(
         "dpro {} — profiling & optimization for distributed DNN training\n\n\
          commands:\n  \
-         profile  --model M --scheme S --transport T [-o trace.json] [--iters 10]\n  \
-         replay   --model M --scheme S --transport T --trace trace.json [--no-align] [--json]\n  \
-         align    --trace trace.json\n  \
+         profile  --model M --scheme S --transport T [-o trace.json] [--dump-dir DIR] [--iters 10]\n  \
+         replay   --trace-dir DIR | --trace trace.json [--model M --scheme S --transport T]\n           \
+         [--no-align] [--json]\n  \
+         align    --trace-dir DIR | --trace trace.json [--json]\n  \
          optimize --model M --scheme S --transport T [--budget-s 60] [--strawman]\n           \
          [--strategies {}] [--memory-budget-gb G] [--json]\n  \
-         train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n  \
+         train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n           \
+         [--dump-dir DIR]\n  \
          report   --model M [--scheme S] [--transport T] [--json]\n\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
-         schemes: {}   transports: rdma tcp",
+         schemes: {}   transports: rdma tcp\n\n\
+         trace directories follow docs/TRACE_FORMAT.md; `replay --trace-dir`\n\
+         reads the job from the dump's metadata.json (explicit flags win)",
         crate::version(),
         strategy::STRATEGY_NAMES.join(","),
         ALL_SCHEMES.join(" "),
@@ -74,9 +91,30 @@ fn usage() {
 /// Build the job spec from CLI args, rejecting invalid values instead of
 /// silently substituting defaults.
 fn job_from_args(args: &Args) -> Result<JobSpec, String> {
-    let model = args.get_or("model", "resnet50");
-    let scheme = args.get_or("scheme", "horovod");
-    let transport = match args.get_or("transport", "rdma").as_str() {
+    job_from_args_with(args, None)
+}
+
+/// Like [`job_from_args`], but with a trace dump's job descriptor as the
+/// default layer: explicit CLI flags win, then `metadata.json`, then the
+/// built-in defaults. Validation is identical either way — a bad value
+/// from metadata is rejected with the same message as a bad flag.
+fn job_from_args_with(args: &Args, meta: Option<&JobMeta>) -> Result<JobSpec, String> {
+    let model = args
+        .get("model")
+        .map(str::to_string)
+        .or_else(|| meta.map(|m| m.model.clone()))
+        .unwrap_or_else(|| "resnet50".into());
+    let scheme = args
+        .get("scheme")
+        .map(str::to_string)
+        .or_else(|| meta.map(|m| m.scheme.clone()))
+        .unwrap_or_else(|| "horovod".into());
+    let transport_name = args
+        .get("transport")
+        .map(str::to_string)
+        .or_else(|| meta.map(|m| m.transport.clone()))
+        .unwrap_or_else(|| "rdma".into());
+    let transport = match transport_name.as_str() {
         "tcp" => Transport::Tcp,
         "rdma" => Transport::Rdma,
         other => {
@@ -86,7 +124,16 @@ fn job_from_args(args: &Args) -> Result<JobSpec, String> {
         }
     };
     let workers = match args.get("workers") {
-        None => None,
+        // metadata gets the same validation as the flag (hand-edited
+        // dumps are untrusted; a 0 would divide comm chunks by zero)
+        None => match meta.map(|m| m.n_workers) {
+            Some(0) => {
+                return Err(
+                    "invalid n_workers 0 in trace metadata; expected a positive integer".into(),
+                )
+            }
+            w => w,
+        },
         Some(w) => match w.parse::<usize>() {
             Ok(n) if n >= 1 => Some(n),
             _ => {
@@ -109,10 +156,29 @@ fn job_from_args(args: &Args) -> Result<JobSpec, String> {
         ));
     }
     let mut spec = JobSpec::standard(&model, &scheme, transport);
+    if let Some(m) = meta {
+        // cluster layout from the dump (same machine ⇒ same clock matters
+        // for alignment); no CLI flag exists for gpus_per_machine
+        spec.cluster.gpus_per_machine = m.gpus_per_machine.max(1);
+    }
     if let Some(w) = workers {
         spec.cluster.n_workers = w;
     }
-    if args.flag("deployed") || !args.flag("per-tensor") {
+    // server-family schemes size their fleet from the machine count:
+    // re-parse against the *resolved* cluster shape, not the default one
+    spec.scheme = CommScheme::parse(&scheme, &spec.cluster)
+        .expect("scheme validated above");
+    // plan family: explicit flags win, then the dump's recorded plan
+    // (skeleton op names depend on it — a mismatch would silently break
+    // the trace join), then the deployed default
+    let deployed = if args.flag("per-tensor") {
+        false
+    } else if args.flag("deployed") {
+        true
+    } else {
+        meta.map_or(true, |m| m.plan != crate::trace::io::PLAN_PER_TENSOR)
+    };
+    if deployed {
         spec = baselines::deployed_default(&spec);
     }
     Ok(spec)
@@ -134,7 +200,6 @@ macro_rules! job_or_exit {
 fn cmd_profile(args: &Args) -> i32 {
     let spec = job_or_exit!(args);
     let iters = args.usize("iters", 10);
-    let out = args.get_or("o", "trace.json");
     println!(
         "profiling {} × {} workers ({}, {}) for {iters} iterations on the testbed...",
         spec.model.name,
@@ -145,6 +210,25 @@ fn cmd_profile(args: &Args) -> i32 {
     let r = tb_run(&spec, &TestbedOpts { iterations: iters, ..Default::default() });
     println!("ground-truth iteration: {}", fmt_us(r.avg_iter()));
     println!("peak memory (worker 0): {}", fmt_bytes(r.peak_memory));
+    if let Some(dir) = args.get("dump-dir") {
+        match dump_dir_with_job(&r.trace, Path::new(dir), Some(&JobMeta::of(&spec))) {
+            Ok(s) => println!(
+                "dumped {} events to {} per-process files in {dir}/ \
+                 (Perfetto-loadable; replay with `dpro replay --trace-dir {dir}`)",
+                s.events, s.files
+            ),
+            Err(e) => {
+                eprintln!("error dumping to {dir}: {e}");
+                return 1;
+            }
+        }
+        // the single-file form is implied only when explicitly requested
+        // alongside a directory dump
+        if args.get("o").is_none() {
+            return 0;
+        }
+    }
+    let out = args.get_or("o", "trace.json");
     match r.trace.save(&out) {
         Ok(()) => {
             println!("wrote {} events to {out}", r.trace.events.len());
@@ -157,32 +241,77 @@ fn cmd_profile(args: &Args) -> i32 {
     }
 }
 
+/// Load the trace named by `--trace-dir` (directory form) or `--trace`
+/// (legacy single file). Returns the trace, the ingestion report (empty
+/// for the single-file form) and the dump's job descriptor, if any.
+fn trace_from_args(args: &Args) -> Result<(GTrace, TraceReport, Option<JobMeta>), String> {
+    if let Some(dir) = args.get("trace-dir") {
+        let loaded = load_dir(Path::new(dir))?;
+        if loaded.trace.events.is_empty() {
+            return Err(format!("no usable events in {dir}: {}", loaded.report));
+        }
+        Ok((loaded.trace, loaded.report, loaded.job))
+    } else {
+        let path = args.get_or("trace", "trace.json");
+        let trace = GTrace::load(&path).map_err(|e| format!("error loading {path}: {e}"))?;
+        // the strict single-file loader collects no diagnostics, but the
+        // report's load counters must still tell the truth
+        let mut report = TraceReport::default();
+        report.files = 1;
+        report.events_loaded = trace.events.len();
+        Ok((trace, report, None))
+    }
+}
+
+/// Machine-readable replay outcome: schema-stable keys asserted by the
+/// golden-fixture CI step (`ops`, `profiled_ops`, `aligned`,
+/// `iteration_us`, `fw_us`, `bw_us`, `est_peak_mem_bytes`, `report`).
+pub fn replay_json(
+    spec: &JobSpec,
+    est: &profiler::Estimate,
+    aligned: bool,
+    report: &TraceReport,
+) -> Json {
+    let mut j = Json::obj();
+    j.set("ops", Json::Num(est.graph.dfg.len() as f64));
+    j.set("profiled_ops", Json::Num(est.profiled_ops as f64));
+    j.set("aligned", Json::Bool(aligned));
+    j.set("iteration_us", Json::Num(est.iteration_us()));
+    j.set("fw_us", Json::Num(est.fw_us()));
+    j.set("bw_us", Json::Num(est.bw_us()));
+    j.set("est_peak_mem_bytes", Json::Num(est.peak_memory(spec)));
+    j.set("report", report.to_json());
+    j
+}
+
 fn cmd_replay(args: &Args) -> i32 {
-    let spec = job_or_exit!(args);
-    let path = args.get_or("trace", "trace.json");
-    let trace = match GTrace::load(&path) {
+    let (trace, report, job) = match trace_from_args(args) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("error loading {path}: {e}");
+            eprintln!("{e}");
             return 1;
+        }
+    };
+    let spec = match job_from_args_with(args, job.as_ref()) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
         }
     };
     let aligned = !args.flag("no-align");
     let est = profiler::estimate(&spec, &trace, aligned);
     if args.flag("json") {
-        let mut j = Json::obj();
-        j.set("ops", Json::Num(est.graph.dfg.len() as f64));
-        j.set("aligned", Json::Bool(aligned));
-        j.set("iteration_us", Json::Num(est.iteration_us()));
-        j.set("fw_us", Json::Num(est.fw_us()));
-        j.set("bw_us", Json::Num(est.bw_us()));
-        j.set("est_peak_mem_bytes", Json::Num(est.peak_memory(&spec)));
-        println!("{}", j.to_string());
+        println!("{}", replay_json(&spec, &est, aligned, &report).to_string());
         return 0;
     }
+    if !report.is_clean() {
+        println!("trace: {report}");
+    }
     println!(
-        "replayed {} ops (alignment: {})",
+        "replayed {} ops, {} with profiled durations (alignment: {})",
         est.graph.dfg.len(),
+        est.profiled_ops,
         if aligned { "on" } else { "off" }
     );
     println!("estimated iteration: {}", fmt_us(est.iteration_us()));
@@ -192,16 +321,45 @@ fn cmd_replay(args: &Args) -> i32 {
     0
 }
 
+/// Machine-readable alignment outcome: schema-stable keys asserted by the
+/// golden-fixture CI step (`procs` as `{proc, theta_us}` rows sorted by
+/// process id, `objective`, `iterations`, `report`).
+pub fn align_json(a: &Alignment, report: &TraceReport) -> Json {
+    let mut procs: Vec<_> = a.theta.iter().collect();
+    procs.sort_by_key(|(p, _)| **p);
+    let rows: Vec<Json> = procs
+        .into_iter()
+        .map(|(proc, theta)| {
+            let mut o = Json::obj();
+            o.set("proc", Json::Num(*proc as f64));
+            o.set("theta_us", Json::Num(*theta));
+            o
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("procs", Json::Arr(rows));
+    j.set("objective", Json::Num(a.objective));
+    j.set("iterations", Json::Num(a.iterations as f64));
+    j.set("report", report.to_json());
+    j
+}
+
 fn cmd_align(args: &Args) -> i32 {
-    let path = args.get_or("trace", "trace.json");
-    let trace = match GTrace::load(&path) {
+    let (trace, report, _job) = match trace_from_args(args) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("error loading {path}: {e}");
+            eprintln!("{e}");
             return 1;
         }
     };
     let a = crate::alignment::align(&trace, 1.0, 1.0);
+    if args.flag("json") {
+        println!("{}", align_json(&a, &report).to_string());
+        return 0;
+    }
+    if !report.is_clean() {
+        println!("trace: {report}");
+    }
     println!("solved {} clock offsets in {} iterations (objective {:.3})",
              a.theta.len(), a.iterations, a.objective);
     let mut procs: Vec<_> = a.theta.iter().collect();
@@ -291,13 +449,21 @@ fn cmd_train(_args: &Args) -> i32 {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> i32 {
+    let artifacts: std::path::PathBuf = args.get_or("artifacts", "artifacts").into();
+    // live runs always dump their gTrace (profile-then-replay toolchain);
+    // --dump-dir overrides the default <artifacts>/trace location
+    let dump = args
+        .get("dump-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| artifacts.join("trace"));
     let cfg = crate::coordinator::TrainCfg {
-        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        artifacts_dir: artifacts,
         config: args.get_or("config", "mini"),
         n_workers: args.usize("workers", 4),
         steps: args.usize("steps", 50),
         seed: args.u64("seed", 17),
         log_every: args.usize("log-every", 10),
+        trace_dump_dir: Some(dump),
         ..Default::default()
     };
     match crate::coordinator::train(&cfg) {

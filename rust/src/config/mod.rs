@@ -11,11 +11,14 @@ use crate::util::Us;
 /// `size/bandwidth` estimate ignores (paper Fig. 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Transport {
+    /// Kernel TCP/IP over Ethernet (CPU-bound, incast-prone).
     Tcp,
+    /// RDMA (RoCE/IB): kernel-bypass, near-line-rate.
     Rdma,
 }
 
 impl Transport {
+    /// Display name (`TCP` / `RDMA`).
     pub fn name(self) -> &'static str {
         match self {
             Transport::Tcp => "TCP",
@@ -27,6 +30,7 @@ impl Transport {
 /// Network model of the cluster fabric.
 #[derive(Clone, Debug)]
 pub struct NetworkSpec {
+    /// Inter-server transport protocol.
     pub transport: Transport,
     /// Nominal NIC bandwidth in Gbit/s (100 in the paper's testbed).
     pub nic_gbps: f64,
@@ -35,10 +39,12 @@ pub struct NetworkSpec {
 }
 
 impl NetworkSpec {
+    /// The paper testbed's fabric over kernel TCP (100 GbE NICs).
     pub fn tcp_100g() -> NetworkSpec {
         NetworkSpec { transport: Transport::Tcp, nic_gbps: 100.0, nvlink_gbps: 1200.0 }
     }
 
+    /// The paper testbed's fabric over RDMA (100 GbE NICs).
     pub fn rdma_100g() -> NetworkSpec {
         NetworkSpec { transport: Transport::Rdma, nic_gbps: 100.0, nvlink_gbps: 1200.0 }
     }
@@ -102,15 +108,22 @@ impl Default for ClockSpec {
 /// The machines + devices the job runs on.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
+    /// Total worker (GPU) count.
     pub n_workers: usize,
+    /// GPUs per physical machine (defines the machine layout).
     pub gpus_per_machine: usize,
+    /// GPU cost model shared by all workers.
     pub gpu: GpuModel,
+    /// Fabric connecting the machines.
     pub network: NetworkSpec,
+    /// Per-machine clock behaviour the testbed injects.
     pub clock: ClockSpec,
+    /// Seed for all stochastic testbed behaviour on this cluster.
     pub seed: u64,
 }
 
 impl ClusterSpec {
+    /// Cluster with default GPU model, clock spec and seed.
     pub fn new(n_workers: usize, gpus_per_machine: usize, network: NetworkSpec) -> ClusterSpec {
         ClusterSpec {
             n_workers,
@@ -131,10 +144,12 @@ impl ClusterSpec {
         ClusterSpec::new(16, 8, net)
     }
 
+    /// Number of physical machines (workers packed densely).
     pub fn n_machines(&self) -> usize {
         (self.n_workers + self.gpus_per_machine - 1) / self.gpus_per_machine
     }
 
+    /// Machine hosting a worker.
     pub fn machine_of(&self, worker: usize) -> usize {
         worker / self.gpus_per_machine
     }
@@ -174,12 +189,26 @@ pub enum CommScheme {
 pub const ALL_SCHEMES: [&str; 4] = ["horovod", "ring", "byteps", "ps-tree"];
 
 impl CommScheme {
+    /// Human-readable scheme name (report labels, matches the paper).
     pub fn name(&self) -> &'static str {
         match self {
             CommScheme::AllReduce(_) => "Horovod",
             CommScheme::Ring(_) => "Ring",
             CommScheme::Ps(_) => "BytePS",
             CommScheme::PsTree(_) => "PS-Tree",
+        }
+    }
+
+    /// Canonical machine-readable name — the [`ALL_SCHEMES`] spelling that
+    /// [`CommScheme::parse`] accepts back. Used by trace dumps
+    /// ([`crate::trace::io::JobMeta`]) so a replay from disk reconstructs
+    /// the same scheme.
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            CommScheme::AllReduce(_) => "horovod",
+            CommScheme::Ring(_) => "ring",
+            CommScheme::Ps(_) => "byteps",
+            CommScheme::PsTree(_) => "ps-tree",
         }
     }
 
@@ -237,6 +266,7 @@ impl CommScheme {
     }
 }
 
+/// Parameters of the collective (AllReduce) scheme family.
 #[derive(Clone, Debug)]
 pub struct ArSpec {
     /// Coordinator negotiation cycle time (us): a ready tensor waits on
@@ -250,6 +280,7 @@ impl Default for ArSpec {
     }
 }
 
+/// Parameters of the parameter-server scheme family.
 #[derive(Clone, Debug)]
 pub struct PsSpec {
     /// Number of parameter-server processes (one per machine by default —
@@ -260,6 +291,7 @@ pub struct PsSpec {
 }
 
 impl PsSpec {
+    /// Colocated-mode sizing: one server per machine.
     pub fn for_cluster(c: &ClusterSpec) -> PsSpec {
         PsSpec { n_servers: c.n_machines().max(1), agg_bytes_per_s: 24.0e9 }
     }
@@ -276,8 +308,11 @@ pub struct TensorGroup {
     pub partitions: usize,
 }
 
+/// The job's tensor-synchronization plan: a partition of all template
+/// tensors into fused groups.
 #[derive(Clone, Debug)]
 pub struct CommPlan {
+    /// Disjoint tensor groups covering every template tensor.
     pub groups: Vec<TensorGroup>,
 }
 
@@ -337,6 +372,7 @@ pub struct FusionPlan {
 }
 
 impl FusionPlan {
+    /// One group per op — the unfused plan.
     pub fn singletons(model: &ModelGraph) -> FusionPlan {
         FusionPlan {
             groups: (0..model.ops.len() as u32).map(|i| vec![i]).collect(),
@@ -344,6 +380,7 @@ impl FusionPlan {
         }
     }
 
+    /// Recompute the derived `group_of` index after editing `groups`.
     pub fn rebuild_index(&mut self, n_ops: usize) {
         self.group_of = vec![0; n_ops];
         for (gi, g) in self.groups.iter().enumerate() {
@@ -364,6 +401,7 @@ impl FusionPlan {
         gpu.fused_time(&times)
     }
 
+    /// Validate: every op in exactly one group, no kind mixing.
     pub fn validate(&self, model: &ModelGraph) -> Result<(), String> {
         let mut seen = vec![false; model.ops.len()];
         for (gi, g) in self.groups.iter().enumerate() {
@@ -396,14 +434,20 @@ impl FusionPlan {
 /// what the global DFG is built from.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// The model template being trained.
     pub model: ModelGraph,
+    /// The machines + devices the job runs on.
     pub cluster: ClusterSpec,
+    /// Gradient-synchronization architecture.
     pub scheme: CommScheme,
+    /// Tensor fusion/partition plan.
     pub plan: CommPlan,
+    /// Kernel (op) fusion plan.
     pub fusion: FusionPlan,
 }
 
 impl JobSpec {
+    /// Job with the unoptimized plans (per-tensor, unfused kernels).
     pub fn new(model: ModelGraph, cluster: ClusterSpec, scheme: CommScheme) -> JobSpec {
         let plan = CommPlan::per_tensor(&model);
         let fusion = FusionPlan::singletons(&model);
@@ -492,6 +536,9 @@ mod tests {
         let c = ClusterSpec::default_16(Transport::Rdma);
         for name in ALL_SCHEMES {
             let s = CommScheme::parse(name, &c).unwrap();
+            // the canonical name parses back to the same scheme
+            assert_eq!(s.cli_name(), name);
+            assert_eq!(CommScheme::parse(s.cli_name(), &c).unwrap().name(), s.name());
             // servers and coordinators are mutually exclusive families
             assert_eq!(s.uses_servers(), s.ps_spec().is_some(), "{name}");
             assert_eq!(s.uses_servers(), s.n_servers() > 0, "{name}");

@@ -20,17 +20,33 @@ use crate::trace::{GTrace, TraceEvent};
 use crate::util::rng::Pcg;
 use crate::util::Us;
 
+/// Configuration of one live training run.
 #[derive(Clone, Debug)]
 pub struct TrainCfg {
+    /// Directory holding the AOT artifacts (`make artifacts`).
     pub artifacts_dir: PathBuf,
+    /// Model config name (`mini`, `m100`).
     pub config: String,
+    /// Simulated data-parallel worker count.
     pub n_workers: usize,
+    /// Training steps to run.
     pub steps: usize,
+    /// Data/seeding root.
     pub seed: u64,
+    /// Log every N steps (0 disables progress logs).
     pub log_every: usize,
     /// Simulated inter-worker fabric for gradient synchronization.
     pub network: NetworkSpec,
+    /// Where to dump the run's gTrace as a per-process Chrome-trace
+    /// directory (`docs/TRACE_FORMAT.md`) for Perfetto inspection and
+    /// `dpro replay --trace-dir`. `None` skips the dump.
+    pub trace_dump_dir: Option<PathBuf>,
 }
+
+/// Machine layout of the simulated data-parallel cluster: workers are
+/// packed 8 per machine. The trace's `machine` ids and the dumped
+/// JobMeta must agree on this, so it has exactly one definition.
+pub const GPUS_PER_MACHINE: usize = 8;
 
 impl Default for TrainCfg {
     fn default() -> Self {
@@ -42,24 +58,32 @@ impl Default for TrainCfg {
             seed: 17,
             log_every: 10,
             network: NetworkSpec::rdma_100g(),
+            trace_dump_dir: None,
         }
     }
 }
 
+/// What a live training run produced and measured.
 #[derive(Clone, Debug, Default)]
 pub struct TrainReport {
+    /// Per-step mean loss across workers.
     pub losses: Vec<f32>,
     /// wall seconds per step (compute, real)
     pub grad_wall_s: Vec<f64>,
+    /// Wall seconds per step of the leader's update (real).
     pub apply_wall_s: Vec<f64>,
     /// simulated AllReduce time per step (us)
     pub sim_comm_us: Vec<Us>,
+    /// Tokens consumed per step across all workers.
     pub tokens_per_step: usize,
+    /// The run's gTrace (real compute times, simulated comm).
     pub trace: GTrace,
+    /// Model parameter count (elements).
     pub n_params: usize,
 }
 
 impl TrainReport {
+    /// Loss of the last step (NaN before any step ran).
     pub fn final_loss(&self) -> f32 {
         *self.losses.last().unwrap_or(&f32::NAN)
     }
@@ -177,7 +201,7 @@ pub fn train(cfg: &TrainCfg) -> Result<TrainReport> {
                 ts: clock,
                 dur: dur * 1e6,
                 proc: w as u16,
-                machine: (w / 8) as u16,
+                machine: (w / GPUS_PER_MACHINE) as u16,
                 iter: step as u32,
                 txid: None,
             });
@@ -253,6 +277,33 @@ pub fn train(cfg: &TrainCfg) -> Result<TrainReport> {
     report.trace.n_workers = cfg.n_workers;
     report.trace.n_procs = cfg.n_workers;
     report.trace.iterations = cfg.steps;
+    // dump the measured trace for Perfetto / `dpro replay --trace-dir`
+    // (profile-then-replay toolchain, paper Fig. 3); compute times in the
+    // dump are real PJRT wall times, network times simulated
+    if let Some(dir) = &cfg.trace_dump_dir {
+        // carry the job context so `dpro replay --trace-dir` reconstructs
+        // this run's shape instead of defaulting to resnet50×16. The
+        // coordinator's gradient sync is a flat ring over workers, and its
+        // trace is step-granular (grad/allreduce/apply), so the gpt_mini
+        // skeleton is the honest closest template.
+        let job = crate::trace::io::JobMeta {
+            model: "gpt_mini".into(),
+            scheme: "ring".into(),
+            transport: cfg.network.transport.name().to_lowercase(),
+            n_workers: cfg.n_workers,
+            gpus_per_machine: GPUS_PER_MACHINE,
+            plan: crate::trace::io::PLAN_DEPLOYED.to_string(),
+        };
+        match crate::trace::io::dump_dir_with_job(&report.trace, dir, Some(&job)) {
+            Ok(s) => log::info!(
+                "dumped {} trace events to {} files in {}",
+                s.events,
+                s.files,
+                dir.display()
+            ),
+            Err(e) => log::warn!("trace dump to {} failed: {e}", dir.display()),
+        }
+    }
     log::info!("trained {} steps in {:.1}s", cfg.steps, t_run.elapsed().as_secs_f64());
     Ok(report)
 }

@@ -60,10 +60,12 @@ pub trait CostProvider {
 
 /// Cost model implied by the job spec (no noise — expectation values).
 pub struct AnalyticCost<'a> {
+    /// The job whose model/cluster parameters define the costs.
     pub spec: &'a JobSpec,
 }
 
 impl<'a> AnalyticCost<'a> {
+    /// Wrap a job spec as a cost provider.
     pub fn new(spec: &'a JobSpec) -> Self {
         AnalyticCost { spec }
     }
@@ -134,6 +136,7 @@ impl CostProvider for AnalyticCost<'_> {
 /// replay and the optimizer.
 #[derive(Clone, Debug)]
 pub struct GlobalDfg {
+    /// The node/edge arena.
     pub dfg: Dfg,
     /// comp node of (worker, fusion-group id); with the default singleton
     /// fusion plan, group id == template op id
@@ -145,6 +148,7 @@ pub struct GlobalDfg {
     pub group_out: HashMap<(u16, usize), Vec<NodeId>>,
     /// update node per (worker, group)
     pub update_node: HashMap<(u16, usize), NodeId>,
+    /// Worker count the graph was built for.
     pub n_workers: usize,
 }
 

@@ -58,9 +58,13 @@ pub enum Dep {
 pub struct Stage {
     /// DFG node name (empty when the plan is built nameless).
     pub name: String,
+    /// Fine-grained communication op kind.
     pub kind: OpKind,
+    /// Execution resource the op serializes on.
     pub device: DeviceKey,
+    /// Expected duration (us) from the cost provider.
     pub duration: Us,
+    /// Worker the op belongs to (for per-worker accounting).
     pub owner: u16,
     /// Process that executes and timestamps the op (worker id,
     /// `n_workers + s` for server `s`, [`COORD_PROC`] for the coordinator).
@@ -70,6 +74,7 @@ pub struct Stage {
     /// Send↔Recv pairing tag, local to this plan; stages sharing a tag get
     /// one transaction id at lowering time.
     pub tx: Option<u32>,
+    /// Backward-only dependencies (In ops or earlier stages).
     pub deps: Vec<Dep>,
     /// `Some(w)`: this stage is a chain tail feeding worker `w`'s Out op.
     pub out_for: Option<u16>,
@@ -78,6 +83,7 @@ pub struct Stage {
 /// The scheme-neutral synchronization plan of one tensor group.
 #[derive(Clone, Debug, Default)]
 pub struct GroupPlan {
+    /// The plan's stages, in a topological order (deps point backwards).
     pub stages: Vec<Stage>,
 }
 
@@ -184,8 +190,11 @@ impl GroupPlan {
 /// touch `JobSpec` directly — the context carries the group-local facts,
 /// which is what lets [`plan_props`] probe a scheme without a real plan.
 pub struct PlanCtx<'a> {
+    /// Cluster layout (workers, machines, network).
     pub cluster: &'a ClusterSpec,
+    /// Duration oracle for compute/wire/aggregation stages.
     pub cost: &'a dyn CostProvider,
+    /// Whether to materialize node names (false on the nameless fast path).
     pub with_names: bool,
     /// Comm-group index (naming only; never used for placement).
     pub gi: usize,
@@ -235,6 +244,7 @@ pub fn planner_for(scheme: &CommScheme) -> Box<dyn CommPlanner> {
 /// instead of enum matches (ISSUE: "scheme-blind search").
 #[derive(Clone, Copy, Debug)]
 pub struct PlanProps {
+    /// Scheme name the plan came from (diagnostics only).
     pub scheme: &'static str,
     /// Stages one unpartitioned group lowers to.
     pub stages_per_group: usize,
@@ -848,6 +858,7 @@ fn push_pull_stages(
 /// are in, PULLs it back (SEND → RECV → H2D). Server placement is keyed by
 /// the group's first tensor id (stable under fusion).
 pub struct PsPushPull {
+    /// Parameter-server process count.
     pub n_servers: usize,
 }
 
@@ -939,6 +950,7 @@ impl CommPlanner for PsPushPull {
 /// back, and an NVLink broadcast + per-worker H2D fans it out. Cuts the
 /// server's ingress from `n_workers` to `n_machines` messages.
 pub struct PsTree {
+    /// Parameter-server process count.
     pub n_servers: usize,
 }
 

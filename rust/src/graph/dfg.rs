@@ -40,10 +40,12 @@ pub enum OpKind {
 }
 
 impl OpKind {
+    /// Computation family (FW/BW/UPD) — serializes on a worker GPU.
     pub fn is_comp(self) -> bool {
         matches!(self, OpKind::Forward | OpKind::Backward | OpKind::Update)
     }
 
+    /// Fine-grained communication family (SEND/RECV/NEG/AGG).
     pub fn is_comm(self) -> bool {
         matches!(
             self,
@@ -51,6 +53,7 @@ impl OpKind {
         )
     }
 
+    /// Zero-cost marker ops (In/Out) that never appear in traces.
     pub fn is_virtual(self) -> bool {
         matches!(self, OpKind::In | OpKind::Out)
     }
@@ -86,6 +89,7 @@ pub const COORD_PROC: u16 = u16::MAX;
 /// that produces the tensor.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TensorMeta {
+    /// The logical tensor this op works on.
     pub tensor_id: TensorId,
     /// Size in bytes of the tensor *piece* this op moves (full tensor for
     /// In/Out, chunk for ring steps, partition for PS pieces).
@@ -95,8 +99,11 @@ pub struct TensorMeta {
 /// A vertex of the DFG.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Op name (the trace join key; empty on the nameless fast path).
     pub name: String,
+    /// Op kind.
     pub kind: OpKind,
+    /// Execution resource the op serializes on.
     pub device: DeviceKey,
     /// Expected execution time (profiled average) in microseconds.
     pub duration: Us,
@@ -107,6 +114,7 @@ pub struct Node {
     /// AllReduce coordinator. Trace alignment solves one clock offset per
     /// process (paper §4.2).
     pub proc: u16,
+    /// Tensor (piece) the op moves, for comm ops and gradient producers.
     pub tensor: Option<TensorMeta>,
     /// Unique transaction id matching a Send to its Recv (paper §4.1).
     pub txid: Option<u64>,
@@ -116,6 +124,7 @@ pub struct Node {
 }
 
 impl Node {
+    /// Zero-cost, device-less marker node (In/Out ops).
     pub fn virtual_op(name: impl Into<String>, kind: OpKind, owner: u16) -> Node {
         Node {
             name: name.into(),
@@ -134,16 +143,19 @@ impl Node {
 /// Directed acyclic graph over `Node`s with forward and reverse adjacency.
 #[derive(Clone, Debug, Default)]
 pub struct Dfg {
+    /// The node arena; ids are indices and stay stable forever.
     pub nodes: Vec<Node>,
     succs: Vec<Vec<NodeId>>,
     preds: Vec<Vec<NodeId>>,
 }
 
 impl Dfg {
+    /// Empty graph.
     pub fn new() -> Dfg {
         Dfg::default()
     }
 
+    /// Append a node, returning its stable id.
     pub fn add(&mut self, node: Node) -> NodeId {
         let id = self.nodes.len() as NodeId;
         self.nodes.push(node);
@@ -198,30 +210,37 @@ impl Dfg {
         }
     }
 
+    /// Node count (tombstoned nodes included).
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True when the arena holds no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// Node by id.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id as usize]
     }
 
+    /// Mutable node by id.
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
         &mut self.nodes[id as usize]
     }
 
+    /// Successor ids of a node.
     pub fn succs(&self, id: NodeId) -> &[NodeId] {
         &self.succs[id as usize]
     }
 
+    /// Predecessor ids of a node.
     pub fn preds(&self, id: NodeId) -> &[NodeId] {
         &self.preds[id as usize]
     }
 
+    /// All node ids, ascending.
     pub fn ids(&self) -> impl Iterator<Item = NodeId> + '_ {
         (0..self.nodes.len() as NodeId).into_iter()
     }

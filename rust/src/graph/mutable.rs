@@ -86,6 +86,8 @@ pub struct ChangeLog {
 }
 
 impl ChangeLog {
+    /// True when the log records no change against a graph of `n_now`
+    /// nodes (nothing removed/revived/touched/appended).
     pub fn is_empty(&self, n_now: usize) -> bool {
         self.removed.is_empty()
             && self.revived.is_empty()
@@ -245,26 +247,32 @@ impl MutableGraph {
         mg
     }
 
+    /// The current (edited) job spec.
     pub fn spec(&self) -> &JobSpec {
         &self.spec
     }
 
+    /// The live graph arena (tombstones included; check [`Self::alive`]).
     pub fn dfg(&self) -> &Dfg {
         &self.dfg
     }
 
+    /// Per-node liveness (false = tombstoned).
     pub fn alive(&self) -> &[bool] {
         &self.alive
     }
 
+    /// Plan-derived canonical device ranks (replay tie-breaks).
     pub fn canon_ranks(&self) -> &[u64] {
         &self.canon
     }
 
+    /// Worker count of the job.
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }
 
+    /// Current comm-group count of the plan.
     pub fn n_groups(&self) -> usize {
         self.spec.plan.groups.len()
     }

@@ -18,6 +18,13 @@
 //! The live end-to-end path ([`runtime`] + [`coordinator`]) executes a JAX
 //! (+Pallas) transformer AOT-compiled to HLO through PJRT, with Python
 //! never on the hot path.
+//!
+//! See `DESIGN.md` for the module-to-paper map and the hardware
+//! substitutions, and `docs/TRACE_FORMAT.md` for the on-disk trace schema.
+
+// The CI docs job runs `cargo doc` with RUSTDOCFLAGS="-D warnings", so an
+// undocumented public item fails the build, not just the style bar.
+#![warn(missing_docs)]
 
 pub mod alignment;
 pub mod baselines;
@@ -39,6 +46,7 @@ pub mod profiler;
 pub mod replay;
 pub mod util;
 
+/// Crate version (from `Cargo.toml`), shown by the CLI.
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -14,7 +14,9 @@ use crate::util::Us;
 /// ops to Fp16.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Precision {
+    /// Single precision (the default).
     Fp32,
+    /// Half precision on tensor cores (mixed-precision training).
     Fp16,
 }
 
@@ -52,6 +54,7 @@ impl Default for GpuModel {
 }
 
 impl GpuModel {
+    /// The 16 GB V100 variant (Table 4's memory experiments).
     pub fn v100_16gb() -> GpuModel {
         GpuModel { mem_capacity: 16.0e9, ..GpuModel::default() }
     }

@@ -22,6 +22,7 @@ use cost::{GpuModel, Precision};
 /// A gradient tensor synchronized across workers.
 #[derive(Clone, Debug)]
 pub struct TensorTpl {
+    /// Tensor name (`<op>.<suffix>`, e.g. `conv1.w`).
     pub name: String,
     /// Size in bytes at fp32.
     pub bytes: f64,
@@ -30,9 +31,11 @@ pub struct TensorTpl {
 /// One computation op of the per-worker template.
 #[derive(Clone, Debug)]
 pub struct CompOpTpl {
+    /// Op name (`FW.<layer>` / `BW.<layer>`).
     pub name: String,
     /// `Forward` or `Backward`.
     pub kind: OpKind,
+    /// Floating-point operations the op performs.
     pub flops: f64,
     /// HBM traffic in bytes (memory-bound ops).
     pub bytes: f64,
@@ -46,6 +49,7 @@ pub struct CompOpTpl {
     /// Bytes of output activations a forward op keeps alive until its
     /// mirrored backward op consumes them (memory estimation, §7.4).
     pub activation_bytes: f64,
+    /// Numeric precision the op computes in (mixed precision flips this).
     pub precision: Precision,
     /// Original template ids merged into this op by op fusion (empty for
     /// unfused ops). Used for reporting and for `opfs_time` refinement.
@@ -56,6 +60,7 @@ pub struct CompOpTpl {
 }
 
 impl CompOpTpl {
+    /// Expected kernel duration on `gpu` (roofline + launch overhead).
     pub fn duration(&self, gpu: &GpuModel) -> Us {
         if !self.fused_from.is_empty() {
             // Fused op: body times of constituents are folded by the cost
@@ -71,25 +76,33 @@ impl CompOpTpl {
 /// Per-worker model template.
 #[derive(Clone, Debug)]
 pub struct ModelGraph {
+    /// Registry name (`resnet50`, `bert_base`, ...).
     pub name: String,
+    /// Per-worker batch size the costs were synthesized for.
     pub batch_size: usize,
+    /// Computation ops, forward ops first, then mirrored backward ops.
     pub ops: Vec<CompOpTpl>,
+    /// Gradient tensors synchronized across workers.
     pub tensors: Vec<TensorTpl>,
 }
 
 impl ModelGraph {
+    /// Total parameter/gradient bytes (fp32).
     pub fn param_bytes(&self) -> f64 {
         self.tensors.iter().map(|t| t.bytes).sum()
     }
 
+    /// Parameter count (fp32 elements).
     pub fn num_params(&self) -> f64 {
         self.param_bytes() / 4.0
     }
 
+    /// Template ids of all forward ops, ascending.
     pub fn fw_ids(&self) -> Vec<u32> {
         self.ids_of(OpKind::Forward)
     }
 
+    /// Template ids of all backward ops, ascending.
     pub fn bw_ids(&self) -> Vec<u32> {
         self.ids_of(OpKind::Backward)
     }
@@ -149,6 +162,7 @@ pub struct ModelBuilder {
 }
 
 impl ModelBuilder {
+    /// Start a template with no ops.
     pub fn new(name: &str, batch_size: usize) -> ModelBuilder {
         ModelBuilder {
             name: name.to_string(),
@@ -159,6 +173,7 @@ impl ModelBuilder {
         }
     }
 
+    /// Batch size as f64 (cost formulas).
     pub fn batch(&self) -> f64 {
         self.batch_size as f64
     }
@@ -297,6 +312,7 @@ pub fn by_name(name: &str, batch_size: usize) -> Option<ModelGraph> {
     }
 }
 
+/// The four paper benchmark models (excludes the live-path `gpt_mini`).
 pub const ALL_MODELS: [&str; 4] = ["resnet50", "vgg16", "inception_v3", "bert_base"];
 
 #[cfg(test)]

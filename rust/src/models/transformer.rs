@@ -7,13 +7,20 @@ use super::{elementwise_bytes, ModelBuilder, ModelGraph};
 
 const GEMM_EFF: f64 = 0.95;
 
+/// Shape of the GPT-style decoder (mirrors `python/compile/model.py`).
 #[derive(Clone, Copy, Debug)]
 pub struct GptConfig {
+    /// Per-worker batch size.
     pub batch_size: usize,
+    /// Sequence length.
     pub seq_len: usize,
+    /// Model (embedding) dimension.
     pub hidden: usize,
+    /// Decoder layer count.
     pub layers: usize,
+    /// Attention head count.
     pub heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
 }
 
@@ -30,6 +37,7 @@ impl GptConfig {
         GptConfig { batch_size, seq_len: 256, hidden: 768, layers: 12, heads: 12, vocab: 32768 }
     }
 
+    /// Analytic parameter count of the configuration.
     pub fn num_params(&self) -> f64 {
         let h = self.hidden as f64;
         let v = self.vocab as f64;

@@ -13,7 +13,9 @@ use crate::optimizer::passes;
 /// Statistics of a coarsening application.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CoarsenStats {
+    /// Rule-1 fusion-group merges applied (non-producing op → successor).
     pub op_fusions: usize,
+    /// Rule-2 comm-group merges applied (same-producer tensors).
     pub tensor_fusions: usize,
 }
 

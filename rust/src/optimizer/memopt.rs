@@ -13,14 +13,20 @@ use crate::util::Us;
 /// 15–25% at half batch; our roofline is otherwise linear in batch).
 pub const MICRO_BATCH_INEFFICIENCY: f64 = 1.18;
 
+/// The memory-optimization strategies of Table 4.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MemOpt {
+    /// No memory pass applied.
     None,
+    /// √L-checkpoint re-computation (drop activations, re-forward before
+    /// the backward op).
     Recomputation,
+    /// Gradient accumulation over two half-size micro-batches.
     GradAccum,
 }
 
 impl MemOpt {
+    /// Display name used in reports (matches Table 4's row labels).
     pub fn name(self) -> &'static str {
         match self {
             MemOpt::None => "w/o optimization",
@@ -33,7 +39,9 @@ impl MemOpt {
 /// Estimated (time, memory) of a memory strategy, via the replayer.
 #[derive(Clone, Copy, Debug)]
 pub struct MemEval {
+    /// Estimated iteration time (us).
     pub time_us: Us,
+    /// Estimated peak memory per worker (bytes).
     pub mem_bytes: f64,
 }
 

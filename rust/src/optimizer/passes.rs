@@ -17,9 +17,14 @@ use crate::graph::dfg::TensorId;
 /// Error type for invalid pass applications.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PassError {
+    /// Merging the groups would sandwich a third group between them,
+    /// creating a dependency cycle.
     WouldCreateCycle,
+    /// The groups hold ops of different kinds (e.g. forward and backward).
     KindMismatch,
+    /// Both indices name the same group.
     SameGroup,
+    /// A group index is out of range.
     OutOfRange,
 }
 

@@ -22,6 +22,7 @@ use crate::util::Us;
 
 /// A whole-job rewrite whose benefit is judged by replay.
 pub trait GraphPass {
+    /// Unique registry name (the `--strategies` / lookup key).
     fn name(&self) -> &str;
     /// Rewrite the spec (returning a candidate); `None` = not applicable.
     fn apply(&self, spec: &JobSpec) -> Option<JobSpec>;
@@ -66,14 +67,17 @@ impl Default for Registry {
 }
 
 impl Registry {
+    /// A registry with no passes (add via [`Registry::register`]).
     pub fn empty() -> Registry {
         Registry { passes: Vec::new() }
     }
 
+    /// Register a custom pass (the §8 extension point).
     pub fn register(&mut self, pass: Box<dyn GraphPass>) {
         self.passes.push(pass);
     }
 
+    /// Names of all registered passes, in registration order.
     pub fn names(&self) -> Vec<&str> {
         self.passes.iter().map(|p| p.name()).collect()
     }

@@ -32,10 +32,17 @@ use crate::util::Us;
 /// ablation axes.
 #[derive(Clone, Debug)]
 pub struct SearchOpts {
+    /// Shrink the strategy space up front with Theorem 3's always-safe
+    /// fusions (§5.3).
     pub use_coarsened_view: bool,
+    /// Answer `t_sync` queries with pre-built probe engines instead of
+    /// full builds (§5.1).
     pub use_partial_replay: bool,
+    /// Propagate accepted decisions across symmetric blocks (§5.4).
     pub use_symmetry: bool,
+    /// Let the critical-path walker propose op-fusion decisions.
     pub enable_op_fusion: bool,
+    /// Let the critical-path walker propose tensor-fusion decisions.
     pub enable_tensor_fusion: bool,
     /// Tensor partition (paper: most valuable under PS). `None` = auto —
     /// on when the scheme's lowered plan routes through servers (its
@@ -43,16 +50,21 @@ pub struct SearchOpts {
     /// collective schemes. Decided from plan properties
     /// ([`crate::graph::plan_props`]), never from the scheme enum.
     pub enable_partition: Option<bool>,
+    /// Per-worker memory budget (bytes); activates the memory strategies
+    /// and makes feasibility dominate the objective.
     pub memory_budget_bytes: Option<f64>,
     /// Explicit strategy set as a comma-separated name list (the CLI's
     /// `--strategies`; see [`strategy::parse_strategies`]). `None` = the
     /// critical-path walker per the enable flags above, plus the memory
     /// passes whenever a budget is set.
     pub strategies: Option<String>,
+    /// Hard cap on search rounds.
     pub max_rounds: usize,
     /// Stop when the estimate improves < 0.5% over this many rounds.
     pub converge_rounds: usize,
+    /// Wall-clock budget for the whole search (seconds).
     pub budget_wall_s: f64,
+    /// Largest partition count the partition strategy may propose.
     pub max_partitions: usize,
 }
 
@@ -104,12 +116,16 @@ impl SearchOpts {
 /// Outcome of a search run.
 #[derive(Clone, Debug)]
 pub struct SearchOutcome {
+    /// The optimized job spec (the search's final plan state).
     pub spec: JobSpec,
+    /// Replayed iteration time before any decision (us).
     pub baseline_iteration_us: Us,
+    /// Replayed iteration time of the chosen plan (us).
     pub est_iteration_us: Us,
     /// Estimated peak memory of the chosen plan (0 unless a memory budget
     /// was set — the peak walk only runs for budgeted searches).
     pub est_mem_bytes: f64,
+    /// Best estimate after each round (convergence trajectory).
     pub history: Vec<Us>,
     /// The memory pass the round loop accepted, if any (derived from
     /// [`Self::accepted`]).
@@ -118,17 +134,23 @@ pub struct SearchOutcome {
     pub accepted: Vec<Decision>,
     /// Candidates evaluated (accepted + rolled back).
     pub candidates_tried: usize,
+    /// Incremental replays performed across all rounds.
     pub replays: usize,
+    /// Full builds+replays the strawman `t_sync` oracle needed (0 with
+    /// partial replay on).
     pub full_replays_for_tsync: usize,
+    /// Total primitive plan edits applied (symmetry propagation included).
     pub actions_applied: usize,
     /// Global-DFG constructions performed by the round loop itself. Zero
     /// whenever partial replay is on (the strawman t_sync oracle is the
     /// only remaining builder, and it is what Table 5 ablated away).
     pub builds_during_search: usize,
+    /// Wall-clock time of the search (seconds).
     pub wall_s: f64,
 }
 
 impl SearchOutcome {
+    /// Baseline over optimized iteration time.
     pub fn speedup(&self) -> f64 {
         self.baseline_iteration_us / self.est_iteration_us
     }

@@ -126,7 +126,9 @@ impl std::fmt::Display for Decision {
 /// is the expensive part); `comp_us` is always available.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CandidateEval {
+    /// Replayed iteration time (us).
     pub time_us: Us,
+    /// Estimated peak memory (bytes; 0.0 when no budget is set).
     pub mem_bytes: f64,
     /// Forward+backward busy time of worker 0 (the gradient-accumulation
     /// cost hint needs it).
@@ -180,12 +182,15 @@ pub fn eval_state(
 /// Context a strategy proposes candidates from: the current graph state,
 /// its last replay, the critical path, and the shared `t_sync` oracle.
 pub struct SearchCtx<'a> {
+    /// The shared long-lived graph (read-only while proposing).
     pub mg: &'a MutableGraph,
     /// Per-node end times of the last replay.
     pub end: &'a [f64],
     /// Critical path of the last replay, source → sink.
     pub path: &'a [NodeId],
+    /// Shared `t_sync(s, k)` oracle (§5.1).
     pub tsync: &'a mut Tsync,
+    /// The search configuration in force.
     pub opts: &'a SearchOpts,
     /// Whether tensor partitioning is worthwhile under the current scheme
     /// (derived from plan properties, never from the scheme enum).
@@ -194,11 +199,14 @@ pub struct SearchCtx<'a> {
     pub budget_bytes: Option<f64>,
     /// Evaluation of the current accepted state.
     pub cur: CandidateEval,
+    /// Round number, 0-based.
     pub round: usize,
 }
 
 /// Context for applying a decision (symmetry propagation).
 pub struct ApplyCtx<'a> {
+    /// Symmetry index for propagating a decision across symmetric blocks
+    /// (§5.4), when enabled.
     pub sym: Option<&'a SymmetryIndex>,
 }
 
@@ -209,6 +217,7 @@ pub struct ApplyCtx<'a> {
 /// [`Self::decided`] reports the verdict so the strategy can stop
 /// re-proposing settled candidates.
 pub trait Strategy {
+    /// Stable strategy name (`--strategies` key, logs).
     fn name(&self) -> &str;
 
     /// Propose candidate decisions for this round, in stable ids.
@@ -360,6 +369,9 @@ pub struct Tsync {
 }
 
 impl Tsync {
+    /// Build the oracle. `partial == true` pre-builds one probe engine per
+    /// partition count in `1..=max_k` (plus counts the deployed plan
+    /// already uses); `false` selects the strawman full-replay path.
     pub fn new(spec: &JobSpec, partial: bool, max_k: usize) -> Tsync {
         let partial = partial.then(|| {
             // pre-instantiate every partition count a round can query: the
@@ -383,6 +395,8 @@ impl Tsync {
         self.full_replays
     }
 
+    /// Synchronization time of a `bytes`-sized group split `k` ways under
+    /// the current scheme (§5.1's `t_sync(s, k)` query).
     pub fn t_sync(&mut self, spec: &JobSpec, bytes: f64, k: usize) -> Us {
         if let Some(p) = &mut self.partial {
             return p.t_sync(bytes, k);
@@ -424,6 +438,8 @@ impl Tsync {
         t
     }
 
+    /// Best partition count for a `bytes`-sized group and its `t_sync`
+    /// (grid scan over `1..=max_k`).
     pub fn opt_part_num(&mut self, spec: &JobSpec, bytes: f64, max_k: usize) -> (usize, Us) {
         let mut best = (1usize, f64::INFINITY);
         for k in 1..=max_k.max(1) {
@@ -443,12 +459,17 @@ impl Tsync {
 /// The paper's core search strategy: walk the critical path of the last
 /// replay and propose the fusions/partitions Theorems 1–3 justify.
 pub struct CriticalPathStrategy {
+    /// Propose op-fusion decisions.
     pub op_fusion: bool,
+    /// Propose tensor-fusion decisions.
     pub tensor_fusion: bool,
+    /// Propose partition decisions (still auto-gated per scheme through
+    /// [`SearchCtx::partition_enabled`]).
     pub partition: bool,
 }
 
 impl CriticalPathStrategy {
+    /// Configure from the search options' enable flags.
     pub fn from_opts(opts: &SearchOpts) -> CriticalPathStrategy {
         CriticalPathStrategy {
             op_fusion: opts.enable_op_fusion,
@@ -577,6 +598,7 @@ pub struct RegistryStrategy {
 }
 
 impl RegistryStrategy {
+    /// Wrap an explicit registry (custom passes included).
     pub fn new(registry: Registry) -> RegistryStrategy {
         RegistryStrategy { registry, resolved: HashSet::new() }
     }
@@ -640,10 +662,12 @@ pub struct MemoryStrategy {
 }
 
 impl MemoryStrategy {
+    /// Restrict to an explicit set of memory passes.
     pub fn new(allowed: Vec<MemOpt>) -> MemoryStrategy {
         MemoryStrategy { allowed, tried: Vec::new(), applied: false }
     }
 
+    /// Both built-in memory passes (re-computation, grad accumulation).
     pub fn all() -> MemoryStrategy {
         MemoryStrategy::new(vec![MemOpt::Recomputation, MemOpt::GradAccum])
     }

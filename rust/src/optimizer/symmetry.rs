@@ -29,6 +29,7 @@ pub struct SymmetryIndex {
 }
 
 impl SymmetryIndex {
+    /// Index a model template's op names into (kind, block, role) parts.
     pub fn new(model: &ModelGraph) -> SymmetryIndex {
         let mut by_key = HashMap::new();
         let mut parts = Vec::with_capacity(model.ops.len());
@@ -49,6 +50,7 @@ impl SymmetryIndex {
         SymmetryIndex { by_key, parts, blocks }
     }
 
+    /// Number of distinct symmetric blocks the model decomposes into.
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
     }

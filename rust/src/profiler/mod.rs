@@ -87,26 +87,33 @@ pub fn corrected_profile(trace: &GTrace, alignment: &Alignment) -> ProfileDb {
 
 /// A complete dPRO estimate for one job from its measured trace.
 pub struct Estimate {
+    /// The global DFG with profiled durations applied.
     pub graph: GlobalDfg,
+    /// The replayed schedule.
     pub result: ReplayResult,
+    /// The solved (or identity) clock alignment used.
     pub alignment: Alignment,
     /// ops whose duration came from the trace (coverage diagnostic)
     pub profiled_ops: usize,
 }
 
 impl Estimate {
+    /// Estimated iteration time (us).
     pub fn iteration_us(&self) -> Us {
         self.result.iteration_time
     }
 
+    /// Worker 0's forward busy time (us).
     pub fn fw_us(&self) -> Us {
         self.result.kind_time(&self.graph, 0, OpKind::Forward)
     }
 
+    /// Worker 0's backward busy time (us).
     pub fn bw_us(&self) -> Us {
         self.result.kind_time(&self.graph, 0, OpKind::Backward)
     }
 
+    /// Estimated peak memory per worker (bytes).
     pub fn peak_memory(&self, spec: &JobSpec) -> f64 {
         crate::replay::estimate_peak_memory(spec, &self.graph, &self.result)
     }

@@ -84,6 +84,8 @@ impl Default for IncrementalReplayer {
 }
 
 impl IncrementalReplayer {
+    /// Empty engine; feed it graph state via the first `replay` call's
+    /// change log (everything starts dirty).
     pub fn new() -> IncrementalReplayer {
         let mut dev_ids = HashMap::new();
         dev_ids.insert(DeviceKey::Null, NULL_DEV);

@@ -27,8 +27,11 @@ use crate::util::Us;
 /// Result of replaying one iteration.
 #[derive(Clone, Debug)]
 pub struct ReplayResult {
+    /// Simulated iteration time: the latest end time (us).
     pub iteration_time: Us,
+    /// Per-node simulated start times (us).
     pub start: Vec<Us>,
+    /// Per-node simulated end times (us).
     pub end: Vec<Us>,
     /// For each node, the predecessor (dependency or device-order) that
     /// determined its start time; backtracking yields the critical path.
@@ -88,6 +91,7 @@ pub struct Replayer {
 }
 
 impl Replayer {
+    /// Build an engine for one graph topology (durations refreshable).
     pub fn new(g: &GlobalDfg) -> Replayer {
         let n = g.dfg.len();
         let mut dev_ids: std::collections::HashMap<DeviceKey, u32> =
@@ -144,6 +148,7 @@ impl Replayer {
         self.durations[id as usize] = d;
     }
 
+    /// Current duration of one node (including overrides).
     pub fn duration(&self, id: NodeId) -> Us {
         self.durations[id as usize]
     }

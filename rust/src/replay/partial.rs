@@ -86,10 +86,12 @@ pub struct TsyncEstimator {
     spec: JobSpec,
     engines: HashMap<usize, ProbeEngine>,
     cache: HashMap<(u64, usize), Us>,
+    /// Probe replays performed (cache misses).
     pub replays: usize,
 }
 
 impl TsyncEstimator {
+    /// Lazy estimator: probe engines are built on first query per `k`.
     pub fn new(job: &JobSpec) -> TsyncEstimator {
         TsyncEstimator {
             spec: job.clone(),
@@ -154,6 +156,7 @@ impl TsyncEstimator {
         best
     }
 
+    /// Memoized `(size bucket, k)` entries so far.
     pub fn cache_len(&self) -> usize {
         self.cache.len()
     }

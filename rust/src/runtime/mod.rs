@@ -11,6 +11,7 @@ use crate::util::json::{parse, Json};
 
 /// A compiled executable plus its name (for reporting).
 pub struct Artifact {
+    /// Artifact file name (reporting/diagnostics).
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -37,10 +38,12 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// The host-CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
         Ok(Runtime { client: xla::PjRtClient::cpu()? })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -62,33 +65,49 @@ impl Runtime {
 /// Parameter metadata from `gpt_<cfg>.meta.json`.
 #[derive(Clone, Debug)]
 pub struct ParamMeta {
+    /// Parameter (pytree leaf) name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Element count.
     pub size: usize,
 }
 
+/// Model/config metadata exported next to the HLO artifacts.
 #[derive(Clone, Debug)]
 pub struct GptMeta {
+    /// Config name (`mini`, `m100`, ...).
     pub config: String,
+    /// Per-worker batch size the artifacts were lowered for.
     pub batch_size: usize,
+    /// Sequence length.
     pub seq_len: usize,
+    /// Model dimension.
     pub hidden: usize,
+    /// Decoder layer count.
     pub layers: usize,
+    /// Attention head count.
     pub heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Optimizer-state leaves appended after the params in `init` output.
     pub n_state_leaves: usize,
+    /// Per-parameter metadata, in pytree order.
     pub params: Vec<ParamMeta>,
 }
 
 impl GptMeta {
+    /// Number of parameter leaves.
     pub fn n_params(&self) -> usize {
         self.params.len()
     }
 
+    /// Total parameter element count.
     pub fn total_elems(&self) -> usize {
         self.params.iter().map(|p| p.size).sum()
     }
 
+    /// Load `gpt_<config>.meta.json` from the artifacts directory.
     pub fn load(dir: &Path, config: &str) -> Result<GptMeta> {
         let path = dir.join(format!("gpt_{config}.meta.json"));
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
@@ -126,14 +145,20 @@ impl GptMeta {
 
 /// The full artifact bundle for one model config.
 pub struct GptArtifacts {
+    /// Config + parameter metadata.
     pub meta: GptMeta,
+    /// Parameter/optimizer-state initializer.
     pub init: Artifact,
+    /// Loss + gradients of one micro-batch.
     pub grad: Artifact,
+    /// Optimizer update from averaged gradients.
     pub apply: Artifact,
+    /// Fused single-worker train step (init→grad→apply in one program).
     pub train: Artifact,
 }
 
 impl GptArtifacts {
+    /// Compile all four artifacts of a config.
     pub fn load(rt: &Runtime, dir: impl Into<PathBuf>, config: &str) -> Result<GptArtifacts> {
         let dir: PathBuf = dir.into();
         let meta = GptMeta::load(&dir, config)?;

@@ -22,10 +22,11 @@ use crate::trace::{GTrace, TraceEvent};
 use crate::util::rng::Pcg;
 use crate::util::Us;
 
-/// TCP retransmit/incast stall model: probability and additive delay
-/// bounds (us) per message.
+/// TCP retransmit/incast stall model: probability of a stall per message.
 pub const TCP_SPIKE_P: f64 = 0.015;
+/// Lower bound of the additive stall delay (us).
 pub const TCP_SPIKE_LO: f64 = 100.0;
+/// Upper bound of the additive stall delay (us).
 pub const TCP_SPIKE_HI: f64 = 900.0;
 
 /// Injected performance faults (used by the diagnosis example and tests).
@@ -37,11 +38,14 @@ pub enum Straggler {
     SlowLink { machine: usize, factor: f64 },
 }
 
+/// Knobs of one testbed run.
 #[derive(Clone, Debug)]
 pub struct TestbedOpts {
     /// Measured iterations (paper averages over 10 after warm-up).
     pub iterations: usize,
+    /// Run seed, XORed with the cluster seed.
     pub seed: u64,
+    /// Injected performance faults.
     pub stragglers: Vec<Straggler>,
 }
 
@@ -58,14 +62,16 @@ pub struct TestbedResult {
     pub iter_times: Vec<Us>,
     /// The measured trace (drifted clocks, RECV launch error).
     pub trace: GTrace,
-    /// True FW / BW busy time per iteration on worker 0 (us).
+    /// True FW busy time per iteration on worker 0 (us).
     pub fw_time: Us,
+    /// True BW busy time per iteration on worker 0 (us).
     pub bw_time: Us,
     /// Ground-truth peak memory per worker (bytes).
     pub peak_memory: f64,
 }
 
 impl TestbedResult {
+    /// Mean measured iteration time (us).
     pub fn avg_iter(&self) -> Us {
         crate::util::stats::mean(&self.iter_times)
     }

@@ -1,0 +1,147 @@
+//! Degraded-trace scenario knobs: take a clean measured [`GTrace`] and
+//! make it look like one collected on a sick cluster — extra per-machine
+//! clock drift, dropped events (a profiler buffer overflowed, a worker
+//! died mid-dump), straggler iterations (preemption / GC pause artifacts).
+//!
+//! These are *test and bench instruments*: `rust/tests/trace_io.rs` uses
+//! them to pin that the ingestion pipeline diagnoses rather than panics
+//! and that §4.2 alignment recovers injected drift; the
+//! `fig8_time_alignment` bench tabulates replay error under each scenario.
+//! All knobs are deterministic (seeded [`Pcg`]) and compose: apply several
+//! in sequence to model a compounding failure.
+
+use crate::trace::GTrace;
+use crate::util::rng::Pcg;
+use crate::util::Us;
+
+/// Shift the clock of every event recorded on `machine` by `offset_us` —
+/// the same per-machine drift the testbed injects, but chosen by the
+/// caller so tests know the ground truth. Alignment (§4.2) should recover
+/// `-offset_us` (relative to machine 0) from the degraded trace.
+///
+/// Returns the number of events shifted.
+pub fn inject_drift(trace: &mut GTrace, machine: u16, offset_us: Us) -> usize {
+    let mut n = 0;
+    for e in &mut trace.events {
+        if e.machine == machine {
+            e.ts += offset_us;
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Drop each event independently with probability `rate` (deterministic
+/// for a given `seed`). Models lossy collection; dropping a SEND or RECV
+/// breaks its transaction, which ingestion then flags as
+/// [`UnmatchedTxid`](crate::trace::validate::DiagKind::UnmatchedTxid).
+///
+/// Returns the number of events removed.
+pub fn drop_events(trace: &mut GTrace, rate: f64, seed: u64) -> usize {
+    if rate <= 0.0 {
+        return 0;
+    }
+    let mut rng = Pcg::new(seed, 0x9e37);
+    let before = trace.events.len();
+    trace.events.retain(|_| rng.f64() >= rate);
+    before - trace.events.len()
+}
+
+/// Stretch every event duration of one iteration by `factor` — the trace
+/// a whole-cluster straggler iteration (checkpoint stall, preemption,
+/// page-cache storm) leaves behind. Timestamps are left as recorded, so
+/// the stretched events overlap their successors exactly the way a
+/// profiler that reports stale launch timestamps would show it; the
+/// validator flags these as
+/// [`OverlapOnProc`](crate::trace::validate::DiagKind::OverlapOnProc)
+/// warnings and the profiler's averages absorb the inflated durations.
+///
+/// Returns the number of events stretched.
+pub fn straggle_iteration(trace: &mut GTrace, iter: u32, factor: f64) -> usize {
+    let mut n = 0;
+    for e in &mut trace.events {
+        if e.iter == iter {
+            e.dur *= factor;
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dfg::OpKind;
+    use crate::trace::validate::{validate, DiagKind, TraceReport};
+    use crate::trace::TraceEvent;
+
+    fn trace() -> GTrace {
+        let mut events = Vec::new();
+        for it in 0..3u32 {
+            for p in 0..2u16 {
+                events.push(TraceEvent {
+                    name: format!("w{p}.FW.a"),
+                    kind: OpKind::Forward,
+                    ts: it as f64 * 1000.0,
+                    dur: 100.0,
+                    proc: p,
+                    machine: p,
+                    iter: it,
+                    txid: None,
+                });
+                events.push(TraceEvent {
+                    name: format!("w{p}.FW.b"),
+                    kind: OpKind::Forward,
+                    ts: it as f64 * 1000.0 + 110.0,
+                    dur: 100.0,
+                    proc: p,
+                    machine: p,
+                    iter: it,
+                    txid: None,
+                });
+            }
+        }
+        GTrace { events, n_workers: 2, n_procs: 2, iterations: 3 }
+    }
+
+    #[test]
+    fn drift_shifts_only_target_machine() {
+        let mut t = trace();
+        let orig = t.clone();
+        let n = inject_drift(&mut t, 1, 5000.0);
+        assert_eq!(n, 6);
+        for (a, b) in t.events.iter().zip(&orig.events) {
+            if a.machine == 1 {
+                assert_eq!(a.ts, b.ts + 5000.0);
+            } else {
+                assert_eq!(a.ts, b.ts);
+            }
+            assert_eq!(a.dur, b.dur); // drift never changes durations
+        }
+    }
+
+    #[test]
+    fn drop_is_deterministic_and_rate_shaped() {
+        let mut a = trace();
+        let mut b = trace();
+        let na = drop_events(&mut a, 0.5, 7);
+        let nb = drop_events(&mut b, 0.5, 7);
+        assert_eq!(na, nb);
+        assert_eq!(a.events, b.events);
+        assert!(na > 0 && na < 12, "na={na}");
+        let mut c = trace();
+        assert_eq!(drop_events(&mut c, 0.0, 7), 0);
+        assert_eq!(c.events.len(), 12);
+    }
+
+    #[test]
+    fn straggler_creates_detectable_overlap() {
+        let mut t = trace();
+        // events are 100 us long with a 10 us gap; 2x duration overlaps
+        let n = straggle_iteration(&mut t, 1, 2.0);
+        assert_eq!(n, 4);
+        let mut r = TraceReport::default();
+        validate(&t, &mut r);
+        assert!(r.count(DiagKind::OverlapOnProc) >= 2, "{r}");
+    }
+}

@@ -1,0 +1,843 @@
+//! On-disk trace pipeline (paper Fig. 3): dump a [`GTrace`] as per-process
+//! Chrome-trace JSON files, and ingest a trace directory back into a
+//! replayer-ready [`GTrace`] — tolerantly, with every anomaly collected
+//! into a [`TraceReport`](crate::trace::validate::TraceReport) instead of
+//! panicking.
+//!
+//! A dump directory contains `metadata.json` (trace shape + optional job
+//! descriptor) and one `proc_<id>.json` per recording process. Each
+//! process file is standard Chrome trace format (`ph:"X"` complete
+//! events, `pid` = machine, `tid` = process), so it loads directly in
+//! Perfetto / `chrome://tracing`; dPRO-specific context (`kind`, `proc`,
+//! `machine`, `iter`, `txid`, `seq`) rides in `args`, which those viewers
+//! display and other tools ignore. See `docs/TRACE_FORMAT.md` for the
+//! field-by-field schema.
+//!
+//! # Worked example (two workers, one SEND↔RECV transaction)
+//!
+//! The receiver's file of the two-worker trace in `docs/TRACE_FORMAT.md`
+//! (worker 1 lives on machine 1, whose clock runs 2 ms ahead; the RECV's
+//! `ts` is the *launch* time, so its duration includes sender wait):
+//!
+//! ```
+//! use dpro::trace::io::parse_trace_file;
+//! use dpro::trace::validate::TraceReport;
+//!
+//! let file = r#"{
+//!   "traceEvents": [
+//!     {"name": "w1.FW.toy_stem", "ph": "X", "ts": 2000, "dur": 95,
+//!      "pid": 1, "tid": 1,
+//!      "args": {"kind": "FW", "proc": 1, "machine": 1, "iter": 0, "seq": 2}},
+//!     {"name": "w1.RECV.g0", "ph": "X", "ts": 2095, "dur": 95,
+//!      "pid": 1, "tid": 1,
+//!      "args": {"kind": "RECV", "proc": 1, "machine": 1, "iter": 0,
+//!               "txid": 1, "seq": 3}}
+//!   ],
+//!   "dpro": {"proc": 1}
+//! }"#;
+//!
+//! let mut report = TraceReport::default();
+//! let events = parse_trace_file(file, "proc_00001.json", &mut report)
+//!     .expect("well-formed file");
+//! assert!(report.is_clean());
+//! assert_eq!(events.len(), 2);
+//! let (seq, recv) = &events[1];
+//! assert_eq!(*seq, Some(3));
+//! assert_eq!(recv.name, "w1.RECV.g0");
+//! assert_eq!(recv.txid, Some(1));
+//! assert_eq!(recv.machine, 1);
+//! // measured duration includes the launch error the §4.2 alignment
+//! // stage later clips against the matching SEND (txid 1)
+//! assert_eq!(recv.dur, 95.0);
+//! ```
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::config::JobSpec;
+use crate::graph::dfg::{OpKind, COORD_PROC};
+use crate::trace::validate::{validate, DiagKind, Severity, TraceReport};
+use crate::trace::{kind_from_str, kind_str, GTrace, TraceEvent};
+use crate::util::json::{parse, Json};
+
+/// Version tag written into `metadata.json` (`dpro.format`). Readers
+/// accept any value — unknown fields and future versions degrade to
+/// diagnostics, not failures.
+pub const TRACE_FORMAT_VERSION: f64 = 1.0;
+
+/// Name of the per-directory metadata file.
+pub const METADATA_FILE: &str = "metadata.json";
+
+/// The job context a dump optionally carries so `dpro replay --trace-dir`
+/// can rebuild the DFG skeleton without the user re-specifying the job on
+/// the command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobMeta {
+    /// Model template name (`resnet50`, `bert_base`, ...).
+    pub model: String,
+    /// Canonical communication-scheme name (an [`crate::config::ALL_SCHEMES`] entry).
+    pub scheme: String,
+    /// Transport name (`rdma` / `tcp`), lower-case.
+    pub transport: String,
+    /// Worker count of the job.
+    pub n_workers: usize,
+    /// GPUs per physical machine (machine layout of the cluster).
+    pub gpus_per_machine: usize,
+    /// Comm/fusion plan family: `"per-tensor"` (unoptimized singleton
+    /// plans) or `"deployed"` (framework-default fusion buckets). The
+    /// replay skeleton's op names depend on it, so a dump must record it
+    /// or the profiled durations would silently fail to join.
+    pub plan: String,
+}
+
+/// The `plan` label of an unoptimized per-tensor/singleton spec.
+pub const PLAN_PER_TENSOR: &str = "per-tensor";
+/// The `plan` label of a deployed-defaults spec (the CLI default).
+pub const PLAN_DEPLOYED: &str = "deployed";
+
+impl JobMeta {
+    /// Capture the replay-relevant shape of a [`JobSpec`]. The plan
+    /// family is derived structurally: singleton one-partition groups and
+    /// singleton fusion ⇒ per-tensor, anything else ⇒ deployed.
+    pub fn of(spec: &JobSpec) -> JobMeta {
+        let per_tensor = spec.plan.groups.len() == spec.model.tensors.len()
+            && spec.plan.groups.iter().all(|g| g.tensors.len() == 1 && g.partitions == 1)
+            && spec.fusion.groups.iter().all(|g| g.len() == 1);
+        JobMeta {
+            model: spec.model.name.clone(),
+            scheme: spec.scheme.cli_name().to_string(),
+            transport: spec.cluster.network.transport.name().to_lowercase(),
+            n_workers: spec.cluster.n_workers,
+            gpus_per_machine: spec.cluster.gpus_per_machine,
+            plan: if per_tensor { PLAN_PER_TENSOR } else { PLAN_DEPLOYED }.to_string(),
+        }
+    }
+
+    /// Serialize for the `job` section of `metadata.json`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", Json::Str(self.model.clone()));
+        j.set("scheme", Json::Str(self.scheme.clone()));
+        j.set("transport", Json::Str(self.transport.clone()));
+        j.set("n_workers", Json::Num(self.n_workers as f64));
+        j.set("gpus_per_machine", Json::Num(self.gpus_per_machine as f64));
+        j.set("plan", Json::Str(self.plan.clone()));
+        j
+    }
+
+    /// Parse the `job` section. Returns `None` (not an error) when any of
+    /// the required fields is missing or mistyped.
+    pub fn from_json(j: &Json) -> Option<JobMeta> {
+        Some(JobMeta {
+            model: j.get("model")?.as_str()?.to_string(),
+            scheme: j.get("scheme")?.as_str()?.to_string(),
+            transport: j.get("transport")?.as_str()?.to_string(),
+            n_workers: j.get("n_workers")?.as_f64()? as usize,
+            gpus_per_machine: j.get("gpus_per_machine")?.as_f64()?.max(1.0) as usize,
+            // older dumps lack the field; the CLI default is deployed
+            plan: j
+                .get("plan")
+                .and_then(Json::as_str)
+                .unwrap_or(PLAN_DEPLOYED)
+                .to_string(),
+        })
+    }
+}
+
+/// What [`dump_dir`] wrote.
+#[derive(Clone, Debug)]
+pub struct DumpSummary {
+    /// The dump directory.
+    pub dir: PathBuf,
+    /// Number of per-process trace files written (excludes metadata).
+    pub files: usize,
+    /// Total events written across all files.
+    pub events: usize,
+}
+
+/// File name of the per-process trace of `proc` (zero-padded so
+/// lexicographic directory order equals process order).
+pub fn proc_file_name(proc: u16) -> String {
+    format!("proc_{proc:05}.json")
+}
+
+/// Dump a trace as a directory of per-process Chrome-trace files (no job
+/// descriptor). See [`dump_dir_with_job`].
+pub fn dump_dir(trace: &GTrace, dir: &Path) -> io::Result<DumpSummary> {
+    dump_dir_with_job(trace, dir, None)
+}
+
+/// Dump a trace as a directory of per-process Chrome-trace files plus
+/// `metadata.json`, creating `dir` if needed. Stale `proc_*.json` files
+/// from a previous dump are removed first (the reader ingests every
+/// trace file in the directory, so leftovers from a larger job would
+/// silently merge into the new trace).
+///
+/// Events keep their in-memory order: each event's position in
+/// [`GTrace::events`] is written as `args.seq`, and the reader re-sorts by
+/// it, so `dump → load` reproduces the source trace — and therefore the
+/// source replay — bit-for-bit (pinned by `rust/tests/trace_io.rs`).
+pub fn dump_dir_with_job(
+    trace: &GTrace,
+    dir: &Path,
+    job: Option<&JobMeta>,
+) -> io::Result<DumpSummary> {
+    std::fs::create_dir_all(dir)?;
+    // clear previous per-process files so the dump is the directory's
+    // whole truth
+    for entry in std::fs::read_dir(dir)?.filter_map(|e| e.ok()) {
+        if let Ok(name) = entry.file_name().into_string() {
+            if name.starts_with("proc_") && name.ends_with(".json") {
+                std::fs::remove_file(entry.path())?;
+            }
+        }
+    }
+
+    // group per process, preserving global emission order
+    let mut per_proc: BTreeMap<u16, Vec<Json>> = BTreeMap::new();
+    for (seq, e) in trace.events.iter().enumerate() {
+        per_proc.entry(e.proc).or_default().push(event_to_json(e, seq as u64));
+    }
+
+    let mut meta = Json::obj();
+    let mut dpro = Json::obj();
+    dpro.set("format", Json::Num(TRACE_FORMAT_VERSION));
+    dpro.set("n_workers", Json::Num(trace.n_workers as f64));
+    dpro.set("n_procs", Json::Num(trace.n_procs as f64));
+    dpro.set("iterations", Json::Num(trace.iterations as f64));
+    dpro.set(
+        "files",
+        Json::Arr(per_proc.keys().map(|&p| Json::Str(proc_file_name(p))).collect()),
+    );
+    meta.set("dpro", dpro);
+    if let Some(job) = job {
+        meta.set("job", job.to_json());
+    }
+    std::fs::write(dir.join(METADATA_FILE), meta.to_string_pretty())?;
+
+    let mut files = 0;
+    for (proc, events) in per_proc {
+        let mut root = Json::obj();
+        root.set("traceEvents", Json::Arr(events));
+        let mut d = Json::obj();
+        d.set("proc", Json::Num(proc as f64));
+        root.set("dpro", d);
+        std::fs::write(dir.join(proc_file_name(proc)), root.to_string_pretty())?;
+        files += 1;
+    }
+    Ok(DumpSummary { dir: dir.to_path_buf(), files, events: trace.events.len() })
+}
+
+/// One trace event as a Chrome-trace `ph:"X"` complete event.
+fn event_to_json(e: &TraceEvent, seq: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(e.name.clone()));
+    o.set("ph", Json::Str("X".into()));
+    o.set("ts", Json::Num(e.ts));
+    o.set("dur", Json::Num(e.dur));
+    o.set("pid", Json::Num(e.machine as f64));
+    o.set("tid", Json::Num(e.proc as f64));
+    let mut args = Json::obj();
+    args.set("kind", Json::Str(kind_str(e.kind).into()));
+    args.set("proc", Json::Num(e.proc as f64));
+    args.set("machine", Json::Num(e.machine as f64));
+    args.set("iter", Json::Num(e.iter as f64));
+    if let Some(t) = e.txid {
+        args.set("txid", Json::Num(t as f64));
+    }
+    args.set("seq", Json::Num(seq as f64));
+    o.set("args", args);
+    o
+}
+
+/// A trace directory, ingested.
+#[derive(Clone, Debug)]
+pub struct LoadedTrace {
+    /// The assembled trace (usable events only).
+    pub trace: GTrace,
+    /// Everything the reader and validator flagged along the way.
+    pub report: TraceReport,
+    /// The job descriptor from `metadata.json`, if one was present.
+    pub job: Option<JobMeta>,
+}
+
+/// Ingest a trace directory written by [`dump_dir_with_job`] — or by hand.
+///
+/// Tolerant by design: unknown fields are ignored, individual broken
+/// events (missing fields, NaN times, unknown kinds) are skipped with a
+/// diagnostic, unparsable files are skipped with a diagnostic, and
+/// structural anomalies (unmatched SEND↔RECV txids, overlapping compute,
+/// iteration gaps) are collected by
+/// [`validate`](crate::trace::validate::validate). The only hard errors
+/// are an unreadable directory and a directory with no trace files.
+pub fn load_dir(dir: &Path) -> Result<LoadedTrace, String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read trace dir {}: {e}", dir.display()))?;
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.ends_with(".json"))
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        return Err(format!("no .json trace files in {}", dir.display()));
+    }
+
+    let mut report = TraceReport::default();
+
+    // --- metadata ---
+    let mut meta_workers: Option<usize> = None;
+    let mut meta_procs: Option<usize> = None;
+    let mut meta_iters: Option<usize> = None;
+    let mut meta_files: Option<Vec<String>> = None;
+    let mut job: Option<JobMeta> = None;
+    if names.iter().any(|n| n == METADATA_FILE) {
+        match std::fs::read_to_string(dir.join(METADATA_FILE)) {
+            Err(e) => report.push(Severity::Error, DiagKind::Io, format!("{METADATA_FILE}: {e}")),
+            Ok(text) => match parse(&text) {
+                Err(e) => {
+                    report.push(Severity::Error, DiagKind::Parse, format!("{METADATA_FILE}: {e}"))
+                }
+                Ok(j) => {
+                    if let Some(d) = j.get("dpro") {
+                        meta_workers = d.get("n_workers").and_then(Json::as_f64).map(|x| x as usize);
+                        meta_procs = d.get("n_procs").and_then(Json::as_f64).map(|x| x as usize);
+                        meta_iters = d.get("iterations").and_then(Json::as_f64).map(|x| x as usize);
+                        meta_files = d.get("files").and_then(Json::as_arr).map(|a| {
+                            a.iter().filter_map(Json::as_str).map(str::to_string).collect()
+                        });
+                    }
+                    if let Some(jj) = j.get("job") {
+                        job = JobMeta::from_json(jj);
+                        if job.is_none() {
+                            report.push(
+                                Severity::Warning,
+                                DiagKind::MetadataMismatch,
+                                "metadata job section present but incomplete; ignoring it",
+                            );
+                        }
+                    }
+                }
+            },
+        }
+    } else {
+        report.push(
+            Severity::Info,
+            DiagKind::MetadataMismatch,
+            format!("no {METADATA_FILE}; trace shape inferred from events"),
+        );
+    }
+
+    // --- per-process files ---
+    // when metadata lists its files, it scopes the ingestion: a stale
+    // legacy trace.json (or any unrelated .json) in the same directory
+    // must not silently merge into the dump
+    let trace_files: Vec<&String> = match &meta_files {
+        Some(listed) => {
+            for extra in names
+                .iter()
+                .filter(|n| n.as_str() != METADATA_FILE && !listed.contains(*n))
+            {
+                report.push(
+                    Severity::Warning,
+                    DiagKind::MetadataMismatch,
+                    format!("{extra}: not in metadata file list; ignored"),
+                );
+            }
+            // the converse is worse: a listed file that vanished means a
+            // whole process's events are missing (partial copy, dead
+            // worker) — a clean report would be a lie
+            for gone in listed.iter().filter(|f| !names.contains(*f)) {
+                report.push(
+                    Severity::Error,
+                    DiagKind::Io,
+                    format!("{gone}: listed in metadata but missing from the directory"),
+                );
+            }
+            names
+                .iter()
+                .filter(|n| n.as_str() != METADATA_FILE && listed.contains(*n))
+                .collect()
+        }
+        None => names.iter().filter(|n| n.as_str() != METADATA_FILE).collect(),
+    };
+    if trace_files.is_empty() {
+        return Err(format!("no trace files in {}", dir.display()));
+    }
+    let mut tagged: Vec<(Option<u64>, TraceEvent)> = Vec::new();
+    for name in trace_files {
+        match std::fs::read_to_string(dir.join(name)) {
+            Err(e) => report.push(Severity::Error, DiagKind::Io, format!("{name}: {e}")),
+            Ok(text) => {
+                if let Some(events) = parse_trace_file(&text, name, &mut report) {
+                    report.files += 1;
+                    tagged.extend(events);
+                }
+            }
+        }
+    }
+
+    // --- deterministic event order ---
+    // `seq` restores the recorder's exact emission order (required for
+    // bit-for-bit replay equality: f64 sums depend on order). Without a
+    // complete set of seqs, fall back to a deterministic (iter, ts, proc)
+    // sort and say so.
+    if tagged.iter().all(|(s, _)| s.is_some()) {
+        tagged.sort_by_key(|(s, _)| s.unwrap());
+    } else {
+        let missing = tagged.iter().filter(|(s, _)| s.is_none()).count();
+        report.push(
+            Severity::Info,
+            DiagKind::MissingSeq,
+            format!("{missing} events lack args.seq; using (iter, ts, proc) order"),
+        );
+        tagged.sort_by(|(_, a), (_, b)| {
+            a.iter.cmp(&b.iter).then(a.ts.total_cmp(&b.ts)).then(a.proc.cmp(&b.proc))
+        });
+    }
+    let events: Vec<TraceEvent> = tagged.into_iter().map(|(_, e)| e).collect();
+
+    // --- trace shape: metadata wins, events fill the gaps ---
+    let seen_procs: std::collections::BTreeSet<u16> =
+        events.iter().map(|e| e.proc).filter(|&p| p != COORD_PROC).collect();
+    // inferred proc count is max+1 (a missing worker's file must not
+    // shrink the arena below the ids actually present)
+    let inferred_procs = seen_procs.iter().max().map(|&p| p as usize + 1).unwrap_or(0);
+    let n_procs = meta_procs.unwrap_or(inferred_procs);
+    let n_workers = meta_workers.unwrap_or(n_procs);
+    let iterations =
+        meta_iters.unwrap_or_else(|| events.iter().map(|e| e.iter as usize + 1).max().unwrap_or(0));
+    if meta_procs.is_some_and(|declared| inferred_procs > declared) {
+        report.push(
+            Severity::Warning,
+            DiagKind::MetadataMismatch,
+            format!(
+                "events from proc {} but metadata declares {n_procs} procs",
+                inferred_procs - 1
+            ),
+        );
+    }
+
+    report.events_loaded = events.len();
+    let trace = GTrace { events, n_workers, n_procs, iterations };
+    validate(&trace, &mut report);
+    Ok(LoadedTrace { trace, report, job })
+}
+
+/// Parse one Chrome-trace file (either `{"traceEvents": [...]}` or a bare
+/// top-level event array) into `(seq, event)` pairs, appending per-event
+/// findings to `report`. Returns `None` (with a `parse` diagnostic) when
+/// the file is not usable at all; `Some` means the file parsed, even if
+/// every individual event was skipped. Public so tests and the format
+/// documentation's worked example can exercise the exact ingestion rules.
+pub fn parse_trace_file(
+    text: &str,
+    label: &str,
+    report: &mut TraceReport,
+) -> Option<Vec<(Option<u64>, TraceEvent)>> {
+    let root = match parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            report.push(Severity::Error, DiagKind::Parse, format!("{label}: {e}"));
+            return None;
+        }
+    };
+    let events = match root.get("traceEvents").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => match root.as_arr() {
+            Some(a) => a,
+            None => {
+                report.push(
+                    Severity::Error,
+                    DiagKind::Parse,
+                    format!("{label}: no traceEvents array"),
+                );
+                return None;
+            }
+        },
+    };
+    let mut out = Vec::with_capacity(events.len());
+    for (idx, e) in events.iter().enumerate() {
+        match parse_event(e, label, idx, report) {
+            Some(pair) => out.push(pair),
+            None => report.events_skipped += 1,
+        }
+    }
+    Some(out)
+}
+
+/// Field of an event that must be a finite number. Distinguishes "absent"
+/// from "present but null/NaN" (our writer serializes NaN as `null`).
+fn finite_num(
+    e: &Json,
+    key: &str,
+    label: &str,
+    idx: usize,
+    report: &mut TraceReport,
+) -> Option<f64> {
+    match e.get(key) {
+        None => {
+            report.push(
+                Severity::Error,
+                DiagKind::MissingField,
+                format!("{label}[{idx}]: missing {key}"),
+            );
+            None
+        }
+        Some(v) => match v.as_f64() {
+            Some(x) if x.is_finite() => Some(x),
+            _ => {
+                report.push(
+                    Severity::Error,
+                    DiagKind::NonFiniteTime,
+                    format!("{label}[{idx}]: {key} is not a finite number"),
+                );
+                None
+            }
+        },
+    }
+}
+
+/// Parse one event object; `None` means it was skipped (with a diagnostic
+/// already recorded).
+fn parse_event(
+    e: &Json,
+    label: &str,
+    idx: usize,
+    report: &mut TraceReport,
+) -> Option<(Option<u64>, TraceEvent)> {
+    // tolerate non-complete phases (metadata, counters, ...) from other
+    // producers: note and skip
+    if let Some(ph) = e.get("ph").and_then(Json::as_str) {
+        if ph != "X" {
+            report.push(
+                Severity::Info,
+                DiagKind::NonCompleteEvent,
+                format!("{label}[{idx}]: ph {ph:?} ignored"),
+            );
+            return None;
+        }
+    }
+    let name = match e.get("name").and_then(Json::as_str) {
+        Some(n) => n.to_string(),
+        None => {
+            report.push(
+                Severity::Error,
+                DiagKind::MissingField,
+                format!("{label}[{idx}]: missing name"),
+            );
+            return None;
+        }
+    };
+    let ts = finite_num(e, "ts", label, idx, report)?;
+    let mut dur = finite_num(e, "dur", label, idx, report)?;
+    if dur < 0.0 {
+        report.push(
+            Severity::Warning,
+            DiagKind::NegativeDuration,
+            format!("{label}[{idx}]: {name}: dur {dur} clamped to 0"),
+        );
+        dur = 0.0;
+    }
+    let args = e.get("args");
+    let arg = |key: &str| args.and_then(|a| a.get(key));
+
+    let kind = match arg("kind").and_then(Json::as_str) {
+        Some(s) => match kind_from_str(s) {
+            Ok(k) => k,
+            Err(_) => {
+                report.push(
+                    Severity::Error,
+                    DiagKind::UnknownKind,
+                    format!("{label}[{idx}]: {name}: unknown kind {s:?}"),
+                );
+                return None;
+            }
+        },
+        None => match infer_kind(&name) {
+            Some(k) => k,
+            None => {
+                report.push(
+                    Severity::Error,
+                    DiagKind::UnknownKind,
+                    format!("{label}[{idx}]: {name}: no args.kind and name gives no hint"),
+                );
+                return None;
+            }
+        },
+    };
+
+    // proc: args.proc, falling back to Chrome's tid
+    let proc_raw = arg("proc").and_then(Json::as_f64).or_else(|| e.get("tid").and_then(Json::as_f64));
+    let proc = match proc_raw {
+        Some(p) if (0.0..=u16::MAX as f64).contains(&p) => p as u16,
+        Some(p) => {
+            report.push(
+                Severity::Error,
+                DiagKind::MetadataMismatch,
+                format!("{label}[{idx}]: {name}: proc {p} out of range"),
+            );
+            return None;
+        }
+        None => {
+            report.push(
+                Severity::Error,
+                DiagKind::MissingField,
+                format!("{label}[{idx}]: {name}: no args.proc or tid"),
+            );
+            return None;
+        }
+    };
+    // machine: args.machine, falling back to Chrome's pid, then 0
+    let machine = match arg("machine")
+        .and_then(Json::as_f64)
+        .or_else(|| e.get("pid").and_then(Json::as_f64))
+    {
+        Some(m) if (0.0..=u16::MAX as f64).contains(&m) => m as u16,
+        _ => {
+            report.push(
+                Severity::Warning,
+                DiagKind::MissingField,
+                format!("{label}[{idx}]: {name}: no machine/pid; assuming machine 0"),
+            );
+            0
+        }
+    };
+    let iter = match arg("iter").and_then(Json::as_f64) {
+        Some(i) if i >= 0.0 => i as u32,
+        _ => {
+            report.push(
+                Severity::Info,
+                DiagKind::MissingField,
+                format!("{label}[{idx}]: {name}: no args.iter; assuming iteration 0"),
+            );
+            0
+        }
+    };
+    // negative ids would saturate to 0 via `as u64` and silently collide
+    // with genuine txid/seq 0 — diagnose and treat as absent instead
+    let txid = match arg("txid").and_then(Json::as_f64) {
+        Some(t) if t >= 0.0 => Some(t as u64),
+        Some(t) => {
+            report.push(
+                Severity::Warning,
+                DiagKind::InvalidValue,
+                format!("{label}[{idx}]: {name}: negative txid {t} ignored"),
+            );
+            None
+        }
+        None => None,
+    };
+    let seq = match arg("seq").and_then(Json::as_f64) {
+        Some(s) if s >= 0.0 => Some(s as u64),
+        Some(s) => {
+            report.push(
+                Severity::Warning,
+                DiagKind::InvalidValue,
+                format!("{label}[{idx}]: {name}: negative seq {s} ignored"),
+            );
+            None
+        }
+        None => None,
+    };
+
+    Some((seq, TraceEvent { name, kind, ts, dur, proc, machine, iter, txid }))
+}
+
+/// Guess an op kind from a dPRO-style op name (`w3.BW.conv1`,
+/// `w0.SEND.g4.m1>m0`...). Used only when `args.kind` is absent.
+fn infer_kind(name: &str) -> Option<OpKind> {
+    for part in name.split('.') {
+        if let Ok(k) = kind_from_str(part) {
+            return Some(k);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::validate::DiagKind;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dpro_io_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn toy_trace() -> GTrace {
+        let ev = |name: &str, kind: OpKind, ts: f64, dur: f64, proc: u16, txid: Option<u64>| {
+            TraceEvent { name: name.into(), kind, ts, dur, proc, machine: proc, iter: 0, txid }
+        };
+        GTrace {
+            events: vec![
+                ev("w0.FW.a", OpKind::Forward, 0.0, 100.0, 0, None),
+                ev("w0.SEND.t", OpKind::Send, 100.0, 40.0, 0, Some(1)),
+                ev("w1.FW.a", OpKind::Forward, 2000.0, 95.0, 1, None),
+                ev("w1.RECV.t", OpKind::Recv, 2095.0, 95.0, 1, Some(1)),
+            ],
+            n_workers: 2,
+            n_procs: 2,
+            iterations: 1,
+        }
+    }
+
+    #[test]
+    fn dump_then_load_roundtrips_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let trace = toy_trace();
+        let s = dump_dir(&trace, &dir).unwrap();
+        assert_eq!(s.files, 2);
+        assert_eq!(s.events, 4);
+        let loaded = load_dir(&dir).unwrap();
+        assert!(loaded.report.is_clean(), "{}", loaded.report);
+        assert_eq!(loaded.trace.events, trace.events);
+        assert_eq!(loaded.trace.n_workers, 2);
+        assert_eq!(loaded.trace.n_procs, 2);
+        assert_eq!(loaded.trace.iterations, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn job_meta_roundtrips() {
+        let dir = tmp_dir("jobmeta");
+        let spec = JobSpec::standard("vgg16", "ps-tree", crate::config::Transport::Tcp);
+        let meta = JobMeta::of(&spec);
+        assert_eq!(meta.scheme, "ps-tree");
+        assert_eq!(meta.transport, "tcp");
+        // standard specs carry the unoptimized singleton plans
+        assert_eq!(meta.plan, PLAN_PER_TENSOR);
+        dump_dir_with_job(&toy_trace(), &dir, Some(&meta)).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.job.as_ref(), Some(&meta));
+        // a deployed-default spec is recognized as such
+        let deployed = crate::baselines::deployed_default(&spec);
+        assert_eq!(JobMeta::of(&deployed).plan, PLAN_DEPLOYED);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn redump_removes_stale_proc_files() {
+        let dir = tmp_dir("redump");
+        dump_dir(&toy_trace(), &dir).unwrap();
+        // shrink the job to one process and dump into the same directory
+        let mut small = toy_trace();
+        small.events.retain(|e| e.proc == 0);
+        small.n_procs = 1;
+        small.n_workers = 1;
+        let s = dump_dir(&small, &dir).unwrap();
+        assert_eq!(s.files, 1);
+        let loaded = load_dir(&dir).unwrap();
+        // proc 1's old file must not leak into the new trace
+        assert_eq!(loaded.trace.events.len(), 2);
+        assert!(loaded.trace.events.iter().all(|e| e.proc == 0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_listed_file_is_an_error_diagnostic() {
+        let dir = tmp_dir("gone");
+        dump_dir(&toy_trace(), &dir).unwrap();
+        std::fs::remove_file(dir.join(proc_file_name(1))).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        // proc 1's events are gone and the report must say so loudly
+        assert_eq!(loaded.trace.events.len(), 2);
+        assert_eq!(loaded.report.count(DiagKind::Io), 1);
+        assert!(!loaded.report.no_errors(), "{}", loaded.report);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unlisted_json_files_are_scoped_out() {
+        let dir = tmp_dir("scoped");
+        dump_dir(&toy_trace(), &dir).unwrap();
+        // a stale legacy single-file trace in the same directory must not
+        // merge into the dump (metadata's file list scopes ingestion)
+        toy_trace().save(dir.join("trace.json").to_str().unwrap()).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.trace.events.len(), 4);
+        assert!(loaded.report.count(DiagKind::MetadataMismatch) >= 1, "{}", loaded.report);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn negative_txid_and_seq_diagnosed_not_coerced() {
+        let mut report = TraceReport::default();
+        let text = r#"{ "traceEvents": [
+            {"name": "w0.SEND.a", "ph": "X", "ts": 0, "dur": 5, "tid": 0, "pid": 0,
+             "args": {"kind": "SEND", "iter": 0, "txid": -1, "seq": -3}}
+        ]}"#;
+        let events = parse_trace_file(text, "neg.json", &mut report).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].0, None, "negative seq must not become 0");
+        assert_eq!(events[0].1.txid, None, "negative txid must not become 0");
+        assert_eq!(report.count(DiagKind::InvalidValue), 2);
+    }
+
+    #[test]
+    fn missing_metadata_is_inferred_with_note() {
+        let dir = tmp_dir("nometa");
+        dump_dir(&toy_trace(), &dir).unwrap();
+        std::fs::remove_file(dir.join(METADATA_FILE)).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.trace.events.len(), 4);
+        assert_eq!(loaded.trace.n_procs, 2);
+        assert_eq!(loaded.trace.iterations, 1);
+        assert_eq!(loaded.report.count(DiagKind::MetadataMismatch), 1);
+        assert!(loaded.report.no_errors());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn broken_events_are_skipped_not_fatal() {
+        let mut report = TraceReport::default();
+        let text = r#"{ "traceEvents": [
+            {"name": "w0.FW.a", "ph": "X", "ts": 0, "dur": 10,
+             "tid": 0, "args": {"kind": "FW", "iter": 0}},
+            {"ph": "X", "ts": 5, "dur": 1, "tid": 0},
+            {"name": "nan_ts", "ph": "X", "ts": null, "dur": 1, "tid": 0,
+             "args": {"kind": "FW"}},
+            {"name": "neg_dur", "ph": "X", "ts": 7, "dur": -3, "tid": 0,
+             "args": {"kind": "FW"}},
+            {"name": "meta", "ph": "M", "args": {"labels": "ignored"}},
+            {"name": "mystery", "ph": "X", "ts": 9, "dur": 1, "tid": 0}
+        ]}"#;
+        let events = parse_trace_file(text, "f.json", &mut report).unwrap();
+        // kept: w0.FW.a (machine inferred), neg_dur (clamped)
+        assert_eq!(events.len(), 2);
+        assert_eq!(report.events_skipped, 4);
+        assert!(report.count(DiagKind::MissingField) >= 2);
+        assert_eq!(report.count(DiagKind::NonFiniteTime), 1);
+        assert_eq!(report.count(DiagKind::NegativeDuration), 1);
+        assert_eq!(report.count(DiagKind::NonCompleteEvent), 1);
+        assert_eq!(report.count(DiagKind::UnknownKind), 1);
+        assert_eq!(events[1].1.dur, 0.0);
+    }
+
+    #[test]
+    fn bare_array_and_kind_inference_accepted() {
+        let mut report = TraceReport::default();
+        let text = r#"[
+            {"name": "w0.BW.conv", "ph": "X", "ts": 0, "dur": 10, "tid": 0, "pid": 0}
+        ]"#;
+        let events = parse_trace_file(text, "bare.json", &mut report).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(parse_trace_file("not json", "bad.json", &mut report).is_none());
+        assert_eq!(events[0].1.kind, OpKind::Backward);
+        assert_eq!(events[0].0, None); // no seq
+    }
+
+    #[test]
+    fn load_dir_errors_only_on_unusable_directories() {
+        let dir = tmp_dir("empty");
+        assert!(load_dir(&dir).is_err()); // does not exist
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load_dir(&dir).is_err()); // no json files
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

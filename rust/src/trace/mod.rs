@@ -4,7 +4,15 @@
 //! and the RECV launch-time error the alignment stage (§4.2) corrects.
 //!
 //! Serialization is Chrome-trace-format JSON (`ph:"X"` complete events), so
-//! dumps load directly into `chrome://tracing` / Perfetto.
+//! dumps load directly into `chrome://tracing` / Perfetto. [`io`] is the
+//! on-disk pipeline (per-process dump directories + tolerant ingestion),
+//! [`validate`] the diagnostic layer over untrusted traces, [`degrade`]
+//! the scenario knobs that make a clean trace look like a sick cluster's.
+//! `docs/TRACE_FORMAT.md` documents the serialized schema.
+
+pub mod degrade;
+pub mod io;
+pub mod validate;
 
 use std::collections::HashMap;
 
@@ -13,11 +21,12 @@ use crate::util::json::{parse, Json};
 use crate::util::Us;
 
 /// One measured op execution.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TraceEvent {
     /// Op name — identical to the global-DFG node name, so traces join
     /// back onto the graph skeleton.
     pub name: String,
+    /// Op kind (serialized via [`kind_str`] / [`kind_from_str`]).
     pub kind: OpKind,
     /// Measured start in the recording process's clock (us).
     pub ts: Us,
@@ -38,9 +47,13 @@ pub struct TraceEvent {
 /// A full multi-iteration global trace.
 #[derive(Clone, Debug, Default)]
 pub struct GTrace {
+    /// All measured events, in recording order.
     pub events: Vec<TraceEvent>,
+    /// Worker count of the traced job.
     pub n_workers: usize,
+    /// Workers + PS servers (excludes the coordinator process).
     pub n_procs: usize,
+    /// Training iterations the trace covers.
     pub iterations: usize,
 }
 
@@ -103,10 +116,15 @@ impl GTrace {
         root
     }
 
+    /// Write the single-file Chrome-trace form (see [`io`] for the
+    /// per-process directory form).
     pub fn save(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string())
     }
 
+    /// Parse the single-file form produced by [`GTrace::to_json`]. Strict
+    /// (errors on missing fields) — the tolerant path for external traces
+    /// is [`io::load_dir`].
     pub fn from_json(j: &Json) -> Result<GTrace, String> {
         let meta = j.get("dpro").ok_or("missing dpro metadata")?;
         let events = j
@@ -135,6 +153,7 @@ impl GTrace {
         Ok(out)
     }
 
+    /// Load the single-file form written by [`GTrace::save`].
     pub fn load(path: &str) -> Result<GTrace, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         GTrace::from_json(&parse(&text)?)
@@ -148,18 +167,22 @@ pub struct ProfileDb {
 }
 
 impl ProfileDb {
+    /// Average measured duration of an op, if the trace covered it.
     pub fn get(&self, name: &str) -> Option<Us> {
         self.avg.get(name).copied()
     }
 
+    /// Number of distinct ops with a measurement.
     pub fn len(&self) -> usize {
         self.avg.len()
     }
 
+    /// True when no op has a measurement.
     pub fn is_empty(&self) -> bool {
         self.avg.is_empty()
     }
 
+    /// Insert/overwrite one op's average duration.
     pub fn insert(&mut self, name: String, dur: Us) {
         self.avg.insert(name, dur);
     }
@@ -178,6 +201,7 @@ impl ProfileDb {
     }
 }
 
+/// Serialized form of an op kind (`args.kind` in trace files).
 pub fn kind_str(k: OpKind) -> &'static str {
     match k {
         OpKind::Forward => "FW",
@@ -192,6 +216,7 @@ pub fn kind_str(k: OpKind) -> &'static str {
     }
 }
 
+/// Inverse of [`kind_str`]; errors on unknown labels.
 pub fn kind_from_str(s: &str) -> Result<OpKind, String> {
     Ok(match s {
         "FW" => OpKind::Forward,

@@ -1,0 +1,460 @@
+//! Trace validation: structural checks over an ingested [`GTrace`] whose
+//! findings are *collected*, never panicked — external and hand-edited
+//! traces are untrusted input (the Daydream-style what-if workflow edits
+//! dumps by hand), so every anomaly becomes a typed [`Diagnostic`] in a
+//! [`TraceReport`] and the pipeline keeps going with whatever is usable.
+//!
+//! The reader ([`crate::trace::io`]) feeds per-event parse findings into
+//! the same report; [`validate`] adds the cross-event checks that only
+//! make sense once the whole directory is assembled (SEND↔RECV txid
+//! pairing, same-GPU overlap, iteration gaps).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::graph::dfg::OpKind;
+use crate::trace::GTrace;
+use crate::util::json::Json;
+
+/// How bad a [`Diagnostic`] is.
+///
+/// `Error` means data was dropped or unusable; `Warning` means the trace
+/// is suspicious but every event was kept; `Info` is a note (e.g. a
+/// tolerated legacy file without sequence numbers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Note only; the trace is fully usable.
+    Info,
+    /// Suspicious data kept as-is (e.g. overlapping compute events).
+    Warning,
+    /// Data was skipped or cannot be interpreted.
+    Error,
+}
+
+impl Severity {
+    /// Lower-case label used in reports and JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// The closed set of anomaly classes the pipeline detects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DiagKind {
+    /// A file could not be read from disk.
+    Io,
+    /// A file was not valid JSON (the whole file is skipped).
+    Parse,
+    /// An event lacked a required field (`name`, `ts`, `dur`) and was
+    /// skipped.
+    MissingField,
+    /// An event's `args.kind` was absent or unknown and could not be
+    /// inferred from the op name; the event was skipped.
+    UnknownKind,
+    /// A timestamp or duration was NaN/±Inf; the event was skipped.
+    NonFiniteTime,
+    /// A negative duration was clamped to zero.
+    NegativeDuration,
+    /// A field held an out-of-domain value (e.g. a negative txid/seq,
+    /// which was ignored rather than saturated to 0).
+    InvalidValue,
+    /// An event with `ph != "X"` was ignored (counter/metadata events from
+    /// other tools are tolerated, not interpreted).
+    NonCompleteEvent,
+    /// A SEND without a matching RECV on the same `(txid, iter)`, or the
+    /// converse — dropped events or a hand-edit broke the pairing.
+    UnmatchedTxid,
+    /// Two SENDs (or two RECVs) share one `(txid, iter)` key.
+    DuplicateTxid,
+    /// Two computation events on one process overlap in time — a single
+    /// GPU cannot run two kernels at once, so either the trace is degraded
+    /// (straggler/preemption artifact) or clocks are inconsistent.
+    OverlapOnProc,
+    /// Events carried no `args.seq`; the reader fell back to a
+    /// deterministic `(iter, ts, proc)` sort, which may not reproduce the
+    /// recorder's exact event order (bit-for-bit replay is not guaranteed).
+    MissingSeq,
+    /// Per-file or per-event data disagreed with `metadata.json`
+    /// (unknown proc id, iteration beyond the declared count, ...).
+    MetadataMismatch,
+    /// Observed iteration numbers are not contiguous from 0.
+    IterationGap,
+}
+
+impl DiagKind {
+    /// Stable snake_case key used in JSON reports (schema-stable: tests
+    /// and CI key off these names).
+    pub fn name(self) -> &'static str {
+        match self {
+            DiagKind::Io => "io",
+            DiagKind::Parse => "parse",
+            DiagKind::MissingField => "missing_field",
+            DiagKind::UnknownKind => "unknown_kind",
+            DiagKind::NonFiniteTime => "non_finite_time",
+            DiagKind::NegativeDuration => "negative_duration",
+            DiagKind::InvalidValue => "invalid_value",
+            DiagKind::NonCompleteEvent => "non_complete_event",
+            DiagKind::UnmatchedTxid => "unmatched_txid",
+            DiagKind::DuplicateTxid => "duplicate_txid",
+            DiagKind::OverlapOnProc => "overlap_on_proc",
+            DiagKind::MissingSeq => "missing_seq",
+            DiagKind::MetadataMismatch => "metadata_mismatch",
+            DiagKind::IterationGap => "iteration_gap",
+        }
+    }
+}
+
+/// One finding: what happened, how bad it is, and where.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Severity class (drives exit codes and report summaries).
+    pub severity: Severity,
+    /// Anomaly class.
+    pub kind: DiagKind,
+    /// Human-readable context (file, event name, values involved).
+    pub detail: String,
+}
+
+/// Cap on stored `detail` strings *per kind*: a 100k-event trace with a
+/// systematic defect should report one class with a count, not 100k
+/// strings. Counts in [`TraceReport::counts`] are always exact.
+pub const MAX_DETAILS_PER_KIND: usize = 16;
+
+/// Everything the reader and validator found while ingesting a trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Trace files successfully parsed.
+    pub files: usize,
+    /// Events kept in the assembled [`GTrace`].
+    pub events_loaded: usize,
+    /// Events present in the input but skipped as unusable.
+    pub events_skipped: usize,
+    /// Stored findings (detail strings capped per kind, counts exact).
+    pub diagnostics: Vec<Diagnostic>,
+    counts: BTreeMap<DiagKind, usize>,
+    /// Tracked across *all* pushes — detail capping must not hide an
+    /// Error that arrived after a kind's cap was reached.
+    worst: Option<Severity>,
+}
+
+impl TraceReport {
+    /// Record a finding. The exact per-kind count is always kept; the
+    /// detail string is stored only for the first
+    /// [`MAX_DETAILS_PER_KIND`] findings of that kind.
+    pub fn push(&mut self, severity: Severity, kind: DiagKind, detail: impl Into<String>) {
+        self.worst = Some(self.worst.map_or(severity, |w| w.max(severity)));
+        let n = self.counts.entry(kind).or_insert(0);
+        *n += 1;
+        if *n <= MAX_DETAILS_PER_KIND {
+            self.diagnostics.push(Diagnostic { severity, kind, detail: detail.into() });
+        }
+    }
+
+    /// Exact number of findings of `kind` (independent of the detail cap).
+    pub fn count(&self, kind: DiagKind) -> usize {
+        self.counts.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Highest severity among all findings, if any — exact even past the
+    /// per-kind detail cap.
+    pub fn max_severity(&self) -> Option<Severity> {
+        self.worst
+    }
+
+    /// True when nothing at all was flagged.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// True when no data was lost (warnings and notes allowed).
+    pub fn no_errors(&self) -> bool {
+        self.max_severity().map_or(true, |s| s < Severity::Error)
+    }
+
+    /// JSON form with a stable schema: `files`, `events_loaded`,
+    /// `events_skipped`, `max_severity`, `counts` (kind → exact count) and
+    /// `details` (capped list of `{severity, kind, detail}`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("files", Json::Num(self.files as f64));
+        j.set("events_loaded", Json::Num(self.events_loaded as f64));
+        j.set("events_skipped", Json::Num(self.events_skipped as f64));
+        j.set(
+            "max_severity",
+            match self.max_severity() {
+                Some(s) => Json::Str(s.name().to_string()),
+                None => Json::Null,
+            },
+        );
+        let mut counts = Json::obj();
+        for (&k, &n) in &self.counts {
+            counts.set(k.name(), Json::Num(n as f64));
+        }
+        j.set("counts", counts);
+        let details: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut o = Json::obj();
+                o.set("severity", Json::Str(d.severity.name().to_string()));
+                o.set("kind", Json::Str(d.kind.name().to_string()));
+                o.set("detail", Json::Str(d.detail.clone()));
+                o
+            })
+            .collect();
+        j.set("details", Json::Arr(details));
+        j
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            format!("{} events from {} files, no diagnostics", self.events_loaded, self.files)
+        } else {
+            let by_kind: Vec<String> =
+                self.counts.iter().map(|(k, n)| format!("{}×{}", n, k.name())).collect();
+            format!(
+                "{} events from {} files ({} skipped); diagnostics: {}",
+                self.events_loaded,
+                self.files,
+                self.events_skipped,
+                by_kind.join(", ")
+            )
+        }
+    }
+}
+
+impl std::fmt::Display for TraceReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.summary())
+    }
+}
+
+/// Tolerance for the same-GPU overlap check (us): sub-microsecond overlap
+/// is serialization noise, not an anomaly.
+const OVERLAP_EPS_US: f64 = 1.0;
+
+/// Cross-event structural checks on an assembled trace. Appends findings
+/// to `report`; never panics, never mutates the trace.
+///
+/// Checks: SEND↔RECV `(txid, iter)` pairing (unmatched and duplicate
+/// transactions), overlap between computation events on one process, and
+/// iteration contiguity.
+pub fn validate(trace: &GTrace, report: &mut TraceReport) {
+    // --- SEND↔RECV pairing on (txid, iter) ---
+    let mut sends: HashMap<(u64, u32), u32> = HashMap::new();
+    let mut recvs: HashMap<(u64, u32), u32> = HashMap::new();
+    for e in &trace.events {
+        let Some(t) = e.txid else { continue };
+        match e.kind {
+            OpKind::Send => *sends.entry((t, e.iter)).or_insert(0) += 1,
+            OpKind::Recv => *recvs.entry((t, e.iter)).or_insert(0) += 1,
+            _ => {}
+        }
+    }
+    for (&(t, it), &n) in &sends {
+        if n > 1 {
+            report.push(
+                Severity::Warning,
+                DiagKind::DuplicateTxid,
+                format!("{n} SENDs share txid {t} in iter {it}"),
+            );
+        }
+        if !recvs.contains_key(&(t, it)) {
+            report.push(
+                Severity::Warning,
+                DiagKind::UnmatchedTxid,
+                format!("SEND txid {t} iter {it} has no RECV"),
+            );
+        }
+    }
+    for (&(t, it), &n) in &recvs {
+        if n > 1 {
+            report.push(
+                Severity::Warning,
+                DiagKind::DuplicateTxid,
+                format!("{n} RECVs share txid {t} in iter {it}"),
+            );
+        }
+        if !sends.contains_key(&(t, it)) {
+            report.push(
+                Severity::Warning,
+                DiagKind::UnmatchedTxid,
+                format!("RECV txid {t} iter {it} has no SEND"),
+            );
+        }
+    }
+
+    // --- computation overlap per process ---
+    // Communication events legitimately overlap compute (separate NIC /
+    // NVLink engines share the proc id) and RECVs carry launch-time
+    // inflation by design, so only FW/BW/UPD — which serialize on the one
+    // GPU — are checked.
+    let mut per_proc: HashMap<u16, Vec<(f64, f64, &str)>> = HashMap::new();
+    for e in &trace.events {
+        if matches!(e.kind, OpKind::Forward | OpKind::Backward | OpKind::Update)
+            && e.ts.is_finite()
+            && e.dur.is_finite()
+        {
+            per_proc.entry(e.proc).or_default().push((e.ts, e.ts + e.dur, e.name.as_str()));
+        }
+    }
+    for (proc, mut spans) in per_proc {
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        // running max end catches overlaps with *any* earlier event, not
+        // just the immediate predecessor (one long straggler kernel can
+        // cover many successors)
+        let mut max_end = f64::NEG_INFINITY;
+        let mut max_name = "";
+        for &(st, en, name) in &spans {
+            if max_end > st + OVERLAP_EPS_US {
+                report.push(
+                    Severity::Warning,
+                    DiagKind::OverlapOnProc,
+                    format!(
+                        "proc {proc}: {max_name} [..{max_end:.1}] overlaps {name} [{st:.1}..]"
+                    ),
+                );
+            }
+            if en > max_end {
+                max_end = en;
+                max_name = name;
+            }
+        }
+    }
+
+    // --- iteration contiguity ---
+    let iters: HashSet<u32> = trace.events.iter().map(|e| e.iter).collect();
+    if let Some(&max) = iters.iter().max() {
+        let missing: Vec<u32> = (0..=max).filter(|i| !iters.contains(i)).collect();
+        if !missing.is_empty() {
+            report.push(
+                Severity::Info,
+                DiagKind::IterationGap,
+                format!("iterations missing below {max}: {missing:?}"),
+            );
+        }
+        if trace.iterations > 0 && (max as usize) >= trace.iterations {
+            report.push(
+                Severity::Warning,
+                DiagKind::MetadataMismatch,
+                format!(
+                    "event iteration {max} outside declared iteration count {}",
+                    trace.iterations
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    fn ev(name: &str, kind: OpKind, proc: u16, ts: f64, dur: f64, txid: Option<u64>) -> TraceEvent {
+        TraceEvent { name: name.into(), kind, ts, dur, proc, machine: 0, iter: 0, txid }
+    }
+
+    #[test]
+    fn clean_trace_reports_nothing() {
+        let trace = GTrace {
+            events: vec![
+                ev("w0.FW.a", OpKind::Forward, 0, 0.0, 10.0, None),
+                ev("w0.SEND.t", OpKind::Send, 0, 10.0, 5.0, Some(1)),
+                ev("w1.RECV.t", OpKind::Recv, 1, 11.0, 6.0, Some(1)),
+            ],
+            n_workers: 2,
+            n_procs: 2,
+            iterations: 1,
+        };
+        let mut r = TraceReport::default();
+        validate(&trace, &mut r);
+        assert!(r.is_clean(), "{r}");
+        assert!(r.no_errors());
+        assert_eq!(r.max_severity(), None);
+    }
+
+    #[test]
+    fn unmatched_and_duplicate_txids_flagged() {
+        let trace = GTrace {
+            events: vec![
+                ev("w0.SEND.a", OpKind::Send, 0, 0.0, 5.0, Some(1)),
+                ev("w0.SEND.b", OpKind::Send, 0, 6.0, 5.0, Some(2)),
+                ev("w1.RECV.b", OpKind::Recv, 1, 6.0, 9.0, Some(2)),
+                ev("w1.RECV.b2", OpKind::Recv, 1, 16.0, 9.0, Some(2)),
+            ],
+            n_workers: 2,
+            n_procs: 2,
+            iterations: 1,
+        };
+        let mut r = TraceReport::default();
+        validate(&trace, &mut r);
+        assert_eq!(r.count(DiagKind::UnmatchedTxid), 1); // SEND 1 unanswered
+        assert_eq!(r.count(DiagKind::DuplicateTxid), 1); // two RECVs on 2
+        assert!(r.no_errors()); // warnings, not errors
+    }
+
+    #[test]
+    fn comp_overlap_flagged_but_comm_overlap_ignored() {
+        let trace = GTrace {
+            events: vec![
+                ev("w0.FW.a", OpKind::Forward, 0, 0.0, 10.0, None),
+                ev("w0.FW.b", OpKind::Forward, 0, 5.0, 10.0, None),
+                // comm overlapping compute is fine (different engine)
+                ev("w0.SEND.t", OpKind::Send, 0, 2.0, 30.0, Some(1)),
+                ev("w1.RECV.t", OpKind::Recv, 1, 2.0, 30.0, Some(1)),
+            ],
+            n_workers: 2,
+            n_procs: 2,
+            iterations: 1,
+        };
+        let mut r = TraceReport::default();
+        validate(&trace, &mut r);
+        assert_eq!(r.count(DiagKind::OverlapOnProc), 1);
+        assert_eq!(r.count(DiagKind::UnmatchedTxid), 0);
+    }
+
+    #[test]
+    fn iteration_gap_noted() {
+        let mut e0 = ev("w0.FW.a", OpKind::Forward, 0, 0.0, 1.0, None);
+        let mut e2 = ev("w0.FW.a", OpKind::Forward, 0, 100.0, 1.0, None);
+        e0.iter = 0;
+        e2.iter = 2;
+        let trace = GTrace { events: vec![e0, e2], n_workers: 1, n_procs: 1, iterations: 3 };
+        let mut r = TraceReport::default();
+        validate(&trace, &mut r);
+        assert_eq!(r.count(DiagKind::IterationGap), 1);
+        assert_eq!(r.max_severity(), Some(Severity::Info));
+    }
+
+    #[test]
+    fn detail_cap_keeps_exact_counts() {
+        let mut r = TraceReport::default();
+        for i in 0..100 {
+            r.push(Severity::Warning, DiagKind::UnmatchedTxid, format!("d{i}"));
+        }
+        assert_eq!(r.count(DiagKind::UnmatchedTxid), 100);
+        assert_eq!(r.diagnostics.len(), MAX_DETAILS_PER_KIND);
+        let j = r.to_json();
+        assert_eq!(j.get("counts").unwrap().f64("unmatched_txid"), 100.0);
+    }
+
+    #[test]
+    fn severity_tracked_past_detail_cap() {
+        let mut r = TraceReport::default();
+        // fill the MissingField cap with warnings, then push an Error of
+        // the same kind: it must still dominate max_severity
+        for i in 0..MAX_DETAILS_PER_KIND {
+            r.push(Severity::Warning, DiagKind::MissingField, format!("w{i}"));
+        }
+        assert!(r.no_errors());
+        r.push(Severity::Error, DiagKind::MissingField, "dropped event");
+        assert_eq!(r.max_severity(), Some(Severity::Error));
+        assert!(!r.no_errors());
+        assert_eq!(r.diagnostics.len(), MAX_DETAILS_PER_KIND);
+    }
+}

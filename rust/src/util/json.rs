@@ -11,10 +11,15 @@ use std::fmt::Write as _;
 /// A JSON value. Numbers are f64 (sufficient for microsecond timestamps).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null` (also what non-finite numbers serialize to).
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
     /// BTreeMap gives deterministic serialization; trace consumers do not
     /// depend on field order.
@@ -22,10 +27,12 @@ pub enum Json {
 }
 
 impl Json {
+    /// A fresh empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert/overwrite a key (panics on non-objects — builder use only).
     pub fn set(&mut self, key: &str, val: Json) -> &mut Json {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val);
@@ -35,6 +42,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -49,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -56,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -63,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -76,16 +88,20 @@ impl Json {
         self.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing num field {key}"))
     }
 
+    /// Like [`Json::f64`] but for string fields.
     pub fn str(&self, key: &str) -> &str {
         self.get(key).and_then(Json::as_str).unwrap_or_else(|| panic!("missing str field {key}"))
     }
 
+    /// Compact serialization (no whitespace).
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
         out
     }
 
+    /// Indented serialization with a trailing newline (for files humans
+    /// read and hand-edit).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write_pretty(&mut out, 0);

@@ -14,17 +14,23 @@ use std::collections::BTreeMap;
 /// microsecond timestamps; iteration times are tens-to-hundreds of ms).
 pub type Us = f64;
 
-/// Tiny argv parser: positional args plus `--key value` / `--flag` options.
-/// Sufficient for the `dpro` CLI and examples; errors on unknown '--' keys
-/// are left to the caller so subcommands can define their own sets.
+/// Tiny argv parser: positional args plus `--key value` / `--key=value` /
+/// `--flag` options and single-letter `-k value` short options (the CLI
+/// documents `-o trace.json`). Sufficient for the `dpro` CLI and examples;
+/// errors on unknown '--' keys are left to the caller so subcommands can
+/// define their own sets.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-option arguments, in order (the subcommand is first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse an argv iterator (without the program name).
     pub fn parse(argv: impl Iterator<Item = String>) -> Args {
         let mut out = Args::default();
         let mut argv = argv.peekable();
@@ -39,6 +45,20 @@ impl Args {
                 } else {
                     out.flags.push(key.to_string());
                 }
+            } else if a.len() == 2
+                && a.starts_with('-')
+                && a.as_bytes()[1].is_ascii_alphabetic()
+            {
+                // -k value short option (e.g. `-o trace.json`); a lone
+                // short switch becomes a flag. Negative numbers stay
+                // positional (second byte is a digit).
+                let key = a[1..].to_string();
+                if argv.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = argv.next().unwrap();
+                    out.options.insert(key, v);
+                } else {
+                    out.flags.push(key);
+                }
             } else {
                 out.positional.push(a);
             }
@@ -46,30 +66,37 @@ impl Args {
         out
     }
 
+    /// Parse the process's own arguments.
     pub fn from_env() -> Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Option value, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option value or a default.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Option parsed as `usize`, or the default on absence/parse failure.
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `f64`, or the default on absence/parse failure.
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `u64`, or the default on absence/parse failure.
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether a bare `--flag` was given.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -113,6 +140,17 @@ mod tests {
         assert_eq!(a.positional, vec!["replay", "fast"]);
         assert_eq!(a.get("trace"), Some("t.json"));
         assert_eq!(a.usize("iters", 1), 10);
+    }
+
+    #[test]
+    fn args_short_options() {
+        let a = parse(&["profile", "-o", "trace.json", "--iters", "5"]);
+        assert_eq!(a.get("o"), Some("trace.json"));
+        assert_eq!(a.usize("iters", 0), 5);
+        assert_eq!(a.positional, vec!["profile"]);
+        // negative numbers are positional, not short options
+        let b = parse(&["shift", "-5"]);
+        assert_eq!(b.positional, vec!["shift", "-5"]);
     }
 
     #[test]

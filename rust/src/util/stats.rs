@@ -18,6 +18,7 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
 }
 
+/// Population standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
@@ -39,10 +40,12 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Smallest element (+∞ for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest element (−∞ for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -58,26 +61,32 @@ pub fn rel_err_pct(est: f64, truth: f64) -> f64 {
 /// Simple online timer summary used by the custom bench harness.
 #[derive(Default, Clone, Debug)]
 pub struct Summary {
+    /// The recorded samples, in insertion order.
     pub samples: Vec<f64>,
 }
 
 impl Summary {
+    /// Record one sample.
     pub fn push(&mut self, x: f64) {
         self.samples.push(x);
     }
 
+    /// Mean of the recorded samples.
     pub fn mean(&self) -> f64 {
         mean(&self.samples)
     }
 
+    /// Standard deviation of the recorded samples.
     pub fn stddev(&self) -> f64 {
         stddev(&self.samples)
     }
 
+    /// Median.
     pub fn p50(&self) -> f64 {
         percentile(&self.samples, 50.0)
     }
 
+    /// 99th percentile.
     pub fn p99(&self) -> f64 {
         percentile(&self.samples, 99.0)
     }

@@ -1,0 +1,253 @@
+//! End-to-end tests of the on-disk trace pipeline (ISSUE 4 tentpole):
+//!
+//! 1. `dump → load → corrected_profile → replay` reproduces the in-memory
+//!    replay **bit-for-bit** across every scheme in `ALL_SCHEMES`;
+//! 2. alignment on a drift-injected dump recovers the injected
+//!    per-machine clock offsets within 1%, and the identity-alignment
+//!    ablation is measurably worse;
+//! 3. degraded traces (dropped events, straggler iterations) produce
+//!    typed diagnostics, never panics, and still replay;
+//! 4. the committed golden fixture keeps loading with a stable report and
+//!    stable CLI JSON schemas.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use dpro::alignment::{align, Alignment};
+use dpro::cli::{align_json, replay_json};
+use dpro::config::{JobSpec, Transport, ALL_SCHEMES};
+use dpro::graph::{build_global, AnalyticCost};
+use dpro::profiler::{corrected_profile, estimate};
+use dpro::replay::replay_once;
+use dpro::testbed::{run, TestbedOpts};
+use dpro::trace::degrade;
+use dpro::trace::io::{dump_dir_with_job, load_dir, JobMeta, LoadedTrace};
+use dpro::trace::validate::DiagKind;
+use dpro::trace::GTrace;
+use dpro::util::stats::rel_err_pct;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dpro_trace_io_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn dump_and_load(trace: &GTrace, spec: &JobSpec, tag: &str) -> LoadedTrace {
+    let dir = tmp_dir(tag);
+    dump_dir_with_job(trace, &dir, Some(&JobMeta::of(spec))).expect("dump");
+    let loaded = load_dir(&dir).expect("load");
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+    loaded
+}
+
+/// The acceptance property: an externally-persisted trace flows through
+/// skeleton join + alignment + replay to the *identical* estimate the
+/// in-memory trace produced — for every communication scheme.
+#[test]
+fn dump_load_replay_bit_for_bit_across_all_schemes() {
+    for scheme in ALL_SCHEMES {
+        let spec = JobSpec::standard("vgg16", scheme, Transport::Rdma);
+        let tb = run(&spec, &TestbedOpts { iterations: 3, ..Default::default() });
+        let mem = estimate(&spec, &tb.trace, true);
+
+        let loaded = dump_and_load(&tb.trace, &spec, &format!("rt_{scheme}"));
+        assert!(loaded.report.no_errors(), "{scheme}: {}", loaded.report);
+        assert_eq!(loaded.trace.events, tb.trace.events, "{scheme}: events changed");
+        assert_eq!(loaded.trace.n_workers, tb.trace.n_workers);
+        assert_eq!(loaded.trace.n_procs, tb.trace.n_procs);
+        assert_eq!(loaded.trace.iterations, tb.trace.iterations);
+        assert_eq!(loaded.job, Some(JobMeta::of(&spec)), "{scheme}: job meta");
+
+        let disk = estimate(&spec, &loaded.trace, true);
+        assert_eq!(
+            disk.iteration_us().to_bits(),
+            mem.iteration_us().to_bits(),
+            "{scheme}: iteration time not bit-for-bit ({} vs {})",
+            disk.iteration_us(),
+            mem.iteration_us()
+        );
+        assert_eq!(disk.fw_us().to_bits(), mem.fw_us().to_bits(), "{scheme}: fw");
+        assert_eq!(disk.bw_us().to_bits(), mem.bw_us().to_bits(), "{scheme}: bw");
+        assert_eq!(disk.profiled_ops, mem.profiled_ops, "{scheme}: coverage");
+    }
+}
+
+/// Inject a known per-machine clock offset into a clean-clock trace; the
+/// §4.2 solver must recover it within 1%, and replay with the recovered
+/// offsets must beat the identity-alignment ablation.
+#[test]
+fn alignment_recovers_injected_drift_within_1pct() {
+    const DRIFT_US: f64 = 50_000.0;
+    let mut spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+    spec.cluster.clock.drift_std_us = 0.0; // clean clocks, then inject
+    let tb = run(&spec, &TestbedOpts { iterations: 6, ..Default::default() });
+
+    let mut degraded = tb.trace.clone();
+    let shifted = degrade::inject_drift(&mut degraded, 1, DRIFT_US);
+    assert!(shifted > 0);
+
+    let loaded = dump_and_load(&degraded, &spec, "drift");
+    assert!(loaded.report.no_errors(), "{}", loaded.report);
+
+    let a = align(&loaded.trace, 1.0, 1.0);
+    let mut per_machine: HashMap<u16, Vec<f64>> = HashMap::new();
+    for (&proc, &theta) in &a.theta {
+        if (proc as usize) < spec.cluster.n_workers {
+            per_machine
+                .entry(spec.cluster.machine_of(proc as usize) as u16)
+                .or_default()
+                .push(theta);
+        }
+    }
+    // machine 1 drifted +50 ms ⇒ θ ≈ −50 ms; machine 0 is the reference
+    let m1 = dpro::util::stats::mean(&per_machine[&1]);
+    let m0 = dpro::util::stats::mean(&per_machine[&0]);
+    let recovered = m1 - m0;
+    assert!(
+        (recovered + DRIFT_US).abs() < 0.01 * DRIFT_US,
+        "recovered {recovered:.1} us for injected {DRIFT_US} us (m0={m0:.1}, m1={m1:.1})"
+    );
+
+    // replay quality: solved alignment beats the identity ablation
+    let truth = tb.avg_iter();
+    let aligned = estimate(&spec, &loaded.trace, true);
+    let err_aligned = rel_err_pct(aligned.iteration_us(), truth);
+
+    let db = corrected_profile(&loaded.trace, &Alignment::identity());
+    let mut g = build_global(&spec, &AnalyticCost::new(&spec));
+    db.apply(&mut g);
+    let err_identity = rel_err_pct(replay_once(&g).iteration_time, truth);
+
+    assert!(
+        err_aligned < err_identity,
+        "aligned {err_aligned:.2}% should beat identity {err_identity:.2}%"
+    );
+    assert!(
+        err_identity - err_aligned > 1.0,
+        "ablation should be measurably worse: identity {err_identity:.2}% vs aligned {err_aligned:.2}%"
+    );
+    assert!(err_aligned < 10.0, "aligned err {err_aligned:.2}%");
+}
+
+/// Dropped events break SEND↔RECV pairs: the pipeline must diagnose and
+/// keep going, and the estimate must still be finite and positive.
+#[test]
+fn dropped_events_are_diagnosed_not_fatal() {
+    let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+    let tb = run(&spec, &TestbedOpts { iterations: 2, ..Default::default() });
+    let mut degraded = tb.trace.clone();
+    let dropped = degrade::drop_events(&mut degraded, 0.03, 11);
+    assert!(dropped > 0);
+
+    let loaded = dump_and_load(&degraded, &spec, "drop");
+    assert!(
+        loaded.report.count(DiagKind::UnmatchedTxid) > 0,
+        "broken transactions should be flagged: {}",
+        loaded.report
+    );
+    let est = estimate(&spec, &loaded.trace, true);
+    assert!(est.iteration_us().is_finite() && est.iteration_us() > 0.0);
+}
+
+/// A straggler iteration leaves physically impossible overlaps in the
+/// recorded timeline: flagged as warnings, replay still proceeds.
+#[test]
+fn straggler_iteration_flagged_and_survivable() {
+    let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+    let tb = run(&spec, &TestbedOpts { iterations: 3, ..Default::default() });
+    let mut degraded = tb.trace.clone();
+    let stretched = degrade::straggle_iteration(&mut degraded, 1, 4.0);
+    assert!(stretched > 0);
+
+    let loaded = dump_and_load(&degraded, &spec, "straggle");
+    assert!(
+        loaded.report.count(DiagKind::OverlapOnProc) > 0,
+        "stretched iteration should overlap: {}",
+        loaded.report
+    );
+    assert!(loaded.report.no_errors(), "warnings only: {}", loaded.report);
+    let est = estimate(&spec, &loaded.trace, true);
+    assert!(est.iteration_us().is_finite() && est.iteration_us() > 0.0);
+    // the straggler inflates averaged durations, so the estimate rises
+    let clean = estimate(&spec, &tb.trace, true);
+    assert!(est.iteration_us() > clean.iteration_us());
+}
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/two_worker")
+}
+
+/// The committed golden fixture: a hand-written two-worker dump with one
+/// tolerated Chrome metadata event and one orphan transaction. Pins the
+/// ingestion behavior and the report schema against regressions.
+#[test]
+fn golden_fixture_loads_with_stable_report() {
+    let loaded = load_dir(&fixture_dir()).expect("fixture should load");
+    assert_eq!(loaded.trace.n_workers, 2);
+    assert_eq!(loaded.trace.n_procs, 2);
+    assert_eq!(loaded.trace.iterations, 2);
+    // 9 complete events survive; the ph:"M" process_name row is skipped
+    assert_eq!(loaded.trace.events.len(), 9);
+    assert_eq!(loaded.report.count(DiagKind::NonCompleteEvent), 1);
+    assert_eq!(loaded.report.count(DiagKind::UnmatchedTxid), 1);
+    assert!(loaded.report.no_errors(), "{}", loaded.report);
+
+    let job = loaded.job.expect("fixture carries a job descriptor");
+    assert_eq!(job.model, "resnet50");
+    assert_eq!(job.scheme, "ring");
+    assert_eq!(job.n_workers, 2);
+
+    // events are seq-ordered: the first is worker 0's forward op
+    assert_eq!(loaded.trace.events[0].name, "w0.FW.toy_stem");
+    // SEND↔RECV pairing on (txid, iter) held for txid 1 in both iterations
+    let recv = loaded.trace.events.iter().find(|e| e.name == "w1.RECV.g0").unwrap();
+    assert_eq!(recv.txid, Some(1));
+    assert_eq!(recv.machine, 1);
+}
+
+/// Alignment on the fixture sees machine 1's clock running ~2 ms ahead
+/// and pushes its offset the other way; the CLI JSON schemas stay stable.
+#[test]
+fn golden_fixture_aligns_and_json_schemas_stable() {
+    let loaded = load_dir(&fixture_dir()).expect("fixture should load");
+    let a = align(&loaded.trace, 1.0, 1.0);
+    let theta1 = a.offset(1);
+    assert!(
+        theta1 < -1500.0 && theta1 > -2500.0,
+        "fixture drift is +2000 us; solved theta1 = {theta1}"
+    );
+
+    let aj = align_json(&a, &loaded.report);
+    for key in ["procs", "objective", "iterations", "report"] {
+        assert!(aj.get(key).is_some(), "align json missing {key}");
+    }
+    let procs = aj.get("procs").unwrap().as_arr().unwrap();
+    assert_eq!(procs.len(), 2);
+    for row in procs {
+        assert!(row.get("proc").is_some() && row.get("theta_us").is_some());
+    }
+
+    // replay from the fixture job descriptor (op names intentionally do
+    // not join the resnet50 skeleton — coverage 0, analytic durations;
+    // `toy_stem` exists in no model template)
+    let spec = JobSpec::standard(&loaded.job.as_ref().unwrap().model, "ring", Transport::Rdma);
+    let est = estimate(&spec, &loaded.trace, true);
+    assert_eq!(est.profiled_ops, 0, "fixture names must not join the skeleton");
+    let rj = replay_json(&spec, &est, true, &loaded.report);
+    for key in [
+        "ops",
+        "profiled_ops",
+        "aligned",
+        "iteration_us",
+        "fw_us",
+        "bw_us",
+        "est_peak_mem_bytes",
+        "report",
+    ] {
+        assert!(rj.get(key).is_some(), "replay json missing {key}");
+    }
+    let report = rj.get("report").unwrap();
+    for key in ["files", "events_loaded", "events_skipped", "max_severity", "counts", "details"] {
+        assert!(report.get(key).is_some(), "report json missing {key}");
+    }
+}
