@@ -1,0 +1,109 @@
+//! §Bottleneck-identification table: run the diagnosis engine over
+//! models × ALL_SCHEMES and tabulate where each job's iteration goes —
+//! critical-path compute/communication split, the top-ranked bottleneck,
+//! and the replayed perfect-overlap headroom — all answered with zero
+//! global-DFG builds per query battery. Emits `BENCH_fig_bottleneck.json`
+//! (uploaded by CI, budgeted via `DPRO_BENCH_BUDGET_S` like
+//! `perf_hotpath`).
+
+use std::time::Instant;
+
+use dpro::config::{JobSpec, Transport, ALL_SCHEMES};
+use dpro::diagnosis::Diagnoser;
+use dpro::util::json::Json;
+use dpro::util::print_table;
+
+fn main() {
+    let budget_s: f64 = std::env::var("DPRO_BENCH_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120.0);
+    let t0 = Instant::now();
+
+    let models = ["resnet50", "vgg16", "inception_v3", "bert_base", "gpt_mini"];
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    let mut skipped = 0usize;
+    let total = models.len() * ALL_SCHEMES.len();
+
+    'sweep: for model in models {
+        for scheme in ALL_SCHEMES {
+            if t0.elapsed().as_secs_f64() > budget_s {
+                skipped = total - rows.len();
+                println!(
+                    "\n[budget] {budget_s}s exhausted after {} of {total} jobs; \
+                     {skipped} combinations skipped (raise DPRO_BENCH_BUDGET_S for the full table)",
+                    rows.len()
+                );
+                break 'sweep;
+            }
+            let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+            let mut d = Diagnoser::new(spec);
+            let queries = d.auto_queries();
+            let rep = d.report(&queries, 3);
+            assert_eq!(rep.builds_during_queries, 0, "{model}/{scheme} rebuilt");
+
+            let iter_ms = rep.iteration_us / 1e3;
+            let pct = |x: f64| if rep.iteration_us > 0.0 { x / rep.iteration_us * 100.0 } else { 0.0 };
+            let top = rep
+                .bottlenecks
+                .first()
+                .map(|b| format!("{}:{}", b.kind.name(), b.subject))
+                .unwrap_or_else(|| "-".into());
+            let po = rep
+                .whatif
+                .iter()
+                .find(|a| a.query == "perfect-overlap")
+                .map(|a| a.speedup)
+                .unwrap_or(1.0);
+            rows.push(vec![
+                format!("{model}/{scheme}"),
+                format!("{iter_ms:.1}"),
+                format!("{:.0}%", pct(rep.blame.path.comp_us)),
+                format!("{:.0}%", pct(rep.blame.path.comm_us)),
+                top.clone(),
+                format!("{po:.2}x"),
+                format!("{}", rep.whatif.len()),
+                format!("{}", rep.builds_during_queries),
+            ]);
+            let mut j = Json::obj();
+            j.set("job", Json::Str(format!("{model}/{scheme}")));
+            j.set("iteration_us", Json::Num(rep.iteration_us));
+            j.set("path_comp_us", Json::Num(rep.blame.path.comp_us));
+            j.set("path_comm_us", Json::Num(rep.blame.path.comm_us));
+            j.set("top_bottleneck", Json::Str(top));
+            j.set("perfect_overlap_speedup", Json::Num(po));
+            j.set("queries", Json::Num(rep.whatif.len() as f64));
+            j.set(
+                "builds_during_queries",
+                Json::Num(rep.builds_during_queries as f64),
+            );
+            jrows.push(j);
+        }
+    }
+
+    println!("\n=== bottleneck identification (diagnosis engine) ===\n");
+    print_table(
+        &[
+            "job",
+            "iter (ms)",
+            "path comp",
+            "path comm",
+            "top bottleneck",
+            "overlap bound",
+            "queries",
+            "builds",
+        ],
+        &rows,
+    );
+
+    let mut report = Json::obj();
+    report.set("jobs", Json::Arr(jrows));
+    report.set("skipped", Json::Num(skipped as f64));
+    report.set("budget_s", Json::Num(budget_s));
+    report.set("wall_s", Json::Num(t0.elapsed().as_secs_f64()));
+    match std::fs::write("BENCH_fig_bottleneck.json", report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_fig_bottleneck.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_fig_bottleneck.json: {e}"),
+    }
+}

@@ -4,11 +4,20 @@
 //! dpro profile  --model resnet50 --scheme horovod --transport rdma --dump-dir trace/
 //! dpro replay   --trace-dir trace/ --json
 //! dpro align    --trace-dir trace/ --json
+//! dpro diagnose --trace-dir trace/ --json
 //! dpro optimize --model resnet50 --scheme ps-tree --transport rdma \
 //!               --strategies op-fuse,tensor-fuse,mixed-precision,recompute
 //! dpro train    --config mini --workers 4 --steps 50
 //! dpro report   --model bert_base --scheme ring
 //! ```
+//!
+//! `diagnose` answers *why* an iteration is slow before `optimize` makes
+//! it faster: critical-path blame (compute / communication /
+//! blocked-on-sync, summing exactly to the iteration time), ranked
+//! bottlenecks, and replayed what-if counterfactuals (`--whatif`, see
+//! [`crate::diagnosis::whatif::WHATIF_FORMS`]) — with or without a
+//! measured trace. The `--json` schema is documented in
+//! `docs/DIAGNOSIS.md`.
 //!
 //! `profile --dump-dir` writes a per-process Chrome-trace directory (see
 //! `docs/TRACE_FORMAT.md`) that `replay`/`align` ingest back with
@@ -50,6 +59,7 @@ pub fn run(args: Args) -> i32 {
         Some("profile") => cmd_profile(&args),
         Some("replay") => cmd_replay(&args),
         Some("align") => cmd_align(&args),
+        Some("diagnose") => cmd_diagnose(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("train") => cmd_train(&args),
         Some("report") => cmd_report(&args),
@@ -73,6 +83,9 @@ fn usage() {
          replay   --trace-dir DIR | --trace trace.json [--model M --scheme S --transport T]\n           \
          [--no-align] [--json]\n  \
          align    --trace-dir DIR | --trace trace.json [--json]\n  \
+         diagnose [--model M --scheme S --transport T] [--trace-dir DIR]\n           \
+         [--whatif auto|perfect-overlap,nic-bw=2,nvlink-bw=2,equalize=W,zero-group=G,shrink-op=OP:F]\n           \
+         [--top 5] [--json]\n  \
          optimize --model M --scheme S --transport T [--budget-s 60] [--strawman]\n           \
          [--strategies {}] [--memory-budget-gb G] [--json]\n  \
          train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n           \
@@ -367,6 +380,112 @@ fn cmd_align(args: &Args) -> i32 {
     for (proc, theta) in procs {
         println!("  proc {proc:4}: θ = {theta:+.1} us");
     }
+    0
+}
+
+fn cmd_diagnose(args: &Args) -> i32 {
+    use crate::diagnosis::{parse_whatif, Diagnoser};
+
+    // validate cheap arguments before any heavy work (a multi-GB trace
+    // ingestion must not precede a typo's exit 2): same contract as
+    // replay/optimize — the message lists the valid values
+    let whatif_arg = args.get_or("whatif", "auto");
+    let explicit = match whatif_arg.as_str() {
+        "auto" | "all" => None,
+        list => match parse_whatif(list) {
+            Ok(qs) => Some(qs),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    let top = match args.get("top") {
+        None => 5usize,
+        Some(t) => match t.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("invalid --top {t:?}; expected a positive integer");
+                return 2;
+            }
+        },
+    };
+
+    // a trace is optional for diagnose: without one, the analytic cost
+    // model supplies durations (the pre-deployment what-if workflow)
+    let traced = args.get("trace-dir").is_some() || args.get("trace").is_some();
+    let (trace, report, job) = if traced {
+        match trace_from_args(args) {
+            Ok((t, r, j)) => (Some(t), r, j),
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    } else {
+        (None, TraceReport::default(), None)
+    };
+    let spec = match job_from_args_with(args, job.as_ref()) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let mut d = match &trace {
+        Some(t) => Diagnoser::from_trace(spec, t, report),
+        None => Diagnoser::new(spec),
+    };
+    let queries = explicit.unwrap_or_else(|| d.auto_queries());
+    let rep = d.report(&queries, top);
+    if args.flag("json") {
+        println!("{}", rep.to_json().to_string());
+        return 0;
+    }
+
+    println!(
+        "=== diagnosis: {} / {} / {} / {} workers ===",
+        rep.model, rep.scheme, rep.transport, rep.workers
+    );
+    if !rep.trace.is_clean() {
+        println!("trace: {}", rep.trace);
+    }
+    println!("replayed iteration: {}", fmt_us(rep.iteration_us));
+    let p = &rep.blame.path;
+    let pct = |x: f64| if rep.iteration_us > 0.0 { x / rep.iteration_us * 100.0 } else { 0.0 };
+    println!(
+        "critical path ({} ops): compute {} ({:.1}%), communication {} ({:.1}%), blocked {}",
+        p.ops,
+        fmt_us(p.comp_us),
+        pct(p.comp_us),
+        fmt_us(p.comm_us),
+        pct(p.comm_us),
+        fmt_us(p.blocked_us),
+    );
+    println!("bottlenecks (by estimated headroom):");
+    for (i, b) in rep.bottlenecks.iter().enumerate() {
+        println!(
+            "  {}. [{}] {} — blame {}, headroom {}\n     {}",
+            i + 1,
+            b.kind.name(),
+            b.subject,
+            fmt_us(b.blame_us),
+            fmt_us(b.headroom_us),
+            b.detail
+        );
+    }
+    println!("what-if (replayed counterfactuals):");
+    for a in &rep.whatif {
+        println!(
+            "  {:<28} -> {}  ({:.2}x, {} ops edited)",
+            a.query,
+            fmt_us(a.iteration_us),
+            a.speedup,
+            a.edited_ops
+        );
+    }
+    println!("(global-DFG builds during queries: {})", rep.builds_during_queries);
     0
 }
 

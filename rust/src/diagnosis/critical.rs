@@ -1,0 +1,393 @@
+//! Critical-path analytics over a replayed schedule (paper §1's "identify
+//! the root cause(s) of inefficiency"): extract the execution graph's
+//! critical path, decompose it — and every device's timeline — into
+//! compute / communication / blocked-on-sync time, and attribute
+//! critical-path time to the plan entities the optimizer can actually act
+//! on (comm groups, fusion groups).
+//!
+//! ## The exact-sum contract
+//!
+//! Every decomposition in this module satisfies, **bit-for-bit**,
+//!
+//! ```text
+//! (comp_us + comm_us) + blocked_us == iteration_us
+//! ```
+//!
+//! evaluated left-to-right in `f64`. Busy categories are plain sums of
+//! schedule spans; `blocked_us` is the *residual* — semantically the time
+//! the resource (or the path) spent waiting on synchronization — computed
+//! by [`exact_residual`], which nudges the naive `total − busy` difference
+//! by at most a few ULPs until the identity holds exactly. On the critical
+//! path the engine guarantees no gaps (every instant of `[0, T]` is inside
+//! some path op's span), so the path's `blocked_us` is always within a few
+//! ULPs of zero; per-device rows carry the real idle time. Tests sweep the
+//! contract across `ALL_SCHEMES` × models (`rust/tests/diagnosis.rs`).
+
+use crate::graph::dfg::{DeviceKey, NodeId};
+use crate::graph::MutableGraph;
+use crate::replay::ReplayResult;
+use crate::util::json::Json;
+use crate::util::Us;
+
+/// Critical-path blame: where the iteration's end-to-end time was spent.
+#[derive(Clone, Copy, Debug)]
+pub struct PathBlame {
+    /// Path time inside computation ops (FW/BW/UPD), us.
+    pub comp_us: Us,
+    /// Path time inside fine-grained communication ops
+    /// (SEND/RECV/NEG/AGG), us.
+    pub comm_us: Us,
+    /// Residual so the exact-sum contract holds (see module docs); within
+    /// a few ULPs of zero because the replayed critical path has no gaps.
+    pub blocked_us: Us,
+    /// Number of ops on the critical path.
+    pub ops: usize,
+}
+
+/// One execution resource's timeline over `[0, iteration_us]`.
+#[derive(Clone, Debug)]
+pub struct DeviceBlame {
+    /// Short resource label (`gpu3`, `tx1`, `rx1`, `ps0`, `nvlink1`,
+    /// `coord`).
+    pub device: String,
+    /// Resource class (`gpu`, `nic-tx`, `nic-rx`, `ps-cpu`, `nvlink`,
+    /// `coordinator`).
+    pub class: &'static str,
+    /// Busy time inside computation ops, us.
+    pub comp_us: Us,
+    /// Busy time inside communication ops, us.
+    pub comm_us: Us,
+    /// Idle / blocked-on-sync time (exact residual against the iteration
+    /// time; can be a few ULPs negative from float rounding of the busy
+    /// sums — the exact-sum contract is the invariant, not the sign).
+    pub blocked_us: Us,
+}
+
+/// The full blame report of one replayed iteration.
+#[derive(Clone, Debug)]
+pub struct BlameReport {
+    /// Replayed iteration time (us) every row decomposes.
+    pub iteration_us: Us,
+    /// Critical-path decomposition.
+    pub path: PathBlame,
+    /// Per-device timeline decompositions, sorted by (class, device).
+    pub devices: Vec<DeviceBlame>,
+}
+
+impl BlameReport {
+    /// Verify the exact-sum contract on the path and on every device row.
+    /// Returns the first violated row's description, if any (the property
+    /// tests call this; production code may `debug_assert!` it).
+    pub fn check(&self) -> Result<(), String> {
+        let t = self.iteration_us;
+        let p = &self.path;
+        if (p.comp_us + p.comm_us) + p.blocked_us != t {
+            return Err(format!(
+                "path blame {} + {} + {} != {t}",
+                p.comp_us, p.comm_us, p.blocked_us
+            ));
+        }
+        for d in &self.devices {
+            if (d.comp_us + d.comm_us) + d.blocked_us != t {
+                return Err(format!(
+                    "device {} blame {} + {} + {} != {t}",
+                    d.device, d.comp_us, d.comm_us, d.blocked_us
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Schema-stable JSON (`iteration_us`, `path{comp_us, comm_us,
+    /// blocked_us, ops}`, `devices[{device, class, comp_us, comm_us,
+    /// blocked_us}]`) — part of `dpro diagnose --json` (see
+    /// `docs/DIAGNOSIS.md`).
+    pub fn to_json(&self) -> Json {
+        let mut p = Json::obj();
+        p.set("comp_us", Json::Num(self.path.comp_us));
+        p.set("comm_us", Json::Num(self.path.comm_us));
+        p.set("blocked_us", Json::Num(self.path.blocked_us));
+        p.set("ops", Json::Num(self.path.ops as f64));
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| {
+                let mut o = Json::obj();
+                o.set("device", Json::Str(d.device.clone()));
+                o.set("class", Json::Str(d.class.to_string()));
+                o.set("comp_us", Json::Num(d.comp_us));
+                o.set("comm_us", Json::Num(d.comm_us));
+                o.set("blocked_us", Json::Num(d.blocked_us));
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("iteration_us", Json::Num(self.iteration_us));
+        j.set("path", p);
+        j.set("devices", Json::Arr(devices));
+        j
+    }
+}
+
+/// Resource class of a device key (report labels; `Null` never appears in
+/// blame rows).
+pub fn device_class(d: DeviceKey) -> &'static str {
+    match d {
+        DeviceKey::Gpu(_) => "gpu",
+        DeviceKey::LinkTx(_) => "nic-tx",
+        DeviceKey::LinkRx(_) => "nic-rx",
+        DeviceKey::PsCpu(_) => "ps-cpu",
+        DeviceKey::NvLink(_) => "nvlink",
+        DeviceKey::Coordinator => "coordinator",
+        DeviceKey::Null => "null",
+    }
+}
+
+/// Short label of a device key (`gpu3`, `tx1`, ...).
+pub fn device_label(d: DeviceKey) -> String {
+    match d {
+        DeviceKey::Gpu(w) => format!("gpu{w}"),
+        DeviceKey::LinkTx(n) => format!("tx{n}"),
+        DeviceKey::LinkRx(n) => format!("rx{n}"),
+        DeviceKey::PsCpu(s) => format!("ps{s}"),
+        DeviceKey::NvLink(m) => format!("nvlink{m}"),
+        DeviceKey::Coordinator => "coord".to_string(),
+        DeviceKey::Null => "null".to_string(),
+    }
+}
+
+/// Find the `f64` residual `x` such that `busy + x == total` **exactly**
+/// under one left-to-right `f64` addition. Starts from the naive
+/// difference and steps by single ULPs; since `busy ≥ 0` implies
+/// `ulp(x) ≤ ulp(busy + x)`, each step moves the rounded sum by at most
+/// one representable value, so the walk cannot skip `total`. The initial
+/// error is a few ULPs at most, so the loop terminates almost
+/// immediately; non-finite inputs (impossible for replay schedules) fall
+/// back to the naive difference.
+pub fn exact_residual(total: f64, busy: f64) -> f64 {
+    let mut x = total - busy;
+    if !total.is_finite() || !busy.is_finite() || !x.is_finite() {
+        return x;
+    }
+    for _ in 0..256 {
+        let s = busy + x;
+        if s == total {
+            return x;
+        }
+        x = step_ulp(x, s < total);
+    }
+    // unreachable in practice (see the doc comment); keep the closest
+    // candidate rather than aborting a diagnosis
+    x
+}
+
+/// One ULP toward +∞ (`up`) or −∞ (`!up`), without the still-recent
+/// `f64::next_up` API.
+fn step_ulp(x: f64, up: bool) -> f64 {
+    if x == 0.0 {
+        let tiny = f64::from_bits(1); // smallest positive subnormal
+        return if up { tiny } else { -tiny };
+    }
+    let bits = x.to_bits();
+    // for positive x, +1 in bit space moves away from zero (toward +inf);
+    // for negative x it moves toward -inf, i.e. also away from zero
+    let away = (x > 0.0) == up;
+    f64::from_bits(if away { bits + 1 } else { bits - 1 })
+}
+
+/// Decompose the replayed schedule: critical-path blame plus every
+/// device's timeline. `r` must be the replay of `mg`'s current state (the
+/// [`crate::diagnosis::Diagnoser`] guarantees this pairing).
+pub fn blame(mg: &MutableGraph, r: &ReplayResult) -> BlameReport {
+    let dfg = mg.dfg();
+    let alive = mg.alive();
+    let t = r.iteration_time;
+
+    // ---- critical path ----
+    let path = r.critical_path();
+    let mut p_comp = 0.0f64;
+    let mut p_comm = 0.0f64;
+    for &n in &path {
+        let i = n as usize;
+        let seg = r.end[i] - r.start[i];
+        let kind = dfg.node(n).kind;
+        if kind.is_comp() {
+            p_comp += seg;
+        } else if kind.is_comm() {
+            p_comm += seg;
+        }
+        // virtual In/Out ops have zero duration and contribute nothing
+    }
+    let p_blocked = exact_residual(t, p_comp + p_comm);
+
+    // ---- per-device timelines ----
+    let mut per_dev: std::collections::HashMap<DeviceKey, (f64, f64)> =
+        std::collections::HashMap::new();
+    for i in dfg.ids() {
+        if !alive[i as usize] {
+            continue;
+        }
+        let node = dfg.node(i);
+        if node.device == DeviceKey::Null {
+            continue;
+        }
+        let seg = r.end[i as usize] - r.start[i as usize];
+        let ent = per_dev.entry(node.device).or_insert((0.0, 0.0));
+        if node.kind.is_comp() {
+            ent.0 += seg;
+        } else {
+            ent.1 += seg;
+        }
+    }
+    let mut keys: Vec<DeviceKey> = per_dev.keys().copied().collect();
+    keys.sort();
+    let devices: Vec<DeviceBlame> = keys
+        .into_iter()
+        .map(|k| {
+            let (comp, comm) = per_dev[&k];
+            DeviceBlame {
+                device: device_label(k),
+                class: device_class(k),
+                comp_us: comp,
+                comm_us: comm,
+                blocked_us: exact_residual(t, comp + comm),
+            }
+        })
+        .collect();
+
+    BlameReport {
+        iteration_us: t,
+        path: PathBlame {
+            comp_us: p_comp,
+            comm_us: p_comm,
+            blocked_us: p_blocked,
+            ops: path.len(),
+        },
+        devices,
+    }
+}
+
+/// Critical-path time attributed to the plan entities the optimizer acts
+/// on — the ranking [`crate::optimizer::strategy::SearchCtx`] exposes so
+/// strategies visit high-blame candidates first.
+#[derive(Clone, Debug, Default)]
+pub struct GroupBlame {
+    /// Path time of each comm group's synchronization ops (indexed by the
+    /// *current* plan index), us.
+    pub comm_us: Vec<Us>,
+    /// Path time of each fusion group's computation ops (indexed by the
+    /// current fusion-group index), us.
+    pub comp_us: Vec<Us>,
+}
+
+impl GroupBlame {
+    /// Comm-group index with the largest path blame, if any is nonzero.
+    pub fn hottest_comm_group(&self) -> Option<usize> {
+        argmax_positive(&self.comm_us)
+    }
+
+    /// Fusion-group index with the largest path blame, if any is nonzero.
+    pub fn hottest_fusion_group(&self) -> Option<usize> {
+        argmax_positive(&self.comp_us)
+    }
+}
+
+fn argmax_positive(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > 0.0 && best.map_or(true, |(_, b)| x > b) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Attribute critical-path time per comm group and per fusion group.
+/// Comp ops blame through their `template_id` (fusion-group index); comm
+/// and virtual ops through their `TensorMeta::tensor_id`, which
+/// [`MutableGraph`] keeps equal to the current comm-group index.
+pub fn group_blame(mg: &MutableGraph, r: &ReplayResult) -> GroupBlame {
+    let dfg = mg.dfg();
+    let spec = mg.spec();
+    let mut gb = GroupBlame {
+        comm_us: vec![0.0; spec.plan.groups.len()],
+        comp_us: vec![0.0; spec.fusion.groups.len()],
+    };
+    let mut cur = Some(r.last);
+    while let Some(n) = cur {
+        let i = n as usize;
+        let seg = r.end[i] - r.start[i];
+        let node = dfg.node(n as NodeId);
+        if node.kind.is_comp() {
+            if let Some(fg) = node.template_id {
+                if let Some(slot) = gb.comp_us.get_mut(fg as usize) {
+                    *slot += seg;
+                }
+            }
+        } else if let Some(tm) = node.tensor {
+            if let Some(slot) = gb.comm_us.get_mut(tm.tensor_id as usize) {
+                *slot += seg;
+            }
+        }
+        cur = r.crit_pred[i];
+    }
+    gb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+    use crate::replay::incremental::IncrementalReplayer;
+
+    fn diag(model: &str, scheme: &str) -> (MutableGraph, IncrementalReplayer) {
+        let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+        let mut mg = MutableGraph::new(spec);
+        let mut eng = IncrementalReplayer::new();
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        (mg, eng)
+    }
+
+    #[test]
+    fn exact_residual_closes_the_sum() {
+        for (total, busy) in [
+            (1.0e6, 0.3e6),
+            (123456.789, 123000.0001),
+            (7.0, 0.0),
+            (1.0, 1.0000000000000002),
+            (0.1 + 0.2, 0.3),
+        ] {
+            let x = exact_residual(total, busy);
+            assert_eq!(busy + x, total, "total={total} busy={busy} x={x}");
+        }
+    }
+
+    #[test]
+    fn blame_sums_bit_exactly() {
+        let (mg, eng) = diag("vgg16", "horovod");
+        let b = blame(&mg, eng.result());
+        assert!(b.iteration_us > 0.0);
+        assert_eq!(b.check(), Ok(()));
+        // the replayed critical path has no gaps: blocked is ~0
+        assert!(
+            b.path.blocked_us.abs() < 1.0,
+            "path blocked {} us",
+            b.path.blocked_us
+        );
+        // blame found both busy categories
+        assert!(b.path.comp_us > 0.0 && b.path.comm_us > 0.0);
+        assert!(b.devices.iter().any(|d| d.class == "gpu"));
+    }
+
+    #[test]
+    fn group_blame_covers_hot_groups() {
+        let (mg, eng) = diag("resnet50", "byteps");
+        let gb = group_blame(&mg, eng.result());
+        assert_eq!(gb.comm_us.len(), mg.spec().plan.groups.len());
+        assert_eq!(gb.comp_us.len(), mg.spec().fusion.groups.len());
+        assert!(gb.hottest_fusion_group().is_some());
+        // a comm-heavy PS job must put some comm groups on the path
+        assert!(gb.comm_us.iter().sum::<f64>() > 0.0);
+    }
+}

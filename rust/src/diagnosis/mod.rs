@@ -1,0 +1,350 @@
+//! The diagnosis engine (paper §1: *"identify the root cause(s) of
+//! inefficiency"* before optimizing): critical-path blame attribution,
+//! bottleneck ranking, and transactional what-if queries — the subsystem
+//! behind `dpro diagnose`.
+//!
+//! Three layers, each usable on its own:
+//!
+//! - [`critical`] — decompose the replayed schedule: the critical path and
+//!   every device timeline split into compute / communication /
+//!   blocked-on-sync, under a **bit-exact sum contract** (each row's
+//!   categories sum to the replayed iteration time exactly), plus
+//!   per-comm-group / per-fusion-group path blame ([`GroupBlame`] — also
+//!   what the optimizer's [`crate::optimizer::strategy::SearchCtx`]
+//!   exposes so strategies visit high-blame candidates first).
+//! - [`rank`](mod@rank) — turn blame into an ordered list of actionable
+//!   [`Bottleneck`]s (slowest rank, straggler machines via trace
+//!   drift/stretch, dominating comm stage classes, hot groups), scored by
+//!   estimated headroom.
+//! - [`whatif`] — replayed counterfactuals (scale NIC/NVLink bandwidth,
+//!   equalize a straggler, zero a comm chain, shrink a kernel), each a
+//!   `begin → edit durations → incremental replay → rollback` transaction
+//!   on the long-lived [`MutableGraph`]: zero `build_global*` calls, and
+//!   the graph + engine restored bit-exactly after any query sequence.
+//!
+//! [`Diagnoser`] ties the layers together over one long-lived graph +
+//! incremental engine, built either from a job spec (analytic durations)
+//! or from a measured/dumped trace ([`Diagnoser::from_trace`] — tolerant:
+//! a degraded trace yields a diagnosis with [`TraceReport`] warnings,
+//! never a panic). [`DiagnosisReport::to_json`] is the schema-stable
+//! surface `dpro diagnose --json` prints; see `docs/DIAGNOSIS.md`.
+
+pub mod critical;
+pub mod rank;
+pub mod whatif;
+
+pub use critical::{blame, group_blame, BlameReport, DeviceBlame, GroupBlame, PathBlame};
+pub use rank::{rank, Bottleneck, BottleneckKind, TraceFacts};
+pub use whatif::{parse_whatif, WhatIfAnswer, WhatIfQuery, WHATIF_FORMS};
+
+use crate::config::JobSpec;
+use crate::graph::{build_count, build_global, AnalyticCost, MutableGraph};
+use crate::replay::incremental::IncrementalReplayer;
+use crate::replay::ReplayResult;
+use crate::trace::validate::{DiagKind, Severity, TraceReport};
+use crate::trace::GTrace;
+use crate::util::json::Json;
+use crate::util::Us;
+
+/// One diagnosis session: a long-lived [`MutableGraph`] + incremental
+/// engine over one job, with the baseline schedule cached. All analytics
+/// read the baseline; what-if queries borrow the graph transactionally
+/// and restore it, so a `Diagnoser` can answer any number of queries
+/// without ever rebuilding (tracked by [`Diagnoser::builds_during_queries`]).
+pub struct Diagnoser {
+    mg: MutableGraph,
+    eng: IncrementalReplayer,
+    baseline: ReplayResult,
+    report: TraceReport,
+    facts: Option<TraceFacts>,
+    builds_at_ready: usize,
+    queries_run: usize,
+}
+
+impl Diagnoser {
+    /// Diagnose a job spec with analytic (cost-model) durations — the
+    /// no-trace path, one graph construction total.
+    pub fn new(spec: JobSpec) -> Diagnoser {
+        Diagnoser::assemble(MutableGraph::new(spec), TraceReport::default(), None)
+    }
+
+    /// Diagnose a measured trace: solve clock alignment, build the job's
+    /// *named* skeleton, join the corrected per-op profile onto it, and
+    /// replay. `report` should be the ingestion report (from
+    /// [`crate::trace::io::load_dir`], or a fresh default plus
+    /// [`crate::trace::validate::validate`] for in-memory traces); ops
+    /// the trace does not cover keep analytic durations and are flagged
+    /// as a `missing_profile` warning — a degraded trace degrades the
+    /// diagnosis, it never panics it.
+    pub fn from_trace(spec: JobSpec, trace: &GTrace, mut report: TraceReport) -> Diagnoser {
+        let alignment = crate::alignment::align(trace, 1.0, 1.0);
+        let db = crate::profiler::corrected_profile(trace, &alignment);
+        let mut g = build_global(&spec, &AnalyticCost::new(&spec));
+        let profiled = db.apply(&mut g);
+        let non_virtual = g.dfg.nodes.iter().filter(|n| !n.kind.is_virtual()).count();
+        if profiled < non_virtual {
+            report.push(
+                Severity::Warning,
+                DiagKind::MissingProfile,
+                format!(
+                    "{} of {} graph ops have no measured duration (dropped events or a \
+                     partial dump); analytic estimates fill the gaps, so blame on those \
+                     ops is model-derived",
+                    non_virtual - profiled,
+                    non_virtual
+                ),
+            );
+        }
+        // reuse the alignment solved for the corrected profile above —
+        // the §4.2 solve is the expensive ingestion step
+        let facts = TraceFacts::from_trace_aligned(trace, &alignment);
+        Diagnoser::assemble(MutableGraph::from_built(spec, g), report, Some(facts))
+    }
+
+    fn assemble(
+        mut mg: MutableGraph,
+        report: TraceReport,
+        facts: Option<TraceFacts>,
+    ) -> Diagnoser {
+        let mut eng = IncrementalReplayer::new();
+        let log = mg.commit();
+        let baseline = eng.replay_incremental(&mg, &log).clone();
+        Diagnoser {
+            builds_at_ready: build_count(),
+            mg,
+            eng,
+            baseline,
+            report,
+            facts,
+            queries_run: 0,
+        }
+    }
+
+    /// The diagnosed job's spec.
+    pub fn spec(&self) -> &JobSpec {
+        self.mg.spec()
+    }
+
+    /// The long-lived graph (restored bit-exactly between queries).
+    pub fn mg(&self) -> &MutableGraph {
+        &self.mg
+    }
+
+    /// The incremental engine (its cached schedule equals the baseline
+    /// between queries).
+    pub fn engine(&self) -> &IncrementalReplayer {
+        &self.eng
+    }
+
+    /// The baseline replayed schedule all analytics decompose.
+    pub fn baseline(&self) -> &ReplayResult {
+        &self.baseline
+    }
+
+    /// Baseline replayed iteration time (us).
+    pub fn baseline_us(&self) -> Us {
+        self.baseline.iteration_time
+    }
+
+    /// Ingestion/diagnosis warnings accumulated so far.
+    pub fn trace_report(&self) -> &TraceReport {
+        &self.report
+    }
+
+    /// Global-DFG constructions since this diagnoser became ready — the
+    /// what-if machinery keeps it at 0 (transaction-counter test).
+    pub fn builds_during_queries(&self) -> usize {
+        build_count() - self.builds_at_ready
+    }
+
+    /// What-if queries answered so far.
+    pub fn queries_run(&self) -> usize {
+        self.queries_run
+    }
+
+    /// Blame decomposition of the baseline schedule (see
+    /// [`critical::blame`]).
+    pub fn blame(&self) -> BlameReport {
+        critical::blame(&self.mg, &self.baseline)
+    }
+
+    /// Per-group critical-path blame of the baseline schedule.
+    pub fn group_blame(&self) -> GroupBlame {
+        critical::group_blame(&self.mg, &self.baseline)
+    }
+
+    /// Ranked bottlenecks of the baseline (trace facts included when this
+    /// diagnoser was built from a trace).
+    pub fn rank(&self) -> Vec<Bottleneck> {
+        let b = self.blame();
+        let gb = self.group_blame();
+        rank::rank(&self.mg, &self.baseline, &b, &gb, self.facts.as_ref())
+    }
+
+    /// Answer one counterfactual (transactional — the graph and engine
+    /// are restored before this returns).
+    pub fn what_if(&mut self, q: &WhatIfQuery) -> WhatIfAnswer {
+        self.queries_run += 1;
+        whatif::run_query(&mut self.mg, &mut self.eng, self.baseline.iteration_time, q)
+    }
+
+    /// The standard query battery, seeded by the ranking: the
+    /// perfect-overlap bound, 2× NIC and NVLink bandwidth, the slowest
+    /// rank equalized, the hottest comm chain zeroed, and the hottest
+    /// kernel halved — at least four distinct query kinds on any job.
+    pub fn auto_queries(&self) -> Vec<WhatIfQuery> {
+        let mut qs = vec![
+            WhatIfQuery::PerfectOverlap,
+            WhatIfQuery::ScaleNic(2.0),
+            WhatIfQuery::ScaleNvlink(2.0),
+        ];
+        // slowest rank from replayed GPU busy time
+        let dfg = self.mg.dfg();
+        let alive = self.mg.alive();
+        let mut busy = vec![0.0f64; self.mg.n_workers()];
+        for i in dfg.ids() {
+            if !alive[i as usize] {
+                continue;
+            }
+            if let crate::graph::DeviceKey::Gpu(w) = dfg.node(i).device {
+                if (w as usize) < busy.len() {
+                    busy[w as usize] +=
+                        self.baseline.end[i as usize] - self.baseline.start[i as usize];
+                }
+            }
+        }
+        if let Some((w, _)) =
+            busy.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1))
+        {
+            qs.push(WhatIfQuery::EqualizeWorker(w as u16));
+        }
+        let gb = self.group_blame();
+        if let Some(gi) = gb.hottest_comm_group() {
+            qs.push(WhatIfQuery::ZeroGroup(gi));
+        }
+        if let Some(fg) = gb.hottest_fusion_group() {
+            qs.push(WhatIfQuery::ShrinkOp(fg as u32, 0.5));
+        }
+        qs
+    }
+
+    /// Run the full diagnosis: blame, ranked bottlenecks (truncated to
+    /// `top`), and the given what-if battery. One bundle, ready for
+    /// [`DiagnosisReport::to_json`].
+    pub fn report(&mut self, queries: &[WhatIfQuery], top: usize) -> DiagnosisReport {
+        let blame = self.blame();
+        let mut bottlenecks = self.rank();
+        bottlenecks.truncate(top);
+        let whatif: Vec<WhatIfAnswer> = queries.iter().map(|q| self.what_if(q)).collect();
+        let spec = self.mg.spec();
+        DiagnosisReport {
+            model: spec.model.name.clone(),
+            scheme: spec.scheme.cli_name().to_string(),
+            transport: spec.cluster.network.transport.name().to_lowercase(),
+            workers: spec.cluster.n_workers,
+            iteration_us: blame.iteration_us,
+            blame,
+            bottlenecks,
+            whatif,
+            builds_during_queries: self.builds_during_queries(),
+            trace: self.report.clone(),
+        }
+    }
+}
+
+/// The full diagnosis of one job — the stable payload behind
+/// `dpro diagnose --json` (schema in `docs/DIAGNOSIS.md`).
+#[derive(Clone, Debug)]
+pub struct DiagnosisReport {
+    /// Model template name.
+    pub model: String,
+    /// Canonical scheme name (a [`crate::config::ALL_SCHEMES`] entry).
+    pub scheme: String,
+    /// Transport name, lower-case.
+    pub transport: String,
+    /// Worker count.
+    pub workers: usize,
+    /// Baseline replayed iteration time (us).
+    pub iteration_us: Us,
+    /// Blame decomposition (path + devices, exact-sum contract).
+    pub blame: BlameReport,
+    /// Ranked bottlenecks (top-N by estimated headroom).
+    pub bottlenecks: Vec<Bottleneck>,
+    /// Replayed counterfactual answers.
+    pub whatif: Vec<WhatIfAnswer>,
+    /// Global-DFG constructions the queries performed (always 0).
+    pub builds_during_queries: usize,
+    /// Ingestion/diagnosis warnings (`TraceReport` schema; empty counters
+    /// for the no-trace path).
+    pub trace: TraceReport,
+}
+
+impl DiagnosisReport {
+    /// Schema-stable JSON: `model`, `scheme`, `transport`, `workers`,
+    /// `iteration_us`, `blame{...}`, `bottlenecks[...]`, `whatif[...]`,
+    /// `builds_during_queries`, `report{...}` (the
+    /// [`TraceReport::to_json`] schema). Keys are asserted by the CI
+    /// smoke step; see `docs/DIAGNOSIS.md`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", Json::Str(self.model.clone()));
+        j.set("scheme", Json::Str(self.scheme.clone()));
+        j.set("transport", Json::Str(self.transport.clone()));
+        j.set("workers", Json::Num(self.workers as f64));
+        j.set("iteration_us", Json::Num(self.iteration_us));
+        j.set("blame", self.blame.to_json());
+        j.set(
+            "bottlenecks",
+            Json::Arr(self.bottlenecks.iter().map(Bottleneck::to_json).collect()),
+        );
+        j.set(
+            "whatif",
+            Json::Arr(self.whatif.iter().map(WhatIfAnswer::to_json).collect()),
+        );
+        j.set(
+            "builds_during_queries",
+            Json::Num(self.builds_during_queries as f64),
+        );
+        j.set("report", self.trace.to_json());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transport;
+
+    #[test]
+    fn diagnoser_answers_auto_battery_without_builds() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let mut d = Diagnoser::new(spec);
+        let qs = d.auto_queries();
+        // at least 4 distinct query kinds
+        let kinds: std::collections::HashSet<std::mem::Discriminant<WhatIfQuery>> =
+            qs.iter().map(std::mem::discriminant).collect();
+        assert!(kinds.len() >= 4, "only {} query kinds", kinds.len());
+        let rep = d.report(&qs, 5);
+        assert_eq!(rep.builds_during_queries, 0);
+        assert_eq!(rep.whatif.len(), qs.len());
+        assert!(rep.iteration_us > 0.0);
+        assert!(!rep.bottlenecks.is_empty());
+        // JSON surface parses back with the documented keys
+        let parsed = crate::util::json::parse(&rep.to_json().to_string()).unwrap();
+        for key in [
+            "model",
+            "scheme",
+            "transport",
+            "workers",
+            "iteration_us",
+            "blame",
+            "bottlenecks",
+            "whatif",
+            "builds_during_queries",
+            "report",
+        ] {
+            assert!(parsed.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(parsed.f64("builds_during_queries"), 0.0);
+    }
+}

@@ -1,0 +1,504 @@
+//! Bottleneck ranking: turn the blame decomposition into an ordered list
+//! of *actionable* findings — the slowest rank, straggler machines (via
+//! trace drift/stretch, the same axes `trace/degrade.rs` injects), the
+//! comm stage class dominating the critical path (keyed off the lowered
+//! comm-plan's stage metadata through [`crate::graph::plan_props`]), and
+//! the hottest comm/fusion groups — each scored by **estimated headroom**:
+//! an upper bound on the iteration-time reduction fixing it could buy.
+//! The corresponding what-if query ([`crate::diagnosis::whatif`]) turns
+//! any estimate into a replayed answer.
+
+use std::collections::HashMap;
+
+use crate::graph::dfg::{DeviceKey, OpKind};
+use crate::graph::{plan_props, MutableGraph};
+use crate::replay::ReplayResult;
+use crate::trace::GTrace;
+use crate::util::json::Json;
+use crate::util::Us;
+
+use super::critical::{device_class, BlameReport, GroupBlame};
+
+/// The finding classes the ranker emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BottleneckKind {
+    /// The worker GPU with the most busy time — the rank the iteration
+    /// waits for.
+    SlowestRank,
+    /// A machine whose GPUs are systematically slower than the fleet
+    /// median (replayed busy time, or measured duration stretch when a
+    /// trace is available).
+    StragglerMachine,
+    /// One iteration of the measured trace ran stretched (preemption, GC
+    /// pause) — a profiling artifact inflating the averages.
+    StragglerIteration,
+    /// A machine's clock offset is large — a measurement artifact the
+    /// alignment stage corrects, not a job slowdown.
+    ClockDrift,
+    /// A communication stage class (NIC, NVLink, PS CPU, coordinator)
+    /// dominating the critical path.
+    CommStage,
+    /// A comm group whose synchronization sits on the critical path.
+    HotCommGroup,
+    /// A fusion group (kernel) dominating critical-path compute.
+    HotOpGroup,
+}
+
+impl BottleneckKind {
+    /// Stable kebab-case key used in JSON reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            BottleneckKind::SlowestRank => "slowest-rank",
+            BottleneckKind::StragglerMachine => "straggler-machine",
+            BottleneckKind::StragglerIteration => "straggler-iteration",
+            BottleneckKind::ClockDrift => "clock-drift",
+            BottleneckKind::CommStage => "comm-stage",
+            BottleneckKind::HotCommGroup => "hot-comm-group",
+            BottleneckKind::HotOpGroup => "hot-op-group",
+        }
+    }
+}
+
+/// One ranked finding.
+#[derive(Clone, Debug)]
+pub struct Bottleneck {
+    /// Finding class.
+    pub kind: BottleneckKind,
+    /// What is to blame (`w3`, `machine1`, `nic-tx`, `g17`, an op name).
+    pub subject: String,
+    /// Time attributed to the subject (critical-path share or busy-time
+    /// excess), us.
+    pub blame_us: Us,
+    /// Estimated upper bound on the iteration-time reduction fixing the
+    /// subject could buy, us (0 for pure measurement artifacts).
+    pub headroom_us: Us,
+    /// Human-readable context.
+    pub detail: String,
+}
+
+impl Bottleneck {
+    /// Schema-stable JSON row (`kind`, `subject`, `blame_us`,
+    /// `headroom_us`, `detail`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", Json::Str(self.kind.name().to_string()));
+        o.set("subject", Json::Str(self.subject.clone()));
+        o.set("blame_us", Json::Num(self.blame_us));
+        o.set("headroom_us", Json::Num(self.headroom_us));
+        o.set("detail", Json::Str(self.detail.clone()));
+        o
+    }
+}
+
+/// Straggler/drift evidence extracted from a measured trace — the
+/// detection side of the axes [`crate::trace::degrade`] injects
+/// (per-machine drift, straggler-iteration stretch).
+#[derive(Clone, Debug, Default)]
+pub struct TraceFacts {
+    /// Per machine: mean solved clock offset θ (us), sorted by machine id.
+    pub machine_drift_us: Vec<(u16, f64)>,
+    /// Per machine: mean measured FW/BW duration relative to the fleet
+    /// median machine (1.0 = typical), sorted by machine id.
+    pub machine_stretch: Vec<(u16, f64)>,
+    /// Per iteration: mean measured FW/BW duration relative to the median
+    /// iteration (1.0 = typical), sorted by iteration.
+    pub iter_stretch: Vec<(u32, f64)>,
+}
+
+impl TraceFacts {
+    /// Extract drift and stretch facts from a measured trace. Runs the
+    /// §4.2 alignment solve for the per-machine offsets; stretch uses
+    /// duration ratios, which are drift-immune. Empty or degenerate
+    /// traces yield empty facts (never a panic).
+    pub fn from_trace(trace: &GTrace) -> TraceFacts {
+        if trace.events.is_empty() {
+            return TraceFacts::default();
+        }
+        TraceFacts::from_trace_aligned(trace, &crate::alignment::align(trace, 1.0, 1.0))
+    }
+
+    /// Like [`TraceFacts::from_trace`], but reusing an already-solved
+    /// alignment — callers that ran the §4.2 solve for the corrected
+    /// profile (e.g. [`crate::diagnosis::Diagnoser::from_trace`]) must
+    /// not pay for it twice.
+    pub fn from_trace_aligned(
+        trace: &GTrace,
+        a: &crate::alignment::Alignment,
+    ) -> TraceFacts {
+        if trace.events.is_empty() {
+            return TraceFacts::default();
+        }
+        // proc → machine (same machine ⇒ same clock)
+        let mut machine_of: HashMap<u16, u16> = HashMap::new();
+        for e in &trace.events {
+            machine_of.entry(e.proc).or_insert(e.machine);
+        }
+
+        // ---- drift: mean alignment offset per machine ----
+        let mut drift: HashMap<u16, (f64, usize)> = HashMap::new();
+        for (proc, theta) in &a.theta {
+            let m = machine_of.get(proc).copied().unwrap_or(0);
+            let ent = drift.entry(m).or_insert((0.0, 0));
+            ent.0 += *theta;
+            ent.1 += 1;
+        }
+        let mut machine_drift_us: Vec<(u16, f64)> = drift
+            .into_iter()
+            .map(|(m, (sum, n))| (m, sum / n.max(1) as f64))
+            .collect();
+        machine_drift_us.sort_by_key(|&(m, _)| m);
+
+        // ---- stretch: mean comp duration per machine / per iteration ----
+        let mut by_machine: HashMap<u16, (f64, usize)> = HashMap::new();
+        let mut by_iter: HashMap<u32, (f64, usize)> = HashMap::new();
+        for e in &trace.events {
+            if !matches!(e.kind, OpKind::Forward | OpKind::Backward) || !e.dur.is_finite() {
+                continue;
+            }
+            let bm = by_machine.entry(e.machine).or_insert((0.0, 0));
+            bm.0 += e.dur;
+            bm.1 += 1;
+            let bi = by_iter.entry(e.iter).or_insert((0.0, 0));
+            bi.0 += e.dur;
+            bi.1 += 1;
+        }
+        let machine_stretch = relative_means(by_machine);
+        let iter_stretch = relative_means(by_iter);
+        TraceFacts { machine_drift_us, machine_stretch, iter_stretch }
+    }
+}
+
+/// Means per key, normalized by the median mean; sorted by key.
+fn relative_means<K: Copy + Ord + std::hash::Hash>(
+    sums: HashMap<K, (f64, usize)>,
+) -> Vec<(K, f64)> {
+    let mut means: Vec<(K, f64)> = sums
+        .into_iter()
+        .filter(|(_, (_, n))| *n > 0)
+        .map(|(k, (s, n))| (k, s / n as f64))
+        .collect();
+    if means.is_empty() {
+        return means;
+    }
+    let mut vals: Vec<f64> = means.iter().map(|&(_, v)| v).collect();
+    vals.sort_by(f64::total_cmp);
+    // lower median, so a 2-machine trace normalizes by the healthy
+    // machine and the straggler's stretch stays > 1
+    let med = vals[(vals.len() - 1) / 2];
+    if med > 0.0 {
+        for (_, v) in &mut means {
+            *v /= med;
+        }
+    }
+    means.sort_by_key(|&(k, _)| k);
+    means
+}
+
+/// A machine must exceed the fleet median by this factor before it is
+/// called a straggler (below it, noise).
+const STRAGGLER_MACHINE_FACTOR: f64 = 1.10;
+/// An iteration must exceed the median by this factor to be flagged.
+const STRAGGLER_ITER_FACTOR: f64 = 1.30;
+/// Clock offsets below this are unremarkable NTP jitter (us).
+const DRIFT_FLAG_US: f64 = 500.0;
+/// How many hot comm/fusion groups to surface.
+const TOP_GROUPS: usize = 3;
+
+/// Rank the bottlenecks of one replayed (and optionally traced) job, by
+/// estimated headroom, descending. `blame`/`gb` must come from the same
+/// replay `r` of `mg` (the [`crate::diagnosis::Diagnoser`] guarantees
+/// the pairing).
+pub fn rank(
+    mg: &MutableGraph,
+    r: &ReplayResult,
+    blame: &BlameReport,
+    gb: &GroupBlame,
+    facts: Option<&TraceFacts>,
+) -> Vec<Bottleneck> {
+    let spec = mg.spec();
+    let dfg = mg.dfg();
+    let alive = mg.alive();
+    let mut out = Vec::new();
+
+    // ---- per-worker GPU busy time → slowest rank + straggler machines ----
+    let n_workers = mg.n_workers();
+    let mut worker_busy = vec![0.0f64; n_workers];
+    for i in dfg.ids() {
+        if !alive[i as usize] {
+            continue;
+        }
+        if let DeviceKey::Gpu(w) = dfg.node(i).device {
+            if (w as usize) < n_workers {
+                worker_busy[w as usize] += r.end[i as usize] - r.start[i as usize];
+            }
+        }
+    }
+    if n_workers > 0 {
+        let mut sorted = worker_busy.clone();
+        sorted.sort_by(f64::total_cmp);
+        // lower median: the upper one equals the maximum on 2-element
+        // fleets, which would make `busy > median` never fire there
+        let median = sorted[(n_workers - 1) / 2];
+        let (slowest, &busy) = worker_busy
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .expect("n_workers > 0");
+        if busy > median {
+            out.push(Bottleneck {
+                kind: BottleneckKind::SlowestRank,
+                subject: format!("w{slowest}"),
+                blame_us: busy,
+                headroom_us: busy - median,
+                detail: format!(
+                    "GPU busy {busy:.0} us vs fleet median {median:.0} us; \
+                     what-if equalize={slowest} replays the fix"
+                ),
+            });
+        }
+
+        // replay-side straggler machines (mean GPU busy per machine)
+        let gpm = spec.cluster.gpus_per_machine.max(1);
+        let n_machines = (n_workers + gpm - 1) / gpm;
+        if n_machines > 1 {
+            let mut machine_busy = vec![(0.0f64, 0usize); n_machines];
+            for (w, &b) in worker_busy.iter().enumerate() {
+                let m = w / gpm;
+                machine_busy[m].0 += b;
+                machine_busy[m].1 += 1;
+            }
+            let means: Vec<f64> = machine_busy
+                .iter()
+                .map(|&(s, n)| if n > 0 { s / n as f64 } else { 0.0 })
+                .collect();
+            let mut ms = means.clone();
+            ms.sort_by(f64::total_cmp);
+            // lower median (see worker median above): keeps straggler
+            // detection alive on two-machine clusters
+            let med = ms[(ms.len() - 1) / 2];
+            for (m, &mean) in means.iter().enumerate() {
+                if med > 0.0 && mean > med * STRAGGLER_MACHINE_FACTOR {
+                    out.push(Bottleneck {
+                        kind: BottleneckKind::StragglerMachine,
+                        subject: format!("machine{m}"),
+                        blame_us: mean,
+                        headroom_us: mean - med,
+                        detail: format!(
+                            "mean GPU busy {mean:.0} us vs median machine {med:.0} us \
+                             ({:.0}% slower)",
+                            (mean / med - 1.0) * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- comm stage classes on the critical path ----
+    // keyed off the lowered plan's stage metadata: each path op's device
+    // class is exactly the Stage::device its planner emitted
+    let mut class_time: HashMap<&'static str, f64> = HashMap::new();
+    let mut cur = Some(r.last);
+    while let Some(n) = cur {
+        let node = dfg.node(n);
+        if node.kind.is_comm() && node.device != DeviceKey::Null {
+            *class_time.entry(device_class(node.device)).or_insert(0.0) +=
+                r.end[n as usize] - r.start[n as usize];
+        } else if node.kind == OpKind::Negotiate {
+            // negotiation runs device-less but is still a comm stage
+            *class_time.entry("coordinator").or_insert(0.0) +=
+                r.end[n as usize] - r.start[n as usize];
+        }
+        cur = r.crit_pred[n as usize];
+    }
+    let props = plan_props(spec);
+    let mut classes: Vec<(&'static str, f64)> = class_time.into_iter().collect();
+    classes.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(b.0)));
+    for (class, t) in classes.into_iter().take(2) {
+        if t <= 0.0 {
+            continue;
+        }
+        out.push(Bottleneck {
+            kind: BottleneckKind::CommStage,
+            subject: class.to_string(),
+            blame_us: t,
+            headroom_us: t,
+            detail: format!(
+                "{t:.0} us of the critical path runs {class} stages of the {} plan \
+                 (wire factor {:.2}); what-if nic-bw/nvlink-bw replays a faster fabric",
+                props.scheme, props.critical_path_wire_factor
+            ),
+        });
+    }
+
+    // ---- hot comm groups ----
+    let mut hot_comm: Vec<(usize, f64)> = gb
+        .comm_us
+        .iter()
+        .copied()
+        .enumerate()
+        .filter(|&(_, t)| t > 0.0)
+        .collect();
+    hot_comm.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    for (gi, t) in hot_comm.into_iter().take(TOP_GROUPS) {
+        let bytes = spec.plan.group_bytes(&spec.model, gi);
+        out.push(Bottleneck {
+            kind: BottleneckKind::HotCommGroup,
+            subject: format!("g{gi}"),
+            blame_us: t,
+            headroom_us: t,
+            detail: format!(
+                "synchronization of {bytes:.0} B ({} tensors, {} partitions) holds \
+                 {t:.0} us of the path; what-if zero-group={gi} bounds the gain",
+                spec.plan.groups[gi].tensors.len(),
+                spec.plan.groups[gi].partitions
+            ),
+        });
+    }
+
+    // ---- hot fusion groups (kernels) ----
+    let mut hot_comp: Vec<(usize, f64)> = gb
+        .comp_us
+        .iter()
+        .copied()
+        .enumerate()
+        .filter(|&(_, t)| t > 0.0)
+        .collect();
+    hot_comp.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    for (fg, t) in hot_comp.into_iter().take(TOP_GROUPS) {
+        let first_op = spec.fusion.groups[fg][0] as usize;
+        let name = spec.model.ops[first_op].name.clone();
+        out.push(Bottleneck {
+            kind: BottleneckKind::HotOpGroup,
+            subject: name,
+            blame_us: t,
+            // the matching what-if (shrink-op=fg:0.5) halves the kernel:
+            // its gain is bounded by half the kernel's path share
+            headroom_us: t * 0.5,
+            detail: format!(
+                "fusion group {fg} holds {t:.0} us of critical-path compute; \
+                 what-if shrink-op={fg}:0.5 replays a 2x-faster kernel"
+            ),
+        });
+    }
+
+    // ---- trace-side evidence: drift + stretch ----
+    if let Some(f) = facts {
+        for &(m, theta) in &f.machine_drift_us {
+            if theta.abs() > DRIFT_FLAG_US {
+                out.push(Bottleneck {
+                    kind: BottleneckKind::ClockDrift,
+                    subject: format!("machine{m}"),
+                    blame_us: theta.abs(),
+                    headroom_us: 0.0,
+                    detail: format!(
+                        "solved clock offset θ = {theta:+.0} us — a measurement artifact \
+                         the alignment stage corrects, not a job slowdown"
+                    ),
+                });
+            }
+        }
+        for &(m, stretch) in &f.machine_stretch {
+            if stretch > STRAGGLER_MACHINE_FACTOR {
+                out.push(Bottleneck {
+                    kind: BottleneckKind::StragglerMachine,
+                    subject: format!("machine{m}"),
+                    blame_us: blame.iteration_us * (1.0 - 1.0 / stretch),
+                    headroom_us: blame.iteration_us * (1.0 - 1.0 / stretch),
+                    detail: format!(
+                        "measured kernel durations {:.0}% above the fleet median \
+                         (trace stretch {stretch:.2})",
+                        (stretch - 1.0) * 100.0
+                    ),
+                });
+            }
+        }
+        for &(it, stretch) in &f.iter_stretch {
+            if stretch > STRAGGLER_ITER_FACTOR {
+                out.push(Bottleneck {
+                    kind: BottleneckKind::StragglerIteration,
+                    subject: format!("iter{it}"),
+                    blame_us: blame.iteration_us * (stretch - 1.0),
+                    headroom_us: 0.0,
+                    detail: format!(
+                        "iteration ran {stretch:.2}x the median — a profiling-window \
+                         artifact inflating the per-op averages; re-profile or drop it"
+                    ),
+                });
+            }
+        }
+    }
+
+    out.sort_by(|a, b| {
+        b.headroom_us
+            .total_cmp(&a.headroom_us)
+            .then(b.blame_us.total_cmp(&a.blame_us))
+            .then(a.subject.cmp(&b.subject))
+    });
+    // one row per root cause: the replay-side and trace-side detectors
+    // can both flag the same (kind, subject) — e.g. a straggler machine
+    // seen in replayed busy time *and* in measured duration stretch —
+    // and the sorted order keeps the higher-headroom row
+    let mut seen: std::collections::HashSet<(&'static str, String)> =
+        std::collections::HashSet::new();
+    out.retain(|b| seen.insert((b.kind.name(), b.subject.clone())));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+    use crate::replay::incremental::IncrementalReplayer;
+    use crate::trace::degrade;
+
+    #[test]
+    fn ranking_surfaces_comm_and_comp() {
+        let spec = JobSpec::standard("vgg16", "byteps", Transport::Tcp);
+        let mut mg = MutableGraph::new(spec);
+        let mut eng = IncrementalReplayer::new();
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        let b = super::super::critical::blame(&mg, eng.result());
+        let gb = super::super::critical::group_blame(&mg, eng.result());
+        let ranked = rank(&mg, eng.result(), &b, &gb, None);
+        assert!(!ranked.is_empty());
+        // comm-bound TCP PS job: a comm finding must rank near the top
+        assert!(
+            ranked.iter().take(3).any(|x| matches!(
+                x.kind,
+                BottleneckKind::CommStage | BottleneckKind::HotCommGroup
+            )),
+            "top-3: {:?}",
+            ranked.iter().take(3).map(|x| x.kind).collect::<Vec<_>>()
+        );
+        // ranked by headroom, descending
+        for w in ranked.windows(2) {
+            assert!(w[0].headroom_us >= w[1].headroom_us);
+        }
+    }
+
+    #[test]
+    fn trace_facts_detect_injected_drift_and_stretch() {
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let tb = crate::testbed::run(
+            &spec,
+            &crate::testbed::TestbedOpts { iterations: 4, ..Default::default() },
+        );
+        let mut trace = tb.trace.clone();
+        degrade::inject_drift(&mut trace, 1, 50_000.0);
+        degrade::straggle_iteration(&mut trace, 2, 2.0);
+        let f = TraceFacts::from_trace(&trace);
+        // machine 1's solved offset must dwarf machine 0's
+        let d0 = f.machine_drift_us.iter().find(|&&(m, _)| m == 0).map(|&(_, d)| d);
+        let d1 = f.machine_drift_us.iter().find(|&&(m, _)| m == 1).map(|&(_, d)| d);
+        let (d0, d1) = (d0.unwrap_or(0.0), d1.unwrap_or(0.0));
+        assert!(
+            (d1 - d0).abs() > 10_000.0,
+            "drift not recovered: d0={d0} d1={d1}"
+        );
+        // iteration 2 must stand out
+        let s2 = f.iter_stretch.iter().find(|&&(i, _)| i == 2).map(|&(_, s)| s);
+        assert!(s2.unwrap_or(1.0) > STRAGGLER_ITER_FACTOR, "s2={s2:?}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Transactional what-if queries (the Daydream-style counterfactuals,
+//! answered on dPRO's incremental engine): *what would the iteration time
+//! be if* the NIC were 2× faster, the straggler GPU ran at the fleet
+//! median, one comm chain were free, a kernel were halved?
+//!
+//! Every query is a pure duration rewrite executed as a
+//! [`MutableGraph::begin`] → edit → commit → incremental replay →
+//! [`MutableGraph::rollback`] transaction: **zero** `build_global*` calls
+//! (pinned by the transaction-counter test in `rust/tests/diagnosis.rs`),
+//! and the graph + engine are restored bit-exactly afterwards, so any
+//! query sequence leaves no trace. Structural counterfactuals (different
+//! fusion/partition plans) are the optimizer's job — the same transaction
+//! machinery, one layer up.
+
+use crate::graph::dfg::NodeId;
+use crate::graph::MutableGraph;
+use crate::replay::incremental::IncrementalReplayer;
+use crate::util::json::Json;
+use crate::util::Us;
+
+/// One counterfactual. Factors are multiplicative and must be positive
+/// ([`parse_whatif`] enforces it); bandwidth factors scale the *speed*, so
+/// durations scale by their inverse.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WhatIfQuery {
+    /// Zero every fine-grained communication op — the perfect-overlap
+    /// upper bound on any communication optimization.
+    PerfectOverlap,
+    /// Scale NIC bandwidth by this factor (ops on `LinkTx`/`LinkRx`
+    /// devices run `1/factor` as long; the whole op duration is treated
+    /// as bandwidth-bound, so per-message overheads scale too — an upper
+    /// bound on the real gain).
+    ScaleNic(f64),
+    /// Scale NVLink bandwidth by this factor (ops on `NvLink` devices).
+    ScaleNvlink(f64),
+    /// Equalize one straggler worker: every computation op of this worker
+    /// runs at the per-fusion-group median across workers.
+    EqualizeWorker(u16),
+    /// Zero one comm group's synchronization chain (its In/Out stay, its
+    /// update op stays — only the fine-grained comm ops become free).
+    ZeroGroup(usize),
+    /// Scale one fusion group's kernel duration by this factor on every
+    /// worker (e.g. `0.5` = a 2× faster kernel).
+    ShrinkOp(u32, f64),
+}
+
+impl std::fmt::Display for WhatIfQuery {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WhatIfQuery::PerfectOverlap => write!(f, "perfect-overlap"),
+            WhatIfQuery::ScaleNic(x) => write!(f, "nic-bw={x}"),
+            WhatIfQuery::ScaleNvlink(x) => write!(f, "nvlink-bw={x}"),
+            WhatIfQuery::EqualizeWorker(w) => write!(f, "equalize={w}"),
+            WhatIfQuery::ZeroGroup(g) => write!(f, "zero-group={g}"),
+            WhatIfQuery::ShrinkOp(op, x) => write!(f, "shrink-op={op}:{x}"),
+        }
+    }
+}
+
+/// The query forms [`parse_whatif`] / the CLI `--whatif` flag accept.
+pub const WHATIF_FORMS: &str = "perfect-overlap, nic-bw=<factor>, nvlink-bw=<factor>, \
+     equalize=<worker>, zero-group=<group>, shrink-op=<fusion-group>:<factor>";
+
+/// Parse a comma-separated what-if list (the CLI `--whatif` value). The
+/// [`std::fmt::Display`] form of every query parses back to itself.
+pub fn parse_whatif(list: &str) -> Result<Vec<WhatIfQuery>, String> {
+    let bad = |tok: &str| format!("invalid what-if query {tok:?}; valid forms: {WHATIF_FORMS}");
+    let mut out = Vec::new();
+    for raw in list.split(',') {
+        let tok = raw.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let q = if tok == "perfect-overlap" {
+            WhatIfQuery::PerfectOverlap
+        } else if let Some(v) = tok.strip_prefix("nic-bw=") {
+            WhatIfQuery::ScaleNic(parse_factor(v).ok_or_else(|| bad(tok))?)
+        } else if let Some(v) = tok.strip_prefix("nvlink-bw=") {
+            WhatIfQuery::ScaleNvlink(parse_factor(v).ok_or_else(|| bad(tok))?)
+        } else if let Some(v) = tok.strip_prefix("equalize=") {
+            WhatIfQuery::EqualizeWorker(v.parse::<u16>().map_err(|_| bad(tok))?)
+        } else if let Some(v) = tok.strip_prefix("zero-group=") {
+            WhatIfQuery::ZeroGroup(v.parse::<usize>().map_err(|_| bad(tok))?)
+        } else if let Some(v) = tok.strip_prefix("shrink-op=") {
+            let (op, fac) = v.split_once(':').ok_or_else(|| bad(tok))?;
+            WhatIfQuery::ShrinkOp(
+                op.parse::<u32>().map_err(|_| bad(tok))?,
+                parse_factor(fac).ok_or_else(|| bad(tok))?,
+            )
+        } else {
+            return Err(bad(tok));
+        };
+        out.push(q);
+    }
+    if out.is_empty() {
+        return Err(format!("empty what-if list; valid forms: {WHATIF_FORMS}"));
+    }
+    Ok(out)
+}
+
+fn parse_factor(s: &str) -> Option<f64> {
+    s.parse::<f64>().ok().filter(|f| f.is_finite() && *f > 0.0)
+}
+
+/// A replayed counterfactual answer.
+#[derive(Clone, Debug)]
+pub struct WhatIfAnswer {
+    /// The query, in its canonical (re-parseable) form.
+    pub query: String,
+    /// Replayed iteration time under the counterfactual (us).
+    pub iteration_us: Us,
+    /// The unmodified plan's replayed iteration time (us).
+    pub baseline_us: Us,
+    /// `baseline_us / iteration_us`.
+    pub speedup: f64,
+    /// Number of op durations the query actually changed (0 means the
+    /// query had no grip — e.g. scaling a NIC no op uses).
+    pub edited_ops: usize,
+}
+
+impl WhatIfAnswer {
+    /// Schema-stable JSON row (`query`, `iteration_us`, `baseline_us`,
+    /// `speedup`, `edited_ops`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("query", Json::Str(self.query.clone()));
+        o.set("iteration_us", Json::Num(self.iteration_us));
+        o.set("baseline_us", Json::Num(self.baseline_us));
+        o.set("speedup", Json::Num(self.speedup));
+        o.set("edited_ops", Json::Num(self.edited_ops as f64));
+        o
+    }
+}
+
+/// The duration edits a query implies, gathered against the *current*
+/// graph state (immutable pass), so the mutable apply loop holds no
+/// conflicting borrows.
+fn gather_edits(mg: &MutableGraph, q: &WhatIfQuery) -> Vec<(NodeId, f64)> {
+    use crate::graph::dfg::DeviceKey;
+    let dfg = mg.dfg();
+    let alive = mg.alive();
+    let mut edits = Vec::new();
+    match *q {
+        WhatIfQuery::PerfectOverlap => {
+            for i in dfg.ids() {
+                let n = dfg.node(i);
+                if alive[i as usize] && n.kind.is_comm() && n.duration != 0.0 {
+                    edits.push((i, 0.0));
+                }
+            }
+        }
+        WhatIfQuery::ScaleNic(f) => {
+            for i in dfg.ids() {
+                let n = dfg.node(i);
+                if alive[i as usize]
+                    && matches!(n.device, DeviceKey::LinkTx(_) | DeviceKey::LinkRx(_))
+                {
+                    edits.push((i, n.duration / f));
+                }
+            }
+        }
+        WhatIfQuery::ScaleNvlink(f) => {
+            for i in dfg.ids() {
+                let n = dfg.node(i);
+                if alive[i as usize] && matches!(n.device, DeviceKey::NvLink(_)) {
+                    edits.push((i, n.duration / f));
+                }
+            }
+        }
+        WhatIfQuery::EqualizeWorker(w) => {
+            let n_workers = mg.n_workers();
+            if (w as usize) < n_workers {
+                let n_groups = mg.spec().fusion.groups.len();
+                for fg in 0..n_groups {
+                    // median over the OTHER workers: including `w` itself
+                    // would make equalizing the straggler of a 2-worker
+                    // job a no-op (the upper median is its own duration)
+                    let mut durs: Vec<f64> = (0..n_workers as u16)
+                        .filter(|&wi| wi != w)
+                        .filter_map(|wi| mg.comp_node(wi, fg as u32))
+                        .map(|id| dfg.node(id).duration)
+                        .collect();
+                    if durs.is_empty() {
+                        continue;
+                    }
+                    durs.sort_by(f64::total_cmp);
+                    let median = durs[durs.len() / 2];
+                    if let Some(id) = mg.comp_node(w, fg as u32) {
+                        edits.push((id, median));
+                    }
+                }
+            }
+        }
+        WhatIfQuery::ZeroGroup(gi) => {
+            if gi < mg.n_groups() {
+                for id in mg.group_nodes_iter(gi) {
+                    if alive[id as usize] && dfg.node(id).kind.is_comm() {
+                        edits.push((id, 0.0));
+                    }
+                }
+            }
+        }
+        WhatIfQuery::ShrinkOp(fg, f) => {
+            if (fg as usize) < mg.spec().fusion.groups.len() {
+                for w in 0..mg.n_workers() as u16 {
+                    if let Some(id) = mg.comp_node(w, fg) {
+                        if alive[id as usize] {
+                            edits.push((id, dfg.node(id).duration * f));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    edits
+}
+
+/// Answer one query: apply its duration edits inside a transaction,
+/// replay incrementally, then roll back and replay again so the engine's
+/// cached schedule is restored bit-exactly. Never constructs a graph.
+pub(crate) fn run_query(
+    mg: &mut MutableGraph,
+    eng: &mut IncrementalReplayer,
+    baseline_us: Us,
+    q: &WhatIfQuery,
+) -> WhatIfAnswer {
+    let edits = gather_edits(mg, q);
+    let txn = mg.begin();
+    let mut edited = 0usize;
+    for (id, dur) in edits {
+        edited += mg.override_duration(id, dur) as usize;
+    }
+    let log = mg.commit();
+    let iteration_us = eng.replay_incremental(mg, &log).iteration_time;
+    mg.rollback(txn);
+    let log = mg.commit();
+    eng.replay_incremental(mg, &log);
+    WhatIfAnswer {
+        query: q.to_string(),
+        iteration_us,
+        baseline_us,
+        speedup: if iteration_us > 0.0 { baseline_us / iteration_us } else { f64::INFINITY },
+        edited_ops: edited,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobSpec, Transport};
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        let qs = parse_whatif(
+            "perfect-overlap, nic-bw=2, nvlink-bw=1.5, equalize=3, zero-group=0, shrink-op=5:0.5",
+        )
+        .unwrap();
+        assert_eq!(qs.len(), 6);
+        for q in &qs {
+            assert_eq!(parse_whatif(&q.to_string()).unwrap(), vec![q.clone()]);
+        }
+        for bad in ["warp-drive", "nic-bw=0", "nic-bw=-2", "shrink-op=5", "equalize=x", ""] {
+            let err = parse_whatif(bad).unwrap_err();
+            assert!(err.contains("perfect-overlap"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn queries_move_time_the_right_way_and_restore() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let mut mg = crate::graph::MutableGraph::new(spec);
+        let mut eng = crate::replay::incremental::IncrementalReplayer::new();
+        let log = mg.commit();
+        let base = eng.replay_incremental(&mg, &log).iteration_time;
+
+        let faster = run_query(&mut mg, &mut eng, base, &WhatIfQuery::ScaleNic(4.0));
+        assert!(faster.edited_ops > 0);
+        assert!(faster.iteration_us < base, "4x NIC must help a comm-bound job");
+        let slower = run_query(&mut mg, &mut eng, base, &WhatIfQuery::ScaleNic(0.25));
+        assert!(slower.iteration_us > base, "a 4x slower NIC must hurt");
+        let po = run_query(&mut mg, &mut eng, base, &WhatIfQuery::PerfectOverlap);
+        assert!(po.iteration_us <= faster.iteration_us, "perfect overlap dominates");
+        assert!(po.speedup >= 1.0);
+
+        // engine restored after every query: the baseline replays exactly
+        let log = mg.commit();
+        assert!(log.is_empty(mg.dfg().len()), "rollback left pending changes");
+        assert_eq!(eng.replay_incremental(&mg, &log).iteration_time, base);
+    }
+}

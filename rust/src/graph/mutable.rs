@@ -471,6 +471,24 @@ impl MutableGraph {
         Ok(())
     }
 
+    /// **Duration override**: overwrite one live node's expected duration
+    /// as a journaled in-place edit — the primitive the diagnosis engine's
+    /// what-if queries are made of (scale a link's ops, zero a comm chain,
+    /// equalize a straggler GPU). Inside an open transaction the old value
+    /// is journaled, so a [`Self::rollback`] restores it bit-exactly; the
+    /// change lands in the next [`Self::commit`]'s `touched` set so the
+    /// incremental replayer repairs exactly the affected cone. Returns
+    /// `true` iff the duration actually changed (dead nodes and no-op
+    /// writes return `false` and journal nothing).
+    pub fn override_duration(&mut self, id: NodeId, dur: f64) -> bool {
+        if !self.alive[id as usize] || self.dfg.node(id).duration == dur {
+            return false;
+        }
+        self.set_duration_j(id, dur);
+        self.touched.push(id);
+        true
+    }
+
     // ---- transactions ---------------------------------------------------
 
     /// Open a transaction: every subsequent primitive edit records its

@@ -8,6 +8,10 @@
 //!   the global timeline; [`alignment`] corrects clock drift, §4.2).
 //! - **Replayer** ([`replay`]): per-device-queue simulation of the global
 //!   DFG, critical path, partial replay, peak-memory estimation (§4.3).
+//! - **Diagnosis** ([`diagnosis`]): critical-path blame attribution,
+//!   bottleneck ranking, and transactional what-if queries over the
+//!   incremental engine — *why* an iteration is slow, before optimizing
+//!   (§bottleneck identification).
 //! - **Optimizer** ([`optimizer`]): one Strategy API
 //!   ([`optimizer::strategy`]) through which the critical-path search of
 //!   Alg. 1, the graph-pass registry, and the memory passes all run as
@@ -37,6 +41,7 @@ pub mod coordinator;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod config;
+pub mod diagnosis;
 pub mod testbed;
 pub mod trace;
 pub mod graph;

@@ -40,6 +40,12 @@ pub struct SearchOpts {
     pub use_partial_replay: bool,
     /// Propagate accepted decisions across symmetric blocks (§5.4).
     pub use_symmetry: bool,
+    /// Order every round's candidates by critical-path blame
+    /// ([`crate::diagnosis::critical::group_blame`]) so strategies try
+    /// high-blame targets first — measurably fewer candidates to reach
+    /// the same cost (pinned by `rust/tests/diagnosis.rs`). Off preserves
+    /// plain path-walk order.
+    pub use_blame_ranking: bool,
     /// Let the critical-path walker propose op-fusion decisions.
     pub enable_op_fusion: bool,
     /// Let the critical-path walker propose tensor-fusion decisions.
@@ -74,6 +80,7 @@ impl Default for SearchOpts {
             use_coarsened_view: true,
             use_partial_replay: true,
             use_symmetry: true,
+            use_blame_ranking: true,
             enable_op_fusion: true,
             enable_tensor_fusion: true,
             enable_partition: None,
@@ -88,12 +95,15 @@ impl Default for SearchOpts {
 }
 
 impl SearchOpts {
-    /// The Table 5 "strawman": Alg. 1 with no acceleration technique.
+    /// The Table 5 "strawman": Alg. 1 with no acceleration technique
+    /// (blame ranking included — it reorders candidates to reach the
+    /// target cost sooner, so the baseline must not run it either).
     pub fn strawman() -> SearchOpts {
         SearchOpts {
             use_coarsened_view: false,
             use_partial_replay: false,
             use_symmetry: false,
+            use_blame_ranking: false,
             ..Default::default()
         }
     }
@@ -134,6 +144,10 @@ pub struct SearchOutcome {
     pub accepted: Vec<Decision>,
     /// Candidates evaluated (accepted + rolled back).
     pub candidates_tried: usize,
+    /// Per acceptance: `(candidates_tried at that moment, accepted
+    /// state's time_us)` — the cost-vs-effort trajectory the blame-ranking
+    /// tests compare (how many candidates until a target cost).
+    pub accept_trace: Vec<(usize, Us)>,
     /// Incremental replays performed across all rounds.
     pub replays: usize,
     /// Full builds+replays the strawman `t_sync` oracle needed (0 with
@@ -172,6 +186,20 @@ impl SearchOutcome {
             Json::Arr(self.accepted.iter().map(|d| Json::Str(d.to_string())).collect()),
         );
         j.set("candidates_tried", Json::Num(self.candidates_tried as f64));
+        j.set(
+            "accept_trace",
+            Json::Arr(
+                self.accept_trace
+                    .iter()
+                    .map(|&(tried, t)| {
+                        let mut o = Json::obj();
+                        o.set("tried", Json::Num(tried as f64));
+                        o.set("time_us", Json::Num(t));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
         j.set("replays", Json::Num(self.replays as f64));
         j.set(
             "full_replays_for_tsync",
@@ -260,6 +288,7 @@ pub fn optimize_with(
     let mut stale = 0usize;
     let mut actions_applied = 0usize;
     let mut candidates_tried = 0usize;
+    let mut accept_trace: Vec<(usize, Us)> = Vec::new();
     // accepted decisions with their proposing strategy: an accepted
     // decision's cost hint (Strategy::evaluate — e.g. gradient
     // accumulation's +18% and accumulated-gradient buffer) is a property
@@ -306,10 +335,19 @@ pub fn optimize_with(
 
             // ---- collect candidates from every strategy ----
             path = r.critical_path();
+            // per-group critical-path blame: strategies order their
+            // candidates by it so high-blame targets are tried first
+            // (empty when ranking is off — nothing reads it then)
+            let gblame = if opts.use_blame_ranking {
+                crate::diagnosis::critical::group_blame(&mg, r)
+            } else {
+                crate::diagnosis::critical::GroupBlame::default()
+            };
             let mut ctx = SearchCtx {
                 mg: &mg,
                 end: &r.end,
                 path: &path,
+                blame: &gblame,
                 tsync: &mut tsync,
                 opts,
                 partition_enabled,
@@ -360,6 +398,7 @@ pub fn optimize_with(
                 cur = cand;
                 final_eval = Some(cand);
                 round_applied += n;
+                accept_trace.push((candidates_tried, cand.time_us));
                 strategies[si].decided(&d, true);
                 accepted.push((si, d));
             } else {
@@ -409,6 +448,7 @@ pub fn optimize_with(
         mem_opt: strategy::accepted_mem_opt(&accepted),
         accepted,
         candidates_tried,
+        accept_trace,
         replays,
         full_replays_for_tsync: tsync.full_replays(),
         actions_applied,

@@ -188,6 +188,12 @@ pub struct SearchCtx<'a> {
     pub end: &'a [f64],
     /// Critical path of the last replay, source → sink.
     pub path: &'a [NodeId],
+    /// Per-group critical-path blame of the last replay
+    /// ([`crate::diagnosis::critical::group_blame`]): strategies sort
+    /// their candidates by it (when
+    /// [`SearchOpts::use_blame_ranking`] is on) so high-blame targets are
+    /// tried first.
+    pub blame: &'a crate::diagnosis::critical::GroupBlame,
     /// Shared `t_sync(s, k)` oracle (§5.1).
     pub tsync: &'a mut Tsync,
     /// The search configuration in force.
@@ -576,6 +582,40 @@ impl Strategy for CriticalPathStrategy {
                     }
                 }
             }
+        }
+
+        // ---- blame ranking: try high-blame targets first ----
+        // The accept/reject loop updates its acceptance bar after every
+        // win, so evaluation order changes how many candidates are spent
+        // to reach a given cost; sorting by the diagnosis engine's
+        // per-group path blame front-loads the big wins (stable sort —
+        // ties keep path-walk order, the pre-diagnosis behavior).
+        if ctx.opts.use_blame_ranking {
+            // decorate–sort–undecorate: comm_group_of_tensor is a linear
+            // plan scan, so the key is computed once per candidate, not
+            // O(n log n) times inside the comparator
+            let blame_of = |d: &Decision| -> f64 {
+                match *d {
+                    Decision::OpFuse(a, _) => spec
+                        .fusion
+                        .group_of
+                        .get(a as usize)
+                        .and_then(|&fg| ctx.blame.comp_us.get(fg as usize))
+                        .copied()
+                        .unwrap_or(0.0),
+                    Decision::TensorFuse(t, _) | Decision::Partition(t, _) => {
+                        passes::comm_group_of_tensor(spec, t)
+                            .and_then(|cg| ctx.blame.comm_us.get(cg))
+                            .copied()
+                            .unwrap_or(0.0)
+                    }
+                    _ => 0.0,
+                }
+            };
+            let mut keyed: Vec<(f64, Decision)> =
+                out.into_iter().map(|d| (blame_of(&d), d)).collect();
+            keyed.sort_by(|x, y| y.0.total_cmp(&x.0));
+            return keyed.into_iter().map(|(_, d)| d).collect();
         }
         out
     }

@@ -82,6 +82,11 @@ pub enum DiagKind {
     MetadataMismatch,
     /// Observed iteration numbers are not contiguous from 0.
     IterationGap,
+    /// Graph ops without a measured duration in the trace (dropped events,
+    /// partial dumps): the diagnosis/replay pipeline fell back to analytic
+    /// estimates for them, so blame attributed to those ops is
+    /// model-derived, not measured.
+    MissingProfile,
 }
 
 impl DiagKind {
@@ -103,6 +108,7 @@ impl DiagKind {
             DiagKind::MissingSeq => "missing_seq",
             DiagKind::MetadataMismatch => "metadata_mismatch",
             DiagKind::IterationGap => "iteration_gap",
+            DiagKind::MissingProfile => "missing_profile",
         }
     }
 }

@@ -1,0 +1,304 @@
+//! Diagnosis-engine guarantees:
+//!
+//! 1. **Exact blame decomposition**: critical-path and per-device blame
+//!    categories sum to the replayed iteration time *bit-for-bit*, across
+//!    every registered comm scheme × model (and on trace-driven
+//!    diagnoses).
+//! 2. **Perfect-overlap is an upper bound**: zeroing all communication
+//!    bounds any compute-preserving comm-plan optimization — no
+//!    `optimize()` run restricted to plan rewrites may beat it.
+//! 3. **Queries leave no trace**: after any what-if sequence the graph +
+//!    engine equal a from-scratch build bit-exactly (the strategy.rs
+//!    rollback-equivalence sweep, re-aimed at the query path), with zero
+//!    `build_global*` calls (transaction counter).
+//! 4. **Blame ranking pays off**: ordering candidates by critical-path
+//!    blame reaches the unranked search's best cost in strictly fewer
+//!    candidates on at least one model/scheme pair.
+//! 5. **Degraded traces degrade, never panic**: a trace with dropped
+//!    events yields a diagnosis carrying `TraceReport` warnings and a
+//!    still-exact blame decomposition.
+
+use std::collections::HashMap;
+
+use dpro::config::{JobSpec, Transport, ALL_SCHEMES};
+use dpro::diagnosis::{Diagnoser, WhatIfQuery};
+use dpro::graph::{build_count, MutableGraph};
+use dpro::optimizer::{optimize, SearchOpts, SearchOutcome};
+use dpro::replay::incremental::IncrementalReplayer;
+use dpro::trace::degrade;
+use dpro::trace::validate::{validate, DiagKind, TraceReport};
+use dpro::util::rng::Pcg;
+
+// ---------------------------------------------------------------------------
+// 1. exact blame decomposition
+// ---------------------------------------------------------------------------
+
+fn assert_blame_exact(d: &Diagnoser, label: &str) {
+    let b = d.blame();
+    assert!(b.iteration_us > 0.0, "{label}: empty replay");
+    // the contract, in the documented evaluation order, bitwise
+    assert_eq!(
+        (b.path.comp_us + b.path.comm_us) + b.path.blocked_us,
+        b.iteration_us,
+        "{label}: path blame does not sum exactly"
+    );
+    for row in &b.devices {
+        assert_eq!(
+            (row.comp_us + row.comm_us) + row.blocked_us,
+            b.iteration_us,
+            "{label}: device {} does not sum exactly",
+            row.device
+        );
+    }
+    assert_eq!(b.check(), Ok(()), "{label}");
+    // the replayed critical path has no gaps: blocked is float noise only
+    assert!(
+        b.path.blocked_us.abs() < 1.0,
+        "{label}: path blocked {} us",
+        b.path.blocked_us
+    );
+}
+
+#[test]
+fn blame_sums_bit_for_bit_across_schemes_and_models() {
+    for scheme in ALL_SCHEMES {
+        for model in ["vgg16", "resnet50"] {
+            let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+            let d = Diagnoser::new(spec);
+            assert_blame_exact(&d, &format!("{model}/{scheme}"));
+        }
+    }
+}
+
+#[test]
+fn blame_sums_bit_for_bit_on_trace_driven_diagnosis() {
+    let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+    let tb = dpro::testbed::run(
+        &spec,
+        &dpro::testbed::TestbedOpts { iterations: 3, ..Default::default() },
+    );
+    let mut report = TraceReport::default();
+    validate(&tb.trace, &mut report);
+    let d = Diagnoser::from_trace(spec, &tb.trace, report);
+    assert_blame_exact(&d, "trace-driven resnet50/horovod");
+}
+
+// ---------------------------------------------------------------------------
+// 2. perfect-overlap upper bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn perfect_overlap_bounds_plan_rewriting_search() {
+    // Restricted to plan rewrites that preserve every computation
+    // duration (partition only; no coarsening, no op fusion), the
+    // optimizer can never beat the zero-communication replay: schedule
+    // times are monotone in durations, and with all comm at zero every
+    // plan collapses to the same pure-compute schedule.
+    for (model, scheme) in [("vgg16", "byteps"), ("resnet50", "ps-tree")] {
+        let spec = JobSpec::standard(model, scheme, Transport::Tcp);
+        let mut d = Diagnoser::new(spec.clone());
+        let po = d.what_if(&WhatIfQuery::PerfectOverlap);
+        assert!(po.edited_ops > 0);
+        assert!(po.iteration_us < po.baseline_us, "{model}/{scheme}");
+
+        let opts = SearchOpts {
+            use_coarsened_view: false,
+            strategies: Some("partition".into()),
+            max_rounds: 5,
+            budget_wall_s: 60.0,
+            ..Default::default()
+        };
+        let out = optimize(&spec, &opts);
+        assert!(
+            po.iteration_us <= out.est_iteration_us,
+            "{model}/{scheme}: perfect overlap {} must bound the search's {}",
+            po.iteration_us,
+            out.est_iteration_us
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. queries leave no trace (the strategy.rs rollback sweep, on queries)
+// ---------------------------------------------------------------------------
+
+/// Live-node schedule keyed by canonical rank — the node identity shared
+/// between an incrementally-edited graph and a fresh build of its spec.
+fn schedule_by_canon(mg: &MutableGraph, eng: &IncrementalReplayer) -> HashMap<u64, (f64, f64)> {
+    let r = eng.result();
+    let mut m = HashMap::new();
+    for i in mg.dfg().ids() {
+        let iu = i as usize;
+        if mg.alive()[iu] {
+            let prev = m.insert(mg.canon_ranks()[iu], (r.start[iu], r.end[iu]));
+            assert!(prev.is_none(), "duplicate canonical rank");
+        }
+    }
+    m
+}
+
+fn random_query(rng: &mut Pcg, d: &Diagnoser) -> WhatIfQuery {
+    let n_workers = d.mg().n_workers().max(1);
+    let n_groups = d.mg().n_groups().max(1);
+    let n_fusion = d.spec().fusion.groups.len().max(1);
+    match rng.below(6) {
+        0 => WhatIfQuery::PerfectOverlap,
+        1 => WhatIfQuery::ScaleNic(0.5 + rng.f64() * 3.5),
+        2 => WhatIfQuery::ScaleNvlink(0.5 + rng.f64() * 3.5),
+        3 => WhatIfQuery::EqualizeWorker(rng.below(n_workers) as u16),
+        4 => WhatIfQuery::ZeroGroup(rng.below(n_groups)),
+        _ => WhatIfQuery::ShrinkOp(rng.below(n_fusion) as u32, 0.25 + rng.f64()),
+    }
+}
+
+#[test]
+fn graph_restored_bit_exactly_after_any_query_sequence() {
+    let mut rng = Pcg::seeded(20260731);
+    for (model, scheme) in [("resnet50", "horovod"), ("vgg16", "ps-tree")] {
+        let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+        let mut d = Diagnoser::new(spec.clone());
+        let base = d.baseline_us();
+        let before = schedule_by_canon(d.mg(), d.engine());
+        let builds0 = build_count();
+        for step in 0..12 {
+            let q = random_query(&mut rng, &d);
+            let a = d.what_if(&q);
+            assert!(
+                a.iteration_us.is_finite() && a.iteration_us >= 0.0,
+                "{model}/{scheme} step {step}: bad answer for {q}"
+            );
+            // restored bit-exactly after every single query
+            assert_eq!(
+                d.engine().result().iteration_time,
+                base,
+                "{model}/{scheme} step {step}: engine not restored after {q}"
+            );
+        }
+        assert_eq!(build_count(), builds0, "{model}/{scheme}: queries built graphs");
+        assert_eq!(d.queries_run(), 12);
+        // the cached schedule equals the pre-query one, node for node
+        let after = schedule_by_canon(d.mg(), d.engine());
+        assert_eq!(before, after, "{model}/{scheme}: schedule diverged");
+        // ... and equals a from-scratch build of the (unchanged) spec
+        let mut mg2 = MutableGraph::new(spec);
+        let mut eng2 = IncrementalReplayer::new();
+        let log = mg2.commit();
+        eng2.replay_incremental(&mg2, &log);
+        let fresh = schedule_by_canon(&mg2, &eng2);
+        assert_eq!(after, fresh, "{model}/{scheme}: diverged from fresh build");
+        assert_eq!(d.mg().validate(), Ok(()));
+    }
+}
+
+#[test]
+fn diagnose_answers_four_query_kinds_with_zero_builds() {
+    // the acceptance contract: >= 4 what-if query kinds answered with
+    // builds_during_search == 0, via the transaction counter
+    let spec = JobSpec::standard("resnet50", "byteps", Transport::Rdma);
+    let mut d = Diagnoser::new(spec);
+    let queries = [
+        WhatIfQuery::PerfectOverlap,
+        WhatIfQuery::ScaleNic(2.0),
+        WhatIfQuery::EqualizeWorker(0),
+        WhatIfQuery::ZeroGroup(0),
+        WhatIfQuery::ShrinkOp(0, 0.5),
+    ];
+    let builds0 = build_count();
+    let answers: Vec<_> = queries.iter().map(|q| d.what_if(q)).collect();
+    assert_eq!(build_count() - builds0, 0, "what-if queries built graphs");
+    assert_eq!(d.builds_during_queries(), 0);
+    assert_eq!(answers.len(), 5);
+    for a in &answers {
+        assert!(a.iteration_us > 0.0);
+    }
+    // and the bundled report agrees
+    let auto = d.auto_queries();
+    let rep = d.report(&auto, 5);
+    assert_eq!(rep.builds_during_queries, 0);
+}
+
+// ---------------------------------------------------------------------------
+// 4. blame-ranked search spends fewer candidates
+// ---------------------------------------------------------------------------
+
+/// Candidates tried when the search first reached `target` or better.
+fn candidates_to(out: &SearchOutcome, target: f64) -> Option<usize> {
+    out.accept_trace
+        .iter()
+        .find(|&&(_, t)| t <= target)
+        .map(|&(n, _)| n)
+}
+
+#[test]
+fn blame_ranking_reaches_target_in_fewer_candidates() {
+    let pairs = [
+        ("resnet50", "horovod"),
+        ("vgg16", "byteps"),
+        ("vgg16", "horovod"),
+        ("bert_base", "horovod"),
+    ];
+    let mut strictly_fewer = false;
+    for (model, scheme) in pairs {
+        let spec = JobSpec::standard(model, scheme, Transport::Rdma);
+        let run = |ranked: bool| {
+            let opts = SearchOpts {
+                use_blame_ranking: ranked,
+                max_rounds: 6,
+                budget_wall_s: 60.0,
+                ..Default::default()
+            };
+            optimize(&spec, &opts)
+        };
+        let unranked = run(false);
+        let ranked = run(true);
+        // the ranked search must still land at (or beyond) the same cost
+        let target = unranked.est_iteration_us;
+        let (Some(r), Some(u)) = (candidates_to(&ranked, target), candidates_to(&unranked, target))
+        else {
+            continue;
+        };
+        if r < u {
+            strictly_fewer = true;
+        }
+    }
+    assert!(
+        strictly_fewer,
+        "blame ranking never strictly reduced candidates-to-target on any pair"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 5. degraded traces degrade, never panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn whatif_on_degraded_trace_warns_instead_of_panicking() {
+    let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+    let tb = dpro::testbed::run(
+        &spec,
+        &dpro::testbed::TestbedOpts { iterations: 2, ..Default::default() },
+    );
+    let mut trace = tb.trace.clone();
+    let dropped = degrade::drop_events(&mut trace, 0.5, 1234);
+    assert!(dropped > 0);
+    let mut report = TraceReport::default();
+    validate(&trace, &mut report);
+
+    let mut d = Diagnoser::from_trace(spec, &trace, report);
+    let auto = d.auto_queries();
+    let rep = d.report(&auto, 5);
+    // the damage is reported, in TraceReport form...
+    assert!(!rep.trace.is_clean(), "dropped events must be flagged");
+    assert!(
+        rep.trace.count(DiagKind::MissingProfile) > 0
+            || rep.trace.count(DiagKind::UnmatchedTxid) > 0,
+        "expected missing_profile/unmatched_txid diagnostics: {}",
+        rep.trace
+    );
+    // ...and the diagnosis itself stays sound: exact sums, finite answers
+    assert_blame_exact(&d, "degraded vgg16/horovod");
+    for a in &rep.whatif {
+        assert!(a.iteration_us.is_finite() && a.iteration_us >= 0.0, "{}", a.query);
+    }
+    assert_eq!(rep.builds_during_queries, 0);
+}
