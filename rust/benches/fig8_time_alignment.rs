@@ -3,10 +3,11 @@
 //! error); larger clusters add NTP-grade clock drift.
 //!
 //! A second table sweeps *degraded* traces through the full on-disk
-//! pipeline (`trace::degrade` → `trace::io::dump_dir` → `load_dir` →
-//! replay): injected clock drift, dropped events, straggler iterations,
-//! and a compound failure — reporting the ingestion diagnostics and the
-//! replay error with raw vs aligned profiles.
+//! pipeline (`trace::degrade`/`fault` → `trace::io::dump_dir` →
+//! `load_dir` → replay): injected clock drift, dropped events, straggler
+//! iterations, worker crashes, machine losses, NIC flaps, and compound
+//! failures — reporting the ingestion diagnostics and the replay error
+//! with raw vs aligned profiles.
 
 use dpro::baselines::deployed_default;
 use dpro::config::{ClusterSpec, CommPlan, FusionPlan, JobSpec, NetworkSpec, Transport};
@@ -49,6 +50,16 @@ fn main() {
     degraded_trace_table();
 }
 
+/// An iteration-pinned fault (docs/FAULTS.md grammar) as a degradation
+/// knob for the scenario table.
+fn fault_knob(spec: &'static str) -> Box<dyn Fn(&mut GTrace)> {
+    Box::new(move |t: &mut GTrace| {
+        for f in dpro::fault::parse_faults(spec).unwrap() {
+            f.apply(t);
+        }
+    })
+}
+
 /// Degraded-trace robustness sweep: every scenario round-trips through
 /// the on-disk pipeline, so the diagnostics column is what `dpro replay
 /// --trace-dir` would report on the same dump.
@@ -89,6 +100,20 @@ fn degraded_trace_table() {
                 degrade::drop_events(t, 0.02, 23);
             }),
         ),
+        // fault scenarios (docs/FAULTS.md): what `--inject` applies —
+        // ingestion must stay a diagnosis, never a failure
+        ("worker crash w1@3", fault_knob("worker-crash:1@3")),
+        ("machine loss m1@3", fault_knob("machine-loss:1@3")),
+        ("NIC flap m1 x5@2..4", fault_knob("nic-flap:1:5@2..4")),
+        (
+            "crash + drift",
+            Box::new(|t: &mut GTrace| {
+                degrade::inject_drift(t, 1, DRIFT_US);
+                for f in dpro::fault::parse_faults("worker-crash:1@3").unwrap() {
+                    f.apply(t);
+                }
+            }),
+        ),
     ];
 
     let dir = std::env::temp_dir().join(format!("dpro_fig8_degraded_{}", std::process::id()));
@@ -102,9 +127,10 @@ fn degraded_trace_table() {
         let raw = profiler::estimate(&spec, &loaded.trace, false);
         let aligned = profiler::estimate(&spec, &loaded.trace, true);
         let diags = format!(
-            "{} unmatched, {} overlap",
+            "{} unmatched, {} overlap, {} lost",
             loaded.report.count(DiagKind::UnmatchedTxid),
             loaded.report.count(DiagKind::OverlapOnProc),
+            loaded.report.count(DiagKind::WorkerLost),
         );
         rows.push(vec![
             label.to_string(),

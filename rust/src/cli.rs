@@ -34,11 +34,26 @@
 //! strategy ([`crate::optimizer::strategy::parse_strategies`]) — adding a
 //! strategy likewise extends `optimize`.
 //!
+//! `replay` and `diagnose` accept `--inject <fault-spec>[,<fault-spec>]`
+//! (see [`crate::fault::FAULT_FORMS`] and `docs/FAULTS.md`): each fault is
+//! applied to the loaded trace *before* estimation, so "what does a crash
+//! at iteration 3 look like?" is answered by replay, not by crashing a
+//! fleet. A trace showing lost workers surfaces `worker_lost` diagnostics
+//! and a `continue-on:<survivors>` what-if (the elastic replan).
+//!
 //! Invalid argument values (an unparsable `--workers`, an unknown
-//! `--transport`/`--model`/`--scheme`/strategy name) are rejected with a
-//! message listing the valid values and exit code 2 — never silently
-//! replaced by a default. `replay`, `optimize` and `report` accept
-//! `--json` for machine-readable output on stdout.
+//! `--transport`/`--model`/`--scheme`/strategy name, a malformed
+//! `--inject` spec) are rejected with a message listing the valid values
+//! and exit code 2 — never silently replaced by a default. `replay`,
+//! `optimize` and `report` accept `--json` for machine-readable output on
+//! stdout.
+//!
+//! Exit-code contract for the trace-consuming commands
+//! (`replay`/`align`/`diagnose`, asserted by the CI fixture smoke): **0**
+//! for a clean run *and* for a degraded-but-usable trace (the warnings
+//! live in the `report` payload), **2** for argument errors, **3** for an
+//! unusable trace (unreadable directory, zero usable events) — distinct
+//! so scripts can tell "you typoed" from "the dump is bad".
 
 use crate::alignment::Alignment;
 use crate::baselines;
@@ -81,23 +96,27 @@ fn usage() {
          commands:\n  \
          profile  --model M --scheme S --transport T [-o trace.json] [--dump-dir DIR] [--iters 10]\n  \
          replay   --trace-dir DIR | --trace trace.json [--model M --scheme S --transport T]\n           \
-         [--no-align] [--json]\n  \
+         [--no-align] [--inject FAULTS] [--json]\n  \
          align    --trace-dir DIR | --trace trace.json [--json]\n  \
          diagnose [--model M --scheme S --transport T] [--trace-dir DIR]\n           \
-         [--whatif auto|perfect-overlap,nic-bw=2,nvlink-bw=2,equalize=W,zero-group=G,shrink-op=OP:F]\n           \
-         [--top 5] [--json]\n  \
+         [--whatif auto|perfect-overlap,nic-bw=2,nvlink-bw=2,equalize=W,zero-group=G,shrink-op=OP:F,continue-on:K]\n           \
+         [--inject FAULTS] [--top 5] [--json]\n  \
          optimize --model M --scheme S --transport T [--budget-s 60] [--strawman]\n           \
          [--strategies {}] [--memory-budget-gb G] [--json]\n  \
          train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n           \
          [--dump-dir DIR]\n  \
          report   --model M [--scheme S] [--transport T] [--json]\n\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
-         schemes: {}   transports: rdma tcp\n\n\
+         schemes: {}   transports: rdma tcp\n\
+         faults (--inject, docs/FAULTS.md): {}\n\n\
          trace directories follow docs/TRACE_FORMAT.md; `replay --trace-dir`\n\
-         reads the job from the dump's metadata.json (explicit flags win)",
+         reads the job from the dump's metadata.json (explicit flags win).\n\
+         exit codes for replay/align/diagnose: 0 ok (even with warnings),\n\
+         2 bad arguments, 3 unusable trace",
         crate::version(),
         strategy::STRATEGY_NAMES.join(","),
         ALL_SCHEMES.join(" "),
+        crate::fault::FAULT_FORMS,
     );
 }
 
@@ -276,6 +295,16 @@ fn trace_from_args(args: &Args) -> Result<(GTrace, TraceReport, Option<JobMeta>)
     }
 }
 
+/// Parse `--inject` into a fault list (empty when the flag is absent).
+/// Validation happens before any trace is read: a malformed spec is an
+/// argument error (exit 2), not a trace error.
+fn faults_from_args(args: &Args) -> Result<Vec<crate::fault::Fault>, String> {
+    match args.get("inject") {
+        None => Ok(Vec::new()),
+        Some(list) => crate::fault::parse_faults(list),
+    }
+}
+
 /// Machine-readable replay outcome: schema-stable keys asserted by the
 /// golden-fixture CI step (`ops`, `profiled_ops`, `aligned`,
 /// `iteration_us`, `fw_us`, `bw_us`, `est_peak_mem_bytes`, `report`).
@@ -298,11 +327,20 @@ pub fn replay_json(
 }
 
 fn cmd_replay(args: &Args) -> i32 {
-    let (trace, report, job) = match trace_from_args(args) {
+    // cheap argument validation first: a bad --inject spec must exit 2
+    // before a multi-GB trace ingestion starts
+    let faults = match faults_from_args(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let (mut trace, mut report, job) = match trace_from_args(args) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
-            return 1;
+            return 3;
         }
     };
     let spec = match job_from_args_with(args, job.as_ref()) {
@@ -312,6 +350,12 @@ fn cmd_replay(args: &Args) -> i32 {
             return 2;
         }
     };
+    if !faults.is_empty() {
+        let edited = crate::fault::apply_all(&faults, &mut trace, &mut report);
+        if !args.flag("json") {
+            println!("injected {} fault(s), {edited} events affected", faults.len());
+        }
+    }
     let aligned = !args.flag("no-align");
     let est = profiler::estimate(&spec, &trace, aligned);
     if args.flag("json") {
@@ -362,7 +406,7 @@ fn cmd_align(args: &Args) -> i32 {
         Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
-            return 1;
+            return 3;
         }
     };
     let a = crate::alignment::align(&trace, 1.0, 1.0);
@@ -411,20 +455,39 @@ fn cmd_diagnose(args: &Args) -> i32 {
         },
     };
 
+    let faults = match faults_from_args(args) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
     // a trace is optional for diagnose: without one, the analytic cost
     // model supplies durations (the pre-deployment what-if workflow)
     let traced = args.get("trace-dir").is_some() || args.get("trace").is_some();
-    let (trace, report, job) = if traced {
+    if !faults.is_empty() && !traced {
+        eprintln!(
+            "--inject needs a measured trace to degrade; add --trace-dir DIR \
+             (or --trace FILE)"
+        );
+        return 2;
+    }
+    let (trace, mut report, job) = if traced {
         match trace_from_args(args) {
             Ok((t, r, j)) => (Some(t), r, j),
             Err(e) => {
                 eprintln!("{e}");
-                return 1;
+                return 3;
             }
         }
     } else {
         (None, TraceReport::default(), None)
     };
+    let trace = trace.map(|mut t| {
+        crate::fault::apply_all(&faults, &mut t, &mut report);
+        t
+    });
     let spec = match job_from_args_with(args, job.as_ref()) {
         Ok(spec) => spec,
         Err(e) => {

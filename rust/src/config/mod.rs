@@ -264,6 +264,27 @@ impl CommScheme {
     pub fn uses_servers(&self) -> bool {
         self.ps_spec().is_some()
     }
+
+    /// Re-derive the cluster-dependent parameters after the cluster shape
+    /// changed — the elastic-rescale hook
+    /// (`MutableGraph::rescale_workers`). Collective schemes keep their
+    /// tuning untouched; server schemes keep their tuning but re-size the
+    /// server fleet from the new machine count (colocated mode), exactly
+    /// as [`CommScheme::parse`] would size a fresh job on that cluster.
+    pub fn resized_for(&self, cluster: &ClusterSpec) -> CommScheme {
+        match self {
+            CommScheme::AllReduce(ar) => CommScheme::AllReduce(ar.clone()),
+            CommScheme::Ring(ar) => CommScheme::Ring(ar.clone()),
+            CommScheme::Ps(ps) => CommScheme::Ps(PsSpec {
+                n_servers: cluster.n_machines().max(1),
+                ..ps.clone()
+            }),
+            CommScheme::PsTree(ps) => CommScheme::PsTree(PsSpec {
+                n_servers: cluster.n_machines().max(1),
+                ..ps.clone()
+            }),
+        }
+    }
 }
 
 /// Parameters of the collective (AllReduce) scheme family.

@@ -98,6 +98,27 @@ impl Diagnoser {
         // reuse the alignment solved for the corrected profile above —
         // the §4.2 solve is the expensive ingestion step
         let facts = TraceFacts::from_trace_aligned(trace, &alignment);
+        // fault evidence becomes diagnostics, not errors: a trace with a
+        // crashed worker or a sick NIC still yields a full diagnosis (the
+        // ranking and the continue-on what-if pick the evidence up)
+        for &(w, from_iter) in &facts.lost_workers {
+            report.push(
+                Severity::Warning,
+                DiagKind::WorkerLost,
+                format!("w{w}: no events from iteration {from_iter} on"),
+            );
+        }
+        for &(m, stretch) in &facts.machine_comm_stretch {
+            if stretch >= rank::LINK_DEGRADED_FACTOR {
+                report.push(
+                    Severity::Warning,
+                    DiagKind::LinkDegraded,
+                    format!(
+                        "machine{m}: SEND/RECV durations {stretch:.1}x the fleet median"
+                    ),
+                );
+            }
+        }
         Diagnoser::assemble(MutableGraph::from_built(spec, g), report, Some(facts))
     }
 
@@ -192,6 +213,8 @@ impl Diagnoser {
     /// perfect-overlap bound, 2× NIC and NVLink bandwidth, the slowest
     /// rank equalized, the hottest comm chain zeroed, and the hottest
     /// kernel halved — at least four distinct query kinds on any job.
+    /// When the trace shows lost workers (and ≥ 2 survive), the battery
+    /// also prices `continue-on:<survivors>` — the elastic replan.
     pub fn auto_queries(&self) -> Vec<WhatIfQuery> {
         let mut qs = vec![
             WhatIfQuery::PerfectOverlap,
@@ -224,6 +247,16 @@ impl Diagnoser {
         }
         if let Some(fg) = gb.hottest_fusion_group() {
             qs.push(WhatIfQuery::ShrinkOp(fg as u32, 0.5));
+        }
+        // trace shows lost workers → price finishing on the survivors
+        // (elastic replan; only when ≥ 2 survive — a 1-worker "fleet" has
+        // nothing to communicate and is better restarted)
+        if let Some(f) = &self.facts {
+            let lost = f.lost_workers.len();
+            let survivors = self.mg.n_workers().saturating_sub(lost);
+            if lost > 0 && survivors >= 2 {
+                qs.push(WhatIfQuery::ContinueOn(survivors));
+            }
         }
         qs
     }

@@ -42,6 +42,14 @@ pub enum BottleneckKind {
     HotCommGroup,
     /// A fusion group (kernel) dominating critical-path compute.
     HotOpGroup,
+    /// A worker stopped emitting events before the trace ended (crashed
+    /// process, lost machine, or a missing per-process dump file) — the
+    /// fault [`crate::fault::Fault::WorkerCrash`] injects.
+    WorkerLost,
+    /// A machine's measured SEND/RECV durations are several times the
+    /// fleet median — a degraded or flapping NIC
+    /// ([`crate::fault::Fault::NicDegrade`] / `NicFlap`), not a slow GPU.
+    LinkDegraded,
 }
 
 impl BottleneckKind {
@@ -55,6 +63,8 @@ impl BottleneckKind {
             BottleneckKind::CommStage => "comm-stage",
             BottleneckKind::HotCommGroup => "hot-comm-group",
             BottleneckKind::HotOpGroup => "hot-op-group",
+            BottleneckKind::WorkerLost => "worker-lost",
+            BottleneckKind::LinkDegraded => "link-degraded",
         }
     }
 }
@@ -103,6 +113,17 @@ pub struct TraceFacts {
     /// Per iteration: mean measured FW/BW duration relative to the median
     /// iteration (1.0 = typical), sorted by iteration.
     pub iter_stretch: Vec<(u32, f64)>,
+    /// Workers that stop emitting events before the trace ends:
+    /// `(worker, first missing iteration)`, sorted by worker. A worker
+    /// with no events at all reports iteration 0 — the signature a
+    /// missing per-process dump file leaves after
+    /// [`crate::trace::io::load_dir`]'s partial-dump downgrade.
+    pub lost_workers: Vec<(u16, u32)>,
+    /// Per machine: mean measured SEND/RECV duration relative to the
+    /// fleet median machine (1.0 = typical), sorted by machine id —
+    /// drift-immune, like `machine_stretch`, but over the comm ops a
+    /// degraded NIC stretches.
+    pub machine_comm_stretch: Vec<(u16, f64)>,
 }
 
 impl TraceFacts {
@@ -151,8 +172,20 @@ impl TraceFacts {
         // ---- stretch: mean comp duration per machine / per iteration ----
         let mut by_machine: HashMap<u16, (f64, usize)> = HashMap::new();
         let mut by_iter: HashMap<u32, (f64, usize)> = HashMap::new();
+        // comm stretch separately: a degraded NIC inflates SEND/RECV but
+        // leaves the kernels alone, so mixing the two would dilute both
+        let mut comm_by_machine: HashMap<u16, (f64, usize)> = HashMap::new();
         for e in &trace.events {
-            if !matches!(e.kind, OpKind::Forward | OpKind::Backward) || !e.dur.is_finite() {
+            if !e.dur.is_finite() {
+                continue;
+            }
+            if matches!(e.kind, OpKind::Send | OpKind::Recv) {
+                let bc = comm_by_machine.entry(e.machine).or_insert((0.0, 0));
+                bc.0 += e.dur;
+                bc.1 += 1;
+                continue;
+            }
+            if !matches!(e.kind, OpKind::Forward | OpKind::Backward) {
                 continue;
             }
             let bm = by_machine.entry(e.machine).or_insert((0.0, 0));
@@ -164,7 +197,37 @@ impl TraceFacts {
         }
         let machine_stretch = relative_means(by_machine);
         let iter_stretch = relative_means(by_iter);
-        TraceFacts { machine_drift_us, machine_stretch, iter_stretch }
+        let machine_comm_stretch = relative_means(comm_by_machine);
+
+        // ---- lost workers: who stops emitting before the trace ends ----
+        // (the signature worker crashes, machine losses and missing dump
+        // files all share; metadata keeps n_workers at the full fleet
+        // size, so absent procs stay visible)
+        let mut lost_workers = Vec::new();
+        if trace.n_workers > 0 {
+            let last_iter = trace.events.iter().map(|e| e.iter).max().unwrap_or(0);
+            let mut max_iter: Vec<Option<u32>> = vec![None; trace.n_workers];
+            for e in &trace.events {
+                if (e.proc as usize) < trace.n_workers {
+                    let m = &mut max_iter[e.proc as usize];
+                    *m = Some(m.map_or(e.iter, |x| x.max(e.iter)));
+                }
+            }
+            for (w, mi) in max_iter.iter().enumerate() {
+                match *mi {
+                    None => lost_workers.push((w as u16, 0)),
+                    Some(mi) if mi < last_iter => lost_workers.push((w as u16, mi + 1)),
+                    _ => {}
+                }
+            }
+        }
+        TraceFacts {
+            machine_drift_us,
+            machine_stretch,
+            iter_stretch,
+            lost_workers,
+            machine_comm_stretch,
+        }
     }
 }
 
@@ -201,6 +264,11 @@ const STRAGGLER_MACHINE_FACTOR: f64 = 1.10;
 const STRAGGLER_ITER_FACTOR: f64 = 1.30;
 /// Clock offsets below this are unremarkable NTP jitter (us).
 const DRIFT_FLAG_US: f64 = 500.0;
+/// A machine's mean SEND/RECV duration must exceed the fleet median by
+/// this factor before its NIC is called degraded. Healthy heterogeneous
+/// fleets show comm ratios up to ~2.4x (PS servers vs. workers), so the
+/// bar sits well above the straggler factors.
+pub(crate) const LINK_DEGRADED_FACTOR: f64 = 3.0;
 /// How many hot comm/fusion groups to surface.
 const TOP_GROUPS: usize = 3;
 
@@ -413,6 +481,39 @@ pub fn rank(
                 });
             }
         }
+        for &(w, from_iter) in &f.lost_workers {
+            let survivors = n_workers.saturating_sub(f.lost_workers.len());
+            let remedy = if survivors >= 2 {
+                format!("what-if continue-on:{survivors} prices finishing on the survivors")
+            } else {
+                "too few survivors to continue — restart the job".to_string()
+            };
+            out.push(Bottleneck {
+                kind: BottleneckKind::WorkerLost,
+                subject: format!("w{w}"),
+                blame_us: blame.iteration_us,
+                headroom_us: blame.iteration_us / (n_workers.max(1) as f64),
+                detail: format!(
+                    "no events from iteration {from_iter} on — crashed worker, lost \
+                     machine, or missing dump file; {remedy}"
+                ),
+            });
+        }
+        for &(m, stretch) in &f.machine_comm_stretch {
+            if stretch >= LINK_DEGRADED_FACTOR {
+                out.push(Bottleneck {
+                    kind: BottleneckKind::LinkDegraded,
+                    subject: format!("machine{m}"),
+                    blame_us: blame.iteration_us * (1.0 - 1.0 / stretch),
+                    headroom_us: blame.iteration_us * (1.0 - 1.0 / stretch),
+                    detail: format!(
+                        "measured SEND/RECV durations {stretch:.1}x the fleet median \
+                         while kernels stay typical — degraded NIC; what-if nic-bw \
+                         prices restoring the link"
+                    ),
+                });
+            }
+        }
         for &(it, stretch) in &f.iter_stretch {
             if stretch > STRAGGLER_ITER_FACTOR {
                 out.push(Bottleneck {
@@ -500,5 +601,40 @@ mod tests {
         // iteration 2 must stand out
         let s2 = f.iter_stretch.iter().find(|&&(i, _)| i == 2).map(|&(_, s)| s);
         assert!(s2.unwrap_or(1.0) > STRAGGLER_ITER_FACTOR, "s2={s2:?}");
+    }
+
+    #[test]
+    fn trace_facts_detect_injected_faults() {
+        use crate::fault::Fault;
+        let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+        let tb = crate::testbed::run(
+            &spec,
+            &crate::testbed::TestbedOpts { iterations: 4, ..Default::default() },
+        );
+        // healthy trace: nobody lost, no link flagged
+        let clean = TraceFacts::from_trace(&tb.trace);
+        assert!(clean.lost_workers.is_empty(), "{:?}", clean.lost_workers);
+        assert!(
+            clean.machine_comm_stretch.iter().all(|&(_, s)| s < LINK_DEGRADED_FACTOR),
+            "{:?}",
+            clean.machine_comm_stretch
+        );
+
+        let mut trace = tb.trace.clone();
+        Fault::WorkerCrash { worker: 1, at_iter: 2 }.apply(&mut trace);
+        Fault::NicDegrade { machine: 1, factor: 8.0, at_iter: 0 }.apply(&mut trace);
+        let f = TraceFacts::from_trace(&trace);
+        assert!(
+            f.lost_workers.contains(&(1, 2)),
+            "crash not detected: {:?}",
+            f.lost_workers
+        );
+        let s1 = f
+            .machine_comm_stretch
+            .iter()
+            .find(|&&(m, _)| m == 1)
+            .map(|&(_, s)| s)
+            .unwrap_or(1.0);
+        assert!(s1 >= LINK_DEGRADED_FACTOR, "comm stretch not detected: {s1}");
     }
 }

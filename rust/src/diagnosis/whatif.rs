@@ -42,6 +42,13 @@ pub enum WhatIfQuery {
     /// Scale one fusion group's kernel duration by this factor on every
     /// worker (e.g. `0.5` = a 2× faster kernel).
     ShrinkOp(u32, f64),
+    /// Continue the job on `k` surviving workers: the elastic-recovery
+    /// counterfactual ("is it worth continuing on 7 after a failure?").
+    /// Unlike the duration rewrites above this is a *structural* query —
+    /// it runs [`MutableGraph::rescale_workers`] inside the same
+    /// begin → replay → rollback transaction, still with zero
+    /// `build_global*` calls.
+    ContinueOn(usize),
 }
 
 impl std::fmt::Display for WhatIfQuery {
@@ -53,13 +60,15 @@ impl std::fmt::Display for WhatIfQuery {
             WhatIfQuery::EqualizeWorker(w) => write!(f, "equalize={w}"),
             WhatIfQuery::ZeroGroup(g) => write!(f, "zero-group={g}"),
             WhatIfQuery::ShrinkOp(op, x) => write!(f, "shrink-op={op}:{x}"),
+            WhatIfQuery::ContinueOn(k) => write!(f, "continue-on:{k}"),
         }
     }
 }
 
 /// The query forms [`parse_whatif`] / the CLI `--whatif` flag accept.
 pub const WHATIF_FORMS: &str = "perfect-overlap, nic-bw=<factor>, nvlink-bw=<factor>, \
-     equalize=<worker>, zero-group=<group>, shrink-op=<fusion-group>:<factor>";
+     equalize=<worker>, zero-group=<group>, shrink-op=<fusion-group>:<factor>, \
+     continue-on:<workers>";
 
 /// Parse a comma-separated what-if list (the CLI `--whatif` value). The
 /// [`std::fmt::Display`] form of every query parses back to itself.
@@ -87,6 +96,12 @@ pub fn parse_whatif(list: &str) -> Result<Vec<WhatIfQuery>, String> {
                 op.parse::<u32>().map_err(|_| bad(tok))?,
                 parse_factor(fac).ok_or_else(|| bad(tok))?,
             )
+        } else if let Some(v) = tok.strip_prefix("continue-on:") {
+            let k = v.parse::<usize>().map_err(|_| bad(tok))?;
+            if k == 0 {
+                return Err(bad(tok));
+            }
+            WhatIfQuery::ContinueOn(k)
         } else {
             return Err(bad(tok));
         };
@@ -211,6 +226,9 @@ fn gather_edits(mg: &MutableGraph, q: &WhatIfQuery) -> Vec<(NodeId, f64)> {
                 }
             }
         }
+        // structural query: no duration edits — run_query dispatches it
+        // to the rescale primitive instead
+        WhatIfQuery::ContinueOn(_) => {}
     }
     edits
 }
@@ -229,6 +247,14 @@ pub(crate) fn run_query(
     let mut edited = 0usize;
     for (id, dur) in edits {
         edited += mg.override_duration(id, dur) as usize;
+    }
+    if let WhatIfQuery::ContinueOn(k) = *q {
+        // the elastic-recovery counterfactual: shrink the fleet inside
+        // the transaction (k >= current fleet is a no-op answer — the
+        // job already runs on that many workers or fewer)
+        if k < mg.n_workers() {
+            edited += mg.rescale_workers(k).unwrap_or(0);
+        }
     }
     let log = mg.commit();
     let iteration_us = eng.replay_incremental(mg, &log).iteration_time;
@@ -252,14 +278,17 @@ mod tests {
     #[test]
     fn parse_roundtrips_and_rejects() {
         let qs = parse_whatif(
-            "perfect-overlap, nic-bw=2, nvlink-bw=1.5, equalize=3, zero-group=0, shrink-op=5:0.5",
+            "perfect-overlap, nic-bw=2, nvlink-bw=1.5, equalize=3, zero-group=0, \
+             shrink-op=5:0.5, continue-on:7",
         )
         .unwrap();
-        assert_eq!(qs.len(), 6);
+        assert_eq!(qs.len(), 7);
         for q in &qs {
             assert_eq!(parse_whatif(&q.to_string()).unwrap(), vec![q.clone()]);
         }
-        for bad in ["warp-drive", "nic-bw=0", "nic-bw=-2", "shrink-op=5", "equalize=x", ""] {
+        for bad in
+            ["warp-drive", "nic-bw=0", "nic-bw=-2", "shrink-op=5", "equalize=x", "continue-on:0", ""]
+        {
             let err = parse_whatif(bad).unwrap_err();
             assert!(err.contains("perfect-overlap"), "{bad}: {err}");
         }
@@ -286,5 +315,29 @@ mod tests {
         let log = mg.commit();
         assert!(log.is_empty(mg.dfg().len()), "rollback left pending changes");
         assert_eq!(eng.replay_incremental(&mg, &log).iteration_time, base);
+    }
+
+    #[test]
+    fn continue_on_rescales_and_restores() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let n = spec.cluster.n_workers;
+        let mut mg = crate::graph::MutableGraph::new(spec);
+        let mut eng = crate::replay::incremental::IncrementalReplayer::new();
+        let log = mg.commit();
+        let base = eng.replay_incremental(&mg, &log).iteration_time;
+
+        let a = run_query(&mut mg, &mut eng, base, &WhatIfQuery::ContinueOn(n - 1));
+        assert!(a.edited_ops > 0, "the departing worker owns nodes");
+        assert!(a.iteration_us.is_finite() && a.iteration_us > 0.0);
+        // the fleet is restored: same worker count, same baseline replay
+        assert_eq!(mg.n_workers(), n);
+        assert_eq!(mg.spec().cluster.n_workers, n);
+        let log = mg.commit();
+        assert_eq!(eng.replay_incremental(&mg, &log).iteration_time, base);
+
+        // k >= n answers the baseline without touching the graph
+        let noop = run_query(&mut mg, &mut eng, base, &WhatIfQuery::ContinueOn(n + 5));
+        assert_eq!(noop.edited_ops, 0);
+        assert_eq!(noop.iteration_us, base);
     }
 }

@@ -1,0 +1,435 @@
+//! Fault model: inject worker/machine/link failures into a [`GTrace`].
+//!
+//! Production fleets lose workers, drop NICs, and ship half-written trace
+//! dumps; dPRO's replay-before-implement workflow (and Daydream's
+//! estimate-efficacy-first idea) applies to failures just as well as to
+//! optimizations. This module is the injection half of that story: a
+//! small closed set of faults, each pinned to an iteration boundary,
+//! parseable from a CLI spec string (`dpro replay|diagnose --inject …`)
+//! and deterministic — the same fault on the same trace always produces
+//! the same bytes. The detection half lives in `diagnosis/rank.rs`
+//! ([`DiagKind::WorkerLost`] / [`DiagKind::LinkDegraded`] findings and
+//! the `continue-on:<k>` what-if); the recovery half is
+//! `MutableGraph::rescale_workers`. See `docs/FAULTS.md` for the full
+//! grammar and semantics.
+//!
+//! Faults compose with the continuous degradation knobs in
+//! [`crate::trace::degrade`] (clock drift, event drops, straggler
+//! iterations): both operate in place on a `GTrace`, so any sequence of
+//! the two families is a valid degraded-trace scenario.
+//!
+//! [`DiagKind::WorkerLost`]: crate::trace::validate::DiagKind::WorkerLost
+//! [`DiagKind::LinkDegraded`]: crate::trace::validate::DiagKind::LinkDegraded
+
+use crate::graph::dfg::OpKind;
+use crate::trace::validate::{DiagKind, Severity, TraceReport};
+use crate::trace::GTrace;
+
+/// The valid `--inject` forms, quoted by every parse error.
+pub const FAULT_FORMS: &str = "worker-crash:<w>@<iter>, machine-loss:<m>@<iter>, \
+     nic-degrade:<m>:<factor>@<iter>, nic-flap:<m>:<factor>@<from>..<to>, \
+     straggler:<w>:<factor>@<iter>";
+
+/// One injectable fault, pinned to an iteration boundary.
+///
+/// Iteration pinning mirrors how elastic training frameworks observe
+/// failures: a worker is lost *between* iterations (its last complete
+/// iteration is `at_iter - 1`), a NIC degrades for a window of
+/// iterations, a straggler persists from some iteration on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Worker `worker` emits no events from iteration `at_iter` on —
+    /// the trace signature of a process crash.
+    WorkerCrash {
+        /// Crashed worker (process id).
+        worker: u16,
+        /// First iteration the worker misses.
+        at_iter: u32,
+    },
+    /// Every process on `machine` emits no events from `at_iter` on —
+    /// a host failure takes all its workers at once.
+    MachineLoss {
+        /// Lost machine id.
+        machine: u16,
+        /// First iteration the machine misses.
+        at_iter: u32,
+    },
+    /// `machine`'s NIC permanently degrades: SEND/RECV durations on it
+    /// are multiplied by `factor` (> 1 slows) from `at_iter` on.
+    NicDegrade {
+        /// Machine whose NIC degrades.
+        machine: u16,
+        /// Duration multiplier for its SEND/RECV events.
+        factor: f64,
+        /// First affected iteration.
+        at_iter: u32,
+    },
+    /// A transient NIC flap: like [`Fault::NicDegrade`] but only inside
+    /// the half-open iteration window `[from_iter, to_iter)`.
+    NicFlap {
+        /// Machine whose NIC flaps.
+        machine: u16,
+        /// Duration multiplier while flapping.
+        factor: f64,
+        /// First affected iteration (inclusive).
+        from_iter: u32,
+        /// First iteration after recovery (exclusive).
+        to_iter: u32,
+    },
+    /// Worker `worker` becomes a permanent straggler: its FW/BW kernel
+    /// durations are multiplied by `factor` from `at_iter` on.
+    Straggler {
+        /// Straggling worker.
+        worker: u16,
+        /// Duration multiplier for its compute kernels.
+        factor: f64,
+        /// First affected iteration.
+        at_iter: u32,
+    },
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::WorkerCrash { worker, at_iter } => {
+                write!(f, "worker-crash:{worker}@{at_iter}")
+            }
+            Fault::MachineLoss { machine, at_iter } => {
+                write!(f, "machine-loss:{machine}@{at_iter}")
+            }
+            Fault::NicDegrade { machine, factor, at_iter } => {
+                write!(f, "nic-degrade:{machine}:{factor}@{at_iter}")
+            }
+            Fault::NicFlap { machine, factor, from_iter, to_iter } => {
+                write!(f, "nic-flap:{machine}:{factor}@{from_iter}..{to_iter}")
+            }
+            Fault::Straggler { worker, factor, at_iter } => {
+                write!(f, "straggler:{worker}:{factor}@{at_iter}")
+            }
+        }
+    }
+}
+
+fn bad(spec: &str, why: &str) -> String {
+    format!("invalid fault spec '{spec}': {why}; valid forms: {FAULT_FORMS}")
+}
+
+fn parse_u16(spec: &str, s: &str, what: &str) -> Result<u16, String> {
+    s.parse::<u16>().map_err(|_| bad(spec, &format!("'{s}' is not a valid {what} id")))
+}
+
+fn parse_iter(spec: &str, s: &str) -> Result<u32, String> {
+    s.parse::<u32>().map_err(|_| bad(spec, &format!("'{s}' is not a valid iteration")))
+}
+
+fn parse_factor(spec: &str, s: &str) -> Result<f64, String> {
+    match s.parse::<f64>() {
+        Ok(x) if x.is_finite() && x > 0.0 => Ok(x),
+        _ => Err(bad(spec, &format!("'{s}' is not a positive finite factor"))),
+    }
+}
+
+/// Split `body` at the last `@` into (head, iteration part).
+fn split_at_iter<'a>(spec: &str, body: &'a str) -> Result<(&'a str, &'a str), String> {
+    body.rsplit_once('@').ok_or_else(|| bad(spec, "missing '@<iter>'"))
+}
+
+impl Fault {
+    /// Parse one fault from its canonical spec form (the inverse of
+    /// `Display`): `worker-crash:<w>@<iter>`, `machine-loss:<m>@<iter>`,
+    /// `nic-degrade:<m>:<factor>@<iter>`,
+    /// `nic-flap:<m>:<factor>@<from>..<to>`,
+    /// `straggler:<w>:<factor>@<iter>`.
+    pub fn parse(spec: &str) -> Result<Fault, String> {
+        let spec = spec.trim();
+        if let Some(body) = spec.strip_prefix("worker-crash:") {
+            let (w, it) = split_at_iter(spec, body)?;
+            return Ok(Fault::WorkerCrash {
+                worker: parse_u16(spec, w, "worker")?,
+                at_iter: parse_iter(spec, it)?,
+            });
+        }
+        if let Some(body) = spec.strip_prefix("machine-loss:") {
+            let (m, it) = split_at_iter(spec, body)?;
+            return Ok(Fault::MachineLoss {
+                machine: parse_u16(spec, m, "machine")?,
+                at_iter: parse_iter(spec, it)?,
+            });
+        }
+        if let Some(body) = spec.strip_prefix("nic-degrade:") {
+            let (head, it) = split_at_iter(spec, body)?;
+            let (m, fac) = head.split_once(':').ok_or_else(|| bad(spec, "missing ':<factor>'"))?;
+            return Ok(Fault::NicDegrade {
+                machine: parse_u16(spec, m, "machine")?,
+                factor: parse_factor(spec, fac)?,
+                at_iter: parse_iter(spec, it)?,
+            });
+        }
+        if let Some(body) = spec.strip_prefix("nic-flap:") {
+            let (head, window) = split_at_iter(spec, body)?;
+            let (m, fac) = head.split_once(':').ok_or_else(|| bad(spec, "missing ':<factor>'"))?;
+            let (from, to) = window
+                .split_once("..")
+                .ok_or_else(|| bad(spec, "flap window must be '<from>..<to>'"))?;
+            let (from_iter, to_iter) = (parse_iter(spec, from)?, parse_iter(spec, to)?);
+            if to_iter <= from_iter {
+                return Err(bad(spec, "flap window is empty (need from < to)"));
+            }
+            return Ok(Fault::NicFlap {
+                machine: parse_u16(spec, m, "machine")?,
+                factor: parse_factor(spec, fac)?,
+                from_iter,
+                to_iter,
+            });
+        }
+        if let Some(body) = spec.strip_prefix("straggler:") {
+            let (head, it) = split_at_iter(spec, body)?;
+            let (w, fac) = head.split_once(':').ok_or_else(|| bad(spec, "missing ':<factor>'"))?;
+            return Ok(Fault::Straggler {
+                worker: parse_u16(spec, w, "worker")?,
+                factor: parse_factor(spec, fac)?,
+                at_iter: parse_iter(spec, it)?,
+            });
+        }
+        Err(bad(spec, "unknown fault kind"))
+    }
+
+    /// Apply the fault to a trace in place; returns the number of events
+    /// removed (crash/loss) or edited (NIC/straggler). Deterministic and
+    /// idempotent for removals; duration faults compound if re-applied.
+    pub fn apply(&self, trace: &mut GTrace) -> usize {
+        match *self {
+            Fault::WorkerCrash { worker, at_iter } => {
+                let before = trace.events.len();
+                trace.events.retain(|e| !(e.proc == worker && e.iter >= at_iter));
+                before - trace.events.len()
+            }
+            Fault::MachineLoss { machine, at_iter } => {
+                let before = trace.events.len();
+                trace.events.retain(|e| !(e.machine == machine && e.iter >= at_iter));
+                before - trace.events.len()
+            }
+            Fault::NicDegrade { machine, factor, at_iter } => {
+                stretch_comm(trace, machine, factor, at_iter, u32::MAX)
+            }
+            Fault::NicFlap { machine, factor, from_iter, to_iter } => {
+                stretch_comm(trace, machine, factor, from_iter, to_iter)
+            }
+            Fault::Straggler { worker, factor, at_iter } => {
+                let mut n = 0;
+                for e in &mut trace.events {
+                    if e.proc == worker
+                        && e.iter >= at_iter
+                        && matches!(e.kind, OpKind::Forward | OpKind::Backward)
+                    {
+                        e.dur *= factor;
+                        n += 1;
+                    }
+                }
+                n
+            }
+        }
+    }
+
+    /// Like [`Fault::apply`], but also records the injection in the
+    /// trace report so downstream consumers (CLI `--json`, diagnosis)
+    /// see *why* the trace is degraded. Crash/loss faults record a
+    /// [`DiagKind::WorkerLost`] warning, NIC faults a
+    /// [`DiagKind::LinkDegraded`] warning; a straggler leaves no marker
+    /// (it is detected, not declared — `rank` flags the machine).
+    pub fn apply_with_report(&self, trace: &mut GTrace, report: &mut TraceReport) -> usize {
+        let n = self.apply(trace);
+        match *self {
+            Fault::WorkerCrash { worker, at_iter } => report.push(
+                Severity::Warning,
+                DiagKind::WorkerLost,
+                format!("injected {self}: worker {worker} lost at iteration {at_iter} ({n} events removed)"),
+            ),
+            Fault::MachineLoss { machine, at_iter } => report.push(
+                Severity::Warning,
+                DiagKind::WorkerLost,
+                format!("injected {self}: machine {machine} lost at iteration {at_iter} ({n} events removed)"),
+            ),
+            Fault::NicDegrade { machine, .. } | Fault::NicFlap { machine, .. } => report.push(
+                Severity::Warning,
+                DiagKind::LinkDegraded,
+                format!("injected {self}: NIC on machine {machine} degraded ({n} comm events stretched)"),
+            ),
+            Fault::Straggler { .. } => {}
+        }
+        n
+    }
+}
+
+/// Multiply SEND/RECV durations on `machine` inside `[from, to)`.
+fn stretch_comm(trace: &mut GTrace, machine: u16, factor: f64, from: u32, to: u32) -> usize {
+    let mut n = 0;
+    for e in &mut trace.events {
+        if e.machine == machine
+            && e.iter >= from
+            && e.iter < to
+            && matches!(e.kind, OpKind::Send | OpKind::Recv)
+        {
+            e.dur *= factor;
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Parse a comma-separated fault list (the `--inject` argument).
+pub fn parse_faults(list: &str) -> Result<Vec<Fault>, String> {
+    let mut out = Vec::new();
+    for part in list.split(',') {
+        if part.trim().is_empty() {
+            continue;
+        }
+        out.push(Fault::parse(part)?);
+    }
+    if out.is_empty() {
+        return Err(format!("empty fault list; valid forms: {FAULT_FORMS}"));
+    }
+    Ok(out)
+}
+
+/// Apply every fault in order, recording each in the report; returns the
+/// total event count removed/edited.
+pub fn apply_all(faults: &[Fault], trace: &mut GTrace, report: &mut TraceReport) -> usize {
+    faults.iter().map(|f| f.apply_with_report(trace, report)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    fn ev(name: &str, kind: OpKind, proc: u16, machine: u16, iter: u32, dur: f64) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            kind,
+            ts: 1000.0 * iter as f64,
+            dur,
+            proc,
+            machine,
+            iter,
+            txid: None,
+        }
+    }
+
+    fn toy() -> GTrace {
+        let mut events = Vec::new();
+        for iter in 0..3u32 {
+            for w in 0..4u16 {
+                let m = w / 2;
+                events.push(ev(&format!("w{w}.FW"), OpKind::Forward, w, m, iter, 100.0));
+                events.push(ev(&format!("w{w}.SEND"), OpKind::Send, w, m, iter, 40.0));
+                events.push(ev(&format!("w{w}.RECV"), OpKind::Recv, w, m, iter, 40.0));
+            }
+        }
+        GTrace { events, n_workers: 4, n_procs: 4, iterations: 3 }
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for s in [
+            "worker-crash:3@1",
+            "machine-loss:1@2",
+            "nic-degrade:1:5@1",
+            "nic-flap:0:3.5@1..3",
+            "straggler:2:4@0",
+        ] {
+            let f = Fault::parse(s).unwrap();
+            assert_eq!(f.to_string(), s, "display must round-trip");
+            assert_eq!(Fault::parse(&f.to_string()).unwrap(), f);
+        }
+        for s in [
+            "worker-crash:3",     // missing @iter
+            "worker-crash:x@1",   // bad worker
+            "nic-degrade:1@1",    // missing factor
+            "nic-degrade:1:0@1",  // non-positive factor
+            "nic-flap:1:2@3..3",  // empty window
+            "nic-flap:1:2@3..1",  // inverted window
+            "gpu-melt:1@1",       // unknown kind
+            "",
+        ] {
+            let e = Fault::parse(s).unwrap_err();
+            assert!(e.contains("worker-crash"), "error must list valid forms: {e}");
+        }
+        let fs = parse_faults("worker-crash:1@1, nic-flap:0:2@1..2").unwrap();
+        assert_eq!(fs.len(), 2);
+        assert!(parse_faults("  ").is_err());
+    }
+
+    #[test]
+    fn crash_removes_only_the_worker_from_the_boundary() {
+        let mut t = toy();
+        let n = Fault::parse("worker-crash:1@1").unwrap().apply(&mut t);
+        assert_eq!(n, 6, "2 iterations x 3 events");
+        assert!(t.events.iter().all(|e| e.proc != 1 || e.iter < 1));
+        // other workers and w1's pre-crash iteration are untouched
+        assert_eq!(t.events.len(), 36 - 6);
+    }
+
+    #[test]
+    fn machine_loss_takes_all_colocated_workers() {
+        let mut t = toy();
+        let n = Fault::parse("machine-loss:1@2").unwrap().apply(&mut t);
+        assert_eq!(n, 6, "workers 2,3 x 1 iteration x 3 events");
+        assert!(t.events.iter().all(|e| e.machine != 1 || e.iter < 2));
+    }
+
+    #[test]
+    fn nic_faults_stretch_only_comm_in_window() {
+        let mut t = toy();
+        let n = Fault::parse("nic-flap:0:5@1..2").unwrap().apply(&mut t);
+        assert_eq!(n, 4, "2 workers x 1 iteration x SEND+RECV");
+        for e in &t.events {
+            let hit = e.machine == 0 && e.iter == 1 && matches!(e.kind, OpKind::Send | OpKind::Recv);
+            assert_eq!(e.dur, if hit { 200.0 } else if e.kind == OpKind::Forward { 100.0 } else { 40.0 });
+        }
+        // permanent degrade covers the open end
+        let n = Fault::parse("nic-degrade:1:2@1").unwrap().apply(&mut t);
+        assert_eq!(n, 8, "2 workers x 2 iterations x SEND+RECV");
+    }
+
+    #[test]
+    fn straggler_stretches_compute_only() {
+        let mut t = toy();
+        let n = Fault::parse("straggler:0:3@0").unwrap().apply(&mut t);
+        assert_eq!(n, 3, "FW each iteration");
+        assert!(t
+            .events
+            .iter()
+            .filter(|e| e.proc == 0 && e.kind == OpKind::Forward)
+            .all(|e| e.dur == 300.0));
+    }
+
+    #[test]
+    fn apply_with_report_records_the_injection() {
+        let mut t = toy();
+        let mut rep = TraceReport::default();
+        let faults = parse_faults("worker-crash:1@1,nic-degrade:0:4@0").unwrap();
+        let n = apply_all(&faults, &mut t, &mut rep);
+        assert!(n > 0);
+        assert_eq!(rep.count(DiagKind::WorkerLost), 1);
+        assert_eq!(rep.count(DiagKind::LinkDegraded), 1);
+        assert!(rep.no_errors(), "injections are warnings: {rep}");
+    }
+
+    #[test]
+    fn faults_compose_with_degrade_knobs() {
+        use crate::trace::degrade;
+        let mut t = toy();
+        Fault::parse("worker-crash:3@1").unwrap().apply(&mut t);
+        let shifted = degrade::inject_drift(&mut t, 1, 500.0);
+        assert!(shifted > 0);
+        let dropped = degrade::drop_events(&mut t, 0.2, 7);
+        assert!(dropped > 0);
+        // deterministic under a fixed seed: same pipeline, same bytes
+        let mut t2 = toy();
+        Fault::parse("worker-crash:3@1").unwrap().apply(&mut t2);
+        degrade::inject_drift(&mut t2, 1, 500.0);
+        degrade::drop_events(&mut t2, 0.2, 7);
+        assert_eq!(t.events, t2.events);
+    }
+}

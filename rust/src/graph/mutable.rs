@@ -143,6 +143,18 @@ enum UndoOp {
     },
     /// `chain[gi]` was overwritten by a splice.
     Chain { gi: usize, old: Vec<NodeId> },
+    /// [`MutableGraph::rescale_workers`] shrank the cluster: the old
+    /// worker count and the displaced scheme (whose server-fleet sizing
+    /// depends on the machine count).
+    SpecCluster { n_workers: usize, scheme: crate::config::CommScheme },
+    /// [`MutableGraph::rescale_workers`] truncated the per-worker index
+    /// rows; the undo re-extends them and restores `n_workers`.
+    WorkerTail {
+        comp_rows: Vec<Vec<NodeId>>,
+        in_tails: Vec<Vec<NodeId>>,
+        out_tails: Vec<Vec<NodeId>>,
+        upd_tails: Vec<Vec<NodeId>>,
+    },
 }
 
 /// Token for one open transaction (see [`MutableGraph::begin`]). Consumed
@@ -471,6 +483,86 @@ impl MutableGraph {
         Ok(())
     }
 
+    /// **Elastic replan**: shrink the job from `n` to `new_n` workers in
+    /// place — the recovery half of the fault model ([`crate::fault`]),
+    /// and the edit behind the diagnosis engine's `continue-on:<k>`
+    /// what-if ("is it worth continuing on the survivors?").
+    ///
+    /// The *last* `n − new_n` workers depart (survivor identities — and
+    /// therefore their canonical ranks — are unchanged, which is what
+    /// makes the result comparable bit-for-bit against a fresh `new_n`
+    /// build): their comp, In/Out and update nodes are tombstoned, the
+    /// per-worker index rows truncated, the cluster and scheme re-derived
+    /// (PS fleets re-size from the new machine count), and every comm
+    /// chain re-spliced through the same [`build_group_comm`] the full
+    /// builder uses — zero `build_global*` calls. Inside an open
+    /// transaction the whole rescale journals its inverse, so a
+    /// [`Self::rollback`] restores the full fleet bit-exactly.
+    ///
+    /// Returns the number of departing-worker nodes tombstoned (the
+    /// re-spliced chains are not counted). Errors with
+    /// [`PassError::OutOfRange`] when `new_n` is zero or exceeds the
+    /// current worker count; `new_n == n` is a no-op returning 0.
+    pub fn rescale_workers(&mut self, new_n: usize) -> Result<usize, PassError> {
+        let old_n = self.n_workers;
+        if new_n == 0 || new_n > old_n {
+            return Err(PassError::OutOfRange);
+        }
+        if new_n == old_n {
+            return Ok(0);
+        }
+        if self.txn_open {
+            self.journal.push(UndoOp::SpecCluster {
+                n_workers: self.spec.cluster.n_workers,
+                scheme: self.spec.scheme.clone(),
+            });
+        }
+        self.spec.cluster.n_workers = new_n;
+        self.spec.scheme = self.spec.scheme.resized_for(&self.spec.cluster);
+
+        let comp_rows: Vec<Vec<NodeId>> = self.comp[new_n..].to_vec();
+        let n_groups = self.in_ops.len();
+        let mut in_tails: Vec<Vec<NodeId>> = Vec::with_capacity(n_groups);
+        let mut out_tails: Vec<Vec<NodeId>> = Vec::with_capacity(n_groups);
+        let mut upd_tails: Vec<Vec<NodeId>> = Vec::with_capacity(n_groups);
+        for gi in 0..n_groups {
+            in_tails.push(self.in_ops[gi][new_n..].to_vec());
+            out_tails.push(self.out_ops[gi][new_n..].to_vec());
+            upd_tails.push(self.upd_ops[gi][new_n..].to_vec());
+        }
+        if self.txn_open {
+            self.journal.push(UndoOp::WorkerTail {
+                comp_rows: comp_rows.clone(),
+                in_tails: in_tails.clone(),
+                out_tails: out_tails.clone(),
+                upd_tails: upd_tails.clone(),
+            });
+        }
+        // every node a departing worker owns; each tombstone journals its
+        // own revival record, and chain nodes are handled by the rebuild
+        let mut gone = 0usize;
+        for row in comp_rows.iter().chain(&in_tails).chain(&out_tails).chain(&upd_tails) {
+            for &id in row {
+                self.tombstone(id);
+                gone += 1;
+            }
+        }
+        self.comp.truncate(new_n);
+        for gi in 0..n_groups {
+            self.in_ops[gi].truncate(new_n);
+            self.out_ops[gi].truncate(new_n);
+            self.upd_ops[gi].truncate(new_n);
+        }
+        self.n_workers = new_n;
+        // every comm chain was sized for the old fleet — re-splice them
+        // all from the shrunk spec (the rebuilt stages read the new
+        // cluster shape, ring length, and server fleet)
+        for gi in 0..n_groups {
+            self.rebuild_chain(gi);
+        }
+        Ok(gone)
+    }
+
     /// **Duration override**: overwrite one live node's expected duration
     /// as a journaled in-place edit — the primitive the diagnosis engine's
     /// what-if queries are made of (scale a link's ops, zero a comm chain,
@@ -595,6 +687,26 @@ impl MutableGraph {
                 }
                 UndoOp::Chain { gi, old } => {
                     self.chain[gi] = old;
+                }
+                UndoOp::SpecCluster { n_workers, scheme } => {
+                    self.spec.cluster.n_workers = n_workers;
+                    self.spec.scheme = scheme;
+                }
+                UndoOp::WorkerTail { comp_rows, in_tails, out_tails, upd_tails } => {
+                    // runs after the departing workers' Tombstoned undos
+                    // (journal is popped in reverse), so the re-extended
+                    // rows point at already-revived nodes
+                    self.n_workers += comp_rows.len();
+                    self.comp.extend(comp_rows);
+                    for (gi, t) in in_tails.into_iter().enumerate() {
+                        self.in_ops[gi].extend(t);
+                    }
+                    for (gi, t) in out_tails.into_iter().enumerate() {
+                        self.out_ops[gi].extend(t);
+                    }
+                    for (gi, t) in upd_tails.into_iter().enumerate() {
+                        self.upd_ops[gi].extend(t);
+                    }
                 }
             }
         }
@@ -861,6 +973,41 @@ mod tests {
         m.set_partitions(3, 4).unwrap();
         let log = m.commit();
         assert!(log.is_empty(m.dfg().len()));
+        assert_eq!(m.validate(), Ok(()));
+    }
+
+    #[test]
+    fn rescale_workers_shrinks_the_fleet_in_place() {
+        let mut m = mg("vgg16", "horovod");
+        let n0 = m.n_workers();
+        let gone = m.rescale_workers(n0 - 2).unwrap();
+        assert!(gone > 0, "departing workers own nodes");
+        assert_eq!(m.n_workers(), n0 - 2);
+        assert_eq!(m.spec().cluster.n_workers, n0 - 2);
+        assert_eq!(m.validate(), Ok(()));
+        let log = m.commit();
+        assert!(!log.removed.is_empty());
+        // no-op and out-of-range paths
+        assert_eq!(m.rescale_workers(n0 - 2).unwrap(), 0);
+        assert!(m.rescale_workers(0).is_err());
+        assert!(m.rescale_workers(n0 + 1).is_err());
+        // ranks stay unique among the survivors
+        let mut seen = std::collections::HashSet::new();
+        for i in m.dfg().ids() {
+            if m.alive()[i as usize] {
+                assert!(seen.insert(m.canon_ranks()[i as usize]), "duplicate canon rank");
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_resizes_the_server_fleet() {
+        // 16 workers / 8 per machine = 2 colocated servers; dropping to
+        // one machine must shrink the fleet the way a fresh parse would
+        let mut m = mg("resnet50", "byteps");
+        assert_eq!(m.spec().scheme.n_servers(), 2);
+        m.rescale_workers(8).unwrap();
+        assert_eq!(m.spec().scheme.n_servers(), 1);
         assert_eq!(m.validate(), Ok(()));
     }
 

@@ -42,6 +42,7 @@ pub mod coordinator;
 pub mod runtime;
 pub mod config;
 pub mod diagnosis;
+pub mod fault;
 pub mod testbed;
 pub mod trace;
 pub mod graph;

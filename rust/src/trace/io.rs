@@ -345,14 +345,21 @@ pub fn load_dir(dir: &Path) -> Result<LoadedTrace, String> {
                     format!("{extra}: not in metadata file list; ignored"),
                 );
             }
-            // the converse is worse: a listed file that vanished means a
-            // whole process's events are missing (partial copy, dead
-            // worker) — a clean report would be a lie
+            // the converse means a whole process's events are missing
+            // (partial copy, dead worker) — the on-disk signature of a
+            // lost worker. Ingest what survives and flag the loss so the
+            // diagnosis engine can attribute it and offer the
+            // `continue-on:<k>` counterfactual; a hard error here would
+            // make a crashed worker unanalyzable exactly when analysis
+            // matters most (see docs/FAULTS.md).
             for gone in listed.iter().filter(|f| !names.contains(*f)) {
                 report.push(
-                    Severity::Error,
-                    DiagKind::Io,
-                    format!("{gone}: listed in metadata but missing from the directory"),
+                    Severity::Warning,
+                    DiagKind::WorkerLost,
+                    format!(
+                        "{gone}: listed in metadata but missing from the directory \
+                         — its process contributes no events (dead worker?)"
+                    ),
                 );
             }
             names
@@ -740,15 +747,18 @@ mod tests {
     }
 
     #[test]
-    fn missing_listed_file_is_an_error_diagnostic() {
+    fn missing_listed_file_is_a_worker_lost_warning() {
         let dir = tmp_dir("gone");
         dump_dir(&toy_trace(), &dir).unwrap();
         std::fs::remove_file(dir.join(proc_file_name(1))).unwrap();
         let loaded = load_dir(&dir).unwrap();
-        // proc 1's events are gone and the report must say so loudly
+        // proc 1's events are gone; that is the minimal dead-worker dump,
+        // and it must ingest as a diagnosed degradation, not an error
         assert_eq!(loaded.trace.events.len(), 2);
-        assert_eq!(loaded.report.count(DiagKind::Io), 1);
-        assert!(!loaded.report.no_errors(), "{}", loaded.report);
+        assert_eq!(loaded.report.count(DiagKind::WorkerLost), 1);
+        assert!(loaded.report.no_errors(), "{}", loaded.report);
+        // the declared shape survives, so the lost proc stays visible
+        assert_eq!(loaded.trace.n_workers, 2);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -87,6 +87,15 @@ pub enum DiagKind {
     /// estimates for them, so blame attributed to those ops is
     /// model-derived, not measured.
     MissingProfile,
+    /// A worker stopped emitting events before the trace ended (or its
+    /// per-process dump file is missing/empty) — the on-disk signature of
+    /// a crashed worker or lost machine. The trace still ingests; the
+    /// diagnosis engine attributes the fault and offers the
+    /// `continue-on:<k>` what-if (see `docs/FAULTS.md`).
+    WorkerLost,
+    /// One machine's SEND/RECV durations are several times the fleet
+    /// median — a degraded or flapping NIC rather than a slow kernel.
+    LinkDegraded,
 }
 
 impl DiagKind {
@@ -109,6 +118,8 @@ impl DiagKind {
             DiagKind::MetadataMismatch => "metadata_mismatch",
             DiagKind::IterationGap => "iteration_gap",
             DiagKind::MissingProfile => "missing_profile",
+            DiagKind::WorkerLost => "worker_lost",
+            DiagKind::LinkDegraded => "link_degraded",
         }
     }
 }

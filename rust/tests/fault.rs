@@ -1,0 +1,267 @@
+//! Fault-injection + elastic-recovery guarantees (docs/FAULTS.md):
+//!
+//! 1. **Elastic replan is exact**: `MutableGraph::rescale_workers(n-1)`
+//!    on a live incremental graph matches a from-scratch build + replay
+//!    of the (n-1)-worker spec bit-for-bit, for every registered scheme.
+//! 2. **`continue-on:<k>` is transactional**: the what-if runs as
+//!    begin → apply → replay → rollback with zero `build_global*` calls,
+//!    and the graph + engine are restored bit-exactly afterward.
+//! 3. **Any single-fault trace diagnoses, never panics**: every scheme ×
+//!    every fault kind ingests into a full diagnosis with the fault
+//!    surfaced as a warning, not an error.
+//! 4. **Fuzzed partial dumps never panic ingestion** (seeded): truncating
+//!    or byte-flipping any single dump file yields, at worst, a typed
+//!    error from `load_dir`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use dpro::config::{JobSpec, Transport, ALL_SCHEMES};
+use dpro::diagnosis::{Diagnoser, WhatIfQuery};
+use dpro::fault::Fault;
+use dpro::graph::MutableGraph;
+use dpro::replay::incremental::IncrementalReplayer;
+use dpro::testbed::{run as tb_run, TestbedOpts};
+use dpro::trace::io::{dump_dir_with_job, load_dir, JobMeta};
+use dpro::trace::validate::DiagKind;
+use dpro::trace::GTrace;
+use dpro::util::rng::Pcg;
+
+fn full_replay(spec: &JobSpec) -> (MutableGraph, IncrementalReplayer) {
+    let mut mg = MutableGraph::new(spec.clone());
+    let mut eng = IncrementalReplayer::new();
+    let log = mg.commit();
+    eng.replay_incremental(&mg, &log);
+    (mg, eng)
+}
+
+/// Live-node schedule keyed by canonical rank — the node identity shared
+/// between an incrementally-edited graph and a fresh build of its spec.
+fn schedule_by_canon(mg: &MutableGraph, eng: &IncrementalReplayer) -> HashMap<u64, (f64, f64)> {
+    let r = eng.result();
+    let mut m = HashMap::new();
+    for i in mg.dfg().ids() {
+        let iu = i as usize;
+        if mg.alive()[iu] {
+            let prev = m.insert(mg.canon_ranks()[iu], (r.start[iu], r.end[iu]));
+            assert!(prev.is_none(), "duplicate canonical rank");
+        }
+    }
+    m
+}
+
+/// The incremental state must equal a from-scratch build of the current
+/// spec, bit-for-bit on iteration time and per-node times by rank.
+fn assert_matches_fresh(mg: &MutableGraph, eng: &IncrementalReplayer, label: &str) {
+    let inc = eng.result().iteration_time;
+    let (mg2, eng2) = full_replay(mg.spec());
+    let fresh = eng2.result().iteration_time;
+    assert_eq!(inc, fresh, "{label}: iteration_time diverged");
+    let a = schedule_by_canon(mg, eng);
+    let b = schedule_by_canon(&mg2, &eng2);
+    assert_eq!(a.len(), b.len(), "{label}: live node counts differ");
+    for (c, &(s1, e1)) in &a {
+        let &(s2, e2) =
+            b.get(c).unwrap_or_else(|| panic!("{label}: rank {c:#x} missing in fresh build"));
+        assert!(
+            (s1 - s2).abs() <= 1e-6 && (e1 - e2).abs() <= 1e-6,
+            "{label}: node times diverged ({s1},{e1}) vs ({s2},{e2})"
+        );
+    }
+}
+
+#[test]
+fn elastic_replan_matches_fresh_smaller_build() {
+    for scheme in ALL_SCHEMES {
+        let spec = JobSpec::standard("vgg16", scheme, Transport::Rdma);
+        let n = spec.cluster.n_workers;
+        let (mut mg, mut eng) = full_replay(&spec);
+
+        // n → n-1: the acceptance bar
+        let gone = mg.rescale_workers(n - 1).unwrap();
+        assert!(gone > 0, "{scheme}: rescale removed no nodes");
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        assert_eq!(mg.n_workers(), n - 1);
+        assert_eq!(mg.spec().cluster.n_workers, n - 1);
+        assert_matches_fresh(&mg, &eng, &format!("{scheme} n->n-1"));
+
+        // and further down, across a machine boundary (8 gpus/machine)
+        mg.rescale_workers(n - 9).unwrap();
+        let log = mg.commit();
+        eng.replay_incremental(&mg, &log);
+        assert_matches_fresh(&mg, &eng, &format!("{scheme} n->n-9"));
+    }
+}
+
+#[test]
+fn continue_on_is_transactional_across_schemes() {
+    for scheme in ALL_SCHEMES {
+        let spec = JobSpec::standard("vgg16", scheme, Transport::Rdma);
+        let n = spec.cluster.n_workers;
+        let mut d = Diagnoser::new(spec);
+        let base = d.baseline_us();
+        let before = schedule_by_canon(d.mg(), d.engine());
+
+        let ans = d.what_if(&WhatIfQuery::ContinueOn(n - 2));
+        assert!(ans.edited_ops > 0, "{scheme}: continue-on edited nothing");
+        assert!(
+            ans.iteration_us.is_finite() && ans.iteration_us > 0.0,
+            "{scheme}: bad answer {}",
+            ans.iteration_us
+        );
+
+        // transactional: zero builds, fleet + schedule restored bit-exactly
+        assert_eq!(d.builds_during_queries(), 0, "{scheme}: query rebuilt the graph");
+        assert_eq!(d.mg().n_workers(), n, "{scheme}: fleet not restored");
+        assert_eq!(d.baseline_us(), base, "{scheme}: baseline drifted");
+        let after = schedule_by_canon(d.mg(), d.engine());
+        assert_eq!(before, after, "{scheme}: schedule not restored bit-exactly");
+
+        // k >= n is the no-op baseline answer, still transactional
+        let noop = d.what_if(&WhatIfQuery::ContinueOn(n + 3));
+        assert_eq!(noop.edited_ops, 0);
+        assert_eq!(noop.iteration_us, base);
+        assert_eq!(d.builds_during_queries(), 0);
+    }
+}
+
+/// Every scheme × every fault kind: inject into a measured trace,
+/// diagnose, and the session must end with a finite answer, zero builds,
+/// and (for worker-killing faults) `worker_lost` evidence in the report.
+#[test]
+fn single_fault_scenarios_diagnose_without_panic() {
+    let fault_specs = [
+        "worker-crash:1@2",
+        "machine-loss:1@2",
+        "nic-degrade:1:4@1",
+        "nic-flap:1:6@1..3",
+        "straggler:2:3@1",
+    ];
+    for scheme in ALL_SCHEMES {
+        let spec = JobSpec::standard("resnet50", scheme, Transport::Rdma);
+        let tb = tb_run(&spec, &TestbedOpts { iterations: 3, ..Default::default() });
+        for fs in fault_specs {
+            let label = format!("{scheme} + {fs}");
+            let fault = Fault::parse(fs).unwrap();
+            let mut trace = tb.trace.clone();
+            let mut report = dpro::trace::validate::TraceReport::default();
+            report.events_loaded = trace.events.len();
+            fault.apply_with_report(&mut trace, &mut report);
+
+            let mut d = Diagnoser::from_trace(spec.clone(), &trace, report);
+            let qs = d.auto_queries();
+            let rep = d.report(&qs, 5);
+            assert!(
+                rep.iteration_us.is_finite() && rep.iteration_us > 0.0,
+                "{label}: bad iteration {}",
+                rep.iteration_us
+            );
+            assert_eq!(rep.builds_during_queries, 0, "{label}: queries rebuilt");
+            assert!(rep.trace.no_errors(), "{label}: fault escalated to error: {}", rep.trace);
+            if fs.starts_with("worker-crash") || fs.starts_with("machine-loss") {
+                assert!(
+                    rep.trace.count(DiagKind::WorkerLost) >= 1,
+                    "{label}: lost worker not surfaced: {}",
+                    rep.trace
+                );
+                // the battery must have priced the elastic replan
+                assert!(
+                    rep.whatif.iter().any(|a| a.query.starts_with("continue-on:")),
+                    "{label}: no continue-on what-if in {:?}",
+                    rep.whatif.iter().map(|a| a.query.clone()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+}
+
+/// A crashed-worker dump round-trips through the on-disk pipeline and
+/// still diagnoses: the partial per-process file set is a warning
+/// (`worker_lost`), never an ingestion error.
+#[test]
+fn crashed_worker_dump_roundtrips_to_diagnosis() {
+    let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+    let tb = tb_run(&spec, &TestbedOpts { iterations: 3, ..Default::default() });
+    let mut trace = tb.trace.clone();
+    Fault::WorkerCrash { worker: 1, at_iter: 0 }.apply(&mut trace);
+
+    let dir = tmp_dir("crash_roundtrip");
+    dump_dir_with_job(&trace, &dir, Some(&JobMeta::of(&spec))).unwrap();
+    // a worker dead from iteration 0 writes no dump file at all, but the
+    // metadata still declares the full fleet — the loader must keep
+    // n_workers and leave detection to the diagnosis, not error out
+    let loaded = load_dir(&dir).unwrap();
+    assert!(loaded.report.no_errors(), "{}", loaded.report);
+    assert_eq!(loaded.trace.n_workers, spec.cluster.n_workers, "fleet size lost");
+
+    let mut d = Diagnoser::from_trace(spec, &loaded.trace, loaded.report);
+    let qs = d.auto_queries();
+    let rep = d.report(&qs, 8);
+    assert!(rep.trace.count(DiagKind::WorkerLost) >= 1, "{}", rep.trace);
+    assert!(
+        rep.bottlenecks.iter().any(|b| b.kind.name() == "worker-lost"),
+        "no worker-lost bottleneck in {:?}",
+        rep.bottlenecks.iter().map(|b| b.kind.name()).collect::<Vec<_>>()
+    );
+    assert_eq!(rep.builds_during_queries, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite: seeded fuzz over single-file corruption. Truncating or
+/// byte-flipping any one dump file must never panic `load_dir` — worst
+/// case is a typed error string.
+#[test]
+fn fuzzed_single_file_corruption_never_panics_ingestion() {
+    let mut spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+    spec.cluster.n_workers = 4;
+    spec.cluster.gpus_per_machine = 2;
+    let tb = tb_run(&spec, &TestbedOpts { iterations: 2, ..Default::default() });
+    let dir = tmp_dir("fuzz_corrupt");
+    dump_dir_with_job(&tb.trace, &dir, Some(&JobMeta::of(&spec))).unwrap();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    files.sort();
+    assert!(files.len() >= 5, "expected metadata + 4 proc files, got {files:?}");
+
+    let mut rng = Pcg::seeded(0x5EED_FA17);
+    for round in 0..40 {
+        let path = &files[rng.below(files.len())];
+        let pristine = std::fs::read(path).unwrap();
+        let corrupted = if rng.below(2) == 0 {
+            // truncate at a random offset (half-written dump)
+            pristine[..rng.below(pristine.len().max(1))].to_vec()
+        } else {
+            // flip one random byte (bit rot / torn write)
+            let mut b = pristine.clone();
+            if !b.is_empty() {
+                let at = rng.below(b.len());
+                b[at] ^= 1 << rng.below(8) as u8;
+            }
+            b
+        };
+        std::fs::write(path, &corrupted).unwrap();
+        // the contract under fuzz: Ok-with-report or a typed error —
+        // a panic aborts this test
+        match load_dir(&dir) {
+            Ok(loaded) => {
+                let _: &GTrace = &loaded.trace;
+                let _ = loaded.report.to_json().to_string();
+            }
+            Err(e) => assert!(!e.is_empty(), "round {round}: empty error"),
+        }
+        std::fs::write(path, &pristine).unwrap();
+    }
+    // pristine bytes restored → the dump must load cleanly again
+    let loaded = load_dir(&dir).unwrap();
+    assert_eq!(loaded.trace.events.len(), tb.trace.events.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dpro_fault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
