@@ -1,13 +1,22 @@
 //! Paper Fig. 10: large-scale behaviour up to 128 GPUs — (a) replay
 //! accuracy of dPRO vs Daydream as the cluster grows, (b) throughput of
 //! dPRO's combined strategies vs XLA default fusion (paper: up to 3.48x),
-//! (c) replay scaling across **all registered comm schemes** in one table.
+//! (c) replay scaling across **all registered comm schemes** in one table,
+//! (d) fleet-scale replay at 1k–4k workers: tiered (symmetry-class)
+//! simulation vs exact event replay, in rounds/sec. Section (d) is
+//! emitted to `BENCH_fig10_scalability.json` for the CI perf trajectory.
+
+use std::time::Instant;
 
 use dpro::baselines::{self, daydream};
 use dpro::config::{ClusterSpec, JobSpec, NetworkSpec, ALL_SCHEMES};
+use dpro::graph::{build_global_nameless, AnalyticCost};
 use dpro::optimizer::{optimize, SearchOpts};
 use dpro::profiler;
+use dpro::replay::tiered::TieredReplayer;
+use dpro::replay::Replayer;
 use dpro::testbed::{run, TestbedOpts};
+use dpro::util::json::Json;
 use dpro::util::print_table;
 use dpro::util::stats::rel_err_pct;
 
@@ -23,6 +32,32 @@ fn scheme_spec_for(model: &str, scheme: &str, gpus: usize) -> JobSpec {
 
 fn spec_for(model: &str, gpus: usize) -> JobSpec {
     scheme_spec_for(model, "horovod", gpus)
+}
+
+/// Replay rounds until `slice_s` elapses (at least one, at most 12);
+/// returns (rounds/sec, last iteration estimate in us).
+fn rounds_per_sec(mut one_round: impl FnMut() -> f64, slice_s: f64) -> (f64, f64) {
+    let t0 = Instant::now();
+    let mut iter_us = one_round();
+    let mut rounds = 1usize;
+    loop {
+        let el = t0.elapsed().as_secs_f64();
+        if el >= slice_s || rounds >= 12 {
+            return (rounds as f64 / el.max(1e-9), iter_us);
+        }
+        iter_us = one_round();
+        rounds += 1;
+    }
+}
+
+/// Estimated resident simulator state per worker: the SoA per-node arrays
+/// (durations, ready times, schedule, device/class ids ≈ 64 B/node) plus
+/// the adjacency lists (each edge appears in one preds and one succs slot,
+/// 4 B each). The point of the metric is that it stays flat per worker as
+/// the fleet grows — a 4096-worker job must not cost more per worker than
+/// a 16-worker one.
+fn state_bytes_per_worker(nodes: usize, edges: usize, workers: usize) -> f64 {
+    (nodes as f64 * 64.0 + edges as f64 * 8.0) / workers as f64
 }
 
 fn main() {
@@ -94,4 +129,95 @@ fn main() {
         &rows,
     );
     println!("\nall schemes flow through the same comm-plan IR: replay accuracy is scheme-independent");
+
+    // ---- (d) fleet scale: tiered symmetry-class replay vs exact ----
+    // No testbed run at this scale — the graph is built analytically and
+    // replayed in both engines. horovod declares machine-rotation
+    // symmetry, so tiered simulates one machine and derives the other
+    // 127+ by translation; byteps (PS) declares none and demotes to
+    // exact, which is the honest fallback row.
+    println!("\n=== Fig. 10(d): fleet-scale replay — tiered vs exact (resnet50, RDMA) ===\n");
+    let fleet: &[(&str, usize)] = if budget >= 60.0 {
+        &[("horovod", 1024), ("horovod", 2048), ("horovod", 4096), ("byteps", 2048)]
+    } else if budget >= 20.0 {
+        &[("horovod", 1024), ("byteps", 2048)]
+    } else {
+        &[("horovod", 1024)]
+    };
+    // per-measurement time slice: enough rounds to be stable, bounded so
+    // the exact-mode replay of a multi-million-node graph can't eat the
+    // whole budget
+    let slice = (budget / (6.0 * fleet.len() as f64)).clamp(0.5, 4.0);
+    let mut rows = Vec::new();
+    let mut jfleet = Vec::new();
+    for &(scheme, workers) in fleet {
+        let spec = scheme_spec_for("resnet50", scheme, workers);
+        let t0 = Instant::now();
+        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
+        let t_build = t0.elapsed().as_secs_f64();
+        let nodes = g.dfg.len();
+        let edges: usize = g.dfg.ids().map(|i| g.dfg.preds(i).len()).sum();
+
+        let mut exact = Replayer::new(&g);
+        exact.replay(&g); // warm: first replay pays allocation
+        let (exact_rps, iter_us) = rounds_per_sec(|| exact.replay(&g).iteration_time, slice);
+
+        let mut tiered = TieredReplayer::new(&g, &spec);
+        tiered.replay(&g); // warm: pays symmetry verification + allocation
+        let (tiered_rps, tiered_iter) =
+            rounds_per_sec(|| tiered.replay(&g).iteration_time, slice);
+        let rep = tiered.report().clone();
+        assert_eq!(
+            tiered_iter.to_bits(),
+            iter_us.to_bits(),
+            "tiered and exact disagree on {scheme}@{workers}"
+        );
+
+        let bpw = state_bytes_per_worker(nodes, edges, workers);
+        rows.push(vec![
+            scheme.to_string(),
+            format!("{workers}"),
+            format!("{}", spec.cluster.n_machines()),
+            format!("{}", nodes),
+            rep.mode_used.clone(),
+            format!("{:.2}", exact_rps),
+            format!("{:.2}", tiered_rps),
+            format!("{:.1}x", tiered_rps / exact_rps),
+            format!("{:.0}", bpw / 1024.0),
+        ]);
+        let mut j = Json::obj();
+        j.set("scheme", Json::Str(scheme.to_string()));
+        j.set("workers", Json::Num(workers as f64));
+        j.set("machines", Json::Num(spec.cluster.n_machines() as f64));
+        j.set("nodes", Json::Num(nodes as f64));
+        j.set("edges", Json::Num(edges as f64));
+        j.set("build_s", Json::Num(t_build));
+        j.set("mode_used", Json::Str(rep.mode_used.clone()));
+        j.set("simulated_nodes", Json::Num(rep.simulated_nodes as f64));
+        j.set("derived_nodes", Json::Num(rep.derived_nodes as f64));
+        j.set("exact_rounds_per_sec", Json::Num(exact_rps));
+        j.set("tiered_rounds_per_sec", Json::Num(tiered_rps));
+        j.set("tiered_speedup", Json::Num(tiered_rps / exact_rps));
+        j.set("bytes_per_worker", Json::Num(bpw));
+        j.set("iteration_ms", Json::Num(iter_us / 1e3));
+        jfleet.push(j);
+    }
+    print_table(
+        &[
+            "scheme", "workers", "machines", "nodes", "mode", "exact r/s", "tiered r/s",
+            "speedup", "KB/worker",
+        ],
+        &rows,
+    );
+    println!("\ntiered replay simulates one machine per symmetry class and derives the rest by");
+    println!("timeline translation; asymmetric schemes demote to exact replay (same result).");
+
+    let mut report = Json::obj();
+    report.set("bench", Json::Str("fig10_scalability".to_string()));
+    report.set("provenance", Json::Str("measured".to_string()));
+    report.set("fleet", Json::Arr(jfleet));
+    match std::fs::write("BENCH_fig10_scalability.json", report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_fig10_scalability.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_fig10_scalability.json: {e}"),
+    }
 }

@@ -28,7 +28,7 @@ pub fn estimate(spec: &JobSpec, profile: Option<&ProfileDb>) -> DaydreamEstimate
             }
         }
         let id = dfg.add(Node {
-            name: format!("w0.{}", op.name),
+            name: crate::util::intern::intern(&format!("w0.{}", op.name)),
             kind: op.kind,
             device: DeviceKey::Gpu(0),
             duration: dur,
@@ -59,7 +59,7 @@ pub fn estimate(spec: &JobSpec, profile: Option<&ProfileDb>) -> DaydreamEstimate
     for (t, tensor) in model.tensors.iter().enumerate() {
         let dur: Us = tensor.bytes * factor / nominal_bw * 1e6;
         let comm = dfg.add(Node {
-            name: format!("dd.comm.t{t}"),
+            name: crate::util::intern::intern(&format!("dd.comm.t{t}")),
             kind: OpKind::Recv,
             device: DeviceKey::LinkTx(0),
             duration: dur,
@@ -74,7 +74,7 @@ pub fn estimate(spec: &JobSpec, profile: Option<&ProfileDb>) -> DaydreamEstimate
         }
         // update after sync
         let upd = dfg.add(Node {
-            name: format!("dd.upd.t{t}"),
+            name: crate::util::intern::intern(&format!("dd.upd.t{t}")),
             kind: OpKind::Update,
             device: DeviceKey::Gpu(0),
             duration: gpu.launch_overhead_us + 4.0 * tensor.bytes / gpu.mem_bw * 1e6,

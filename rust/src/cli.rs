@@ -34,6 +34,14 @@
 //! strategy ([`crate::optimizer::strategy::parse_strategies`]) — adding a
 //! strategy likewise extends `optimize`.
 //!
+//! `replay --replay-mode tiered` selects the symmetry-class engine
+//! ([`crate::replay::tiered`]): one representative machine is simulated
+//! per verified shift-equivalence class and the rest derived by timeline
+//! translation — bit-identical to exact replay, and automatically
+//! demoted to it (with the reasons reported) when stragglers, faults,
+//! per-machine profile noise or asymmetric what-if edits break the
+//! symmetry. The default `exact` simulates every node.
+//!
 //! `replay` and `diagnose` accept `--inject <fault-spec>[,<fault-spec>]`
 //! (see [`crate::fault::FAULT_FORMS`] and `docs/FAULTS.md`): each fault is
 //! applied to the loaded trace *before* estimation, so "what does a crash
@@ -60,6 +68,7 @@ use crate::baselines;
 use crate::config::{ClusterSpec, CommScheme, JobSpec, Transport, ALL_SCHEMES};
 use crate::optimizer::{optimize, strategy, SearchOpts};
 use crate::profiler;
+use crate::replay::tiered::ReplayMode;
 use crate::testbed::{run as tb_run, TestbedOpts};
 use crate::trace::io::{dump_dir_with_job, load_dir, JobMeta};
 use crate::trace::validate::TraceReport;
@@ -96,7 +105,7 @@ fn usage() {
          commands:\n  \
          profile  --model M --scheme S --transport T [-o trace.json] [--dump-dir DIR] [--iters 10]\n  \
          replay   --trace-dir DIR | --trace trace.json [--model M --scheme S --transport T]\n           \
-         [--no-align] [--inject FAULTS] [--json]\n  \
+         [--no-align] [--inject FAULTS] [--replay-mode exact|tiered] [--json]\n  \
          align    --trace-dir DIR | --trace trace.json [--json]\n  \
          diagnose [--model M --scheme S --transport T] [--trace-dir DIR]\n           \
          [--whatif auto|perfect-overlap,nic-bw=2,nvlink-bw=2,equalize=W,zero-group=G,shrink-op=OP:F,continue-on:K]\n           \
@@ -323,18 +332,39 @@ pub fn replay_json(
     j.set("bw_us", Json::Num(est.bw_us()));
     j.set("est_peak_mem_bytes", Json::Num(est.peak_memory(spec)));
     j.set("report", report.to_json());
+    // engine provenance: which engine ran (tiered demotes itself to
+    // exact when symmetry is broken — the tier object says why)
+    match &est.tier {
+        Some(t) => {
+            j.set("replay_mode", Json::Str(t.mode_used.clone()));
+            j.set("tier", t.to_json());
+        }
+        None => {
+            j.set("replay_mode", Json::Str("exact".into()));
+        }
+    }
     j
 }
 
 fn cmd_replay(args: &Args) -> i32 {
-    // cheap argument validation first: a bad --inject spec must exit 2
-    // before a multi-GB trace ingestion starts
+    // cheap argument validation first: a bad --inject spec or
+    // --replay-mode must exit 2 before a multi-GB trace ingestion starts
     let faults = match faults_from_args(args) {
         Ok(f) => f,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
+    };
+    let mode = match args.get("replay-mode") {
+        None => ReplayMode::Exact,
+        Some(m) => match ReplayMode::parse(m) {
+            Some(m) => m,
+            None => {
+                eprintln!("invalid --replay-mode {m:?}; valid values: exact, tiered");
+                return 2;
+            }
+        },
     };
     let (mut trace, mut report, job) = match trace_from_args(args) {
         Ok(t) => t,
@@ -357,7 +387,7 @@ fn cmd_replay(args: &Args) -> i32 {
         }
     }
     let aligned = !args.flag("no-align");
-    let est = profiler::estimate(&spec, &trace, aligned);
+    let est = profiler::estimate_with_mode(&spec, &trace, aligned, mode);
     if args.flag("json") {
         println!("{}", replay_json(&spec, &est, aligned, &report).to_string());
         return 0;
@@ -371,6 +401,20 @@ fn cmd_replay(args: &Args) -> i32 {
         est.profiled_ops,
         if aligned { "on" } else { "off" }
     );
+    if let Some(t) = &est.tier {
+        if t.mode_used == "tiered" {
+            println!(
+                "  tiered replay: {} machines, all symmetric; {} nodes simulated, \
+                 {} derived by translation",
+                t.n_machines, t.simulated_nodes, t.derived_nodes
+            );
+        } else {
+            println!(
+                "  tiered replay demoted to exact: {}",
+                t.demoted.join("; ")
+            );
+        }
+    }
     println!("estimated iteration: {}", fmt_us(est.iteration_us()));
     println!("  forward:  {}", fmt_us(est.fw_us()));
     println!("  backward: {}", fmt_us(est.bw_us()));

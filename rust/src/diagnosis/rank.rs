@@ -229,6 +229,39 @@ impl TraceFacts {
             machine_comm_stretch,
         }
     }
+
+    /// Machines this evidence marks as deviating from the fleet — the
+    /// input the tiered replayer's class splitter consumes
+    /// ([`crate::replay::tiered::TieredReplayer::demote_machines`]): a
+    /// machine with straggling kernels, a degraded NIC, a flagged clock
+    /// offset, or a lost worker must not be derived by symmetry, so any
+    /// hit here demotes the job to exact replay. Uses the same
+    /// thresholds as the bottleneck ranker; `gpus_per_machine` maps
+    /// lost workers onto their machines.
+    pub fn broken_machines(&self, gpus_per_machine: usize) -> Vec<u16> {
+        let mut out: Vec<u16> = Vec::new();
+        for &(m, stretch) in &self.machine_stretch {
+            if stretch > STRAGGLER_MACHINE_FACTOR {
+                out.push(m);
+            }
+        }
+        for &(m, stretch) in &self.machine_comm_stretch {
+            if stretch >= LINK_DEGRADED_FACTOR {
+                out.push(m);
+            }
+        }
+        for &(m, theta) in &self.machine_drift_us {
+            if theta.abs() > DRIFT_FLAG_US {
+                out.push(m);
+            }
+        }
+        for &(w, _) in &self.lost_workers {
+            out.push((w as usize / gpus_per_machine.max(1)) as u16);
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
 }
 
 /// Means per key, normalized by the median mean; sorted by key.

@@ -178,7 +178,11 @@ fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) 
 
     macro_rules! name {
         ($($arg:tt)*) => {
-            if with_names { format!($($arg)*) } else { String::new() }
+            if with_names {
+                crate::util::intern::intern(&format!($($arg)*))
+            } else {
+                crate::util::intern::OpId::EMPTY
+            }
         };
     }
 
@@ -189,11 +193,15 @@ fn build_global_opts(spec: &JobSpec, cost: &dyn CostProvider, with_names: bool) 
         for (gi, members) in fusion.groups.iter().enumerate() {
             let first = &model.ops[members[0] as usize];
             let name = if !with_names {
-                String::new()
+                crate::util::intern::OpId::EMPTY
             } else if members.len() == 1 {
-                format!("w{w}.{}", first.name)
+                crate::util::intern::intern(&format!("w{w}.{}", first.name))
             } else {
-                format!("w{w}.FUSED.{}x{}", members.iter().min().unwrap(), members.len())
+                crate::util::intern::intern(&format!(
+                    "w{w}.FUSED.{}x{}",
+                    members.iter().min().unwrap(),
+                    members.len()
+                ))
             };
             let id = dfg.add(Node {
                 name,
@@ -351,7 +359,7 @@ mod tests {
             .dfg
             .nodes
             .iter()
-            .filter(|n| n.name.starts_with("w0.PUSH_SEND.g0."))
+            .filter(|n| n.name.resolve().starts_with("w0.PUSH_SEND.g0."))
             .count();
         assert_eq!(pushes, 4);
         assert!(g.dfg.is_dag());

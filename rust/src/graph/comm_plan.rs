@@ -219,6 +219,29 @@ impl PlanCtx<'_> {
     }
 }
 
+/// The symmetry a planner's lowered plans are guaranteed to exhibit —
+/// what the tiered replayer ([`crate::replay::tiered`]) is allowed to
+/// exploit. Declaring a symmetry is a *promise about the plan's shape*,
+/// not about durations: the tiered engine still verifies the claim
+/// structurally (and against effective durations) before deriving any
+/// timeline, so an over-eager declaration costs a fallback, never a
+/// wrong answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSymmetry {
+    /// No exploitable symmetry (the safe default). PS-family plans live
+    /// here: every endpoint's pull serializes on the *shared* server
+    /// device, so per-machine timelines are arithmetic shifts of each
+    /// other in queue position, not plain time translations.
+    None,
+    /// Rotating the machine index (and every worker/device index with
+    /// it) maps the plan onto itself: machine `k`'s timeline equals
+    /// machine 0's. True for the ring-structured collective schemes,
+    /// whose only cross-machine couplings are the ring hops (uniform
+    /// by construction) and the shared negotiate stage (feeds all
+    /// machines identically).
+    MachineRotation,
+}
+
 /// A communication scheme: plans one tensor group's synchronization.
 /// Implementations own *all* scheme-specific knowledge; everything
 /// downstream of [`build_group_comm`] is scheme-blind.
@@ -227,6 +250,17 @@ pub trait CommPlanner {
     fn scheme(&self) -> &'static str;
     /// The full synchronization plan of one tensor group.
     fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan;
+    /// The symmetry this scheme's plans exhibit (see [`PlanSymmetry`]).
+    /// Override when adding a scheme whose per-machine programs are
+    /// rotations of each other; the default opts out of tiered replay.
+    fn symmetry(&self) -> PlanSymmetry {
+        PlanSymmetry::None
+    }
+}
+
+/// The declared symmetry of a job's scheme (tiered-replay entry point).
+pub fn plan_symmetry(scheme: &CommScheme) -> PlanSymmetry {
+    planner_for(scheme).symmetry()
 }
 
 /// The planner for a job's scheme — the only variant dispatch outside
@@ -370,7 +404,7 @@ pub(crate) fn lower_group_plan(
             })
         });
         let id = dfg.add(Node {
-            name: st.name,
+            name: crate::util::intern::intern(&st.name),
             kind: st.kind,
             device: st.device,
             duration: st.duration,
@@ -513,6 +547,13 @@ impl CommPlanner for HierAllReduce {
         "Horovod"
     }
 
+    fn symmetry(&self) -> PlanSymmetry {
+        // per-machine programs (NCCL_RS/RED/ring/BCAST/NCCL_AG) are
+        // identical modulo machine rotation; the machine ring's hops
+        // all span the same rotation distance
+        PlanSymmetry::MachineRotation
+    }
+
     fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan {
         let c = ctx.cluster;
         let gi = ctx.gi;
@@ -634,6 +675,13 @@ pub struct RingAllReduce;
 impl CommPlanner for RingAllReduce {
     fn scheme(&self) -> &'static str {
         "Ring"
+    }
+
+    fn symmetry(&self) -> PlanSymmetry {
+        // the flat worker ring visits every worker identically; rotating
+        // by one machine rotates the ring onto itself (workers are laid
+        // out machine-major)
+        PlanSymmetry::MachineRotation
     }
 
     fn plan_group(&self, ctx: &PlanCtx) -> GroupPlan {

@@ -6,6 +6,7 @@
 //! execution graph the replayer derives (extra ordering edges are kept in a
 //! side list so the original DFG is never mutated).
 
+use crate::util::intern::{self, OpId};
 use crate::util::Us;
 
 /// Node index inside one `Dfg`.
@@ -99,8 +100,10 @@ pub struct TensorMeta {
 /// A vertex of the DFG.
 #[derive(Clone, Debug)]
 pub struct Node {
-    /// Op name (the trace join key; empty on the nameless fast path).
-    pub name: String,
+    /// Interned op name (the trace join key; [`OpId::EMPTY`] on the
+    /// nameless fast path). Resolve via [`OpId::resolve`] only at
+    /// report/JSON/trace boundaries — the replay hot path compares ids.
+    pub name: OpId,
     /// Op kind.
     pub kind: OpKind,
     /// Execution resource the op serializes on.
@@ -125,9 +128,9 @@ pub struct Node {
 
 impl Node {
     /// Zero-cost, device-less marker node (In/Out ops).
-    pub fn virtual_op(name: impl Into<String>, kind: OpKind, owner: u16) -> Node {
+    pub fn virtual_op(name: OpId, kind: OpKind, owner: u16) -> Node {
         Node {
-            name: name.into(),
+            name,
             kind,
             device: DeviceKey::Null,
             duration: 0.0,
@@ -169,7 +172,12 @@ impl Dfg {
     /// [`crate::graph::mutable::MutableGraph`] records only real inserts so
     /// a rollback never removes a pre-existing edge.
     pub fn edge(&mut self, from: NodeId, to: NodeId) -> bool {
-        debug_assert_ne!(from, to, "self edge on {}", self.nodes[from as usize].name);
+        debug_assert_ne!(
+            from,
+            to,
+            "self edge on {}",
+            self.nodes[from as usize].name.resolve()
+        );
         if !self.succs[from as usize].contains(&to) {
             self.succs[from as usize].push(to);
             self.preds[to as usize].push(from);
@@ -293,9 +301,11 @@ impl Dfg {
             .sum()
     }
 
-    /// Find node id by exact name (slow; test/report helper).
+    /// Find node id by exact name (slow; test/report helper). A name
+    /// that was never interned cannot belong to any node.
     pub fn find(&self, name: &str) -> Option<NodeId> {
-        self.nodes.iter().position(|n| n.name == name).map(|i| i as NodeId)
+        let id = intern::lookup(name)?;
+        self.nodes.iter().position(|n| n.name == id).map(|i| i as NodeId)
     }
 }
 
@@ -305,7 +315,7 @@ mod tests {
 
     fn comp(name: &str, dur: Us) -> Node {
         Node {
-            name: name.into(),
+            name: intern::intern(name),
             kind: OpKind::Forward,
             device: DeviceKey::Gpu(0),
             duration: dur,

@@ -10,6 +10,9 @@ pub mod mutable;
 pub use build::{
     build_count, build_global, build_global_nameless, AnalyticCost, CostProvider, GlobalDfg,
 };
-pub use comm_plan::{plan_props, CommPlanner, Dep, GroupPlan, PlanCtx, PlanProps, Stage};
+pub use comm_plan::{
+    plan_props, plan_symmetry, CommPlanner, Dep, GroupPlan, PlanCtx, PlanProps, PlanSymmetry,
+    Stage,
+};
 pub use dfg::{DeviceKey, Dfg, Node, NodeId, OpKind, TensorId, TensorMeta};
 pub use mutable::{ChangeLog, MutableGraph, Txn};

@@ -5,8 +5,10 @@
 
 use crate::alignment::{align, Alignment};
 use crate::config::JobSpec;
+use crate::diagnosis::TraceFacts;
 use crate::graph::dfg::OpKind;
 use crate::graph::{build_global, AnalyticCost, GlobalDfg};
+use crate::replay::tiered::{ReplayMode, TierReport, TieredReplayer};
 use crate::replay::{replay_once, ReplayResult};
 use crate::trace::{GTrace, ProfileDb};
 use crate::util::Us;
@@ -95,6 +97,9 @@ pub struct Estimate {
     pub alignment: Alignment,
     /// ops whose duration came from the trace (coverage diagnostic)
     pub profiled_ops: usize,
+    /// What the tiered engine did, when tiered replay was requested
+    /// (`None` under [`ReplayMode::Exact`]).
+    pub tier: Option<TierReport>,
 }
 
 impl Estimate {
@@ -121,6 +126,23 @@ impl Estimate {
 
 /// Replay a job from its measured trace, with or without time alignment.
 pub fn estimate(spec: &JobSpec, trace: &GTrace, use_alignment: bool) -> Estimate {
+    estimate_with_mode(spec, trace, use_alignment, ReplayMode::Exact)
+}
+
+/// Like [`estimate`], but selecting the replay engine. Under
+/// [`ReplayMode::Tiered`] the trace's straggler/drift/lost-worker
+/// evidence ([`TraceFacts`]) feeds the class splitter: machines the
+/// diagnosis thresholds flag are demoted up front, and the tiered
+/// engine's own symmetry verification (which sees the profiled,
+/// per-worker durations) catches everything subtler — either way the
+/// result equals exact replay, and [`Estimate::tier`] reports which
+/// engine actually ran.
+pub fn estimate_with_mode(
+    spec: &JobSpec,
+    trace: &GTrace,
+    use_alignment: bool,
+    mode: ReplayMode,
+) -> Estimate {
     let alignment = if use_alignment { align(trace, 1.0, 1.0) } else { Alignment::identity() };
     // without the alignment machinery there is no SEND-clipping either:
     // the profiler can only average the raw (launch-inflated) durations
@@ -131,8 +153,17 @@ pub fn estimate(spec: &JobSpec, trace: &GTrace, use_alignment: bool) -> Estimate
     };
     let mut graph = build_global(spec, &AnalyticCost::new(spec));
     let profiled_ops = db.apply(&mut graph);
-    let result = replay_once(&graph);
-    Estimate { graph, result, alignment, profiled_ops }
+    let (result, tier) = match mode {
+        ReplayMode::Exact => (replay_once(&graph), None),
+        ReplayMode::Tiered => {
+            let mut rp = TieredReplayer::new(&graph, spec);
+            let facts = TraceFacts::from_trace_aligned(trace, &alignment);
+            rp.demote_machines(facts.broken_machines(spec.cluster.gpus_per_machine));
+            let result = rp.replay(&graph).clone();
+            (result, Some(rp.report().clone()))
+        }
+    };
+    Estimate { graph, result, alignment, profiled_ops, tier }
 }
 
 #[cfg(test)]

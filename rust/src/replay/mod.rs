@@ -11,10 +11,13 @@
 //! including the result arrays: [`Replayer::replay`] returns a borrow of
 //! engine-owned storage and allocates nothing per call. The strategy
 //! search itself uses the even cheaper [`incremental`] engine, which also
-//! skips recomputation outside the edited cone.
+//! skips recomputation outside the edited cone. Fleet-scale jobs (1k+
+//! workers) use the [`tiered`] engine, which simulates one machine per
+//! verified symmetry class and derives the rest by timeline translation.
 
 pub mod incremental;
 pub mod partial;
+pub mod tiered;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -331,8 +334,8 @@ mod tests {
                 assert!(
                     r.end[p as usize] <= r.start[i as usize] + 1e-6,
                     "dep violated: {} -> {}",
-                    g.dfg.node(p).name,
-                    g.dfg.node(i).name
+                    g.dfg.node(p).name.resolve(),
+                    g.dfg.node(i).name.resolve()
                 );
             }
         }

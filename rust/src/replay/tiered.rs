@@ -1,0 +1,811 @@
+//! Symmetry-class (tiered) replay: simulate one representative machine
+//! exactly, derive the rest by timeline translation.
+//!
+//! ## Why this is sound
+//!
+//! The ring-structured collective schemes declare
+//! [`PlanSymmetry::MachineRotation`]: rotating the machine index maps the
+//! lowered plan onto itself, so under identical durations every machine's
+//! timeline is *equal* (rotation composed with the rotation-invariant
+//! start-time recurrence is the identity on times). The engine never
+//! trusts the declaration alone — before deriving anything it verifies,
+//! structurally and against **effective** durations (profile + what-if
+//! overrides included), that every machine's node stream is the
+//! representative's stream modulo rotation:
+//!
+//! - same kind/device-class/normalized-index/proc/owner per position,
+//! - bit-equal effective duration and tensor bytes per position,
+//! - identical normalized predecessor sets (own-machine preds by local
+//!   index, shared preds by exact id, foreign preds by rotation distance
+//!   + local index),
+//! - every *shared* node (negotiate stages, coordinator ops) draws its
+//!   machine-side predecessors identically from all machines,
+//! - every cross-class edge into the simulated set is either mirrored by
+//!   an equivalent representative-local edge (zero-duration markers) or
+//!   carried by a phantom event (positive-duration ring hops).
+//!
+//! Any violation — a straggler multiplier, an injected fault, a what-if
+//! edit on one machine, diagnosis evidence naming a deviating machine, a
+//! scheme that declares no symmetry — demotes the whole job to the exact
+//! engine. Demotion is all-or-nothing by design: the ring topologies
+//! that make machine rotation a symmetry also couple every machine to
+//! every other within one group, so a single perturbed machine perturbs
+//! all timelines and no partial class survives. The demotion reasons are
+//! reported, never silent.
+//!
+//! ## The reduced simulation
+//!
+//! The simulated set is machine 0's nodes plus all shared nodes. Edges
+//! from *derived* (non-simulated) nodes into the simulated set are
+//! replayed by **phantom events**: when the representative mirror of a
+//! derived boundary op is scheduled, the engine enqueues a heap entry
+//! under the *derived node's own id* with the mirror's end time — by
+//! symmetry exactly the entry the exact engine would pop, in exactly the
+//! same `(time, id)` heap position — whose pop propagates only into the
+//! simulated set. Zero-duration cross-class edges (the In markers
+//! feeding a shared negotiate stage) need no event at all: the
+//! verification above guarantees the representative's own mirror edge
+//! delivers the same ready time, so their in-degree contribution is
+//! dropped up front. Derived timelines are then filled in parallel
+//! ([`crate::util::pool`]) by positional copy from the representative,
+//! with critical-path predecessors translated through the rotation.
+//!
+//! Results are **bit-for-bit identical** to [`super::Replayer`] on every
+//! unbroken symmetric plan — the `tiered` test suite sweeps this across
+//! all registered schemes (`start`/`end`/`iteration_time`; the
+//! `last`/`crit_pred` tie-break metadata may legitimately pick a
+//! different node with the same time).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
+
+use crate::config::JobSpec;
+use crate::graph::dfg::{DeviceKey, NodeId, COORD_PROC};
+use crate::graph::{plan_symmetry, GlobalDfg, PlanSymmetry};
+use crate::replay::{ReplayResult, Replayer};
+use crate::util::pool::{parallel_for, DisjointSlice};
+use crate::util::Us;
+
+/// Replay mode selector (CLI `--replay-mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// Event-driven simulation of every node ([`super::Replayer`]).
+    Exact,
+    /// Symmetry-class simulation with verified derivation (this module).
+    Tiered,
+}
+
+impl ReplayMode {
+    /// Parse a CLI value.
+    pub fn parse(s: &str) -> Option<ReplayMode> {
+        match s {
+            "exact" => Some(ReplayMode::Exact),
+            "tiered" => Some(ReplayMode::Tiered),
+            _ => None,
+        }
+    }
+
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplayMode::Exact => "exact",
+            ReplayMode::Tiered => "tiered",
+        }
+    }
+}
+
+/// What the tiered engine actually did for the last replay.
+#[derive(Clone, Debug, Default)]
+pub struct TierReport {
+    /// `"tiered"` when derivation applied, `"exact"` after a demotion
+    /// (or when tiered was never requested).
+    pub mode_used: String,
+    /// Machines in the cluster layout.
+    pub n_machines: usize,
+    /// Machines verified shift-equivalent to the representative
+    /// (including the representative; equals `n_machines` when tiered
+    /// applied, 0 after a structural demotion).
+    pub n_symmetric: usize,
+    /// Nodes simulated event-by-event (representative + shared).
+    pub simulated_nodes: usize,
+    /// Nodes filled by timeline translation.
+    pub derived_nodes: usize,
+    /// Why the job fell back to exact replay (empty when tiered ran).
+    pub demoted: Vec<String>,
+}
+
+impl TierReport {
+    /// JSON form for the CLI's `--json` output.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("mode_used", Json::Str(self.mode_used.clone()));
+        o.set("n_machines", Json::Num(self.n_machines as f64));
+        o.set("n_symmetric", Json::Num(self.n_symmetric as f64));
+        o.set("simulated_nodes", Json::Num(self.simulated_nodes as f64));
+        o.set("derived_nodes", Json::Num(self.derived_nodes as f64));
+        o.set(
+            "demoted",
+            Json::Arr(self.demoted.iter().map(|r| Json::Str(r.clone())).collect()),
+        );
+        o
+    }
+}
+
+/// Node scope: which timeline a node belongs to.
+const SHARED: i32 = -1;
+
+/// Durations below the heap's fixed-point resolution would make a
+/// phantom's push/pop keys collide; such plans demote rather than risk a
+/// tie-order divergence (none of the built-in schemes produce them).
+const RES_GUARD: Us = 1e-4;
+
+/// Reusable tiered engine over one graph topology. Owns an exact
+/// [`Replayer`] for the fallback path; durations set through this type
+/// flow into both engines and into the symmetry verification.
+pub struct TieredReplayer {
+    exact: Replayer,
+    n: usize,
+    n_machines: usize,
+    gpus_per_machine: usize,
+    n_workers: usize,
+    declared: bool,
+    /// [`SHARED`] or the owning machine index.
+    scope: Vec<i32>,
+    /// Position of each machine-scoped node inside its machine's
+    /// id-ordered node list (meaningless for shared nodes).
+    local_idx: Vec<u32>,
+    /// Per machine: its node ids, ascending.
+    machine_nodes: Vec<Vec<NodeId>>,
+    /// Effective durations (graph values + overrides); the single source
+    /// the verification and the reduced simulation both read.
+    durations: Vec<Us>,
+    /// Machines demoted by external (diagnosis) evidence.
+    broken: BTreeSet<u16>,
+    /// Verification is duration-sensitive: any duration change re-runs it.
+    dirty: bool,
+    plan_ok: bool,
+    simulated: Vec<bool>,
+    /// In-degree restricted to simulated + phantom-carried edges.
+    sim_indeg: Vec<u32>,
+    /// Representative mirror id → derived nodes whose cross-class edges
+    /// it carries (phantom registration).
+    phantoms: HashMap<NodeId, Vec<NodeId>>,
+    n_sim: usize,
+    report: TierReport,
+    // ---- reduced-sim scratch (mirrors the exact engine's layout) ----
+    node_dev: Vec<u32>,
+    n_dev: usize,
+    indeg: Vec<u32>,
+    ready_at: Vec<Us>,
+    ready_pred: Vec<Option<NodeId>>,
+    dev_tail: Vec<Option<NodeId>>,
+    dev_free: Vec<Us>,
+    dev_busy: Vec<bool>,
+    queues: Vec<VecDeque<NodeId>>,
+    stack: Vec<NodeId>,
+    heap: BinaryHeap<Reverse<(u64, NodeId)>>,
+    result: ReplayResult,
+}
+
+impl TieredReplayer {
+    /// Build an engine for one graph topology under one cluster layout.
+    pub fn new(g: &GlobalDfg, spec: &JobSpec) -> TieredReplayer {
+        let n = g.dfg.len();
+        let cluster = &spec.cluster;
+        let n_machines = cluster.n_machines();
+        let gpus_per_machine = cluster.gpus_per_machine;
+        let n_workers = cluster.n_workers;
+        let machine_of = |w: u16| -> i32 { (w as usize / gpus_per_machine.max(1)) as i32 };
+
+        let mut scope = Vec::with_capacity(n);
+        for node in &g.dfg.nodes {
+            let s = match node.device {
+                DeviceKey::Gpu(w) => machine_of(w),
+                DeviceKey::LinkTx(m) | DeviceKey::LinkRx(m) | DeviceKey::NvLink(m) => {
+                    if (m as usize) < n_machines {
+                        m as i32
+                    } else {
+                        SHARED
+                    }
+                }
+                DeviceKey::PsCpu(_) | DeviceKey::Coordinator => SHARED,
+                DeviceKey::Null => {
+                    if node.proc == COORD_PROC || node.proc as usize >= n_workers {
+                        SHARED
+                    } else {
+                        machine_of(node.proc)
+                    }
+                }
+            };
+            scope.push(s);
+        }
+        let mut machine_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); n_machines];
+        let mut local_idx = vec![0u32; n];
+        for i in 0..n {
+            let s = scope[i];
+            if s >= 0 {
+                local_idx[i] = machine_nodes[s as usize].len() as u32;
+                machine_nodes[s as usize].push(i as NodeId);
+            }
+        }
+
+        // device interning, same scheme as the exact engine (id 0 = Null)
+        let mut dev_ids: HashMap<DeviceKey, u32> = HashMap::new();
+        dev_ids.insert(DeviceKey::Null, 0);
+        let mut node_dev = Vec::with_capacity(n);
+        for node in &g.dfg.nodes {
+            let next = dev_ids.len() as u32;
+            node_dev.push(*dev_ids.entry(node.device).or_insert(next));
+        }
+        let n_dev = dev_ids.len();
+
+        TieredReplayer {
+            exact: Replayer::new(g),
+            n,
+            n_machines,
+            gpus_per_machine,
+            n_workers,
+            declared: plan_symmetry(&spec.scheme) == PlanSymmetry::MachineRotation,
+            scope,
+            local_idx,
+            machine_nodes,
+            durations: g.dfg.nodes.iter().map(|nd| nd.duration).collect(),
+            broken: BTreeSet::new(),
+            dirty: true,
+            plan_ok: false,
+            simulated: vec![false; n],
+            sim_indeg: vec![0; n],
+            phantoms: HashMap::new(),
+            n_sim: 0,
+            report: TierReport::default(),
+            node_dev,
+            n_dev,
+            indeg: vec![0; n],
+            ready_at: vec![0.0; n],
+            ready_pred: vec![None; n],
+            dev_tail: vec![None; n_dev],
+            dev_free: vec![0.0; n_dev],
+            dev_busy: vec![false; n_dev],
+            queues: vec![VecDeque::new(); n_dev],
+            stack: Vec::with_capacity(64),
+            heap: BinaryHeap::with_capacity(256),
+            result: ReplayResult {
+                iteration_time: 0.0,
+                start: vec![0.0; n],
+                end: vec![0.0; n],
+                crit_pred: vec![None; n],
+                last: 0,
+            },
+        }
+    }
+
+    /// Refresh durations from the (possibly profile-updated) graph.
+    pub fn set_durations_from(&mut self, g: &GlobalDfg) {
+        for (i, node) in g.dfg.nodes.iter().enumerate() {
+            self.durations[i] = node.duration;
+        }
+        self.exact.set_durations_from(g);
+        self.dirty = true;
+    }
+
+    /// Override one node's duration (what-if evaluations). Asymmetric
+    /// overrides break the verified symmetry and demote to exact replay
+    /// automatically — the signature covers effective durations.
+    pub fn set_duration(&mut self, id: NodeId, d: Us) {
+        self.durations[id as usize] = d;
+        self.exact.set_duration(id, d);
+        self.dirty = true;
+    }
+
+    /// Current effective duration of one node.
+    pub fn duration(&self, id: NodeId) -> Us {
+        self.durations[id as usize]
+    }
+
+    /// Demote machines named by external evidence (diagnosis straggler /
+    /// drift findings): any non-empty set forces exact replay with the
+    /// machines recorded in the report.
+    pub fn demote_machines(&mut self, machines: impl IntoIterator<Item = u16>) {
+        for m in machines {
+            self.broken.insert(m);
+        }
+        self.dirty = true;
+    }
+
+    /// Forget evidence demotions (symmetry verification still applies).
+    pub fn clear_demotions(&mut self) {
+        if !self.broken.is_empty() {
+            self.broken.clear();
+            self.dirty = true;
+        }
+    }
+
+    /// What the last [`TieredReplayer::replay`] did. Before the first
+    /// replay the report is empty.
+    pub fn report(&self) -> &TierReport {
+        &self.report
+    }
+
+    /// Replay one iteration: tiered when the verified symmetry allows,
+    /// exact otherwise. The returned schedule covers **all** nodes
+    /// either way and borrows engine-owned storage.
+    pub fn replay(&mut self, g: &GlobalDfg) -> &ReplayResult {
+        if self.dirty {
+            self.classify(g);
+            self.dirty = false;
+        }
+        if !self.plan_ok {
+            self.report.mode_used = "exact".into();
+            self.report.simulated_nodes = self.n;
+            self.report.derived_nodes = 0;
+            return self.exact.replay(g);
+        }
+        self.report.mode_used = "tiered".into();
+        self.report.simulated_nodes = self.n_sim;
+        self.report.derived_nodes = self.n - self.n_sim;
+        self.reduced_replay(g);
+        self.derive(g);
+        &self.result
+    }
+
+    // ---------------------------------------------------------------
+    // verification
+    // ---------------------------------------------------------------
+
+    /// Normalized device signature of a node on machine `m`.
+    fn dev_sig(&self, dev: DeviceKey, m: usize) -> (u8, i64) {
+        let base_w = (m * self.gpus_per_machine) as i64;
+        match dev {
+            DeviceKey::Gpu(w) => (0, w as i64 - base_w),
+            DeviceKey::LinkTx(x) => (1, x as i64 - m as i64),
+            DeviceKey::LinkRx(x) => (2, x as i64 - m as i64),
+            DeviceKey::NvLink(x) => (3, x as i64 - m as i64),
+            DeviceKey::PsCpu(s) => (4, s as i64),
+            DeviceKey::Coordinator => (5, 0),
+            DeviceKey::Null => (6, 0),
+        }
+    }
+
+    /// Normalized proc/owner signature on machine `m`.
+    fn proc_sig(&self, p: u16, m: usize) -> i64 {
+        if p == COORD_PROC {
+            i64::MAX
+        } else if (p as usize) < self.n_workers {
+            p as i64 - (m * self.gpus_per_machine) as i64
+        } else {
+            (1i64 << 32) + p as i64
+        }
+    }
+
+    /// Normalized predecessor token: own-machine preds by local index,
+    /// shared preds by exact id, foreign preds by rotation distance.
+    fn pred_sig(&self, p: NodeId, m: usize) -> (u8, i64) {
+        let ps = self.scope[p as usize];
+        if ps == SHARED {
+            (2, p as i64)
+        } else if ps as usize == m {
+            (0, self.local_idx[p as usize] as i64)
+        } else {
+            let delta = (ps as usize + self.n_machines - m) % self.n_machines;
+            (1, (delta as i64) << 32 | self.local_idx[p as usize] as i64)
+        }
+    }
+
+    /// Does machine `k`'s node stream equal the representative's modulo
+    /// rotation? Compared positionally against machine 0.
+    fn machine_matches(&self, g: &GlobalDfg, k: usize) -> bool {
+        let rep = &self.machine_nodes[0];
+        let mem = &self.machine_nodes[k];
+        if rep.len() != mem.len() {
+            return false;
+        }
+        let mut pa: Vec<(u8, i64)> = Vec::with_capacity(8);
+        let mut pb: Vec<(u8, i64)> = Vec::with_capacity(8);
+        for i in 0..rep.len() {
+            let (a, b) = (rep[i], mem[i]);
+            let (na, nb) = (g.dfg.node(a), g.dfg.node(b));
+            if na.kind != nb.kind
+                || self.dev_sig(na.device, 0) != self.dev_sig(nb.device, k)
+                || self.proc_sig(na.proc, 0) != self.proc_sig(nb.proc, k)
+                || self.proc_sig(na.owner, 0) != self.proc_sig(nb.owner, k)
+                || self.durations[a as usize].to_bits() != self.durations[b as usize].to_bits()
+                || na.txid.is_some() != nb.txid.is_some()
+            {
+                return false;
+            }
+            let (ba, bb) = (
+                na.tensor.map(|t| t.bytes.to_bits()),
+                nb.tensor.map(|t| t.bytes.to_bits()),
+            );
+            if ba != bb {
+                return false;
+            }
+            let (preds_a, preds_b) = (g.dfg.preds(a), g.dfg.preds(b));
+            if preds_a.len() != preds_b.len() {
+                return false;
+            }
+            pa.clear();
+            pb.clear();
+            pa.extend(preds_a.iter().map(|&p| self.pred_sig(p, 0)));
+            pb.extend(preds_b.iter().map(|&p| self.pred_sig(p, k)));
+            pa.sort_unstable();
+            pb.sort_unstable();
+            if pa != pb {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Full symmetry verification + reduced-plan construction. Sets
+    /// `plan_ok` and fills the report's structural fields.
+    fn classify(&mut self, g: &GlobalDfg) {
+        self.report = TierReport {
+            n_machines: self.n_machines,
+            ..TierReport::default()
+        };
+        self.plan_ok = false;
+
+        if !self.declared {
+            self.report.demoted.push("scheme declares no machine-rotation symmetry".into());
+            return;
+        }
+        if self.n_machines <= 1 {
+            self.report.demoted.push("single machine: nothing to derive".into());
+            return;
+        }
+        if !self.broken.is_empty() {
+            self.report.demoted.push(format!(
+                "diagnosis evidence marks machines {:?} as deviating",
+                self.broken.iter().collect::<Vec<_>>()
+            ));
+            return;
+        }
+
+        // ---- per-machine signature streams, verified in parallel ----
+        let m = self.n_machines;
+        let ok_flags: Vec<std::sync::atomic::AtomicBool> =
+            (0..m).map(|_| std::sync::atomic::AtomicBool::new(true)).collect();
+        {
+            let me = &*self;
+            parallel_for(m - 1, |j| {
+                let k = j + 1;
+                if !me.machine_matches(g, k) {
+                    ok_flags[k].store(false, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+        let mismatched: Vec<usize> = (1..m)
+            .filter(|&k| !ok_flags[k].load(std::sync::atomic::Ordering::Relaxed))
+            .collect();
+        self.report.n_symmetric = m - mismatched.len();
+        if !mismatched.is_empty() {
+            self.report.demoted.push(format!(
+                "machines {mismatched:?} are not shift-equivalent to machine 0 \
+                 (structure or effective durations differ)"
+            ));
+            return;
+        }
+
+        // ---- shared nodes must couple to every machine identically ----
+        for i in 0..self.n {
+            if self.scope[i] != SHARED {
+                continue;
+            }
+            let mut per_machine: Vec<Vec<u32>> = vec![Vec::new(); m];
+            for &p in g.dfg.preds(i as NodeId) {
+                let ps = self.scope[p as usize];
+                if ps >= 0 {
+                    per_machine[ps as usize].push(self.local_idx[p as usize]);
+                }
+            }
+            for pm in &mut per_machine {
+                pm.sort_unstable();
+            }
+            if per_machine.iter().skip(1).any(|pm| *pm != per_machine[0]) {
+                self.report.demoted.push(format!(
+                    "shared node {i} draws predecessors asymmetrically across machines"
+                ));
+                return;
+            }
+        }
+
+        // ---- reduced plan: simulated mask, adjusted in-degrees,
+        //      phantom registration, cross-class edge audit ----
+        for i in 0..self.n {
+            self.simulated[i] = self.scope[i] == SHARED || self.scope[i] == 0;
+        }
+        self.n_sim = self.simulated.iter().filter(|&&s| s).count();
+        self.phantoms.clear();
+        let mut phantom_seen: std::collections::HashSet<NodeId> =
+            std::collections::HashSet::new();
+        for s in 0..self.n {
+            if !self.simulated[s] {
+                self.sim_indeg[s] = 0;
+                continue;
+            }
+            let mut deg = 0u32;
+            // lazily materialized: only nodes with zero-duration
+            // cross-class preds (negotiate stages) pay for the set
+            let mut pred_set: Option<std::collections::HashSet<NodeId>> = None;
+            for &p in g.dfg.preds(s as NodeId) {
+                let pu = p as usize;
+                if self.simulated[pu] {
+                    deg += 1;
+                    continue;
+                }
+                // cross-class edge: derived predecessor of a simulated node
+                let dur = self.durations[pu];
+                if dur == 0.0 {
+                    // must be mirrored by the representative's own edge,
+                    // which then delivers the identical ready time
+                    let mirror =
+                        self.machine_nodes[0][self.local_idx[pu] as usize];
+                    let set = pred_set.get_or_insert_with(|| {
+                        g.dfg.preds(s as NodeId).iter().copied().collect()
+                    });
+                    if !set.contains(&mirror) {
+                        self.report.demoted.push(format!(
+                            "zero-duration cross-class edge {p} -> {s} has no \
+                             mirrored representative edge"
+                        ));
+                        return;
+                    }
+                    // in-degree contribution dropped: the mirror's edge
+                    // already gates `s` at the same time
+                } else if dur < RES_GUARD {
+                    self.report.demoted.push(format!(
+                        "cross-class edge {p} -> {s} below heap resolution \
+                         ({dur} us)"
+                    ));
+                    return;
+                } else {
+                    deg += 1;
+                    if phantom_seen.insert(p) {
+                        let mirror =
+                            self.machine_nodes[0][self.local_idx[pu] as usize];
+                        self.phantoms.entry(mirror).or_default().push(p);
+                    }
+                }
+            }
+            self.sim_indeg[s] = deg;
+        }
+        self.plan_ok = true;
+    }
+
+    // ---------------------------------------------------------------
+    // reduced simulation
+    // ---------------------------------------------------------------
+
+    /// The exact engine's event loop restricted to the simulated set,
+    /// with phantom events carrying the cross-class edges. Any heap
+    /// entry whose id is a *derived* node is a phantom: its `(key, id)`
+    /// pair equals, by verified symmetry, the entry the exact engine
+    /// would pop for that node, so pop order — and therefore every FIFO
+    /// and device-tail decision — is preserved bit-for-bit.
+    fn reduced_replay(&mut self, g: &GlobalDfg) {
+        let n = self.n;
+        self.result.start.iter_mut().for_each(|x| *x = 0.0);
+        self.result.end.iter_mut().for_each(|x| *x = 0.0);
+        self.result.crit_pred.iter_mut().for_each(|x| *x = None);
+
+        self.indeg.copy_from_slice(&self.sim_indeg);
+        self.ready_at.iter_mut().for_each(|x| *x = 0.0);
+        self.ready_pred.iter_mut().for_each(|x| *x = None);
+        for d in 0..self.n_dev {
+            self.dev_free[d] = 0.0;
+            self.dev_busy[d] = false;
+            self.dev_tail[d] = None;
+            self.queues[d].clear();
+        }
+        self.heap.clear();
+        self.stack.clear();
+
+        #[inline(always)]
+        fn key(t: f64) -> u64 {
+            // identical fixed-point key to the exact engine
+            (t * 65536.0) as u64
+        }
+
+        let mut finished = 0usize;
+        let mut last: NodeId = 0;
+        let mut max_end = -1.0f64;
+
+        for i in 0..n as NodeId {
+            if self.simulated[i as usize] && self.indeg[i as usize] == 0 {
+                self.stack.push(i);
+            }
+        }
+
+        macro_rules! propagate {
+            ($node:expr, $t:expr) => {{
+                let node: NodeId = $node;
+                let t: f64 = $t;
+                finished += 1;
+                if t > max_end {
+                    max_end = t;
+                    last = node;
+                }
+                for &s in g.dfg.succs(node) {
+                    let si = s as usize;
+                    if !self.simulated[si] {
+                        continue;
+                    }
+                    self.indeg[si] -= 1;
+                    if t >= self.ready_at[si] {
+                        self.ready_at[si] = t;
+                        self.ready_pred[si] = Some(node);
+                    }
+                    if self.indeg[si] == 0 {
+                        self.stack.push(s);
+                    }
+                }
+            }};
+        }
+
+        // a phantom pop: the derived node's cross-class effects only
+        macro_rules! propagate_phantom {
+            ($node:expr, $t:expr) => {{
+                let node: NodeId = $node;
+                let t: f64 = $t;
+                for &s in g.dfg.succs(node) {
+                    let si = s as usize;
+                    if !self.simulated[si] {
+                        continue;
+                    }
+                    self.indeg[si] -= 1;
+                    if t >= self.ready_at[si] {
+                        self.ready_at[si] = t;
+                        self.ready_pred[si] = Some(node);
+                    }
+                    if self.indeg[si] == 0 {
+                        self.stack.push(s);
+                    }
+                }
+            }};
+        }
+
+        macro_rules! emit_phantoms {
+            ($mirror:expr, $st:expr, $en:expr) => {{
+                if let Some(ds) = self.phantoms.get(&$mirror) {
+                    for &d in ds {
+                        let du = d as usize;
+                        // by symmetry the derived node runs at the same
+                        // times as its mirror; record them now so the
+                        // pop (and the derivation fill) read them back
+                        self.result.start[du] = $st;
+                        self.result.end[du] = $en;
+                        self.heap.push(Reverse((key($en), d)));
+                    }
+                }
+            }};
+        }
+
+        macro_rules! start_op {
+            ($nd:expr, $dev:expr) => {{
+                let nd: NodeId = $nd;
+                let d: usize = $dev;
+                let i = nd as usize;
+                let ready = self.ready_at[i];
+                let free = self.dev_free[d];
+                let st = if free > ready {
+                    self.result.crit_pred[i] = self.dev_tail[d];
+                    free
+                } else {
+                    self.result.crit_pred[i] = self.ready_pred[i];
+                    ready
+                };
+                self.result.start[i] = st;
+                let en = st + self.durations[i];
+                self.result.end[i] = en;
+                self.dev_tail[d] = Some(nd);
+                self.dev_free[d] = en;
+                self.dev_busy[d] = true;
+                self.heap.push(Reverse((key(en), nd)));
+                emit_phantoms!(nd, st, en);
+            }};
+        }
+
+        loop {
+            while let Some(node) = self.stack.pop() {
+                let i = node as usize;
+                let d = self.node_dev[i] as usize;
+                if d == 0 {
+                    // non-queuing op (virtual or negotiation delay)
+                    let t = self.ready_at[i];
+                    self.result.crit_pred[i] = self.ready_pred[i];
+                    self.result.start[i] = t;
+                    let dur = self.durations[i];
+                    self.result.end[i] = t + dur;
+                    if dur == 0.0 {
+                        propagate!(node, t);
+                    } else {
+                        self.heap.push(Reverse((key(t + dur), node)));
+                    }
+                    emit_phantoms!(node, t, t + dur);
+                } else if self.dev_busy[d] {
+                    self.queues[d].push_back(node);
+                } else {
+                    start_op!(node, d);
+                }
+            }
+
+            let Some(Reverse((_, node))) = self.heap.pop() else { break };
+            let i = node as usize;
+            let t = self.result.end[i];
+            if !self.simulated[i] {
+                propagate_phantom!(node, t);
+                continue;
+            }
+            let d = self.node_dev[i] as usize;
+            if d != 0 {
+                self.dev_busy[d] = false;
+            }
+            propagate!(node, t);
+            if d != 0 && !self.dev_busy[d] {
+                if let Some(nd) = self.queues[d].pop_front() {
+                    start_op!(nd, d);
+                }
+            }
+        }
+        debug_assert_eq!(
+            finished, self.n_sim,
+            "tiered replay deadlock: {finished}/{} simulated", self.n_sim
+        );
+
+        self.result.iteration_time = max_end.max(0.0);
+        self.result.last = last;
+    }
+
+    /// Fill derived timelines by positional copy from the representative
+    /// — one parallel task per derived machine, disjoint index sets.
+    fn derive(&mut self, _g: &GlobalDfg) {
+        let m = self.n_machines;
+        let rep: &[NodeId] = &self.machine_nodes[0];
+        let machine_nodes = &self.machine_nodes;
+        let scope = &self.scope;
+        let local_idx = &self.local_idx;
+        // split borrows: the result arrays become shared-write views
+        let start = DisjointSlice::new(&mut self.result.start);
+        let end = DisjointSlice::new(&mut self.result.end);
+        let crit = DisjointSlice::new(&mut self.result.crit_pred);
+        parallel_for(m - 1, |j| {
+            let k = j + 1;
+            let mem = &machine_nodes[k];
+            for (pos, &d) in mem.iter().enumerate() {
+                let r = rep[pos] as usize;
+                let du = d as usize;
+                // SAFETY: machine k's node ids are touched by task k only
+                // (machines partition the derived ids; the simulated set
+                // is untouched here)
+                unsafe {
+                    start.set(du, start.get(r));
+                    end.set(du, end.get(r));
+                    // translate the critical predecessor through the
+                    // rotation: representative-local preds map to the
+                    // member's positional twin, shared preds stay
+                    let c = crit.get(r);
+                    let mapped = c.map(|p| {
+                        let pu = p as usize;
+                        if scope[pu] == 0 {
+                            machine_nodes[k][local_idx[pu] as usize]
+                        } else {
+                            p
+                        }
+                    });
+                    crit.set(du, mapped);
+                }
+            }
+        });
+    }
+}
+
+/// Convenience: build + replay in one call, returning the schedule and
+/// what the engine did.
+pub fn replay_tiered(g: &GlobalDfg, spec: &JobSpec) -> (ReplayResult, TierReport) {
+    let mut rp = TieredReplayer::new(g, spec);
+    let result = rp.replay(g).clone();
+    let report = rp.report().clone();
+    (result, report)
+}

@@ -305,7 +305,7 @@ pub fn run_on(spec: &JobSpec, g: &GlobalDfg, opts: &TestbedOpts) -> TestbedResul
                 (start[i as usize], end[i as usize] - start[i as usize])
             };
             events.push(TraceEvent {
-                name: node.name.clone(),
+                name: node.name.resolve().to_string(),
                 kind: node.kind,
                 ts: clock_base + ts + off,
                 dur: dur_meas,

@@ -17,6 +17,7 @@ pub mod validate;
 use std::collections::HashMap;
 
 use crate::graph::dfg::OpKind;
+use crate::util::intern::{self, OpId};
 use crate::util::json::{parse, Json};
 use crate::util::Us;
 
@@ -73,7 +74,7 @@ impl GTrace {
         ProfileDb {
             avg: agg
                 .into_iter()
-                .map(|(k, (s, c))| (k.to_string(), s / c as f64))
+                .map(|(k, (s, c))| (intern::intern(k), s / c as f64))
                 .collect(),
         }
     }
@@ -160,16 +161,25 @@ impl GTrace {
     }
 }
 
-/// Per-op average durations from a trace.
+/// Per-op average durations from a trace, keyed by interned [`OpId`] —
+/// the graph join in [`ProfileDb::apply`] is an integer map hit per
+/// node, no string hashing on the hot path.
 #[derive(Clone, Debug, Default)]
 pub struct ProfileDb {
-    avg: HashMap<String, f64>,
+    avg: HashMap<OpId, f64>,
 }
 
 impl ProfileDb {
-    /// Average measured duration of an op, if the trace covered it.
+    /// Average measured duration of an op, if the trace covered it. A
+    /// name no node ever carried can't have been inserted either, so
+    /// the interner miss short-circuits to `None` without interning.
     pub fn get(&self, name: &str) -> Option<Us> {
-        self.avg.get(name).copied()
+        self.get_id(intern::lookup(name)?)
+    }
+
+    /// Average measured duration by interned id.
+    pub fn get_id(&self, id: OpId) -> Option<Us> {
+        self.avg.get(&id).copied()
     }
 
     /// Number of distinct ops with a measurement.
@@ -184,7 +194,7 @@ impl ProfileDb {
 
     /// Insert/overwrite one op's average duration.
     pub fn insert(&mut self, name: String, dur: Us) {
-        self.avg.insert(name, dur);
+        self.avg.insert(intern::intern(&name), dur);
     }
 
     /// Overwrite the durations of a global DFG's nodes with profiled
@@ -192,7 +202,7 @@ impl ProfileDb {
     pub fn apply(&self, g: &mut crate::graph::GlobalDfg) -> usize {
         let mut applied = 0;
         for n in &mut g.dfg.nodes {
-            if let Some(d) = self.get(&n.name) {
+            if let Some(d) = self.get_id(n.name) {
                 n.duration = d;
                 applied += 1;
             }

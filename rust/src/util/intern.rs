@@ -1,0 +1,136 @@
+//! Global op-name interner: `String ↔ u32` so the replay hot path carries
+//! 4-byte [`OpId`]s instead of heap strings. Names are resolved back to
+//! `&str` only at report/JSON boundaries (trace emission, CLI output,
+//! assert messages).
+//!
+//! The table is process-global and append-only: interned strings are
+//! leaked (`Box::leak`) so `resolve` can hand out `&'static str` without
+//! holding the lock across the caller's use. A training job names a few
+//! hundred thousand distinct ops at the very most (4096 workers × ~100
+//! ops), so the leak is bounded and intentional — it is the same
+//! lifetime as the strings previously stored inline in every `Node`.
+//!
+//! Id 0 is pre-interned as the empty string: graph builders that skip
+//! name materialization (`with_names = false`, the optimizer's hot loop)
+//! use [`OpId::EMPTY`] without touching the table at all.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Interned op name. `Ord`/`Hash` are by table index (creation order),
+/// not lexicographic — fine for map keys, not for sorted display.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+impl OpId {
+    /// The pre-interned empty name (id 0) — the nameless fast path.
+    pub const EMPTY: OpId = OpId(0);
+
+    /// True for the pre-interned empty name.
+    pub fn is_empty(self) -> bool {
+        self == OpId::EMPTY
+    }
+
+    /// The interned string. O(1), lock held only for the index read.
+    pub fn resolve(self) -> &'static str {
+        resolve(self)
+    }
+}
+
+impl std::fmt::Display for OpId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.resolve())
+    }
+}
+
+impl std::fmt::Debug for OpId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "OpId({} {:?})", self.0, self.resolve())
+    }
+}
+
+struct Inner {
+    map: HashMap<&'static str, u32>,
+    names: Vec<&'static str>,
+}
+
+fn table() -> &'static Mutex<Inner> {
+    static TABLE: OnceLock<Mutex<Inner>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut map = HashMap::new();
+        map.insert("", 0);
+        Mutex::new(Inner { map, names: vec![""] })
+    })
+}
+
+/// Intern a name, returning its stable id. The empty string never takes
+/// the lock ([`OpId::EMPTY`]).
+pub fn intern(name: &str) -> OpId {
+    if name.is_empty() {
+        return OpId::EMPTY;
+    }
+    let mut t = table().lock().unwrap();
+    if let Some(&id) = t.map.get(name) {
+        return OpId(id);
+    }
+    let id = t.names.len() as u32;
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    t.names.push(leaked);
+    t.map.insert(leaked, id);
+    OpId(id)
+}
+
+/// The string an id was interned from. Panics on an id that never came
+/// out of [`intern`] (a forged `OpId`).
+pub fn resolve(id: OpId) -> &'static str {
+    let t = table().lock().unwrap();
+    t.names[id.0 as usize]
+}
+
+/// The id of an already-interned name, without interning it. `None`
+/// means no node ever carried this name — callers doing read-only joins
+/// (trace → graph) use this to avoid growing the table with miss keys.
+pub fn lookup(name: &str) -> Option<OpId> {
+    if name.is_empty() {
+        return Some(OpId::EMPTY);
+    }
+    let t = table().lock().unwrap();
+    t.map.get(name).map(|&id| OpId(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_stable_and_resolves() {
+        let a = intern("intern.test.alpha");
+        let b = intern("intern.test.beta");
+        assert_ne!(a, b);
+        assert_eq!(intern("intern.test.alpha"), a);
+        assert_eq!(a.resolve(), "intern.test.alpha");
+        assert_eq!(b.resolve(), "intern.test.beta");
+    }
+
+    #[test]
+    fn empty_is_id_zero() {
+        assert_eq!(intern(""), OpId::EMPTY);
+        assert!(intern("").is_empty());
+        assert_eq!(OpId::EMPTY.resolve(), "");
+        assert_eq!(lookup(""), Some(OpId::EMPTY));
+    }
+
+    #[test]
+    fn lookup_does_not_intern() {
+        assert_eq!(lookup("intern.test.never-interned"), None);
+        let c = intern("intern.test.gamma");
+        assert_eq!(lookup("intern.test.gamma"), Some(c));
+    }
+
+    #[test]
+    fn display_and_debug_resolve() {
+        let d = intern("intern.test.delta");
+        assert_eq!(format!("{d}"), "intern.test.delta");
+        assert!(format!("{d:?}").contains("intern.test.delta"));
+    }
+}

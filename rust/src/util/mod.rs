@@ -4,7 +4,9 @@
 //! closure available, so `rand`, `serde`, `clap` and `criterion` are
 //! re-implemented here at the scale this project needs.
 
+pub mod intern;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 

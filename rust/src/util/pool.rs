@@ -1,0 +1,151 @@
+//! Minimal scoped data-parallelism: the offline build image has no crate
+//! registry (no rayon), so fleet-scale replay parallelizes its
+//! embarrassingly-parallel loops with `std::thread::scope` plus an atomic
+//! work-stealing counter. Threads live only for the duration of one call —
+//! no pool state, no channels, no `'static` bounds on the closure.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Upper bound on worker threads — beyond this the per-task work in the
+/// replay/derivation loops stops scaling (memory-bandwidth bound).
+const MAX_THREADS: usize = 8;
+
+/// How many worker threads a `parallel_for` over `n_tasks` would use.
+pub fn n_threads(n_tasks: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(MAX_THREADS).min(n_tasks).max(1)
+}
+
+/// Run `f(0) .. f(n_tasks-1)` across a small scoped thread pool. Tasks
+/// are claimed from an atomic counter, so uneven task costs balance
+/// themselves. Falls back to a plain sequential loop when the machine is
+/// single-core or there is at most one task. `f` must be safe to call
+/// concurrently for *distinct* indices (the usual disjoint-output
+/// contract — see [`DisjointSlice`]).
+pub fn parallel_for<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
+    let threads = n_threads(n_tasks);
+    if threads <= 1 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Shared-write view of a mutable slice for disjoint-index parallel
+/// fills (each element written by at most one thread). The replay
+/// derivation pass fills `start[]`/`end[]` for machine *m*'s nodes from
+/// thread *m*; index sets never overlap, so unsynchronized writes are
+/// race-free.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: all access goes through `set`/`get`, whose contract (below)
+// requires callers to keep concurrently-touched indices disjoint.
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    /// Wrap a slice for disjoint parallel writes.
+    pub fn new(slice: &'a mut [T]) -> DisjointSlice<'a, T> {
+        DisjointSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// No other thread may read or write index `i` concurrently; `i`
+    /// must be in bounds (checked in debug builds).
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v };
+    }
+
+    /// Read one element.
+    ///
+    /// # Safety
+    /// No other thread may write index `i` concurrently; `i` must be in
+    /// bounds (checked in debug builds).
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_handles_edge_sizes() {
+        parallel_for(0, |_| panic!("no tasks"));
+        let one = AtomicU64::new(0);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            one.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disjoint_slice_parallel_fill() {
+        let mut data = vec![0u64; 4096];
+        let view = DisjointSlice::new(&mut data);
+        parallel_for(4096, |i| unsafe { view.set(i, i as u64 * 3) });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn n_threads_is_bounded() {
+        assert_eq!(n_threads(0), 1);
+        assert_eq!(n_threads(1), 1);
+        assert!(n_threads(1_000_000) <= MAX_THREADS);
+    }
+}

@@ -144,7 +144,7 @@ fn testbed_trace_always_joinable() {
         for i in g.dfg.ids() {
             let n = g.dfg.node(i);
             if !n.kind.is_virtual() {
-                assert!(db.get(&n.name).is_some(), "missing {}", n.name);
+                assert!(db.get_id(n.name).is_some(), "missing {}", n.name);
             }
         }
     }

@@ -1,0 +1,279 @@
+//! Symmetry-class (tiered) replay guarantees:
+//!
+//! 1. **Bit-for-bit**: on unbroken symmetric plans, tiered replay equals
+//!    exact replay on every node's start/end and on the iteration time,
+//!    across ALL registered schemes × models × worker counts. Schemes
+//!    without machine-rotation symmetry (the PS family) fall back to the
+//!    exact engine and are trivially equal — the sweep asserts which of
+//!    the two happened via the tier report.
+//! 2. **Broken symmetry demotes, never corrupts**: stragglers, single-
+//!    node what-if edits, diagnosis evidence and uneven machine layouts
+//!    all demote to exact replay, and the result still equals a
+//!    from-scratch exact engine fed the same edits.
+//! 3. The profiler's `--replay-mode tiered` path returns the same
+//!    estimate as the exact path on a measured trace.
+
+use dpro::config::{ClusterSpec, JobSpec, NetworkSpec, Transport, ALL_SCHEMES};
+use dpro::graph::{build_global, plan_symmetry, AnalyticCost, DeviceKey, GlobalDfg, PlanSymmetry};
+use dpro::replay::tiered::{ReplayMode, TieredReplayer};
+use dpro::replay::{replay_once, Replayer, ReplayResult};
+
+fn spec_for(model: &str, scheme: &str, workers: usize, gpm: usize) -> JobSpec {
+    let m = dpro::models::by_name(model, 32).unwrap();
+    let cluster = ClusterSpec::new(workers, gpm, NetworkSpec::rdma_100g());
+    JobSpec::with_scheme_name(m, cluster, scheme)
+}
+
+/// start/end/iteration_time must match to the last bit. (`last` and
+/// `crit_pred` are tie-break metadata: equal-time nodes may legitimately
+/// be attributed differently, so they are not compared.)
+fn assert_bitwise_eq(g: &GlobalDfg, exact: &ReplayResult, tiered: &ReplayResult, label: &str) {
+    assert_eq!(
+        exact.iteration_time.to_bits(),
+        tiered.iteration_time.to_bits(),
+        "{label}: iteration_time {} vs {}",
+        exact.iteration_time,
+        tiered.iteration_time
+    );
+    for i in g.dfg.ids() {
+        let iu = i as usize;
+        assert_eq!(
+            exact.start[iu].to_bits(),
+            tiered.start[iu].to_bits(),
+            "{label}: start of node {i} ({}) {} vs {}",
+            g.dfg.node(i).name,
+            exact.start[iu],
+            tiered.start[iu]
+        );
+        assert_eq!(
+            exact.end[iu].to_bits(),
+            tiered.end[iu].to_bits(),
+            "{label}: end of node {i} ({}) {} vs {}",
+            g.dfg.node(i).name,
+            exact.end[iu],
+            tiered.end[iu]
+        );
+    }
+}
+
+#[test]
+fn tiered_matches_exact_bitwise_across_schemes_and_sizes() {
+    for scheme in ALL_SCHEMES {
+        for (workers, gpm) in [(8usize, 8usize), (16, 8), (32, 8)] {
+            let label = format!("{scheme} {workers}w/{gpm}gpm");
+            let spec = spec_for("resnet50", scheme, workers, gpm);
+            let g = build_global(&spec, &AnalyticCost::new(&spec));
+            let exact = replay_once(&g);
+            let mut rp = TieredReplayer::new(&g, &spec);
+            let tiered = rp.replay(&g).clone();
+            assert_bitwise_eq(&g, &exact, &tiered, &label);
+
+            let rep = rp.report();
+            let n_machines = spec.cluster.n_machines();
+            let symmetric =
+                plan_symmetry(&spec.scheme) == PlanSymmetry::MachineRotation && n_machines > 1;
+            if symmetric {
+                assert_eq!(rep.mode_used, "tiered", "{label}: {:?}", rep.demoted);
+                assert_eq!(rep.n_symmetric, n_machines, "{label}");
+                assert!(rep.derived_nodes > 0, "{label}: nothing derived");
+                assert_eq!(
+                    rep.simulated_nodes + rep.derived_nodes,
+                    g.dfg.len(),
+                    "{label}: node accounting"
+                );
+            } else {
+                assert_eq!(rep.mode_used, "exact", "{label}: expected fallback");
+                assert!(!rep.demoted.is_empty(), "{label}: fallback must give a reason");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_matches_exact_across_models() {
+    for model in ["resnet50", "vgg16", "bert_base", "gpt_mini"] {
+        for scheme in ["horovod", "ring"] {
+            let label = format!("{model} {scheme}");
+            let spec = spec_for(model, scheme, 16, 8);
+            let g = build_global(&spec, &AnalyticCost::new(&spec));
+            let exact = replay_once(&g);
+            let mut rp = TieredReplayer::new(&g, &spec);
+            let tiered = rp.replay(&g).clone();
+            assert_bitwise_eq(&g, &exact, &tiered, &label);
+            assert_eq!(rp.report().mode_used, "tiered", "{label}: {:?}", rp.report().demoted);
+        }
+    }
+}
+
+/// A straggling machine (every GPU op on machine 1 slowed 1.5×) breaks
+/// the shift symmetry: the engine must demote itself and still return
+/// exactly what a from-scratch exact engine returns under the same edits.
+#[test]
+fn straggler_machine_demotes_and_matches_exact() {
+    let spec = spec_for("resnet50", "horovod", 16, 8);
+    let g = build_global(&spec, &AnalyticCost::new(&spec));
+    let mut rp = TieredReplayer::new(&g, &spec);
+    let mut reference = Replayer::new(&g);
+    for i in g.dfg.ids() {
+        if let DeviceKey::Gpu(w) = g.dfg.node(i).device {
+            if w >= 8 {
+                let d = rp.duration(i) * 1.5;
+                rp.set_duration(i, d);
+                reference.set_duration(i, d);
+            }
+        }
+    }
+    let tiered = rp.replay(&g).clone();
+    let rep = rp.report().clone();
+    assert_eq!(rep.mode_used, "exact", "straggler must demote");
+    assert!(
+        rep.demoted.iter().any(|r| r.contains("shift-equivalent")),
+        "reason missing: {:?}",
+        rep.demoted
+    );
+    assert!(rep.n_symmetric < spec.cluster.n_machines());
+    let exact = reference.replay(&g).clone();
+    assert_bitwise_eq(&g, &exact, &tiered, "straggler");
+}
+
+/// A single asymmetric what-if edit (one op on machine 1 doubled) is
+/// caught by the duration-sensitive signatures — and editing it back
+/// restores tiered mode.
+#[test]
+fn single_node_whatif_edit_demotes_then_recovers() {
+    let spec = spec_for("vgg16", "ring", 16, 8);
+    let g = build_global(&spec, &AnalyticCost::new(&spec));
+    let mut rp = TieredReplayer::new(&g, &spec);
+    assert!(rp.replay(&g).iteration_time.is_finite());
+    assert_eq!(rp.report().mode_used, "tiered", "{:?}", rp.report().demoted);
+
+    let victim = g
+        .dfg
+        .ids()
+        .find(|&i| matches!(g.dfg.node(i).device, DeviceKey::Gpu(12)) && g.dfg.node(i).duration > 0.0)
+        .expect("machine-1 GPU op");
+    let orig = rp.duration(victim);
+    let mut reference = Replayer::new(&g);
+    rp.set_duration(victim, orig * 2.0);
+    reference.set_duration(victim, orig * 2.0);
+    let tiered = rp.replay(&g).clone();
+    assert_eq!(rp.report().mode_used, "exact", "what-if edit must demote");
+    let exact = reference.replay(&g).clone();
+    assert_bitwise_eq(&g, &exact, &tiered, "whatif");
+
+    // undo the edit: the symmetry verification re-runs and re-enables
+    // derivation, matching the pristine exact replay again
+    rp.set_duration(victim, orig);
+    let restored = rp.replay(&g).clone();
+    assert_eq!(rp.report().mode_used, "tiered", "{:?}", rp.report().demoted);
+    assert_bitwise_eq(&g, &replay_once(&g), &restored, "restored");
+}
+
+/// Diagnosis evidence demotes even a perfectly symmetric plan (the
+/// evidence says the *real* fleet deviates — derivation would hide it),
+/// and clearing the evidence restores tiered mode.
+#[test]
+fn evidence_demotes_symmetric_plan() {
+    let spec = spec_for("resnet50", "horovod", 16, 8);
+    let g = build_global(&spec, &AnalyticCost::new(&spec));
+    let exact = replay_once(&g);
+    let mut rp = TieredReplayer::new(&g, &spec);
+    rp.demote_machines([1u16]);
+    let demoted = rp.replay(&g).clone();
+    assert_eq!(rp.report().mode_used, "exact");
+    assert!(
+        rp.report().demoted.iter().any(|r| r.contains("evidence")),
+        "{:?}",
+        rp.report().demoted
+    );
+    assert_bitwise_eq(&g, &exact, &demoted, "evidence");
+    rp.clear_demotions();
+    let back = rp.replay(&g).clone();
+    assert_eq!(rp.report().mode_used, "tiered", "{:?}", rp.report().demoted);
+    assert_bitwise_eq(&g, &exact, &back, "evidence cleared");
+}
+
+/// TraceFacts → broken machines: the thresholds of the bottleneck ranker
+/// applied to stretch/drift/comm/lost-worker evidence, with lost workers
+/// mapped onto machines.
+#[test]
+fn trace_evidence_names_broken_machines() {
+    let facts = dpro::diagnosis::TraceFacts {
+        machine_stretch: vec![(0, 1.0), (1, 1.3)],
+        machine_drift_us: vec![(0, 12.0), (2, 900.0)],
+        machine_comm_stretch: vec![(0, 1.0), (4, 3.5)],
+        lost_workers: vec![(25, 0)],
+        ..Default::default()
+    };
+    assert_eq!(facts.broken_machines(8), vec![1, 2, 3, 4]);
+    let clean = dpro::diagnosis::TraceFacts::default();
+    assert!(clean.broken_machines(8).is_empty());
+}
+
+/// One machine: nothing to derive — honest fallback with a reason.
+#[test]
+fn single_machine_is_trivially_exact() {
+    let spec = spec_for("resnet50", "horovod", 8, 8);
+    let g = build_global(&spec, &AnalyticCost::new(&spec));
+    let mut rp = TieredReplayer::new(&g, &spec);
+    let tiered = rp.replay(&g).clone();
+    assert_eq!(rp.report().mode_used, "exact");
+    assert!(
+        rp.report().demoted.iter().any(|r| r.contains("single machine")),
+        "{:?}",
+        rp.report().demoted
+    );
+    assert_bitwise_eq(&g, &replay_once(&g), &tiered, "single machine");
+}
+
+/// An uneven layout (12 workers on 8-GPU machines → 8 + 4) can never be
+/// shift-symmetric: demote + exact equality.
+#[test]
+fn uneven_machine_layout_demotes() {
+    let spec = spec_for("resnet50", "ring", 12, 8);
+    let g = build_global(&spec, &AnalyticCost::new(&spec));
+    let mut rp = TieredReplayer::new(&g, &spec);
+    let tiered = rp.replay(&g).clone();
+    assert_eq!(rp.report().mode_used, "exact", "uneven layout must demote");
+    assert_bitwise_eq(&g, &replay_once(&g), &tiered, "uneven");
+}
+
+/// The CLI/profiler path: a tiered estimate from a measured trace equals
+/// the exact estimate bit-for-bit (measured per-worker noise breaks the
+/// symmetry, so this exercises the evidence + verification fallback
+/// end-to-end through `estimate_with_mode`).
+#[test]
+fn profiler_tiered_estimate_equals_exact() {
+    let spec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+    let tb = dpro::testbed::run(
+        &spec,
+        &dpro::testbed::TestbedOpts { iterations: 3, ..Default::default() },
+    );
+    let exact = dpro::profiler::estimate(&spec, &tb.trace, true);
+    let tiered = dpro::profiler::estimate_with_mode(&spec, &tb.trace, true, ReplayMode::Tiered);
+    assert_eq!(
+        exact.iteration_us().to_bits(),
+        tiered.iteration_us().to_bits(),
+        "{} vs {}",
+        exact.iteration_us(),
+        tiered.iteration_us()
+    );
+    let rep = tiered.tier.expect("tiered path must report");
+    assert!(
+        rep.mode_used == "tiered" || !rep.demoted.is_empty(),
+        "demotion without a reason: {rep:?}"
+    );
+}
+
+/// Report JSON carries the schema the CLI promises.
+#[test]
+fn tier_report_json_schema() {
+    let spec = spec_for("resnet50", "horovod", 16, 8);
+    let g = build_global(&spec, &AnalyticCost::new(&spec));
+    let mut rp = TieredReplayer::new(&g, &spec);
+    rp.replay(&g);
+    let j = rp.report().to_json();
+    for key in ["mode_used", "n_machines", "n_symmetric", "simulated_nodes", "derived_nodes", "demoted"] {
+        assert!(j.get(key).is_some(), "missing key {key}");
+    }
+}
