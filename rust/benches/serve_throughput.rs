@@ -1,0 +1,247 @@
+//! Load generator for the `dprod` serve daemon. Two modes:
+//!
+//! - `--smoke [--trace-dir DIR]` — the CI gate: start an in-process
+//!   daemon, register a job (the fixture dump when `--trace-dir` is
+//!   given, an analytic job otherwise), assert the response schemas, and
+//!   assert the second registration and query hit the session cache.
+//!   Exits nonzero on any failed expectation.
+//! - default — a closed-loop throughput sweep: N client threads × a
+//!   mixed replay/diagnose/what-if workload over two resident sessions,
+//!   for each N in 1/2/4/8. `DPRO_BENCH_BUDGET_S` bounds total wall time.
+//!
+//! Both modes write `BENCH_serve_throughput.json` (qps × clients ×
+//! cache-hit rate).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dpro::serve::http::Client;
+use dpro::serve::{start, ServeOpts};
+use dpro::util::json::{parse, Json};
+use dpro::util::{print_table, Args};
+
+fn fail(msg: &str) -> ! {
+    eprintln!("serve_throughput: FAIL: {msg}");
+    std::process::exit(1);
+}
+
+fn expect(cond: bool, msg: &str) {
+    if !cond {
+        fail(msg);
+    }
+}
+
+fn get_ok(c: &mut Client, path: &str) -> Json {
+    match c.call("GET", path, None) {
+        Ok((200, body)) => parse(&body).unwrap_or_else(|e| fail(&format!("GET {path}: {e}"))),
+        Ok((s, body)) => fail(&format!("GET {path}: status {s}: {body}")),
+        Err(e) => fail(&format!("GET {path}: {e}")),
+    }
+}
+
+fn post_ok(c: &mut Client, path: &str, body: &str) -> Json {
+    match c.call("POST", path, Some(body)) {
+        Ok((200, resp)) => parse(&resp).unwrap_or_else(|e| fail(&format!("POST {path}: {e}"))),
+        Ok((s, resp)) => fail(&format!("POST {path}: status {s}: {resp}")),
+        Err(e) => fail(&format!("POST {path}: {e}")),
+    }
+}
+
+const ANALYTIC_JOB: &str =
+    r#"{"job":{"model":"gpt_mini","scheme":"horovod","transport":"rdma","workers":4}}"#;
+const ANALYTIC_JOB_2: &str =
+    r#"{"job":{"model":"vgg16","scheme":"horovod","transport":"rdma","workers":4}}"#;
+
+fn main() {
+    let args = Args::from_env();
+    let opts = ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        threads: args.usize("threads", 8),
+        batch_window_ms: 2,
+        ..ServeOpts::default()
+    };
+    let handle = match start(&opts) {
+        Ok(h) => h,
+        Err(e) => fail(&format!("daemon start: {e}")),
+    };
+    let addr = handle.addr().to_string();
+
+    if args.flag("smoke") {
+        smoke(&addr, args.get("trace-dir"));
+    } else {
+        sweep(&addr, opts.threads);
+    }
+    handle.stop();
+}
+
+/// The CI smoke: schemas are stable and the second registration + query
+/// hit the cache instead of rebuilding.
+fn smoke(addr: &str, trace_dir: Option<&str>) {
+    let mut c = Client::new(addr);
+
+    let health = get_ok(&mut c, "/healthz");
+    expect(health.str("status") == "ok", "healthz status");
+
+    let reg_body = match trace_dir {
+        Some(dir) => {
+            let mut b = Json::obj();
+            b.set("trace_dir", Json::Str(dir.to_string()));
+            b.to_string()
+        }
+        None => ANALYTIC_JOB.to_string(),
+    };
+    let reg = post_ok(&mut c, "/jobs", &reg_body);
+    let id = reg.str("job").to_string();
+    expect(
+        reg.get("cached").and_then(Json::as_bool) == Some(false),
+        "first registration must build",
+    );
+    expect(reg.f64("iteration_us") > 0.0, "registration iteration_us");
+
+    let replay = get_ok(&mut c, &format!("/jobs/{id}/replay"));
+    for key in [
+        "job", "snapshot", "model", "scheme", "transport", "workers", "ops", "alive_ops",
+        "iteration_us", "fw_us", "bw_us", "est_peak_mem_bytes", "report",
+    ] {
+        expect(replay.get(key).is_some(), &format!("replay schema key {key}"));
+    }
+    let diag = get_ok(&mut c, &format!("/jobs/{id}/diagnose"));
+    for key in ["job", "snapshot", "blame", "bottlenecks", "whatif", "builds_during_queries"] {
+        expect(diag.get(key).is_some(), &format!("diagnose schema key {key}"));
+    }
+
+    let wpath = format!("/jobs/{id}/whatif");
+    let w1 = post_ok(&mut c, &wpath, r#"{"query":"nic-bw=2"}"#);
+    expect(
+        w1.get("answers").and_then(Json::as_arr).map(<[Json]>::len) == Some(1),
+        "whatif answers",
+    );
+
+    // second registration: byte/path-identical job must hit the cache
+    let reg2 = post_ok(&mut c, "/jobs", &reg_body);
+    expect(
+        reg2.get("cached").and_then(Json::as_bool) == Some(true),
+        "second registration must be a cache hit",
+    );
+    // identical what-if against the same snapshot: byte-identical payload
+    let w2 = post_ok(&mut c, &wpath, r#"{"query":"nic-bw=2"}"#);
+    expect(w1.to_string() == w2.to_string(), "repeated whatif must be bit-for-bit stable");
+
+    let stats = get_ok(&mut c, "/statsz");
+    let cache = stats.get("cache").unwrap_or_else(|| fail("statsz cache section"));
+    expect(cache.f64("hits") >= 1.0, "statsz must show a cache hit");
+    expect(cache.f64("hit_rate") > 0.0, "statsz hit rate");
+
+    let mut report = Json::obj();
+    report.set("mode", Json::Str("smoke".into()));
+    report.set("job", Json::Str(id));
+    report.set("cache_hit_on_second_query", Json::Bool(true));
+    report.set("cache_hit_rate", Json::Num(cache.f64("hit_rate")));
+    report.set("requests", Json::Num(stats.f64("requests")));
+    write_report(&report);
+    println!("serve smoke OK: schemas stable, second registration hit the cache");
+}
+
+/// Closed-loop mixed workload against two resident analytic sessions.
+fn sweep(addr: &str, threads: usize) {
+    let budget_s: f64 = std::env::var("DPRO_BENCH_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20.0);
+    let mut c = Client::new(addr);
+    let id1 = post_ok(&mut c, "/jobs", ANALYTIC_JOB).str("job").to_string();
+    let id2 = post_ok(&mut c, "/jobs", ANALYTIC_JOB_2).str("job").to_string();
+
+    let client_counts = [1usize, 2, 4, 8];
+    let per_sweep = Duration::from_secs_f64((budget_s / client_counts.len() as f64).max(2.0));
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for &clients in &client_counts {
+        let done = Arc::new(AtomicU64::new(0));
+        let deadline = Instant::now() + per_sweep;
+        let workers: Vec<_> = (0..clients)
+            .map(|w| {
+                let addr = addr.to_string();
+                let id = if w % 2 == 0 { id1.clone() } else { id2.clone() };
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || {
+                    let mut c = Client::new(&addr);
+                    let mut i = 0usize;
+                    while Instant::now() < deadline {
+                        let ok = match i % 4 {
+                            0 => c.call("GET", &format!("/jobs/{id}/replay"), None).is_ok(),
+                            1 => c.call("GET", &format!("/jobs/{id}/diagnose"), None).is_ok(),
+                            2 => c
+                                .call(
+                                    "POST",
+                                    &format!("/jobs/{id}/whatif"),
+                                    Some(r#"{"query":"nic-bw=2"}"#),
+                                )
+                                .is_ok(),
+                            _ => c
+                                .call(
+                                    "POST",
+                                    &format!("/jobs/{id}/whatif"),
+                                    Some(r#"{"queries":["perfect-overlap","nic-bw=4"]}"#),
+                                )
+                                .is_ok(),
+                        };
+                        if ok {
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        let t0 = Instant::now();
+        for w in workers {
+            let _ = w.join();
+        }
+        let elapsed = t0.elapsed().as_secs_f64() + 1e-9;
+        let total = done.load(Ordering::Relaxed);
+        let qps = total as f64 / elapsed;
+        rows.push(vec![
+            format!("{clients}"),
+            format!("{total}"),
+            format!("{elapsed:.1}"),
+            format!("{qps:.0}"),
+        ]);
+        let mut j = Json::obj();
+        j.set("clients", Json::Num(clients as f64));
+        j.set("requests", Json::Num(total as f64));
+        j.set("wall_s", Json::Num(elapsed));
+        j.set("qps", Json::Num(qps));
+        jrows.push(j);
+    }
+
+    let stats = get_ok(&mut c, "/statsz");
+    let cache = stats.get("cache").unwrap_or_else(|| fail("statsz cache section"));
+    let batch = stats.get("batch").unwrap_or_else(|| fail("statsz batch section"));
+
+    println!("\n=== serve throughput ({threads} server threads, 2 sessions) ===\n");
+    print_table(&["clients", "requests", "wall (s)", "qps"], &rows);
+    println!(
+        "\ncache hit rate {:.3}, what-if batches {}, coalesced {}",
+        cache.f64("hit_rate"),
+        batch.f64("batches"),
+        batch.f64("coalesced"),
+    );
+
+    let mut report = Json::obj();
+    report.set("mode", Json::Str("sweep".into()));
+    report.set("server_threads", Json::Num(threads as f64));
+    report.set("rows", Json::Arr(jrows));
+    report.set("cache_hit_rate", Json::Num(cache.f64("hit_rate")));
+    report.set("whatif_batches", Json::Num(batch.f64("batches")));
+    report.set("whatif_coalesced", Json::Num(batch.f64("coalesced")));
+    write_report(&report);
+}
+
+fn write_report(report: &Json) {
+    match std::fs::write("BENCH_serve_throughput.json", report.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_serve_throughput.json"),
+        Err(e) => eprintln!("could not write BENCH_serve_throughput.json: {e}"),
+    }
+}

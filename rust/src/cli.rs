@@ -62,6 +62,16 @@
 //! live in the `report` payload), **2** for argument errors, **3** for an
 //! unusable trace (unreadable directory, zero usable events) — distinct
 //! so scripts can tell "you typoed" from "the dump is bad".
+//!
+//! `serve` starts `dprod`, the diagnosis-as-a-service daemon
+//! ([`crate::serve`], `docs/SERVE.md`): built graphs stay resident in an
+//! LRU session cache and are queried over HTTP. The exit-code contract
+//! extends to it twice over — at startup (a malformed `--addr`,
+//! `--cache-bytes`, `--threads`, `--batch-window-ms` or `--top` exits 2;
+//! an unusable `--trace-dir` preload exits 3) and per request, where HTTP
+//! statuses mirror the same classes: **400** = the exit-2 argument class,
+//! **422** = the exit-3 unusable-trace class, plus 404/405/413/500 for the
+//! transport-level cases.
 
 use crate::alignment::Alignment;
 use crate::baselines;
@@ -87,6 +97,7 @@ pub fn run(args: Args) -> i32 {
         Some("optimize") => cmd_optimize(&args),
         Some("train") => cmd_train(&args),
         Some("report") => cmd_report(&args),
+        Some("serve") => cmd_serve(&args),
         Some(other) => {
             eprintln!("unknown command {other:?}");
             usage();
@@ -114,7 +125,9 @@ fn usage() {
          [--strategies {}] [--memory-budget-gb G] [--json]\n  \
          train    [--config mini] [--workers 4] [--steps 50] [--artifacts artifacts]\n           \
          [--dump-dir DIR]\n  \
-         report   --model M [--scheme S] [--transport T] [--json]\n\n\
+         report   --model M [--scheme S] [--transport T] [--json]\n  \
+         serve    [--addr 127.0.0.1:7077] [--cache-bytes 1G] [--threads 8]\n           \
+         [--batch-window-ms 2] [--top 5] [--trace-dir DIR[,DIR]]\n\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
          schemes: {}   transports: rdma tcp\n\
          faults (--inject, docs/FAULTS.md): {}\n\n\
@@ -139,7 +152,7 @@ fn job_from_args(args: &Args) -> Result<JobSpec, String> {
 /// default layer: explicit CLI flags win, then `metadata.json`, then the
 /// built-in defaults. Validation is identical either way — a bad value
 /// from metadata is rejected with the same message as a bad flag.
-fn job_from_args_with(args: &Args, meta: Option<&JobMeta>) -> Result<JobSpec, String> {
+pub(crate) fn job_from_args_with(args: &Args, meta: Option<&JobMeta>) -> Result<JobSpec, String> {
     let model = args
         .get("model")
         .map(str::to_string)
@@ -748,4 +761,82 @@ fn cmd_report(args: &Args) -> i32 {
     println!("Daydream     : {}  (err {:.2}%)", fmt_us(dd.iteration_us),
              crate::util::stats::rel_err_pct(dd.iteration_us, truth));
     0
+}
+
+/// `dpro serve`: start the `dprod` daemon and block. Argument errors exit
+/// 2, an unusable `--trace-dir` preload exits 3 — the standard contract,
+/// applied at startup; per-request errors map to HTTP statuses instead
+/// (see the module docs and `docs/SERVE.md`).
+fn cmd_serve(args: &Args) -> i32 {
+    use crate::serve::{parse_bytes, ServeError, ServeOpts};
+    use std::net::ToSocketAddrs;
+
+    let mut opts = ServeOpts::default();
+    if let Some(addr) = args.get("addr") {
+        if addr.to_socket_addrs().map(|mut a| a.next()).ok().flatten().is_none() {
+            eprintln!("invalid --addr {addr:?}: expected host:port (e.g. 127.0.0.1:7077)");
+            return 2;
+        }
+        opts.addr = addr.to_string();
+    }
+    if let Some(cb) = args.get("cache-bytes") {
+        match parse_bytes(cb) {
+            Ok(n) => opts.cache_bytes = n,
+            Err(e) => {
+                eprintln!("invalid --cache-bytes {cb:?}: {e}");
+                return 2;
+            }
+        }
+    }
+    // positive-integer flags: absence keeps the default, a malformed or
+    // zero value is an argument error — never silently replaced
+    for (key, slot) in [
+        ("threads", &mut opts.threads as &mut usize),
+        ("top", &mut opts.top),
+    ] {
+        if let Some(v) = args.get(key) {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => *slot = n,
+                _ => {
+                    eprintln!("invalid --{key} {v:?}: expected a positive integer");
+                    return 2;
+                }
+            }
+        }
+    }
+    if let Some(v) = args.get("batch-window-ms") {
+        match v.parse::<u64>() {
+            Ok(ms) => opts.batch_window_ms = ms,
+            Err(_) => {
+                eprintln!("invalid --batch-window-ms {v:?}: expected a non-negative integer");
+                return 2;
+            }
+        }
+    }
+    if let Some(dirs) = args.get("trace-dir") {
+        opts.preload = dirs.split(',').map(str::to_string).collect();
+    }
+
+    match crate::serve::start(&opts) {
+        Ok(handle) => {
+            println!(
+                "dprod {} listening on {} ({} threads, {} cache, {} ms batch window, {} preloaded)",
+                crate::version(),
+                handle.addr(),
+                opts.threads,
+                fmt_bytes(opts.cache_bytes as f64),
+                opts.batch_window_ms,
+                opts.preload.len(),
+            );
+            handle.wait();
+            0
+        }
+        Err(e) => {
+            eprintln!("serve: {}", e.message());
+            match e {
+                ServeError::UnusableTrace(_) => 3,
+                _ => 2,
+            }
+        }
+    }
 }

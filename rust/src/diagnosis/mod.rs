@@ -174,8 +174,15 @@ impl Diagnoser {
 
     /// Global-DFG constructions since this diagnoser became ready — the
     /// what-if machinery keeps it at 0 (transaction-counter test).
+    ///
+    /// The underlying counter is thread-local, so when one diagnoser is
+    /// driven from several threads (the serve session engine hands it
+    /// from worker to worker under a mutex) the difference saturates at 0
+    /// rather than underflowing; the zero-builds guarantee itself is
+    /// enforced by the transaction machinery and pinned by the
+    /// single-threaded tests.
     pub fn builds_during_queries(&self) -> usize {
-        build_count() - self.builds_at_ready
+        build_count().saturating_sub(self.builds_at_ready)
     }
 
     /// What-if queries answered so far.
@@ -259,6 +266,42 @@ impl Diagnoser {
             }
         }
         qs
+    }
+
+    /// Run the transactional optimizer (Alg. 1) **on this diagnoser's
+    /// resident graph**, with the default strategy set derived from
+    /// `opts` — the serve session's writer path. Accepted candidates
+    /// commit through the transaction journal and become the new
+    /// baseline; rejected ones roll back bit-exactly, so a search that
+    /// accepts nothing leaves every subsequent query answer unchanged.
+    /// Coarsened-view setup is skipped (it would force a rebuild); see
+    /// [`crate::optimizer::search::optimize_resident`].
+    pub fn optimize(&mut self, opts: &crate::optimizer::SearchOpts) -> crate::optimizer::SearchOutcome {
+        self.optimize_with(opts, crate::optimizer::strategy::strategies_from_opts(opts))
+    }
+
+    /// [`Self::optimize`] with an explicit strategy set.
+    pub fn optimize_with(
+        &mut self,
+        opts: &crate::optimizer::SearchOpts,
+        strategies: Vec<Box<dyn crate::optimizer::strategy::Strategy>>,
+    ) -> crate::optimizer::SearchOutcome {
+        let out = crate::optimizer::search::optimize_resident(
+            &mut self.mg,
+            &mut self.eng,
+            opts,
+            strategies,
+        );
+        // committed decisions changed the schedule: refresh the cached
+        // baseline every analytic reads (a no-accept search replays to
+        // the identical schedule — rollback equivalence)
+        let log = self.mg.commit();
+        self.baseline = self.eng.replay_incremental(&self.mg, &log).clone();
+        // setup builds (t_sync probe engines) are excluded from the query
+        // counter exactly like the initial construction; the round loop's
+        // own builds are reported in `SearchOutcome::builds_during_search`
+        self.builds_at_ready = build_count();
+        out
     }
 
     /// Run the full diagnosis: blame, ranked bottlenecks (truncated to

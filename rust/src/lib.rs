@@ -18,6 +18,10 @@
 //!   transactional decisions on the incremental engine, with Coarsened
 //!   View / partial replay / symmetry accelerations (§5), validated
 //!   against [`baselines`].
+//! - **Service** ([`serve`]): `dprod`, a std-only HTTP daemon keeping
+//!   built graphs resident in a byte-accounted LRU session cache and
+//!   serving concurrent replay / diagnose / what-if queries with
+//!   snapshot isolation (single-writer `optimize`, coalesced what-ifs).
 //!
 //! The live end-to-end path ([`runtime`] + [`coordinator`]) executes a JAX
 //! (+Pallas) transformer AOT-compiled to HLO through PJRT, with Python
@@ -50,6 +54,7 @@ pub mod models;
 pub mod optimizer;
 pub mod profiler;
 pub mod replay;
+pub mod serve;
 pub mod util;
 
 /// Crate version (from `Cargo.toml`), shown by the CLI.

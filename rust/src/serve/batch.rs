@@ -1,0 +1,171 @@
+//! What-if request batching: identical queries against the same snapshot
+//! that arrive within a window run **once** — the first arrival becomes
+//! the leader, waits out the window so stragglers can join, evaluates
+//! under the engine lock, and fans the payload out to every waiter.
+//!
+//! The batch key includes the snapshot version (see
+//! [`crate::serve::session::Session::whatif`]), so a query batched before
+//! an optimizer commit never serves a waiter who arrived after it: the
+//! post-commit arrival keys to the new version and starts a fresh batch.
+//! Payloads are shared verbatim — every waiter gets the byte-identical
+//! answer, which is what makes coalescing invisible to the reader
+//! bit-for-bit property (`rust/tests/serve.rs`).
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One in-flight batch: the leader publishes into `done` and broadcasts.
+struct Slot {
+    done: Mutex<Option<Result<String, String>>>,
+    cv: Condvar,
+}
+
+/// Coalesces identical evaluations by key. One `Batcher` per session.
+pub struct Batcher {
+    window: Duration,
+    slots: Mutex<HashMap<String, Arc<Slot>>>,
+    /// Leader evaluations performed.
+    batches: AtomicU64,
+    /// Waiters served from another request's evaluation.
+    coalesced: AtomicU64,
+}
+
+impl Batcher {
+    /// Batcher with the given coalescing window; 0 still coalesces
+    /// queries that overlap in flight, it just never waits for them.
+    pub fn new(window_ms: u64) -> Batcher {
+        Batcher {
+            window: Duration::from_millis(window_ms),
+            slots: Mutex::new(HashMap::new()),
+            batches: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// Run `eval` for `key`, or wait for the identical in-flight run.
+    /// Returns the (shared) payload and whether this call coalesced onto
+    /// another's evaluation.
+    pub fn run(
+        &self,
+        key: &str,
+        eval: impl FnOnce() -> Result<String, String>,
+    ) -> (Result<String, String>, bool) {
+        let (slot, leader) = {
+            let mut slots = lock(&self.slots);
+            match slots.get(key) {
+                Some(s) => (Arc::clone(s), false),
+                None => {
+                    let s = Arc::new(Slot { done: Mutex::new(None), cv: Condvar::new() });
+                    slots.insert(key.to_string(), Arc::clone(&s));
+                    (s, true)
+                }
+            }
+        };
+        if leader {
+            if !self.window.is_zero() {
+                std::thread::sleep(self.window);
+            }
+            // a panicking evaluation must not strand the waiters
+            let result = match catch_unwind(AssertUnwindSafe(eval)) {
+                Ok(r) => r,
+                Err(_) => Err("internal error: evaluation panicked".to_string()),
+            };
+            // unregister BEFORE publishing: requests arriving from here on
+            // start a fresh batch instead of receiving a stale payload
+            lock(&self.slots).remove(key);
+            *lock(&slot.done) = Some(result.clone());
+            slot.cv.notify_all();
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            (result, false)
+        } else {
+            let mut done = lock(&slot.done);
+            while done.is_none() {
+                done = slot.cv.wait(done).unwrap_or_else(|p| p.into_inner());
+            }
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            (done.clone().expect("published above"), true)
+        }
+    }
+
+    /// `(leader evaluations, coalesced waiters)` so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.batches.load(Ordering::Relaxed), self.coalesced.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock that tolerates poisoning: the protected state is only ever
+/// written in a published-complete form, so a panicked peer cannot leave
+/// it half-updated.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn concurrent_identical_queries_coalesce_to_one_eval() {
+        let b = Arc::new(Batcher::new(30));
+        let evals = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let b = Arc::clone(&b);
+            let evals = Arc::clone(&evals);
+            handles.push(std::thread::spawn(move || {
+                b.run("k", || {
+                    evals.fetch_add(1, Ordering::Relaxed);
+                    Ok("payload".to_string())
+                })
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // all 8 got the identical payload from however many leaders the
+        // 30 ms window produced (typically exactly one)
+        for (r, _) in &results {
+            assert_eq!(r.as_deref(), Ok("payload"));
+        }
+        let leaders = evals.load(Ordering::Relaxed);
+        assert!(leaders >= 1);
+        let coalesced = results.iter().filter(|(_, c)| *c).count();
+        assert_eq!(coalesced, 8 - leaders, "every non-leader coalesced");
+        assert!(coalesced >= 1, "30ms window should have coalesced something");
+        assert_eq!(b.stats().1, coalesced as u64);
+    }
+
+    #[test]
+    fn different_keys_do_not_coalesce() {
+        let b = Batcher::new(0);
+        let (r1, c1) = b.run("a", || Ok("1".into()));
+        let (r2, c2) = b.run("b", || Ok("2".into()));
+        assert_eq!((r1.unwrap().as_str(), c1), ("1", false));
+        assert_eq!((r2.unwrap().as_str(), c2), ("2", false));
+    }
+
+    #[test]
+    fn panicking_leader_releases_waiters_with_an_error() {
+        let b = Arc::new(Batcher::new(20));
+        let b2 = Arc::clone(&b);
+        let waiter = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                // give the leader time to register its slot
+                std::thread::sleep(Duration::from_millis(5));
+                b.run("k", || Ok("never the leader's payload".into()))
+            })
+        };
+        let (lead, _) = b2.run("k", || panic!("evaluation bug"));
+        assert!(lead.is_err());
+        let (got, _) = waiter.join().unwrap();
+        // the waiter either coalesced onto the panicked leader (error) or
+        // raced past the removal and evaluated fresh (ok) — never hangs
+        match got {
+            Ok(s) => assert_eq!(s, "never the leader's payload"),
+            Err(e) => assert!(e.contains("panicked")),
+        }
+    }
+}

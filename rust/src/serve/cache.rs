@@ -1,0 +1,243 @@
+//! Byte-accounted LRU session cache. Sessions are keyed by job descriptor
+//! + plan family + trace identity (see [`crate::serve::daemon`]); a
+//! `POST /jobs` for a key already resident is a cache hit — the expensive
+//! ingest + build is skipped and the existing session answers.
+//!
+//! Concurrent requests for the same missing key coalesce: the first
+//! inserts a `Building` placeholder and builds **outside** the cache
+//! lock; the rest wait on a condvar, so a slow build never blocks hits on
+//! other sessions. When the accounted bytes exceed the capacity, ready
+//! sessions are evicted least-recently-used first — except the entry just
+//! inserted, so one oversized session still serves (and is evicted by the
+//! next insert).
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::serve::session::Session;
+use crate::serve::ServeError;
+
+enum Slot {
+    /// A builder is constructing this session outside the lock.
+    Building,
+    /// Resident; `last_used` is the LRU tick.
+    Ready { sess: Arc<Session>, last_used: u64 },
+}
+
+struct Inner {
+    map: HashMap<String, Slot>,
+    /// Monotonic use counter (LRU clock).
+    tick: u64,
+    /// Accounted bytes of all `Ready` sessions.
+    bytes: usize,
+}
+
+/// Cumulative cache statistics (`/statsz`).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheStats {
+    /// Lookups that found a ready session.
+    pub hits: u64,
+    /// Lookups that found nothing (and, for `get_or_build`, built).
+    pub misses: u64,
+    /// Sessions evicted to fit the byte budget.
+    pub evictions: u64,
+    /// Ready sessions resident now.
+    pub sessions: usize,
+    /// Accounted bytes resident now.
+    pub bytes: usize,
+    /// Capacity in bytes.
+    pub cap_bytes: usize,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses), 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The session cache (see module docs).
+pub struct SessionCache {
+    cap_bytes: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SessionCache {
+    /// Cache holding at most ~`cap_bytes` of accounted session bytes.
+    pub fn new(cap_bytes: usize) -> SessionCache {
+        SessionCache {
+            cap_bytes,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0, bytes: 0 }),
+            cv: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch `key`, building it with `build` on a miss. Returns the
+    /// session and whether it was a hit. Concurrent callers for the same
+    /// key share one build; a failed or panicked build clears the
+    /// placeholder so the key can be retried.
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<Session, ServeError>,
+    ) -> Result<(Arc<Session>, bool), ServeError> {
+        {
+            let mut guard = lock(&self.inner);
+            loop {
+                match probe(&mut guard, key) {
+                    Probe::Ready(sess) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok((sess, true));
+                    }
+                    Probe::Building => {
+                        guard = self.cv.wait(guard).unwrap_or_else(|p| p.into_inner());
+                    }
+                    Probe::Absent => {
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        guard.map.insert(key.to_string(), Slot::Building);
+                        break;
+                    }
+                }
+            }
+        }
+        // build with no lock held — hits on other keys proceed
+        let built = match catch_unwind(AssertUnwindSafe(build)) {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Internal("session build panicked".into())),
+        };
+        let mut inner = lock(&self.inner);
+        match built {
+            Ok(sess) => {
+                let sess = Arc::new(sess);
+                inner.tick += 1;
+                let t = inner.tick;
+                inner.bytes += sess.bytes();
+                inner
+                    .map
+                    .insert(key.to_string(), Slot::Ready { sess: Arc::clone(&sess), last_used: t });
+                self.evict_over_budget(&mut inner, key);
+                self.cv.notify_all();
+                Ok((sess, false))
+            }
+            Err(e) => {
+                inner.map.remove(key);
+                self.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Look up a session by key without building — the `GET` path.
+    /// Counts toward the hit rate; waits out an in-flight build of the
+    /// same key rather than reporting a spurious miss.
+    pub fn lookup(&self, key: &str) -> Option<Arc<Session>> {
+        let mut guard = lock(&self.inner);
+        loop {
+            match probe(&mut guard, key) {
+                Probe::Ready(sess) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(sess);
+                }
+                Probe::Building => {
+                    guard = self.cv.wait(guard).unwrap_or_else(|p| p.into_inner());
+                }
+                Probe::Absent => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Ready sessions, `(id, bytes, whatif_served)` per session — the
+    /// `/statsz` session table.
+    pub fn sessions(&self) -> Vec<(String, usize, u64)> {
+        let inner = lock(&self.inner);
+        let mut out: Vec<(String, usize, u64)> = inner
+            .map
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready { sess, .. } => Some((k.clone(), sess.bytes(), sess.whatif_served())),
+                Slot::Building => None,
+            })
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Current statistics snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let inner = lock(&self.inner);
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            sessions: inner
+                .map
+                .values()
+                .filter(|s| matches!(s, Slot::Ready { .. }))
+                .count(),
+            bytes: inner.bytes,
+            cap_bytes: self.cap_bytes,
+        }
+    }
+
+    /// Evict LRU `Ready` entries (never `keep`, never `Building`) until
+    /// the accounted bytes fit the capacity.
+    fn evict_over_budget(&self, inner: &mut Inner, keep: &str) {
+        while inner.bytes > self.cap_bytes {
+            let victim = inner
+                .map
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { last_used, .. } if k != keep => Some((*last_used, k.clone())),
+                    _ => None,
+                })
+                .min();
+            let Some((_, key)) = victim else { break };
+            if let Some(Slot::Ready { sess, .. }) = inner.map.remove(&key) {
+                inner.bytes = inner.bytes.saturating_sub(sess.bytes());
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn lock(m: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One lock-held look at `key`. Touching the LRU tick happens here so
+/// the callers' condvar loops never hold a borrow across a `wait`.
+enum Probe {
+    Ready(Arc<Session>),
+    Building,
+    Absent,
+}
+
+fn probe(guard: &mut MutexGuard<'_, Inner>, key: &str) -> Probe {
+    let inner = &mut **guard; // split-borrow `map` and `tick`
+    match inner.map.get_mut(key) {
+        Some(Slot::Ready { sess, last_used }) => {
+            inner.tick += 1;
+            *last_used = inner.tick;
+            Probe::Ready(Arc::clone(sess))
+        }
+        Some(Slot::Building) => Probe::Building,
+        None => Probe::Absent,
+    }
+}

@@ -1,0 +1,552 @@
+//! The serve daemon: TCP accept loop over a
+//! [`crate::util::pool::FixedPool`], request routing, and the operational
+//! endpoints. See `docs/SERVE.md` for the full endpoint + schema
+//! reference; the short form:
+//!
+//! ```text
+//! POST /jobs                  register a job: {"trace_dir": DIR} |
+//!                             {"files": {name: contents}} | {"job": {...}}
+//! GET  /jobs/:id/replay       snapshot replay payload
+//! GET  /jobs/:id/diagnose     snapshot diagnosis payload
+//! POST /jobs/:id/whatif       {"query": "nic-bw=2,..."} | {"queries": [...]}
+//! POST /jobs/:id/optimize     {"budget_s": .., "strategies": "..", ...}
+//! GET  /healthz               liveness
+//! GET  /statsz                cache hit rate, sessions, queue depth, ...
+//! ```
+//!
+//! Status mapping (the CLI exit-code contract, lifted to HTTP): 200 ok —
+//! including degraded-but-usable traces, whose warnings ride in the
+//! `report` payload; 400 argument/body errors (exit-2 class); 422
+//! unusable trace (exit-3 class); 404 unknown job/route; 405 wrong
+//! method; 413 oversized body; 500 handler bug.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::diagnosis::parse_whatif;
+use crate::optimizer::{strategy, SearchOpts};
+use crate::serve::http::{read_request, write_response, Request};
+use crate::serve::session::Session;
+use crate::serve::{fnv1a, ServeError, ServeOpts, SessionCache};
+use crate::trace::io::{load_dir, load_mem, JobMeta};
+use crate::util::json::{parse, Json};
+use crate::util::pool::FixedPool;
+use crate::util::Args;
+
+/// Shared server state: the session cache plus the counters `/statsz`
+/// reports.
+struct State {
+    opts: ServeOpts,
+    cache: SessionCache,
+    /// Mirror of the pool's pending-jobs counter (the pool itself lives
+    /// on the accept thread).
+    queue_depth: Arc<AtomicUsize>,
+    threads: usize,
+    requests: AtomicU64,
+    started: Instant,
+}
+
+/// A running daemon. Dropping the handle stops it; [`ServerHandle::wait`]
+/// blocks until it stops on its own (the CLI foreground mode).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (the actual port when `--addr` asked for 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight requests, and join.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    /// Block until the daemon exits (it doesn't on its own — this is the
+    /// CLI's foreground serve loop; ^C ends the process).
+    pub fn wait(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(j) = self.join.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // the accept loop is blocked in accept(); a throwaway
+            // connection wakes it to observe the stop flag
+            let _ = TcpStream::connect(self.addr);
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start the daemon: build preloaded sessions, bind, spawn the accept
+/// loop. Preloading runs *before* bind so an unusable `--trace-dir`
+/// fails startup (exit-3 class) instead of serving 422s forever.
+pub fn start(opts: &ServeOpts) -> Result<ServerHandle, ServeError> {
+    let pool = FixedPool::new(opts.threads);
+    let state = Arc::new(State {
+        opts: opts.clone(),
+        cache: SessionCache::new(opts.cache_bytes),
+        queue_depth: pool.pending_handle(),
+        threads: pool.threads(),
+        requests: AtomicU64::new(0),
+        started: Instant::now(),
+    });
+    for dir in &opts.preload {
+        register_trace_dir(&state, dir)?;
+    }
+    let listener = TcpListener::bind(&opts.addr)
+        .map_err(|e| ServeError::BadRequest(format!("cannot bind {}: {e}", opts.addr)))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| ServeError::Internal(format!("local_addr: {e}")))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let state2 = Arc::clone(&state);
+    let join = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            // idle keep-alive connections release their worker after this
+            let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+            let st = Arc::clone(&state2);
+            pool.execute(move || serve_conn(stream, st));
+        }
+        // `pool` drops here: queued + in-flight requests drain, then the
+        // accept thread (and with it ServerHandle::wait/stop) returns
+    });
+    Ok(ServerHandle { addr, stop, join: Some(join) })
+}
+
+/// One connection: serve keep-alive requests until the peer closes, goes
+/// idle past the read timeout, or a protocol error ends the conversation.
+fn serve_conn(stream: TcpStream, state: Arc<State>) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            Ok(None) => break,
+            Err((status, msg)) => {
+                let _ = write_response(reader.get_mut(), status, &err_body(&msg), false);
+                break;
+            }
+            Ok(Some(req)) => {
+                state.requests.fetch_add(1, Ordering::Relaxed);
+                // a handler bug answers 500 and keeps the worker alive
+                let (status, body) =
+                    match catch_unwind(AssertUnwindSafe(|| route(&state, &req))) {
+                        Ok(r) => r,
+                        Err(_) => (500, err_body("handler panicked")),
+                    };
+                let ok = write_response(reader.get_mut(), status, &body, req.keep_alive);
+                if ok.is_err() || !req.keep_alive {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// `{"error": msg}`.
+fn err_body(msg: &str) -> String {
+    let mut j = Json::obj();
+    j.set("error", Json::Str(msg.to_string()));
+    j.to_string()
+}
+
+fn route(state: &Arc<State>, req: &Request) -> (u16, String) {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let result = match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => Ok((200, healthz())),
+        ("GET", ["statsz"]) => Ok((200, statsz(state))),
+        ("POST", ["jobs"]) => post_jobs(state, &req.body),
+        ("GET", ["jobs", id, "replay"]) => read_snapshot(state, id, true),
+        ("GET", ["jobs", id, "diagnose"]) => read_snapshot(state, id, false),
+        ("POST", ["jobs", id, "whatif"]) => post_whatif(state, id, &req.body),
+        ("POST", ["jobs", id, "optimize"]) => post_optimize(state, id, &req.body),
+        (_, ["healthz" | "statsz"])
+        | (_, ["jobs"])
+        | (_, ["jobs", _, "replay" | "diagnose" | "whatif" | "optimize"]) => {
+            Ok((405, err_body(&format!("{} not allowed on {}", req.method, req.path))))
+        }
+        _ => Ok((404, err_body(&format!("no route for {} {}", req.method, req.path)))),
+    };
+    result.unwrap_or_else(|e| (e.http_status(), err_body(e.message())))
+}
+
+fn healthz() -> String {
+    let mut j = Json::obj();
+    j.set("status", Json::Str("ok".into()));
+    j.set("version", Json::Str(crate::version().to_string()));
+    j.to_string()
+}
+
+fn statsz(state: &Arc<State>) -> String {
+    let cs = state.cache.stats();
+    let mut cache = Json::obj();
+    cache.set("hits", Json::Num(cs.hits as f64));
+    cache.set("misses", Json::Num(cs.misses as f64));
+    cache.set("hit_rate", Json::Num(cs.hit_rate()));
+    cache.set("evictions", Json::Num(cs.evictions as f64));
+    cache.set("bytes", Json::Num(cs.bytes as f64));
+    cache.set("cap_bytes", Json::Num(cs.cap_bytes as f64));
+    cache.set("sessions", Json::Num(cs.sessions as f64));
+
+    let (mut batches, mut coalesced) = (0u64, 0u64);
+    let mut sessions = Vec::new();
+    for (id, bytes, served) in state.cache.sessions() {
+        if let Some(sess) = state.cache.lookup(&id) {
+            let (b, c) = sess.batch_stats();
+            batches += b;
+            coalesced += c;
+        }
+        let mut row = Json::obj();
+        row.set("job", Json::Str(id));
+        row.set("bytes", Json::Num(bytes as f64));
+        row.set("whatif_served", Json::Num(served as f64));
+        sessions.push(row);
+    }
+    let mut batch = Json::obj();
+    batch.set("batches", Json::Num(batches as f64));
+    batch.set("coalesced", Json::Num(coalesced as f64));
+
+    let mut j = Json::obj();
+    j.set("version", Json::Str(crate::version().to_string()));
+    j.set("uptime_s", Json::Num(state.started.elapsed().as_secs_f64()));
+    j.set("cache", cache);
+    j.set("batch", batch);
+    j.set("sessions", Json::Arr(sessions));
+    j.set("queue_depth", Json::Num(state.queue_depth.load(Ordering::Relaxed) as f64));
+    j.set("threads", Json::Num(state.threads as f64));
+    j.set("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64));
+    j.to_string()
+}
+
+/// The `POST /jobs` response.
+fn registered(sess: &Session, cached: bool) -> (u16, String) {
+    let snap = sess.snapshot();
+    let mut j = Json::obj();
+    j.set("job", Json::Str(sess.id().to_string()));
+    j.set("cached", Json::Bool(cached));
+    j.set("snapshot", Json::Num(snap.version as f64));
+    j.set("iteration_us", Json::Num(snap.iteration_us));
+    (200, j.to_string())
+}
+
+fn post_jobs(state: &Arc<State>, body: &str) -> Result<(u16, String), ServeError> {
+    let j = parse(body)
+        .map_err(|e| ServeError::BadRequest(format!("invalid JSON body: {e}")))?;
+    if let Some(dir) = j.get("trace_dir") {
+        let dir = dir
+            .as_str()
+            .ok_or_else(|| ServeError::BadRequest("trace_dir must be a string".into()))?;
+        let (sess, cached) = register_trace_dir(state, dir)?;
+        return Ok(registered(&sess, cached));
+    }
+    if let Some(files) = j.get("files") {
+        let Json::Obj(map) = files else {
+            return Err(ServeError::BadRequest(
+                "files must be an object of {name: contents}".into(),
+            ));
+        };
+        // contents may be the file text or the JSON value itself (both
+        // end up as the bytes load_mem ingests)
+        let files: Vec<(String, String)> = map
+            .iter()
+            .map(|(name, v)| {
+                let text = match v {
+                    Json::Str(s) => s.clone(),
+                    other => other.to_string(),
+                };
+                (name.clone(), text)
+            })
+            .collect();
+        let loaded = load_mem(&files).map_err(ServeError::UnusableTrace)?;
+        if loaded.trace.events.is_empty() {
+            return Err(ServeError::UnusableTrace(format!(
+                "no usable events in upload: {}",
+                loaded.report
+            )));
+        }
+        let spec = resolve_spec(j.get("job"), loaded.job.as_ref())?;
+        // trace identity = content hash, so the same dump uploaded twice
+        // is one session (the smoke test's cache hit)
+        let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+        for (name, text) in &files {
+            acc ^= fnv1a(name.bytes().chain([0u8]).chain(text.bytes()));
+        }
+        let tag = format!("u{acc:016x}");
+        let (sess, cached) =
+            insert_session(state, spec, Some((loaded.trace, loaded.report)), &tag)?;
+        return Ok(registered(&sess, cached));
+    }
+    if j.get("job").is_some() {
+        // analytic session: the cost model supplies durations (the
+        // pre-deployment workflow — same as `dpro diagnose` with no trace)
+        let spec = resolve_spec(j.get("job"), None)?;
+        let (sess, cached) = insert_session(state, spec, None, "analytic")?;
+        return Ok(registered(&sess, cached));
+    }
+    Err(ServeError::BadRequest(
+        "body must contain one of: trace_dir, files, job".into(),
+    ))
+}
+
+fn read_snapshot(
+    state: &Arc<State>,
+    id: &str,
+    replay: bool,
+) -> Result<(u16, String), ServeError> {
+    match state.cache.lookup(id) {
+        None => Ok((404, err_body(&format!("unknown job {id:?}; POST /jobs first")))),
+        Some(sess) => {
+            let snap = sess.snapshot();
+            Ok((200, if replay { snap.replay.clone() } else { snap.diagnose.clone() }))
+        }
+    }
+}
+
+fn post_whatif(state: &Arc<State>, id: &str, body: &str) -> Result<(u16, String), ServeError> {
+    let Some(sess) = state.cache.lookup(id) else {
+        return Ok((404, err_body(&format!("unknown job {id:?}; POST /jobs first"))));
+    };
+    let j = parse(body)
+        .map_err(|e| ServeError::BadRequest(format!("invalid JSON body: {e}")))?;
+    let text = if let Some(q) = j.get("query") {
+        q.as_str()
+            .ok_or_else(|| ServeError::BadRequest("query must be a string".into()))?
+            .to_string()
+    } else if let Some(arr) = j.get("queries").and_then(Json::as_arr) {
+        let parts: Result<Vec<&str>, ServeError> = arr
+            .iter()
+            .map(|q| {
+                q.as_str()
+                    .ok_or_else(|| ServeError::BadRequest("queries must be strings".into()))
+            })
+            .collect();
+        parts?.join(",")
+    } else {
+        return Err(ServeError::BadRequest(
+            "body must contain query or queries".into(),
+        ));
+    };
+    let queries = parse_whatif(&text).map_err(ServeError::BadRequest)?;
+    let (payload, _coalesced) = sess.whatif(&queries);
+    payload.map(|p| (200, p)).map_err(ServeError::Internal)
+}
+
+fn post_optimize(state: &Arc<State>, id: &str, body: &str) -> Result<(u16, String), ServeError> {
+    let Some(sess) = state.cache.lookup(id) else {
+        return Ok((404, err_body(&format!("unknown job {id:?}; POST /jobs first"))));
+    };
+    let j = if body.trim().is_empty() {
+        Json::obj()
+    } else {
+        parse(body).map_err(|e| ServeError::BadRequest(format!("invalid JSON body: {e}")))?
+    };
+    let Json::Obj(map) = &j else {
+        return Err(ServeError::BadRequest("body must be an object".into()));
+    };
+    // resident graphs skip coarsened-view setup (it would force a
+    // rebuild); everything else mirrors `dpro optimize` flag validation
+    let mut opts = SearchOpts { use_coarsened_view: false, ..SearchOpts::default() };
+    for (k, v) in map {
+        match k.as_str() {
+            "budget_s" => match v.as_f64() {
+                Some(x) if x > 0.0 => opts.budget_wall_s = x,
+                _ => {
+                    return Err(ServeError::BadRequest(
+                        "budget_s must be a positive number".into(),
+                    ))
+                }
+            },
+            "max_rounds" => match v.as_f64() {
+                Some(x) if x >= 1.0 && x.fract() == 0.0 => opts.max_rounds = x as usize,
+                _ => {
+                    return Err(ServeError::BadRequest(
+                        "max_rounds must be a positive integer".into(),
+                    ))
+                }
+            },
+            "memory_budget_gb" => match v.as_f64() {
+                Some(g) if g > 0.0 => opts.memory_budget_bytes = Some(g * 1e9),
+                _ => {
+                    return Err(ServeError::BadRequest(
+                        "memory_budget_gb must be a positive number".into(),
+                    ))
+                }
+            },
+            "strategies" => {
+                let list = v.as_str().ok_or_else(|| {
+                    ServeError::BadRequest("strategies must be a string".into())
+                })?;
+                strategy::parse_strategies(list).map_err(ServeError::BadRequest)?;
+                opts.strategies = Some(list.to_string());
+            }
+            other => {
+                return Err(ServeError::BadRequest(format!(
+                    "unknown optimize field {other:?}; valid: budget_s, max_rounds, \
+                     memory_budget_gb, strategies"
+                )))
+            }
+        }
+    }
+    Ok((200, sess.optimize(&opts)))
+}
+
+/// Resolve the job spec from the request's optional `job` object layered
+/// over the dump's metadata — through the *same* code path as the CLI
+/// ([`crate::cli::job_from_args_with`]), so a bad value gets the
+/// identical message over HTTP (400) and on the command line (exit 2).
+fn resolve_spec(job: Option<&Json>, meta: Option<&JobMeta>) -> Result<crate::config::JobSpec, ServeError> {
+    let args = match job {
+        Some(j) => args_from_job_json(j)?,
+        None => Args::default(),
+    };
+    crate::cli::job_from_args_with(&args, meta).map_err(ServeError::BadRequest)
+}
+
+/// Map a `job` JSON object onto the CLI's argument surface.
+fn args_from_job_json(j: &Json) -> Result<Args, ServeError> {
+    let Json::Obj(map) = j else {
+        return Err(ServeError::BadRequest("job must be an object".into()));
+    };
+    let mut a = Args::default();
+    for (k, v) in map {
+        match k.as_str() {
+            "model" | "scheme" | "transport" => {
+                let s = v.as_str().ok_or_else(|| {
+                    ServeError::BadRequest(format!("job.{k} must be a string"))
+                })?;
+                a.options.insert(k.clone(), s.to_string());
+            }
+            "workers" => {
+                // integral numbers pass through; anything else reaches the
+                // CLI validator verbatim and gets its exit-2-class message
+                let s = match v {
+                    Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 => format!("{}", *x as u64),
+                    Json::Num(x) => format!("{x}"),
+                    Json::Str(s) => s.clone(),
+                    _ => {
+                        return Err(ServeError::BadRequest(
+                            "job.workers must be a positive integer".into(),
+                        ))
+                    }
+                };
+                a.options.insert("workers".into(), s);
+            }
+            "plan" => match v.as_str() {
+                Some("per-tensor") => a.flags.push("per-tensor".into()),
+                Some("deployed") => a.flags.push("deployed".into()),
+                _ => {
+                    return Err(ServeError::BadRequest(
+                        "job.plan must be \"per-tensor\" or \"deployed\"".into(),
+                    ))
+                }
+            },
+            other => {
+                return Err(ServeError::BadRequest(format!(
+                    "unknown job field {other:?}; valid: model, scheme, transport, \
+                     workers, plan"
+                )))
+            }
+        }
+    }
+    Ok(a)
+}
+
+/// Session key: job descriptor + plan family + trace identity, hashed
+/// into a URL-safe id. Same descriptor + same trace ⇒ same session.
+fn session_id(spec: &crate::config::JobSpec, trace_tag: &str) -> String {
+    let m = JobMeta::of(spec);
+    let desc = format!(
+        "{}|{}|{}|{}|{}|{}|{trace_tag}",
+        m.model, m.scheme, m.transport, m.n_workers, m.gpus_per_machine, m.plan
+    );
+    format!("j{:016x}", fnv1a(desc.bytes()))
+}
+
+fn insert_session(
+    state: &Arc<State>,
+    spec: crate::config::JobSpec,
+    trace: Option<(crate::trace::GTrace, crate::trace::validate::TraceReport)>,
+    trace_tag: &str,
+) -> Result<(Arc<Session>, bool), ServeError> {
+    let id = session_id(&spec, trace_tag);
+    state.cache.get_or_build(&id, || {
+        Ok(Session::build(&id, spec, trace, state.opts.top, state.opts.batch_window_ms))
+    })
+}
+
+/// Register a trace directory (`--trace-dir` preload and the
+/// `{"trace_dir": ...}` upload form). The cache key fingerprints the
+/// canonical path plus every trace file's (name, size, mtime), so
+/// re-registering an edited dump builds a fresh session while an
+/// untouched one hits.
+fn register_trace_dir(
+    state: &Arc<State>,
+    dir: &str,
+) -> Result<(Arc<Session>, bool), ServeError> {
+    let canon = std::fs::canonicalize(dir)
+        .map_err(|e| ServeError::UnusableTrace(format!("cannot read trace dir {dir}: {e}")))?;
+    let mut fingerprint = canon.to_string_lossy().into_owned().into_bytes();
+    if let Ok(rd) = std::fs::read_dir(&canon) {
+        let mut entries: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                if !name.ends_with(".json") {
+                    return None;
+                }
+                let md = e.metadata().ok()?;
+                let mtime = md
+                    .modified()
+                    .ok()
+                    .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                    .map(|d| d.as_nanos())
+                    .unwrap_or(0);
+                Some(format!("{name}:{}:{mtime}", md.len()))
+            })
+            .collect();
+        entries.sort();
+        for e in entries {
+            fingerprint.extend(e.into_bytes());
+        }
+    }
+    let id = format!("d{:016x}", fnv1a(fingerprint));
+    state.cache.get_or_build(&id, || {
+        let loaded = load_dir(&canon).map_err(ServeError::UnusableTrace)?;
+        if loaded.trace.events.is_empty() {
+            return Err(ServeError::UnusableTrace(format!(
+                "no usable events in {}: {}",
+                canon.display(),
+                loaded.report
+            )));
+        }
+        let spec = crate::cli::job_from_args_with(&Args::default(), loaded.job.as_ref())
+            .map_err(ServeError::BadRequest)?;
+        Ok(Session::build(
+            &id,
+            spec,
+            Some((loaded.trace, loaded.report)),
+            state.opts.top,
+            state.opts.batch_window_ms,
+        ))
+    })
+}

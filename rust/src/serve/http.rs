@@ -1,0 +1,218 @@
+//! Std-only HTTP/1.1 plumbing for the serve daemon: request reading,
+//! response writing, and a small keep-alive client (used by the load
+//! generator and the integration tests — and usable from `curl`, since
+//! the wire format is ordinary HTTP).
+//!
+//! Scope is deliberately the subset the service needs: `Content-Length`
+//! framing only (no chunked transfer), no TLS, header names matched
+//! case-insensitively, bodies are UTF-8 JSON. Requests over [`MAX_BODY`]
+//! are refused with 413 before the body is read.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Largest accepted request body (64 MiB) — bounds memory per connection;
+/// trace uploads beyond this should use `--trace-dir` registration.
+pub const MAX_BODY: usize = 64 << 20;
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Upper-case method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Decoded path without the query string (`/jobs/j1a2b/replay`).
+    pub path: String,
+    /// Body bytes as UTF-8 (empty when no `Content-Length`).
+    pub body: String,
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default; `Connection: close` overrides).
+    pub keep_alive: bool,
+}
+
+/// Read one request off a connection. `Ok(None)` means the peer closed
+/// (or went idle past the read timeout) between requests — not an error,
+/// just the end of a keep-alive conversation. `Err` carries the status +
+/// message to answer with before closing.
+pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>, (u16, String)> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(_) => return Ok(None), // timeout / reset between requests
+    }
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if v.starts_with("HTTP/") => (m.to_uppercase(), t.to_string()),
+        _ => return Err((400, format!("malformed request line {:?}", line.trim_end()))),
+    };
+
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    loop {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) => return Ok(None),
+            Ok(_) => {}
+            Err(e) => return Err((400, format!("error reading headers: {e}"))),
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let value = value.trim();
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    content_length = value
+                        .parse()
+                        .map_err(|_| (400, format!("bad Content-Length {value:?}")))?;
+                }
+                "connection" => keep_alive = !value.eq_ignore_ascii_case("close"),
+                _ => {}
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err((413, format!("body of {content_length} bytes exceeds the {MAX_BODY}-byte limit")));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader
+            .read_exact(&mut body)
+            .map_err(|e| (400, format!("error reading body: {e}")))?;
+    }
+    let body =
+        String::from_utf8(body).map_err(|_| (400, "body is not valid UTF-8".to_string()))?;
+    // the service's paths carry no query strings; strip one if present so
+    // routing sees a clean path
+    let path = target.split('?').next().unwrap_or("").to_string();
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+/// Standard reason phrase for the statuses the service emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `Content-Length`-framed JSON response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status_text(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// A minimal keep-alive HTTP client for the load generator, the CI smoke
+/// step and the tests. Reconnects once per call when the server closed
+/// the pooled connection.
+pub struct Client {
+    addr: String,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Client {
+    /// Client for `addr` (`host:port`); connects lazily.
+    pub fn new(addr: &str) -> Client {
+        Client { addr: addr.to_string(), conn: None }
+    }
+
+    /// Issue one request; returns `(status, body)`.
+    pub fn call(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String), String> {
+        match self.call_once(method, path, body) {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                // the server may have closed a kept-alive connection;
+                // retry exactly once on a fresh one
+                self.conn = None;
+                self.call_once(method, path, body)
+            }
+        }
+    }
+
+    fn call_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String), String> {
+        if self.conn.is_none() {
+            let s = TcpStream::connect(&self.addr)
+                .map_err(|e| format!("connect {}: {e}", self.addr))?;
+            s.set_read_timeout(Some(std::time::Duration::from_secs(60)))
+                .map_err(|e| format!("set timeout: {e}"))?;
+            self.conn = Some(BufReader::new(s));
+        }
+        let reader = self.conn.as_mut().expect("just connected");
+        let payload = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{payload}",
+            self.addr,
+            payload.len(),
+        );
+        let w = reader.get_mut();
+        w.write_all(req.as_bytes()).map_err(|e| format!("write: {e}"))?;
+        w.flush().map_err(|e| format!("flush: {e}"))?;
+
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| format!("read status: {e}"))?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("malformed status line {:?}", line.trim_end()))?;
+        let mut content_length = 0usize;
+        let mut close = false;
+        loop {
+            let mut h = String::new();
+            let n = reader.read_line(&mut h).map_err(|e| format!("read header: {e}"))?;
+            if n == 0 {
+                return Err("connection closed mid-headers".into());
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = h.split_once(':') {
+                match name.trim().to_ascii_lowercase().as_str() {
+                    "content-length" => {
+                        content_length =
+                            value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+                    }
+                    "connection" => close = value.trim().eq_ignore_ascii_case("close"),
+                    _ => {}
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).map_err(|e| format!("read body: {e}"))?;
+        if close {
+            self.conn = None;
+        }
+        let body = String::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+        Ok((status, body))
+    }
+}

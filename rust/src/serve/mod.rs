@@ -1,0 +1,172 @@
+//! Diagnosis-as-a-service (`dpro serve`): a long-running daemon that keeps
+//! built graphs resident so replay / diagnose / what-if queries cost an
+//! HTTP round-trip instead of a full trace ingestion + graph build.
+//!
+//! ROADMAP item 2 names the production shape this module implements; the
+//! interactive "estimate efficacy before implementing" loop is Daydream's
+//! framing of the same workflow. Layers, bottom up:
+//!
+//! - [`http`] — a std-only HTTP/1.1 server core and client over
+//!   `std::net::TcpListener`/`TcpStream` (the crate has no external
+//!   dependencies; this is the subset of HTTP the service needs:
+//!   `Content-Length`-framed requests and responses with keep-alive).
+//! - [`session`] — a [`session::Session`] owns one built
+//!   [`crate::graph::MutableGraph`] + [`crate::replay::incremental::IncrementalReplayer`]
+//!   (wrapped in a [`crate::diagnosis::Diagnoser`]) and publishes immutable
+//!   [`session::Snapshot`]s: pre-serialized replay/diagnose payloads that
+//!   any number of reader threads share without locking the engine.
+//!   `optimize` is the single-writer path — accepted strategies commit
+//!   through the PR-3 transaction journal and publish a new snapshot;
+//!   rejected ones roll back and readers never notice.
+//! - [`batch`] — identical what-if queries arriving within a window
+//!   coalesce into one transactional evaluation fanned out to all waiters.
+//! - [`cache`] — sessions live in a byte-accounted LRU keyed by job
+//!   descriptor + plan family + trace identity; an over-budget insert
+//!   evicts the least-recently-used session.
+//! - [`daemon`] — the accept loop over a [`crate::util::pool::FixedPool`],
+//!   request routing, and the `/healthz` + `/statsz` surfaces.
+//!
+//! The HTTP status contract extends the CLI's exit-code contract
+//! (docs/SERVE.md): **400** is the exit-2 class (argument/body errors),
+//! **422** the exit-3 class (unusable trace), 200 a clean or
+//! degraded-but-usable run (warnings ride in the `report` payload).
+
+pub mod batch;
+pub mod cache;
+pub mod daemon;
+pub mod http;
+pub mod session;
+
+pub use cache::SessionCache;
+pub use daemon::{start, ServerHandle};
+pub use session::{Session, Snapshot};
+
+/// Daemon configuration — the `dpro serve` flags, pre-validated by the
+/// CLI (invalid values exit 2 before a socket is opened).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Bind address (`--addr`); port 0 picks a free port (tests/benches).
+    pub addr: String,
+    /// Session-cache capacity in bytes (`--cache-bytes`).
+    pub cache_bytes: usize,
+    /// Worker threads handling requests (`--threads`).
+    pub threads: usize,
+    /// What-if coalescing window in milliseconds (`--batch-window-ms`);
+    /// 0 disables the wait (identical in-flight queries still coalesce).
+    pub batch_window_ms: u64,
+    /// Trace directories to register as sessions before the socket opens
+    /// (`--trace-dir`); an unusable one aborts startup with the exit-3
+    /// class, same as `dpro replay --trace-dir`.
+    pub preload: Vec<String>,
+    /// Bottleneck top-N in published diagnose snapshots (`--top`).
+    pub top: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: "127.0.0.1:7077".into(),
+            cache_bytes: 1 << 30,
+            threads: 8,
+            batch_window_ms: 2,
+            preload: Vec::new(),
+            top: 5,
+        }
+    }
+}
+
+/// Service-layer error, classified so the daemon and the CLI agree on
+/// severity: `BadRequest` ↔ HTTP 400 ↔ exit 2, `UnusableTrace` ↔ HTTP 422
+/// ↔ exit 3, `Internal` ↔ HTTP 500.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// Malformed request body / invalid argument values (exit-2 class).
+    BadRequest(String),
+    /// The trace exists but yields nothing usable (exit-3 class).
+    UnusableTrace(String),
+    /// A bug: a handler panicked or an invariant broke.
+    Internal(String),
+}
+
+impl ServeError {
+    /// The HTTP status this error maps to (docs/SERVE.md).
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::BadRequest(_) => 400,
+            ServeError::UnusableTrace(_) => 422,
+            ServeError::Internal(_) => 500,
+        }
+    }
+
+    /// The error message.
+    pub fn message(&self) -> &str {
+        match self {
+            ServeError::BadRequest(m)
+            | ServeError::UnusableTrace(m)
+            | ServeError::Internal(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message())
+    }
+}
+
+/// Parse a byte-size flag value: a plain integer or one with a `K`/`M`/`G`
+/// suffix (powers of 1024, case-insensitive). Rejects zero — a zero-byte
+/// cache could never hold a session, so every request would rebuild.
+pub fn parse_bytes(s: &str) -> Result<usize, String> {
+    let bad = || format!("invalid byte size {s:?}; expected e.g. 536870912, 512M, 2G");
+    let t = s.trim();
+    let (digits, mult) = match t.chars().last().map(|c| c.to_ascii_uppercase()) {
+        Some('K') => (&t[..t.len() - 1], 1usize << 10),
+        Some('M') => (&t[..t.len() - 1], 1 << 20),
+        Some('G') => (&t[..t.len() - 1], 1 << 30),
+        _ => (t, 1),
+    };
+    let n: usize = digits.trim().parse().map_err(|_| bad())?;
+    let bytes = n.checked_mul(mult).ok_or_else(bad)?;
+    if bytes == 0 {
+        return Err(bad());
+    }
+    Ok(bytes)
+}
+
+/// FNV-1a over a byte stream — the session-key hash (trace identity,
+/// job descriptors). Not cryptographic; collisions only cost a spurious
+/// cache hit between adversarially crafted dumps, which a local analysis
+/// daemon does not defend against.
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bytes_accepts_suffixes_and_rejects_junk() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("4K").unwrap(), 4096);
+        assert_eq!(parse_bytes("2m").unwrap(), 2 << 20);
+        assert_eq!(parse_bytes(" 1G ").unwrap(), 1 << 30);
+        for bad in ["", "0", "-1", "1.5G", "12Q", "G", "9999999999999999999G"] {
+            assert!(parse_bytes(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_input_sensitive() {
+        let h = |s: &str| fnv1a(s.bytes());
+        assert_eq!(h("dpro"), h("dpro"));
+        assert_ne!(h("dpro"), h("dprp"));
+        assert_ne!(h(""), h("\0"));
+    }
+}

@@ -1,0 +1,286 @@
+//! One resident diagnosis session: a built graph + incremental engine
+//! (inside a [`Diagnoser`]) shared by many readers through published
+//! immutable [`Snapshot`]s, with `optimize` as the single-writer path.
+//!
+//! # Isolation model
+//!
+//! Reads (`replay`, `diagnose`) never touch the engine: they clone an
+//! `Arc<Snapshot>` whose payloads were serialized at publish time, so a
+//! reader's answer is decided entirely by *which* snapshot it picked up —
+//! there is no window where a half-applied strategy is visible. What-if
+//! queries do borrow the engine (they replay), but each query is a
+//! begin → edit → replay → rollback transaction that restores the graph
+//! bit-exactly, and the engine mutex serializes them against the writer.
+//! The writer (`optimize`) commits accepted strategies through the
+//! transaction journal and publishes a new snapshot **while still holding
+//! the engine lock**; rejected candidates roll back and no snapshot is
+//! published, so a search that accepts nothing is invisible to every
+//! reader — the property `rust/tests/serve.rs` pins bit-for-bit.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+
+use crate::config::JobSpec;
+use crate::diagnosis::{Diagnoser, WhatIfQuery};
+use crate::graph::dfg::OpKind;
+use crate::optimizer::strategy::Strategy;
+use crate::optimizer::SearchOpts;
+use crate::serve::batch::Batcher;
+use crate::trace::validate::TraceReport;
+use crate::trace::GTrace;
+use crate::util::json::Json;
+
+/// An immutable published view of one session: the replay and diagnose
+/// payloads, serialized once so concurrent readers share bytes instead of
+/// re-running analytics. Readers compare equal iff they read the same
+/// snapshot — the unit of isolation.
+pub struct Snapshot {
+    /// Monotonic per-session version; bumped only by optimizer commits.
+    pub version: u64,
+    /// Baseline replayed iteration time (us) of this snapshot.
+    pub iteration_us: f64,
+    /// The `GET /jobs/:id/replay` body (docs/SERVE.md schema).
+    pub replay: String,
+    /// The `GET /jobs/:id/diagnose` body (`docs/DIAGNOSIS.md` schema plus
+    /// `job` and `snapshot` keys).
+    pub diagnose: String,
+}
+
+/// A cached, resident diagnosis session (see module docs).
+pub struct Session {
+    id: String,
+    engine: Mutex<Diagnoser>,
+    snap: RwLock<Arc<Snapshot>>,
+    batcher: Batcher,
+    /// Approximate resident size, fixed at build time (cache accounting).
+    bytes: usize,
+    top: usize,
+    whatif_served: AtomicU64,
+}
+
+impl Session {
+    /// Build a session: construct the graph (from the trace when given,
+    /// analytic otherwise), replay the baseline, and publish snapshot 0.
+    /// This is the expensive step the cache amortizes.
+    pub fn build(
+        id: &str,
+        spec: JobSpec,
+        trace: Option<(GTrace, TraceReport)>,
+        top: usize,
+        batch_window_ms: u64,
+    ) -> Session {
+        let mut d = match trace {
+            Some((t, r)) => Diagnoser::from_trace(spec, &t, r),
+            None => Diagnoser::new(spec),
+        };
+        let snap = publish(&mut d, id, 0, top);
+        let bytes = approx_bytes(&d, &snap);
+        Session {
+            id: id.to_string(),
+            engine: Mutex::new(d),
+            snap: RwLock::new(Arc::new(snap)),
+            batcher: Batcher::new(batch_window_ms),
+            bytes,
+            top,
+            whatif_served: AtomicU64::new(0),
+        }
+    }
+
+    /// The session id (also its cache key and URL segment).
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Approximate resident bytes (graph arena + published payloads).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// What-if queries served (coalesced waiters included).
+    pub fn whatif_served(&self) -> u64 {
+        self.whatif_served.load(Ordering::Relaxed)
+    }
+
+    /// The current published snapshot. Cheap: one `RwLock` read + `Arc`
+    /// clone, never blocked by in-flight what-ifs or rejected searches.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        Arc::clone(&self.snap.read().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// Answer a what-if battery. Identical batteries against the same
+    /// snapshot version coalesce into one transactional evaluation (see
+    /// [`crate::serve::batch`]); the canonical key is the `Display` form
+    /// of the parsed queries, so textual variants of the same query list
+    /// batch together. Returns the payload and whether this call
+    /// coalesced onto another request's evaluation.
+    pub fn whatif(&self, queries: &[WhatIfQuery]) -> (Result<String, String>, bool) {
+        let canonical: Vec<String> = queries.iter().map(|q| q.to_string()).collect();
+        let key = format!("{}:{}", self.snapshot().version, canonical.join(","));
+        let out = self.batcher.run(&key, || {
+            let mut eng = lock(&self.engine);
+            // re-read under the engine lock: commits republish while
+            // holding it, so the version cannot move during evaluation
+            // and the payload's snapshot tag matches the baseline the
+            // answers were replayed against
+            let version = self.snapshot().version;
+            let answers: Vec<Json> = queries.iter().map(|q| eng.what_if(q).to_json()).collect();
+            let mut j = Json::obj();
+            j.set("job", Json::Str(self.id.clone()));
+            j.set("snapshot", Json::Num(version as f64));
+            j.set("baseline_us", Json::Num(eng.baseline_us()));
+            j.set("answers", Json::Arr(answers));
+            Ok(j.to_string())
+        });
+        self.whatif_served.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Leader-evaluation / coalesced-waiter counts of this session's
+    /// batcher.
+    pub fn batch_stats(&self) -> (u64, u64) {
+        self.batcher.stats()
+    }
+
+    /// Run the transactional optimizer on the resident graph — the
+    /// single-writer path. See [`Session::optimize_with`].
+    pub fn optimize(&self, opts: &SearchOpts) -> String {
+        self.optimize_with(opts, crate::optimizer::strategy::strategies_from_opts(opts))
+    }
+
+    /// [`Session::optimize`] with an explicit strategy set. Accepted
+    /// decisions commit and publish a new snapshot (version + 1) before
+    /// the engine lock drops; a search that accepts nothing publishes
+    /// nothing — concurrent readers cannot observe it.
+    pub fn optimize_with(
+        &self,
+        opts: &SearchOpts,
+        strategies: Vec<Box<dyn Strategy>>,
+    ) -> String {
+        let mut eng = lock(&self.engine);
+        let out = eng.optimize_with(opts, strategies);
+        let committed = !out.accepted.is_empty();
+        let mut j = out.to_json();
+        if committed {
+            let version = self.snapshot().version + 1;
+            let snap = publish(&mut eng, &self.id, version, self.top);
+            *self.snap.write().unwrap_or_else(|p| p.into_inner()) = Arc::new(snap);
+        }
+        j.set("job", Json::Str(self.id.clone()));
+        j.set("committed", Json::Bool(committed));
+        j.set("snapshot", Json::Num(self.snapshot().version as f64));
+        j.to_string()
+    }
+}
+
+/// Serialize both read payloads from the diagnoser's current baseline.
+/// Runs the auto what-if battery (transactional — the graph is restored),
+/// so publishing is the slow path; readers only ever clone the result.
+fn publish(d: &mut Diagnoser, id: &str, version: u64, top: usize) -> Snapshot {
+    let qs = d.auto_queries();
+    let mut dj = d.report(&qs, top).to_json();
+    dj.set("job", Json::Str(id.to_string()));
+    dj.set("snapshot", Json::Num(version as f64));
+    let diagnose = dj.to_string();
+
+    // replay payload: the `dpro replay --json` schema keys that exist for
+    // a resident graph, plus session identity (docs/SERVE.md)
+    let dfg = d.mg().dfg();
+    let alive = d.mg().alive();
+    let base = d.baseline();
+    let (mut fw, mut bw) = (0.0f64, 0.0f64);
+    for i in dfg.ids() {
+        let n = dfg.node(i);
+        if !alive[i as usize] || n.owner != 0 || n.proc != 0 {
+            continue;
+        }
+        let busy = base.end[i as usize] - base.start[i as usize];
+        match n.kind {
+            OpKind::Forward => fw += busy,
+            OpKind::Backward => bw += busy,
+            _ => {}
+        }
+    }
+    let spec = d.spec();
+    let mut rj = Json::obj();
+    rj.set("job", Json::Str(id.to_string()));
+    rj.set("snapshot", Json::Num(version as f64));
+    rj.set("model", Json::Str(spec.model.name.clone()));
+    rj.set("scheme", Json::Str(spec.scheme.cli_name().to_string()));
+    rj.set("transport", Json::Str(spec.cluster.network.transport.name().to_lowercase()));
+    rj.set("workers", Json::Num(spec.cluster.n_workers as f64));
+    rj.set("ops", Json::Num(dfg.len() as f64));
+    rj.set("alive_ops", Json::Num(alive.iter().filter(|a| **a).count() as f64));
+    rj.set("iteration_us", Json::Num(base.iteration_time));
+    rj.set("fw_us", Json::Num(fw));
+    rj.set("bw_us", Json::Num(bw));
+    rj.set(
+        "est_peak_mem_bytes",
+        Json::Num(crate::replay::estimate_peak_memory_mut(d.mg(), &base.end)),
+    );
+    rj.set("report", d.trace_report().to_json());
+    let replay = rj.to_string();
+
+    Snapshot { version, iteration_us: d.baseline_us(), replay, diagnose }
+}
+
+/// Resident-size estimate for cache accounting: graph arena (nodes plus
+/// edges/timing vectors, ~256 B per node across the engine's arrays) +
+/// the published payloads + a fixed overhead. An estimate is enough —
+/// eviction needs relative weight, not an allocator audit.
+fn approx_bytes(d: &Diagnoser, snap: &Snapshot) -> usize {
+    d.mg().dfg().len() * 256 + snap.replay.len() + snap.diagnose.len() + (1 << 20)
+}
+
+/// Poison-tolerant lock: a handler that panicked mid-query can only have
+/// left transaction state behind, which the next transaction's `begin`
+/// resets; the daemon already answered that request with a 500.
+fn lock(m: &Mutex<Diagnoser>) -> MutexGuard<'_, Diagnoser> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Transport;
+    use crate::util::json::parse;
+
+    #[test]
+    fn snapshot_payloads_carry_identity_and_schema_keys() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let s = Session::build("j1", spec, None, 5, 0);
+        let snap = s.snapshot();
+        assert_eq!(snap.version, 0);
+        let r = parse(&snap.replay).unwrap();
+        for key in [
+            "job", "snapshot", "model", "scheme", "transport", "workers", "ops",
+            "alive_ops", "iteration_us", "fw_us", "bw_us", "est_peak_mem_bytes", "report",
+        ] {
+            assert!(r.get(key).is_some(), "replay payload missing {key}");
+        }
+        assert_eq!(r.str("job"), "j1");
+        assert!(r.f64("iteration_us") > 0.0);
+        let d = parse(&snap.diagnose).unwrap();
+        for key in ["job", "snapshot", "blame", "bottlenecks", "whatif", "builds_during_queries"] {
+            assert!(d.get(key).is_some(), "diagnose payload missing {key}");
+        }
+        assert_eq!(d.f64("builds_during_queries"), 0.0);
+    }
+
+    #[test]
+    fn whatif_answers_are_stable_across_repeats() {
+        let spec = JobSpec::standard("vgg16", "horovod", Transport::Rdma);
+        let s = Session::build("j1", spec, None, 5, 0);
+        let qs = crate::diagnosis::parse_whatif("nic-bw=2,perfect-overlap").unwrap();
+        let (first, _) = s.whatif(&qs);
+        let first = first.unwrap();
+        for _ in 0..3 {
+            let (again, _) = s.whatif(&qs);
+            // transactional rollback: repeated queries see an identical
+            // graph, so the payload is bit-for-bit stable
+            assert_eq!(again.unwrap(), first);
+        }
+        assert_eq!(s.whatif_served(), 4);
+        let parsed = parse(&first).unwrap();
+        assert_eq!(parsed.get("answers").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+}

@@ -274,15 +274,46 @@ pub struct LoadedTrace {
 pub fn load_dir(dir: &Path) -> Result<LoadedTrace, String> {
     let entries = std::fs::read_dir(dir)
         .map_err(|e| format!("cannot read trace dir {}: {e}", dir.display()))?;
-    let mut names: Vec<String> = entries
+    let files: Vec<NamedFile> = entries
         .filter_map(|e| e.ok())
-        .filter_map(|e| e.file_name().into_string().ok())
-        .filter(|n| n.ends_with(".json"))
+        .filter_map(|e| e.file_name().into_string().ok().map(|n| (n, e.path())))
+        .map(|(name, path)| {
+            let content = std::fs::read_to_string(&path).map_err(|e| e.to_string());
+            (name, content)
+        })
         .collect();
-    names.sort();
-    if names.is_empty() {
-        return Err(format!("no .json trace files in {}", dir.display()));
+    assemble(files, &dir.display().to_string())
+}
+
+/// Ingest a trace delivered as in-memory `(file name, contents)` pairs —
+/// the upload path of `dpro serve`, where a client POSTs the same files a
+/// dump directory would hold (`metadata.json` + `proc_*.json`, or any
+/// Chrome-trace files) without them ever touching disk. Same tolerance
+/// rules, diagnostics, and assembled result as [`load_dir`]: the two
+/// fronts share one assembly core, so a dump ingested from disk and the
+/// identical dump ingested from memory produce bit-for-bit equal traces.
+pub fn load_mem(files: &[(String, String)]) -> Result<LoadedTrace, String> {
+    assemble(
+        files.iter().map(|(n, t)| (n.clone(), Ok(t.clone()))).collect(),
+        "upload",
+    )
+}
+
+/// A named trace file and its contents; `Err` carries a read error for
+/// sources (directory listings) where the name is known but the bytes
+/// could not be fetched — reported as an `Io` diagnostic, not a failure.
+type NamedFile = (String, Result<String, String>);
+
+/// Shared assembly core of [`load_dir`] / [`load_mem`]: metadata lookup,
+/// file-list scoping, per-file parsing, deterministic event ordering, and
+/// shape inference. `origin` labels error messages ("upload", a dir path).
+fn assemble(mut files: Vec<NamedFile>, origin: &str) -> Result<LoadedTrace, String> {
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    files.retain(|(n, _)| n.ends_with(".json"));
+    if files.is_empty() {
+        return Err(format!("no .json trace files in {origin}"));
     }
+    let names: Vec<String> = files.iter().map(|(n, _)| n.clone()).collect();
 
     let mut report = TraceReport::default();
 
@@ -292,10 +323,10 @@ pub fn load_dir(dir: &Path) -> Result<LoadedTrace, String> {
     let mut meta_iters: Option<usize> = None;
     let mut meta_files: Option<Vec<String>> = None;
     let mut job: Option<JobMeta> = None;
-    if names.iter().any(|n| n == METADATA_FILE) {
-        match std::fs::read_to_string(dir.join(METADATA_FILE)) {
+    if let Some((_, content)) = files.iter().find(|(n, _)| n == METADATA_FILE) {
+        match content {
             Err(e) => report.push(Severity::Error, DiagKind::Io, format!("{METADATA_FILE}: {e}")),
-            Ok(text) => match parse(&text) {
+            Ok(text) => match parse(text) {
                 Err(e) => {
                     report.push(Severity::Error, DiagKind::Parse, format!("{METADATA_FILE}: {e}"))
                 }
@@ -370,14 +401,17 @@ pub fn load_dir(dir: &Path) -> Result<LoadedTrace, String> {
         None => names.iter().filter(|n| n.as_str() != METADATA_FILE).collect(),
     };
     if trace_files.is_empty() {
-        return Err(format!("no trace files in {}", dir.display()));
+        return Err(format!("no trace files in {origin}"));
     }
     let mut tagged: Vec<(Option<u64>, TraceEvent)> = Vec::new();
     for name in trace_files {
-        match std::fs::read_to_string(dir.join(name)) {
+        // membership in `files` is how `name` got selected, so the lookup
+        // cannot miss
+        let content = &files.iter().find(|(n, _)| n == name).expect("selected file").1;
+        match content {
             Err(e) => report.push(Severity::Error, DiagKind::Io, format!("{name}: {e}")),
             Ok(text) => {
-                if let Some(events) = parse_trace_file(&text, name, &mut report) {
+                if let Some(events) = parse_trace_file(text, name, &mut report) {
                     report.files += 1;
                     tagged.extend(events);
                 }
@@ -840,6 +874,32 @@ mod tests {
         assert!(parse_trace_file("not json", "bad.json", &mut report).is_none());
         assert_eq!(events[0].1.kind, OpKind::Backward);
         assert_eq!(events[0].0, None); // no seq
+    }
+
+    #[test]
+    fn load_mem_matches_load_dir_bit_for_bit() {
+        let dir = tmp_dir("mem");
+        let spec = JobSpec::standard("vgg16", "ps-tree", crate::config::Transport::Tcp);
+        dump_dir_with_job(&toy_trace(), &dir, Some(&JobMeta::of(&spec))).unwrap();
+        let from_disk = load_dir(&dir).unwrap();
+        let files: Vec<(String, String)> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| {
+                let name = e.file_name().into_string().unwrap();
+                let text = std::fs::read_to_string(e.path()).unwrap();
+                (name, text)
+            })
+            .collect();
+        let from_mem = load_mem(&files).unwrap();
+        assert!(from_mem.report.is_clean(), "{}", from_mem.report);
+        assert_eq!(from_mem.trace.events, from_disk.trace.events);
+        assert_eq!(from_mem.trace.n_workers, from_disk.trace.n_workers);
+        assert_eq!(from_mem.job, from_disk.job);
+        // an upload with no usable files is the hard error, same as a dir
+        assert!(load_mem(&[]).is_err());
+        assert!(load_mem(&[("notes.txt".into(), "hi".into())]).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

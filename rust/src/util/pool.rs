@@ -1,10 +1,19 @@
-//! Minimal scoped data-parallelism: the offline build image has no crate
-//! registry (no rayon), so fleet-scale replay parallelizes its
-//! embarrassingly-parallel loops with `std::thread::scope` plus an atomic
-//! work-stealing counter. Threads live only for the duration of one call —
-//! no pool state, no channels, no `'static` bounds on the closure.
+//! Minimal thread-parallelism without crates (the offline build image has
+//! no registry, so no rayon/threadpool). Two shapes:
+//!
+//! - [`parallel_for`] — scoped data-parallelism for fleet-scale replay's
+//!   embarrassingly-parallel loops: `std::thread::scope` plus an atomic
+//!   work-stealing counter; threads live only for the duration of one
+//!   call, no `'static` bound on the closure.
+//! - [`FixedPool`] — a persistent pool of worker threads fed over an mpsc
+//!   channel, for the serve daemon's request handling where threads must
+//!   outlive any one call and jobs arrive continuously. Jobs are `'static`
+//!   boxed closures; a panicking job is caught and does not kill its
+//!   worker.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Upper bound on worker threads — beyond this the per-task work in the
 /// replay/derivation loops stops scaling (memory-bandwidth bound).
@@ -104,6 +113,97 @@ impl<'a, T> DisjointSlice<'a, T> {
     }
 }
 
+/// A boxed unit of work for a [`FixedPool`].
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of persistent worker threads. Submitted jobs queue
+/// on an mpsc channel and run on whichever worker frees up first; the
+/// queue is unbounded (the serve daemon bounds work upstream by refusing
+/// oversized request bodies, not by dropping accepted connections).
+///
+/// Dropping the pool closes the channel; workers finish the jobs already
+/// queued and exit, and `Drop` joins them — so a `FixedPool` going out of
+/// scope is a clean barrier, like `std::thread::scope`.
+pub struct FixedPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Jobs submitted but not yet finished (queued + running).
+    pending: Arc<AtomicUsize>,
+}
+
+impl FixedPool {
+    /// Spawn `threads` persistent workers (at least one).
+    pub fn new(threads: usize) -> FixedPool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || loop {
+                    // hold the receiver lock only to pick a job, never
+                    // while running it
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break, // a worker panicked mid-recv; shut down
+                    };
+                    match job {
+                        Ok(job) => {
+                            // a panicking request handler must not take
+                            // the worker (and its siblings' channel) down
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                            pending.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        Err(_) => break, // channel closed: pool dropped
+                    }
+                })
+            })
+            .collect();
+        FixedPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Queue a job. Panics if called after the pool started shutting down
+    /// (impossible through the public API — `execute` needs `&self`, and
+    /// shutdown happens in `Drop`).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Jobs submitted but not yet finished (queued + running) — the
+    /// `queue_depth` statistic of `/statsz`.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    /// Shared handle to the pending-jobs counter, for observers that must
+    /// outlive access to the pool itself (the serve daemon keeps the pool
+    /// on its accept thread but reports queue depth from `/statsz`).
+    pub fn pending_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.pending)
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for FixedPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel: workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +240,43 @@ mod tests {
         for (i, v) in data.iter().enumerate() {
             assert_eq!(*v, i as u64 * 3);
         }
+    }
+
+    #[test]
+    fn fixed_pool_runs_all_jobs_and_survives_panics() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = FixedPool::new(3);
+            assert_eq!(pool.threads(), 3);
+            for i in 0..64 {
+                let counter = Arc::clone(&counter);
+                pool.execute(move || {
+                    if i % 8 == 0 {
+                        // poisoned jobs must not kill workers
+                        panic!("job {i} panics");
+                    }
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // drop joins: all 64 jobs (including the 8 panickers) finish
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 56);
+    }
+
+    #[test]
+    fn fixed_pool_pending_drains_to_zero() {
+        let pool = FixedPool::new(2);
+        for _ in 0..16 {
+            pool.execute(|| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            });
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while pool.pending() > 0 {
+            assert!(std::time::Instant::now() < deadline, "pool stuck");
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.pending(), 0);
     }
 
     #[test]

@@ -1,0 +1,490 @@
+//! Service-layer tests: the snapshot-isolation property (N concurrent
+//! readers stay bit-for-bit equal to a quiesced run while a writer
+//! applies and rolls back strategies), what-if coalescing, the LRU
+//! byte-budget cache, the HTTP endpoint surface end-to-end (analytic,
+//! uploaded, and `--trace-dir` registered jobs), and the `dpro serve`
+//! exit-code contract.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dpro::cli;
+use dpro::config::{JobSpec, Transport};
+use dpro::diagnosis::parse_whatif;
+use dpro::optimizer::registry::{GraphPass, Registry};
+use dpro::optimizer::strategy::RegistryStrategy;
+use dpro::optimizer::{SearchOpts, Strategy};
+use dpro::serve::http::Client;
+use dpro::serve::{start, ServeError, ServeOpts, Session, SessionCache};
+use dpro::util::json::{parse, Json};
+use dpro::util::Args;
+
+fn gpt_session(id: &str, window_ms: u64) -> Session {
+    let spec = JobSpec::standard("gpt_mini", "horovod", Transport::Rdma);
+    Session::build(id, spec, None, 5, window_ms)
+}
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/two_worker")
+}
+
+/// A whole-job rewrite that is strictly worse: double every op's FLOPs
+/// and every gradient's bytes. The search must evaluate it, reject it,
+/// and roll it back — the adversarial writer of the isolation property.
+struct Pessimizer;
+
+impl GraphPass for Pessimizer {
+    fn name(&self) -> &str {
+        "pessimizer"
+    }
+
+    fn apply(&self, spec: &JobSpec) -> Option<JobSpec> {
+        let mut s = spec.clone();
+        for op in &mut s.model.ops {
+            op.flops *= 2.0;
+        }
+        for t in &mut s.model.tensors {
+            t.bytes *= 2.0;
+        }
+        Some(s)
+    }
+}
+
+fn pessimist_strategies() -> Vec<Box<dyn Strategy>> {
+    let mut reg = Registry::empty();
+    reg.register(Box::new(Pessimizer));
+    vec![Box::new(RegistryStrategy::new(reg))]
+}
+
+/// The tentpole property: while a writer repeatedly applies and rolls
+/// back a strictly-pessimizing strategy, every concurrent reader result —
+/// replay snapshot, diagnose snapshot, what-if payload — is bit-for-bit
+/// identical to a quiesced single-threaded session, the search never
+/// rebuilds (`builds_during_search == 0`), and no snapshot is published.
+#[test]
+fn readers_stay_bit_for_bit_quiesced_under_a_rejected_writer() {
+    let reference = gpt_session("jprop", 0);
+    let qs = parse_whatif("nic-bw=2,perfect-overlap").unwrap();
+    let ref_snap = reference.snapshot();
+    let (ref_whatif, _) = reference.whatif(&qs);
+    let ref_whatif = ref_whatif.unwrap();
+
+    let sess = Arc::new(gpt_session("jprop", 0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for _ in 0..4 {
+        let sess = Arc::clone(&sess);
+        let stop = Arc::clone(&stop);
+        let (ref_replay, ref_diag, ref_w, qs) = (
+            ref_snap.replay.clone(),
+            ref_snap.diagnose.clone(),
+            ref_whatif.clone(),
+            qs.clone(),
+        );
+        readers.push(std::thread::spawn(move || {
+            let mut checks = 0usize;
+            while checks < 8 || !stop.load(Ordering::Relaxed) {
+                let snap = sess.snapshot();
+                assert_eq!(snap.version, 0, "a rejected search must never publish");
+                assert_eq!(snap.replay, ref_replay, "reader saw a perturbed replay");
+                assert_eq!(snap.diagnose, ref_diag, "reader saw a perturbed diagnosis");
+                let (w, _) = sess.whatif(&qs);
+                assert_eq!(w.unwrap(), ref_w, "reader saw a perturbed what-if");
+                checks += 1;
+                if checks >= 64 {
+                    break;
+                }
+            }
+            checks
+        }));
+    }
+
+    let opts = SearchOpts {
+        use_coarsened_view: false,
+        max_rounds: 1,
+        budget_wall_s: 30.0,
+        ..SearchOpts::default()
+    };
+    for _ in 0..3 {
+        let out = parse(&sess.optimize_with(&opts, pessimist_strategies())).unwrap();
+        assert_eq!(out.get("committed").and_then(Json::as_bool), Some(false));
+        assert!(out.get("accepted").and_then(Json::as_arr).unwrap().is_empty());
+        assert_eq!(out.f64("builds_during_search"), 0.0, "search rebuilt the graph");
+        assert_eq!(out.f64("snapshot"), 0.0);
+        // rollback restored the exact baseline estimate
+        assert_eq!(out.f64("est_iteration_us"), out.f64("baseline_iteration_us"));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        assert!(r.join().unwrap() >= 8);
+    }
+    // quiesced again: still snapshot 0, still the reference bytes
+    let end = sess.snapshot();
+    assert_eq!(end.version, 0);
+    assert_eq!(end.replay, ref_snap.replay);
+    assert_eq!(end.diagnose, ref_snap.diagnose);
+}
+
+/// A writer that *does* commit swaps the published snapshot atomically:
+/// every reader observation is internally consistent (payload version tag
+/// matches the snapshot version) and versions only ever map to one byte
+/// sequence — old XOR new, never a torn mix.
+#[test]
+fn committing_writer_swaps_snapshots_atomically() {
+    let sess = Arc::new(gpt_session("jcommit", 0));
+    let v0 = sess.snapshot();
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let sess = Arc::clone(&sess);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut seen: std::collections::BTreeMap<u64, (String, String)> =
+                    std::collections::BTreeMap::new();
+                loop {
+                    let snap = sess.snapshot();
+                    let r = parse(&snap.replay).unwrap();
+                    assert_eq!(r.f64("snapshot"), snap.version as f64, "torn replay payload");
+                    let d = parse(&snap.diagnose).unwrap();
+                    assert_eq!(d.f64("snapshot"), snap.version as f64, "torn diagnose payload");
+                    let cur = (snap.replay.clone(), snap.diagnose.clone());
+                    if let Some(prev) = seen.insert(snap.version, cur.clone()) {
+                        assert_eq!(prev, cur, "one version, two payloads");
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                seen
+            })
+        })
+        .collect();
+
+    let opts = SearchOpts {
+        use_coarsened_view: false,
+        max_rounds: 4,
+        budget_wall_s: 60.0,
+        ..SearchOpts::default()
+    };
+    let out = parse(&sess.optimize(&opts)).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let maps: Vec<_> = readers.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let committed = out.get("committed").and_then(Json::as_bool).unwrap();
+    let end = sess.snapshot();
+    if committed {
+        assert_eq!(end.version, 1, "one commit, one version bump");
+        assert!(
+            end.iteration_us <= v0.iteration_us,
+            "a committed search must not slow the job"
+        );
+    } else {
+        assert_eq!(end.version, 0);
+    }
+    for seen in maps {
+        for (v, (r, _)) in &seen {
+            assert!(*v <= end.version, "reader saw a version never published");
+            if *v == 0 {
+                assert_eq!(r, &v0.replay);
+            }
+            if *v == end.version {
+                assert_eq!(r, &end.replay);
+            }
+        }
+    }
+}
+
+/// Identical what-if batteries inside the window coalesce to fewer
+/// evaluations, and every caller gets the byte-identical payload.
+#[test]
+fn identical_whatif_batteries_coalesce() {
+    let sess = Arc::new(gpt_session("jbatch", 40));
+    let qs = parse_whatif("nic-bw=2").unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let sess = Arc::clone(&sess);
+            let qs = qs.clone();
+            std::thread::spawn(move || sess.whatif(&qs))
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let first = results[0].0.clone().unwrap();
+    for (payload, _) in &results {
+        assert_eq!(payload.as_deref(), Ok(first.as_str()));
+    }
+    let flagged = results.iter().filter(|(_, c)| *c).count() as u64;
+    let (batches, coalesced) = sess.batch_stats();
+    assert_eq!(coalesced, flagged);
+    assert_eq!(batches + coalesced, 8, "every call was a leader or a waiter");
+    assert!(coalesced >= 1, "a 40 ms window should coalesce something");
+    assert_eq!(sess.whatif_served(), 8);
+}
+
+/// The byte budget evicts least-recently-used sessions — but never the
+/// entry being inserted, and a failed build leaves the key retryable.
+#[test]
+fn byte_budget_evicts_lru_sessions() {
+    let cache = SessionCache::new(1); // smaller than any session
+    let (_a, hit) = cache.get_or_build("a", || Ok(gpt_session("a", 0))).unwrap();
+    assert!(!hit);
+    // the freshly inserted session survives its own over-budget insert
+    assert!(cache.lookup("a").is_some());
+    let (_b, hit) = cache.get_or_build("b", || Ok(gpt_session("b", 0))).unwrap();
+    assert!(!hit);
+    assert!(cache.lookup("b").is_some(), "fresh insert must survive");
+    assert!(cache.lookup("a").is_none(), "LRU session must be evicted");
+    let stats = cache.stats();
+    assert!(stats.evictions >= 1);
+    assert_eq!(stats.sessions, 1);
+    assert!(stats.hit_rate() > 0.0);
+
+    let err = cache
+        .get_or_build("c", || Err(ServeError::UnusableTrace("bad dump".into())))
+        .unwrap_err();
+    assert_eq!(err.http_status(), 422);
+    let (_c, hit) = cache.get_or_build("c", || Ok(gpt_session("c", 0))).unwrap();
+    assert!(!hit, "failed build must clear the placeholder, not poison the key");
+}
+
+/// The full endpoint surface against an analytic job, including the
+/// HTTP ↔ exit-code status mapping (400 argument class, 404/405).
+#[test]
+fn http_end_to_end_analytic_job() {
+    let opts = ServeOpts { addr: "127.0.0.1:0".into(), threads: 4, batch_window_ms: 0, ..ServeOpts::default() };
+    let handle = start(&opts).unwrap();
+    let mut c = Client::new(&handle.addr().to_string());
+
+    let (s, b) = c.call("GET", "/healthz", None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(parse(&b).unwrap().str("status"), "ok");
+
+    let job_body =
+        r#"{"job":{"model":"gpt_mini","scheme":"horovod","transport":"rdma","workers":4}}"#;
+    let (s, b) = c.call("POST", "/jobs", Some(job_body)).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let reg = parse(&b).unwrap();
+    let id = reg.str("job").to_string();
+    assert!(id.starts_with('j'));
+    assert_eq!(reg.get("cached").and_then(Json::as_bool), Some(false));
+    assert!(reg.f64("iteration_us") > 0.0);
+
+    // same descriptor again: the graph build is skipped
+    let (s, b) = c.call("POST", "/jobs", Some(job_body)).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(parse(&b).unwrap().get("cached").and_then(Json::as_bool), Some(true));
+
+    let (s, b) = c.call("GET", &format!("/jobs/{id}/replay"), None).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let r = parse(&b).unwrap();
+    for key in ["job", "snapshot", "model", "scheme", "transport", "workers", "ops",
+        "alive_ops", "iteration_us", "fw_us", "bw_us", "est_peak_mem_bytes", "report"]
+    {
+        assert!(r.get(key).is_some(), "replay payload missing {key}");
+    }
+    assert_eq!(r.f64("workers"), 4.0);
+
+    let (s, b) = c.call("GET", &format!("/jobs/{id}/diagnose"), None).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let d = parse(&b).unwrap();
+    for key in ["job", "snapshot", "blame", "bottlenecks", "whatif", "builds_during_queries"] {
+        assert!(d.get(key).is_some(), "diagnose payload missing {key}");
+    }
+
+    let (s, b) = c
+        .call("POST", &format!("/jobs/{id}/whatif"), Some(r#"{"query":"nic-bw=2"}"#))
+        .unwrap();
+    assert_eq!(s, 200, "{b}");
+    let w = parse(&b).unwrap();
+    assert_eq!(w.str("job"), id);
+    assert_eq!(w.get("answers").and_then(Json::as_arr).unwrap().len(), 1);
+
+    let (s, b) = c
+        .call(
+            "POST",
+            &format!("/jobs/{id}/whatif"),
+            Some(r#"{"queries":["nic-bw=2","perfect-overlap"]}"#),
+        )
+        .unwrap();
+    assert_eq!(s, 200, "{b}");
+    assert_eq!(parse(&b).unwrap().get("answers").and_then(Json::as_arr).unwrap().len(), 2);
+
+    let (s, b) = c
+        .call("POST", &format!("/jobs/{id}/optimize"), Some(r#"{"max_rounds":1,"budget_s":5}"#))
+        .unwrap();
+    assert_eq!(s, 200, "{b}");
+    let o = parse(&b).unwrap();
+    assert!(o.get("committed").and_then(Json::as_bool).is_some());
+    assert!(o.get("snapshot").is_some());
+    assert!(o.get("accepted").is_some());
+
+    // 400: the exit-2 argument class, same messages as the CLI
+    for (path, body) in [
+        ("/jobs".to_string(), "not json"),
+        ("/jobs".to_string(), "{}"),
+        ("/jobs".to_string(), r#"{"job":{"model":"nope"}}"#),
+        ("/jobs".to_string(), r#"{"job":{"workers":0}}"#),
+        (format!("/jobs/{id}/whatif"), r#"{"query":"bogus-form"}"#),
+        (format!("/jobs/{id}/whatif"), r#"{}"#),
+        (format!("/jobs/{id}/optimize"), r#"{"max_rounds":0}"#),
+        (format!("/jobs/{id}/optimize"), r#"{"unknown_field":1}"#),
+        (format!("/jobs/{id}/optimize"), r#"{"strategies":"warp-drive"}"#),
+    ] {
+        let (s, b) = c.call("POST", &path, Some(body)).unwrap();
+        assert_eq!(s, 400, "POST {path} {body} -> {b}");
+        assert!(parse(&b).unwrap().get("error").is_some());
+    }
+    let (s, b) = c.call("POST", "/jobs", Some(r#"{"job":{"model":"nope"}}"#)).unwrap();
+    assert_eq!(s, 400);
+    assert!(parse(&b).unwrap().str("error").contains("model"), "{b}");
+
+    // 404 / 405
+    let (s, _) = c.call("GET", "/jobs/jdeadbeef/replay", None).unwrap();
+    assert_eq!(s, 404);
+    let (s, _) = c.call("GET", "/nope", None).unwrap();
+    assert_eq!(s, 404);
+    let (s, _) = c.call("DELETE", "/healthz", None).unwrap();
+    assert_eq!(s, 405);
+    let (s, _) = c.call("GET", "/jobs", None).unwrap();
+    assert_eq!(s, 405);
+
+    let (s, b) = c.call("GET", "/statsz", None).unwrap();
+    assert_eq!(s, 200);
+    let stats = parse(&b).unwrap();
+    let cache = stats.get("cache").unwrap();
+    assert!(cache.f64("hits") >= 1.0, "{b}");
+    assert!(cache.f64("hit_rate") > 0.0);
+    assert_eq!(cache.f64("sessions"), 1.0);
+    assert_eq!(stats.f64("threads"), 4.0);
+    assert!(stats.f64("requests") >= 10.0);
+    assert!(stats.get("queue_depth").is_some());
+    assert!(stats.get("batch").is_some());
+    assert_eq!(stats.get("sessions").and_then(Json::as_arr).unwrap().len(), 1);
+
+    handle.stop();
+}
+
+/// Upload ingestion (`{"files": ...}`) and `{"trace_dir": ...}`
+/// registration of the on-disk fixture, with content-hash identity
+/// (re-upload of the same dump is a cache hit) and the 422 class.
+#[test]
+fn http_upload_and_trace_dir_registration() {
+    let opts = ServeOpts { addr: "127.0.0.1:0".into(), threads: 2, ..ServeOpts::default() };
+    let handle = start(&opts).unwrap();
+    let mut c = Client::new(&handle.addr().to_string());
+
+    let mut files = Json::obj();
+    for entry in std::fs::read_dir(fixture_dir()).unwrap() {
+        let e = entry.unwrap();
+        let name = e.file_name().into_string().unwrap();
+        files.set(&name, Json::Str(std::fs::read_to_string(e.path()).unwrap()));
+    }
+    let mut body = Json::obj();
+    body.set("files", files);
+    let body = body.to_string();
+
+    let (s, b) = c.call("POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let reg = parse(&b).unwrap();
+    let id = reg.str("job").to_string();
+    assert_eq!(reg.get("cached").and_then(Json::as_bool), Some(false));
+
+    // byte-identical upload: content-hash identity makes it a hit
+    let (s, b) = c.call("POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(parse(&b).unwrap().get("cached").and_then(Json::as_bool), Some(true));
+
+    let (s, b) = c.call("GET", &format!("/jobs/{id}/replay"), None).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let r = parse(&b).unwrap();
+    assert_eq!(r.f64("workers"), 2.0, "fixture is a two-worker dump");
+    assert!(r.get("report").is_some());
+
+    // the same dump registered by directory (separate identity: path-based)
+    let mut reg_body = Json::obj();
+    reg_body.set("trace_dir", Json::Str(fixture_dir().display().to_string()));
+    let reg_body = reg_body.to_string();
+    let (s, b) = c.call("POST", "/jobs", Some(&reg_body)).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let id2 = parse(&b).unwrap().str("job").to_string();
+    assert!(id2.starts_with('d'));
+    let (s, _) = c.call("POST", "/jobs", Some(&reg_body)).unwrap();
+    assert_eq!(s, 200);
+    let (s, b) = c.call("GET", &format!("/jobs/{id2}/diagnose"), None).unwrap();
+    assert_eq!(s, 200, "{b}");
+
+    // 422: the exit-3 unusable-trace class
+    for bad in [
+        r#"{"files":{"a.json":"this is not json"}}"#.to_string(),
+        r#"{"files":{"readme.txt":"no trace files here"}}"#.to_string(),
+        r#"{"trace_dir":"/nonexistent-dpro-dump"}"#.to_string(),
+    ] {
+        let (s, b) = c.call("POST", "/jobs", Some(&bad)).unwrap();
+        assert_eq!(s, 422, "{bad} -> {b}");
+    }
+
+    handle.stop();
+}
+
+/// `--trace-dir` preload registers the session before the socket opens;
+/// an unusable preload fails startup with the exit-3 class.
+#[test]
+fn preload_registers_fixture_before_bind() {
+    let opts = ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        preload: vec![fixture_dir().display().to_string()],
+        ..ServeOpts::default()
+    };
+    let handle = start(&opts).unwrap();
+    let mut c = Client::new(&handle.addr().to_string());
+    let (s, b) = c.call("GET", "/statsz", None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(parse(&b).unwrap().get("cache").unwrap().f64("sessions"), 1.0);
+    // registering the preloaded dir over HTTP is a pure cache hit
+    let mut reg_body = Json::obj();
+    reg_body.set("trace_dir", Json::Str(fixture_dir().display().to_string()));
+    let (s, b) = c.call("POST", "/jobs", Some(&reg_body.to_string())).unwrap();
+    assert_eq!(s, 200, "{b}");
+    assert_eq!(parse(&b).unwrap().get("cached").and_then(Json::as_bool), Some(true));
+    handle.stop();
+
+    let err = start(&ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        preload: vec!["/nonexistent-dpro-dump".into()],
+        ..ServeOpts::default()
+    })
+    .unwrap_err();
+    assert_eq!(err.http_status(), 422, "unusable preload is the exit-3 class");
+}
+
+fn serve_args(pairs: &[(&str, &str)]) -> Args {
+    let mut a = Args::default();
+    a.positional.push("serve".into());
+    for (k, v) in pairs {
+        a.options.insert(k.to_string(), v.to_string());
+    }
+    a
+}
+
+/// The CLI exit-code contract extended to `serve`: malformed flags exit
+/// 2, an unusable preload exits 3 — both decided before a socket opens.
+#[test]
+fn serve_cli_exit_codes_follow_the_contract() {
+    for bad in [
+        &[("addr", "not-an-addr")][..],
+        &[("cache-bytes", "0")],
+        &[("cache-bytes", "12Q")],
+        &[("threads", "0")],
+        &[("threads", "many")],
+        &[("top", "-3")],
+        &[("batch-window-ms", "soon")],
+    ] {
+        assert_eq!(cli::run(serve_args(bad)), 2, "{bad:?} should exit 2");
+    }
+    assert_eq!(
+        cli::run(serve_args(&[("addr", "127.0.0.1:0"), ("trace-dir", "/nonexistent-dpro")])),
+        3,
+        "unusable preload should exit 3"
+    );
+}
