@@ -3,18 +3,16 @@
 //! dPRO's combined strategies vs XLA default fusion (paper: up to 3.48x),
 //! (c) replay scaling across **all registered comm schemes** in one table,
 //! (d) fleet-scale replay at 1k–4k workers: tiered (symmetry-class)
-//! simulation vs exact event replay, in rounds/sec. Section (d) is
-//! emitted to `BENCH_fig10_scalability.json` for the CI perf trajectory.
-
-use std::time::Instant;
+//! simulation vs exact event replay, run as a campaign sweep. Section
+//! (d)'s per-cell wall times, modes and campaign spec hash are emitted
+//! to `BENCH_fig10_scalability.json` for the CI artifact trail.
 
 use dpro::baselines::{self, daydream};
+use dpro::campaign::{self, CampaignSpec, CellState, Filter, LaunchMode, RunOpts, Source};
 use dpro::config::{ClusterSpec, JobSpec, NetworkSpec, ALL_SCHEMES};
-use dpro::graph::{build_global_nameless, AnalyticCost};
 use dpro::optimizer::{optimize, SearchOpts};
 use dpro::profiler;
-use dpro::replay::tiered::TieredReplayer;
-use dpro::replay::Replayer;
+use dpro::replay::tiered::ReplayMode;
 use dpro::testbed::{run, TestbedOpts};
 use dpro::util::json::Json;
 use dpro::util::print_table;
@@ -32,32 +30,6 @@ fn scheme_spec_for(model: &str, scheme: &str, gpus: usize) -> JobSpec {
 
 fn spec_for(model: &str, gpus: usize) -> JobSpec {
     scheme_spec_for(model, "horovod", gpus)
-}
-
-/// Replay rounds until `slice_s` elapses (at least one, at most 12);
-/// returns (rounds/sec, last iteration estimate in us).
-fn rounds_per_sec(mut one_round: impl FnMut() -> f64, slice_s: f64) -> (f64, f64) {
-    let t0 = Instant::now();
-    let mut iter_us = one_round();
-    let mut rounds = 1usize;
-    loop {
-        let el = t0.elapsed().as_secs_f64();
-        if el >= slice_s || rounds >= 12 {
-            return (rounds as f64 / el.max(1e-9), iter_us);
-        }
-        iter_us = one_round();
-        rounds += 1;
-    }
-}
-
-/// Estimated resident simulator state per worker: the SoA per-node arrays
-/// (durations, ready times, schedule, device/class ids ≈ 64 B/node) plus
-/// the adjacency lists (each edge appears in one preds and one succs slot,
-/// 4 B each). The point of the metric is that it stays flat per worker as
-/// the fleet grows — a 4096-worker job must not cost more per worker than
-/// a 16-worker one.
-fn state_bytes_per_worker(nodes: usize, edges: usize, workers: usize) -> f64 {
-    (nodes as f64 * 64.0 + edges as f64 * 8.0) / workers as f64
 }
 
 fn main() {
@@ -131,11 +103,15 @@ fn main() {
     println!("\nall schemes flow through the same comm-plan IR: replay accuracy is scheme-independent");
 
     // ---- (d) fleet scale: tiered symmetry-class replay vs exact ----
-    // No testbed run at this scale — the graph is built analytically and
-    // replayed in both engines. horovod declares machine-rotation
-    // symmetry, so tiered simulates one machine and derives the other
-    // 127+ by translation; byteps (PS) declares none and demotes to
-    // exact, which is the honest fallback row.
+    // Expressed as a campaign: the fleet is a declarative sweep over
+    // scheme × workers × replay-mode, executed by the campaign engine
+    // (journal + matrix, the same path `dpro campaign run` takes), and
+    // both the table and the tiered==exact equivalence assertion are
+    // read off the matrix rows. horovod declares machine-rotation
+    // symmetry, so tiered simulates one machine and derives the rest by
+    // translation; byteps (PS) declares none and demotes to exact,
+    // which is the honest fallback row. No testbed run at this scale —
+    // source=analytic builds the graph, exactly as the old inline loop.
     println!("\n=== Fig. 10(d): fleet-scale replay — tiered vs exact (resnet50, RDMA) ===\n");
     let fleet: &[(&str, usize)] = if budget >= 60.0 {
         &[("horovod", 1024), ("horovod", 2048), ("horovod", 4096), ("byteps", 2048)]
@@ -144,77 +120,115 @@ fn main() {
     } else {
         &[("horovod", 1024)]
     };
-    // per-measurement time slice: enough rounds to be stable, bounded so
-    // the exact-mode replay of a multi-million-node graph can't eat the
-    // whole budget
-    let slice = (budget / (6.0 * fleet.len() as f64)).clamp(0.5, 4.0);
+    let mut cspec = CampaignSpec::default();
+    cspec.name = "fig10-fleet".into();
+    cspec.models = vec!["resnet50".into()];
+    cspec.schemes = {
+        let mut s: Vec<String> = fleet.iter().map(|&(s, _)| s.to_string()).collect();
+        s.dedup();
+        s
+    };
+    cspec.workers = {
+        let mut w: Vec<usize> = fleet.iter().map(|&(_, w)| w).collect();
+        w.sort_unstable();
+        w.dedup();
+        w
+    };
+    cspec.modes = vec![ReplayMode::Exact, ReplayMode::Tiered];
+    cspec.source = Source::Analytic;
+    // the fleet is a sparse subset of the scheme × workers product:
+    // exactly what include filters are for
+    cspec.include = fleet
+        .iter()
+        .map(|&(scheme, workers)| Filter {
+            clauses: vec![
+                ("scheme".into(), scheme.to_string()),
+                ("workers".into(), workers.to_string()),
+            ],
+        })
+        .collect();
+
+    let out_dir = std::env::temp_dir().join(format!("dpro_fig10_fleet_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    // jobs=1: each fleet cell holds a multi-million-node graph; serial
+    // execution bounds peak memory exactly like the old inline loop
+    let opts = RunOpts { out_dir, jobs: 1, quiet: true, ..RunOpts::default() };
+    let out = match campaign::run(&cspec, LaunchMode::Fresh, &opts) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("fig10(d): campaign failed: {}", e.message());
+            std::process::exit(e.exit_code());
+        }
+    };
+    assert_eq!(out.failed, 0, "fleet cells must not fail");
+    let state = campaign::run::load_state(&cspec, &opts.out_dir)
+        .expect("the campaign just wrote this journal");
+    let cell_result = |scheme: &str, workers: usize, mode: ReplayMode| -> (Json, f64) {
+        let cell = cspec
+            .expand()
+            .into_iter()
+            .find(|c| c.scheme == scheme && c.workers == workers && c.mode == mode)
+            .unwrap_or_else(|| panic!("{scheme}@{workers} missing from expansion"));
+        match state.cells.get(&cell.id()) {
+            Some(CellState::Done { result, wall_ms, .. }) => (result.clone(), *wall_ms),
+            other => panic!("{scheme}@{workers}/{} not done: {other:?}", mode.name()),
+        }
+    };
+
     let mut rows = Vec::new();
     let mut jfleet = Vec::new();
     for &(scheme, workers) in fleet {
-        let spec = scheme_spec_for("resnet50", scheme, workers);
-        let t0 = Instant::now();
-        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
-        let t_build = t0.elapsed().as_secs_f64();
-        let nodes = g.dfg.len();
-        let edges: usize = g.dfg.ids().map(|i| g.dfg.preds(i).len()).sum();
-
-        let mut exact = Replayer::new(&g);
-        exact.replay(&g); // warm: first replay pays allocation
-        let (exact_rps, iter_us) = rounds_per_sec(|| exact.replay(&g).iteration_time, slice);
-
-        let mut tiered = TieredReplayer::new(&g, &spec);
-        tiered.replay(&g); // warm: pays symmetry verification + allocation
-        let (tiered_rps, tiered_iter) =
-            rounds_per_sec(|| tiered.replay(&g).iteration_time, slice);
-        let rep = tiered.report().clone();
+        let (exact, exact_ms) = cell_result(scheme, workers, ReplayMode::Exact);
+        let (tiered, tiered_ms) = cell_result(scheme, workers, ReplayMode::Tiered);
+        // the PR-7 contract, now asserted on matrix rows: tiered replay
+        // is an exact-equivalent engine, whatever tier it picked
         assert_eq!(
-            tiered_iter.to_bits(),
-            iter_us.to_bits(),
+            exact.f64("iteration_us"),
+            tiered.f64("iteration_us"),
             "tiered and exact disagree on {scheme}@{workers}"
         );
-
-        let bpw = state_bytes_per_worker(nodes, edges, workers);
+        let mode_used = tiered.str("mode_used").to_string();
         rows.push(vec![
             scheme.to_string(),
             format!("{workers}"),
-            format!("{}", spec.cluster.n_machines()),
-            format!("{}", nodes),
-            rep.mode_used.clone(),
-            format!("{:.2}", exact_rps),
-            format!("{:.2}", tiered_rps),
-            format!("{:.1}x", tiered_rps / exact_rps),
-            format!("{:.0}", bpw / 1024.0),
+            format!("{}", exact.f64("ops")),
+            mode_used.clone(),
+            format!("{:.1}", exact.f64("iteration_us") / 1e3),
+            format!("{:.2}", exact_ms / 1e3),
+            format!("{:.2}", tiered_ms / 1e3),
+            format!("{:.1}x", exact_ms / tiered_ms.max(1e-9)),
         ]);
         let mut j = Json::obj();
         j.set("scheme", Json::Str(scheme.to_string()));
         j.set("workers", Json::Num(workers as f64));
-        j.set("machines", Json::Num(spec.cluster.n_machines() as f64));
-        j.set("nodes", Json::Num(nodes as f64));
-        j.set("edges", Json::Num(edges as f64));
-        j.set("build_s", Json::Num(t_build));
-        j.set("mode_used", Json::Str(rep.mode_used.clone()));
-        j.set("simulated_nodes", Json::Num(rep.simulated_nodes as f64));
-        j.set("derived_nodes", Json::Num(rep.derived_nodes as f64));
-        j.set("exact_rounds_per_sec", Json::Num(exact_rps));
-        j.set("tiered_rounds_per_sec", Json::Num(tiered_rps));
-        j.set("tiered_speedup", Json::Num(tiered_rps / exact_rps));
-        j.set("bytes_per_worker", Json::Num(bpw));
-        j.set("iteration_ms", Json::Num(iter_us / 1e3));
+        j.set("nodes", Json::Num(exact.f64("ops")));
+        j.set("mode_used", Json::Str(mode_used));
+        j.set("iteration_ms", Json::Num(exact.f64("iteration_us") / 1e3));
+        // per-cell wall covers build+replay end-to-end (each campaign
+        // cell builds its own graph; replay-only rounds/sec is tracked
+        // by perf_hotpath and gated there)
+        j.set("exact_cell_s", Json::Num(exact_ms / 1e3));
+        j.set("tiered_cell_s", Json::Num(tiered_ms / 1e3));
+        j.set("tiered_speedup", Json::Num(exact_ms / tiered_ms.max(1e-9)));
         jfleet.push(j);
     }
     print_table(
         &[
-            "scheme", "workers", "machines", "nodes", "mode", "exact r/s", "tiered r/s",
-            "speedup", "KB/worker",
+            "scheme", "workers", "nodes", "mode", "iter (ms)", "exact cell (s)",
+            "tiered cell (s)", "speedup",
         ],
         &rows,
     );
     println!("\ntiered replay simulates one machine per symmetry class and derives the rest by");
     println!("timeline translation; asymmetric schemes demote to exact replay (same result).");
+    if let (Some(csv), Some(json)) = (&out.csv, &out.json) {
+        println!("campaign matrix: {} + {}", csv.display(), json.display());
+    }
 
     let mut report = Json::obj();
     report.set("bench", Json::Str("fig10_scalability".to_string()));
     report.set("provenance", Json::Str("measured".to_string()));
+    report.set("campaign_spec_hash", Json::Str(cspec.hash()));
     report.set("fleet", Json::Arr(jfleet));
     match std::fs::write("BENCH_fig10_scalability.json", report.to_string_pretty()) {
         Ok(()) => println!("\nwrote BENCH_fig10_scalability.json"),

@@ -1,15 +1,17 @@
-//! §Bottleneck-identification table: run the diagnosis engine over
-//! models × ALL_SCHEMES and tabulate where each job's iteration goes —
-//! critical-path compute/communication split, the top-ranked bottleneck,
-//! and the replayed perfect-overlap headroom — all answered with zero
-//! global-DFG builds per query battery. Emits `BENCH_fig_bottleneck.json`
-//! (uploaded by CI, budgeted via `DPRO_BENCH_BUDGET_S` like
-//! `perf_hotpath`).
+//! §Bottleneck-identification table: the diagnosis sweep over models ×
+//! ALL_SCHEMES, expressed as a **campaign** — the sweep is a declarative
+//! [`CampaignSpec`] expanded, journaled and executed by the campaign
+//! engine (the same path `dpro campaign run` takes), and the table plus
+//! `BENCH_fig_bottleneck.json` are read back off the results matrix.
+//! The per-battery zero-rebuild guarantee this bench used to assert
+//! inline is pinned by the diagnosis tests and the CI diagnose-smoke
+//! step. Budgeted via `DPRO_BENCH_BUDGET_S` like `perf_hotpath`; a
+//! truncated run reports how many combinations were skipped.
 
 use std::time::Instant;
 
-use dpro::config::{JobSpec, Transport, ALL_SCHEMES};
-use dpro::diagnosis::Diagnoser;
+use dpro::campaign::{self, CampaignSpec, CellState, LaunchMode, RunOpts, Source};
+use dpro::config::ALL_SCHEMES;
 use dpro::util::json::Json;
 use dpro::util::print_table;
 
@@ -20,90 +22,105 @@ fn main() {
         .unwrap_or(120.0);
     let t0 = Instant::now();
 
-    let models = ["resnet50", "vgg16", "inception_v3", "bert_base", "gpt_mini"];
-    let mut rows = Vec::new();
-    let mut jrows = Vec::new();
-    let mut skipped = 0usize;
-    let total = models.len() * ALL_SCHEMES.len();
+    let mut spec = CampaignSpec::default();
+    spec.name = "fig-bottleneck".into();
+    spec.models = ["resnet50", "vgg16", "inception_v3", "bert_base", "gpt_mini"]
+        .iter()
+        .map(|m| m.to_string())
+        .collect();
+    spec.schemes = ALL_SCHEMES.iter().map(|s| s.to_string()).collect();
+    spec.workers = vec![16];
+    spec.source = Source::Analytic;
+    spec.diagnose = true;
 
-    'sweep: for model in models {
-        for scheme in ALL_SCHEMES {
-            if t0.elapsed().as_secs_f64() > budget_s {
-                skipped = total - rows.len();
-                println!(
-                    "\n[budget] {budget_s}s exhausted after {} of {total} jobs; \
-                     {skipped} combinations skipped (raise DPRO_BENCH_BUDGET_S for the full table)",
-                    rows.len()
-                );
-                break 'sweep;
-            }
-            let spec = JobSpec::standard(model, scheme, Transport::Rdma);
-            let mut d = Diagnoser::new(spec);
-            let queries = d.auto_queries();
-            let rep = d.report(&queries, 3);
-            assert_eq!(rep.builds_during_queries, 0, "{model}/{scheme} rebuilt");
-
-            let iter_ms = rep.iteration_us / 1e3;
-            let pct = |x: f64| if rep.iteration_us > 0.0 { x / rep.iteration_us * 100.0 } else { 0.0 };
-            let top = rep
-                .bottlenecks
-                .first()
-                .map(|b| format!("{}:{}", b.kind.name(), b.subject))
-                .unwrap_or_else(|| "-".into());
-            let po = rep
-                .whatif
-                .iter()
-                .find(|a| a.query == "perfect-overlap")
-                .map(|a| a.speedup)
-                .unwrap_or(1.0);
-            rows.push(vec![
-                format!("{model}/{scheme}"),
-                format!("{iter_ms:.1}"),
-                format!("{:.0}%", pct(rep.blame.path.comp_us)),
-                format!("{:.0}%", pct(rep.blame.path.comm_us)),
-                top.clone(),
-                format!("{po:.2}x"),
-                format!("{}", rep.whatif.len()),
-                format!("{}", rep.builds_during_queries),
-            ]);
-            let mut j = Json::obj();
-            j.set("job", Json::Str(format!("{model}/{scheme}")));
-            j.set("iteration_us", Json::Num(rep.iteration_us));
-            j.set("path_comp_us", Json::Num(rep.blame.path.comp_us));
-            j.set("path_comm_us", Json::Num(rep.blame.path.comm_us));
-            j.set("top_bottleneck", Json::Str(top));
-            j.set("perfect_overlap_speedup", Json::Num(po));
-            j.set("queries", Json::Num(rep.whatif.len() as f64));
-            j.set(
-                "builds_during_queries",
-                Json::Num(rep.builds_during_queries as f64),
-            );
-            jrows.push(j);
+    let out_dir = std::env::temp_dir().join(format!("dpro_fig_bottleneck_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let opts = RunOpts {
+        out_dir,
+        jobs: 4,
+        budget_s: Some(budget_s),
+        quiet: true,
+        ..RunOpts::default()
+    };
+    let out = match campaign::run(&spec, LaunchMode::Fresh, &opts) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("fig_bottleneck: campaign failed: {}", e.message());
+            std::process::exit(e.exit_code());
         }
+    };
+    let state = campaign::run::load_state(&spec, &opts.out_dir)
+        .expect("the campaign just wrote this journal");
+
+    let total = spec.product();
+    let skipped = out.pending;
+    if skipped > 0 {
+        println!(
+            "\n[budget] {budget_s}s exhausted after {} of {total} jobs; \
+             {skipped} combinations skipped (raise DPRO_BENCH_BUDGET_S for the full table)",
+            out.done + out.failed
+        );
     }
 
-    println!("\n=== bottleneck identification (diagnosis engine) ===\n");
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    // spec order (model-major), not the matrix's sorted-id order
+    for cell in spec.expand() {
+        let Some(CellState::Done { result, result_hash, wall_ms }) = state.cells.get(&cell.id())
+        else {
+            continue;
+        };
+        let iteration_us = result.f64("iteration_us");
+        let pct = |x: f64| if iteration_us > 0.0 { x / iteration_us * 100.0 } else { 0.0 };
+        let comp = result.f64("path_comp_us");
+        let comm = result.f64("path_comm_us");
+        let top = match result.get("top_bottleneck") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => "-".into(),
+        };
+        let po = result.get("perfect_overlap_speedup").and_then(Json::as_f64).unwrap_or(1.0);
+        rows.push(vec![
+            format!("{}/{}", cell.model, cell.scheme),
+            format!("{:.1}", iteration_us / 1e3),
+            format!("{:.0}%", pct(comp)),
+            format!("{:.0}%", pct(comm)),
+            top.clone(),
+            format!("{po:.2}x"),
+        ]);
+        let mut j = Json::obj();
+        j.set("job", Json::Str(format!("{}/{}", cell.model, cell.scheme)));
+        j.set("iteration_us", Json::Num(iteration_us));
+        j.set("path_comp_us", Json::Num(comp));
+        j.set("path_comm_us", Json::Num(comm));
+        j.set("top_bottleneck", Json::Str(top));
+        j.set("perfect_overlap_speedup", Json::Num(po));
+        j.set("wall_ms", Json::Num(*wall_ms));
+        j.set("result_hash", Json::Str(result_hash.clone()));
+        jrows.push(j);
+    }
+
+    println!("\n=== bottleneck identification (diagnosis engine, via campaign) ===\n");
     print_table(
-        &[
-            "job",
-            "iter (ms)",
-            "path comp",
-            "path comm",
-            "top bottleneck",
-            "overlap bound",
-            "queries",
-            "builds",
-        ],
+        &["job", "iter (ms)", "path comp", "path comm", "top bottleneck", "overlap bound"],
         &rows,
     );
+    if let (Some(csv), Some(json)) = (&out.csv, &out.json) {
+        println!("\ncampaign matrix: {} + {}", csv.display(), json.display());
+    }
 
     let mut report = Json::obj();
     report.set("jobs", Json::Arr(jrows));
     report.set("skipped", Json::Num(skipped as f64));
+    report.set("failed", Json::Num(out.failed as f64));
     report.set("budget_s", Json::Num(budget_s));
     report.set("wall_s", Json::Num(t0.elapsed().as_secs_f64()));
+    report.set("campaign_spec_hash", Json::Str(spec.hash()));
     match std::fs::write("BENCH_fig_bottleneck.json", report.to_string_pretty()) {
         Ok(()) => println!("\nwrote BENCH_fig_bottleneck.json"),
         Err(e) => eprintln!("\ncould not write BENCH_fig_bottleneck.json: {e}"),
+    }
+    if out.failed > 0 {
+        eprintln!("fig_bottleneck: {} cells failed (see matrix for reasons)", out.failed);
+        std::process::exit(1);
     }
 }

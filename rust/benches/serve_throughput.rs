@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use dpro::serve::http::Client;
 use dpro::serve::{start, ServeOpts};
-use dpro::util::json::{parse, Json};
+use dpro::util::json::Json;
 use dpro::util::{print_table, Args};
 
 fn fail(msg: &str) -> ! {
@@ -32,20 +32,14 @@ fn expect(cond: bool, msg: &str) {
     }
 }
 
+// thin fail-fast wrappers over the shared [`Client`] JSON helpers (the
+// same ones the campaign executor's serve path uses)
 fn get_ok(c: &mut Client, path: &str) -> Json {
-    match c.call("GET", path, None) {
-        Ok((200, body)) => parse(&body).unwrap_or_else(|e| fail(&format!("GET {path}: {e}"))),
-        Ok((s, body)) => fail(&format!("GET {path}: status {s}: {body}")),
-        Err(e) => fail(&format!("GET {path}: {e}")),
-    }
+    c.get_json(path).unwrap_or_else(|e| fail(&e))
 }
 
 fn post_ok(c: &mut Client, path: &str, body: &str) -> Json {
-    match c.call("POST", path, Some(body)) {
-        Ok((200, resp)) => parse(&resp).unwrap_or_else(|e| fail(&format!("POST {path}: {e}"))),
-        Ok((s, resp)) => fail(&format!("POST {path}: status {s}: {resp}")),
-        Err(e) => fail(&format!("POST {path}: {e}")),
-    }
+    c.post_json(path, body).unwrap_or_else(|e| fail(&e))
 }
 
 const ANALYTIC_JOB: &str =

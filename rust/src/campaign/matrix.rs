@@ -1,0 +1,272 @@
+//! The campaign results layer: one CSV + one schema-stable JSON matrix.
+//!
+//! Rows are the expanded cells in sorted-id order; values come from the
+//! journal's `done` events (the journal is the single source of truth —
+//! the matrix is always a pure function of journal + spec, which is
+//! what makes kill-and-resume reproduce an uninterrupted run
+//! bit-for-bit). Every row carries provenance: the spec hash, the git
+//! describe of the producing build, the replay mode requested and the
+//! mode actually used (tiered may demote), the per-cell result hash,
+//! and wall time.
+
+use super::queue::{CellState, JournalState};
+use super::spec::Cell;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Matrix schema version (bumped on column/key changes).
+pub const MATRIX_VERSION: f64 = 1.0;
+
+/// Result-object keys emitted as CSV columns, in order. Every `done`
+/// result carries all of these (inapplicable ones as JSON `null` → an
+/// empty CSV field), so the header never varies with spec contents.
+pub const RESULT_COLUMNS: [&str; 15] = [
+    "iteration_us",
+    "fw_us",
+    "bw_us",
+    "est_peak_mem_bytes",
+    "ops",
+    "mode_used",
+    "demoted",
+    "trace_warnings",
+    "path_comp_us",
+    "path_comm_us",
+    "top_bottleneck",
+    "perfect_overlap_speedup",
+    "opt_us",
+    "opt_speedup",
+    "executor",
+];
+
+/// One matrix row: a cell plus its journal outcome.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// The expanded cell.
+    pub cell: Cell,
+    /// `done` | `failed` | `pending` (never started or interrupted).
+    pub status: String,
+    /// Execution wall time (ms); 0 unless done.
+    pub wall_ms: f64,
+    /// Hash of the timing-independent result fields; empty unless done.
+    pub result_hash: String,
+    /// Failure reason; empty unless failed.
+    pub reason: String,
+    /// The per-cell result object; empty object unless done.
+    pub result: Json,
+}
+
+/// The assembled results matrix.
+#[derive(Debug)]
+pub struct Matrix {
+    /// Campaign name.
+    pub campaign: String,
+    /// Hash of the canonical spec.
+    pub spec_hash: String,
+    /// `git describe` of the producing build (or an override).
+    pub git: String,
+    /// Rows in sorted cell-id order.
+    pub rows: Vec<Row>,
+}
+
+/// Escape one CSV field per RFC 4180: quote when it contains a comma,
+/// quote, or newline; double internal quotes.
+fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Render a JSON scalar as a CSV field (null → empty; numbers via the
+/// deterministic [`Json`] writer, so integers print without a decimal).
+fn csv_value(v: Option<&Json>) -> String {
+    match v {
+        None | Some(Json::Null) => String::new(),
+        Some(Json::Str(s)) => csv_escape(s),
+        Some(other) => csv_escape(&other.to_string()),
+    }
+}
+
+impl Matrix {
+    /// Assemble the matrix for `cells` from a reduced journal. Cells
+    /// absent from the journal — or left `running` by a kill — appear
+    /// as `pending` rows, so a budget-truncated campaign still emits a
+    /// complete, honest matrix.
+    pub fn from_state(state: &JournalState, cells: &[Cell], git: &str) -> Matrix {
+        let mut rows: Vec<Row> = cells
+            .iter()
+            .map(|cell| {
+                let id = cell.id();
+                let (status, wall_ms, result_hash, reason, result) = match state.cells.get(&id) {
+                    Some(CellState::Done { result_hash, wall_ms, result }) => (
+                        "done",
+                        *wall_ms,
+                        result_hash.clone(),
+                        String::new(),
+                        result.clone(),
+                    ),
+                    Some(CellState::Failed { reason }) => {
+                        ("failed", 0.0, String::new(), reason.clone(), Json::obj())
+                    }
+                    Some(CellState::Running) | None => {
+                        ("pending", 0.0, String::new(), String::new(), Json::obj())
+                    }
+                };
+                Row {
+                    cell: cell.clone(),
+                    status: status.to_string(),
+                    wall_ms,
+                    result_hash,
+                    reason,
+                    result,
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| a.cell.id().cmp(&b.cell.id()));
+        Matrix {
+            campaign: state.campaign.clone(),
+            spec_hash: state.spec_hash.clone(),
+            git: git.to_string(),
+            rows,
+        }
+    }
+
+    /// Count of rows with `status`.
+    pub fn count(&self, status: &str) -> usize {
+        self.rows.iter().filter(|r| r.status == status).count()
+    }
+
+    /// The CSV document (fixed header, sorted rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("cell,model,scheme,workers,strategies,inject,replay_mode,status");
+        for col in RESULT_COLUMNS {
+            out.push(',');
+            out.push_str(col);
+        }
+        out.push_str(",wall_ms,result_hash,spec_hash,git,reason\n");
+        for row in &self.rows {
+            let c = &row.cell;
+            let mut fields = vec![
+                csv_escape(&c.id()),
+                csv_escape(&c.model),
+                csv_escape(&c.scheme),
+                c.workers.to_string(),
+                csv_escape(&c.strategies),
+                csv_escape(&c.inject),
+                c.mode.name().to_string(),
+                row.status.clone(),
+            ];
+            for col in RESULT_COLUMNS {
+                fields.push(csv_value(row.result.get(col)));
+            }
+            fields.push(csv_value(Some(&Json::Num(row.wall_ms))));
+            fields.push(csv_escape(&row.result_hash));
+            fields.push(csv_escape(&self.spec_hash));
+            fields.push(csv_escape(&self.git));
+            fields.push(csv_escape(&row.reason));
+            out.push_str(&fields.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The JSON document: header + summary + one flat object per cell
+    /// (result keys merged with identity/provenance keys; `Json`'s
+    /// sorted-map writer keeps the byte order deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("campaign", Json::Str(self.campaign.clone()));
+        doc.set("spec_hash", Json::Str(self.spec_hash.clone()));
+        doc.set("git", Json::Str(self.git.clone()));
+        doc.set("version", Json::Num(MATRIX_VERSION));
+        let mut summary = Json::obj();
+        summary.set("total", Json::Num(self.rows.len() as f64));
+        summary.set("done", Json::Num(self.count("done") as f64));
+        summary.set("failed", Json::Num(self.count("failed") as f64));
+        summary.set("pending", Json::Num(self.count("pending") as f64));
+        doc.set("summary", summary);
+        let cells: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut j = row.result.clone();
+                j.set("cell", Json::Str(row.cell.id()));
+                j.set("model", Json::Str(row.cell.model.clone()));
+                j.set("scheme", Json::Str(row.cell.scheme.clone()));
+                j.set("workers", Json::Num(row.cell.workers as f64));
+                j.set("strategies", Json::Str(row.cell.strategies.clone()));
+                j.set("inject", Json::Str(row.cell.inject.clone()));
+                j.set("replay_mode", Json::Str(row.cell.mode.name().to_string()));
+                j.set("status", Json::Str(row.status.clone()));
+                j.set("wall_ms", Json::Num(row.wall_ms));
+                j.set("result_hash", Json::Str(row.result_hash.clone()));
+                if !row.reason.is_empty() {
+                    j.set("reason", Json::Str(row.reason.clone()));
+                }
+                j
+            })
+            .collect();
+        doc.set("cells", Json::Arr(cells));
+        doc
+    }
+
+    /// Write `matrix.csv` + `matrix.json` into `dir`; returns their
+    /// paths `(csv, json)`.
+    pub fn write(&self, dir: &Path) -> Result<(PathBuf, PathBuf), String> {
+        let csv = dir.join("matrix.csv");
+        let json = dir.join("matrix.json");
+        std::fs::write(&csv, self.to_csv())
+            .map_err(|e| format!("cannot write {}: {e}", csv.display()))?;
+        std::fs::write(&json, self.to_json().to_string_pretty())
+            .map_err(|e| format!("cannot write {}: {e}", json.display()))?;
+        Ok((csv, json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::queue::JournalState;
+    use crate::campaign::spec::CampaignSpec;
+
+    #[test]
+    fn pending_and_done_rows_share_one_schema() {
+        let spec = CampaignSpec::parse("models = resnet50\nworkers = 2, 4").unwrap();
+        let cells = spec.expand();
+        let mut state = JournalState {
+            campaign: "t".into(),
+            spec_hash: spec.hash(),
+            ..JournalState::default()
+        };
+        let mut result = Json::obj();
+        result.set("iteration_us", Json::Num(1000.0));
+        result.set("executor", Json::Str("local".into()));
+        state.cells.insert(
+            cells[0].id(),
+            CellState::Done { result_hash: "h".into(), wall_ms: 2.0, result },
+        );
+        let m = Matrix::from_state(&state, &cells, "deadbeef");
+        assert_eq!(m.count("done"), 1);
+        assert_eq!(m.count("pending"), 1);
+        let csv = m.to_csv();
+        let header_cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), header_cols, "ragged row: {line}");
+        }
+        let doc = m.to_json();
+        assert_eq!(doc.f64("version"), MATRIX_VERSION);
+        assert_eq!(doc.get("summary").unwrap().f64("total"), 2.0);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_value(Some(&Json::Num(42.0))), "42");
+        assert_eq!(csv_value(Some(&Json::Null)), "");
+        assert_eq!(csv_value(None), "");
+    }
+}

@@ -1,0 +1,29 @@
+//! Campaign runner: declarative scenario sweeps at fleet scale
+//! (ROADMAP item 3, `docs/CAMPAIGN.md`).
+//!
+//! dPRO's evaluation is a matrix — models × schemes × worker counts ×
+//! strategy sets × fault scenarios × replay modes. This module turns
+//! that matrix into one declarative spec ([`spec`]), a persistent
+//! crash-safe work queue ([`queue`]), a parallel executor over the
+//! shared thread pool or a live `dpro serve` endpoint ([`run`]), and
+//! one CSV + JSON results matrix with per-cell provenance
+//! ([`matrix`]). The CLI surface is
+//! `dpro campaign run|resume|status --spec <file>`.
+//!
+//! The central contract, pinned by `rust/tests/campaign.rs`: a
+//! campaign killed mid-sweep and resumed produces a matrix
+//! **bit-for-bit identical** to an uninterrupted run, with zero
+//! re-executed `done` cells. Everything is arranged around that —
+//! seeded testbeds, round-bounded optimizer search, journal-only
+//! matrix assembly, and explicit provenance seams for the two
+//! genuinely nondeterministic inputs (wall time, git describe).
+
+pub mod matrix;
+pub mod queue;
+pub mod run;
+pub mod spec;
+
+pub use matrix::Matrix;
+pub use queue::{CellState, Journal, JournalState};
+pub use run::{run, CampaignError, LaunchMode, Outcome, RunOpts};
+pub use spec::{CampaignSpec, Cell, Filter, Source};

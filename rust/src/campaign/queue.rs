@@ -1,0 +1,410 @@
+//! The persistent, crash-safe work queue behind `dpro campaign`.
+//!
+//! One append-only journal file (`journal.jsonl`) records every cell
+//! state transition as a single JSON line: a header pinning the
+//! campaign name + spec hash, then `running` / `done` / `failed`
+//! events. A cell's current state is the last event for its id, so a
+//! crash at any byte offset loses at most the final partial line —
+//! [`Journal::load`] tolerates exactly that (a malformed *last* line)
+//! and rejects corruption anywhere else. `resume` replays the journal,
+//! skips every `done` cell (their results ride along in the `done`
+//! event, so no recomputation is ever needed), and re-runs cells left
+//! `running` by the crash.
+//!
+//! Writes go through one mutex-held `write_all` per line, so
+//! concurrent pool workers never interleave partial lines.
+
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Journal file name inside the campaign output directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+/// Journal format version (bumped on incompatible line-schema changes).
+pub const JOURNAL_VERSION: f64 = 1.0;
+
+/// A cell's current state, as reduced from the journal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellState {
+    /// A `running` line without a later `done`/`failed` — the cell was
+    /// in flight when the campaign stopped; resume re-runs it.
+    Running,
+    /// Finished: the result row (flat JSON object) and its hash.
+    Done {
+        /// Hash of the timing-independent result fields.
+        result_hash: String,
+        /// Wall-clock execution time in milliseconds.
+        wall_ms: f64,
+        /// The full per-cell result object (matrix row source).
+        result: Json,
+    },
+    /// Execution failed; resume retries only with `--retry-failed`.
+    Failed {
+        /// Human-readable failure reason.
+        reason: String,
+    },
+}
+
+/// The reduction of a journal: last state per cell plus the counters
+/// the resumability property test asserts on.
+#[derive(Debug, Default)]
+pub struct JournalState {
+    /// Campaign name from the header.
+    pub campaign: String,
+    /// Spec hash from the header.
+    pub spec_hash: String,
+    /// Last state per cell id.
+    pub cells: BTreeMap<String, CellState>,
+    /// Total `running` lines per cell id (execution attempts).
+    pub attempts: BTreeMap<String, usize>,
+    /// Number of `running` lines appended for a cell *after* that cell
+    /// already had a `done` line — must stay 0 (`resume` never re-runs
+    /// a done cell; the property test counts this).
+    pub reruns_after_done: usize,
+}
+
+impl JournalState {
+    /// Count of cells currently in `state` (by discriminant).
+    pub fn count(&self, want: &str) -> usize {
+        self.cells
+            .values()
+            .filter(|s| match s {
+                CellState::Running => want == "running",
+                CellState::Done { .. } => want == "done",
+                CellState::Failed { .. } => want == "failed",
+            })
+            .count()
+    }
+}
+
+/// Append handle to a campaign journal. Cloneable across pool workers
+/// via `Arc`; every line is one atomic `write_all` + flush.
+pub struct Journal {
+    file: Mutex<std::fs::File>,
+    path: PathBuf,
+}
+
+fn line_err(path: &Path, lineno: usize, why: impl std::fmt::Display) -> String {
+    format!("unreadable journal {}: line {}: {}", path.display(), lineno, why)
+}
+
+/// Make the journal safe to append to: complete a valid final line that
+/// lost only its newline, truncate an unparseable torn fragment.
+fn repair_tail(path: &Path) -> Result<(), String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| format!("cannot open journal {}: {e}", path.display()))?;
+    if bytes.is_empty() || bytes.ends_with(b"\n") {
+        return Ok(());
+    }
+    let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1);
+    let tail_is_json = std::str::from_utf8(&bytes[keep..])
+        .ok()
+        .is_some_and(|t| parse(t).is_ok());
+    let mut file = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .map_err(|e| format!("cannot open journal {}: {e}", path.display()))?;
+    if tail_is_json {
+        // the event was fully written, only the newline was lost
+        file.write_all(b"\n")
+    } else {
+        file.set_len(keep as u64)
+    }
+    .map_err(|e| format!("cannot repair journal tail {}: {e}", path.display()))
+}
+
+impl Journal {
+    /// Create a fresh journal (fails if one already exists — a fresh
+    /// `run` must not silently clobber history; that's what `resume`
+    /// is for) and write the header line.
+    pub fn create(dir: &Path, campaign: &str, spec_hash: &str) -> Result<Journal, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+        let path = dir.join(JOURNAL_FILE);
+        let file = std::fs::OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("cannot create journal {}: {e}", path.display()))?;
+        let journal = Journal { file: Mutex::new(file), path };
+        let mut header = Json::obj();
+        header.set("campaign", Json::Str(campaign.to_string()));
+        header.set("spec_hash", Json::Str(spec_hash.to_string()));
+        header.set("version", Json::Num(JOURNAL_VERSION));
+        journal.append(&header)?;
+        Ok(journal)
+    }
+
+    /// Open an existing journal for appending (resume path).
+    ///
+    /// A crash mid-append can leave the file without a trailing
+    /// newline. Appending straight after those bytes would glue the
+    /// next event onto the torn fragment and corrupt a *middle* line —
+    /// so the tail is repaired first: a trailing fragment that is
+    /// complete JSON just gets its newline; an unparseable fragment is
+    /// truncated (it carries no recoverable data — [`Journal::load`]
+    /// ignores it too).
+    pub fn open(dir: &Path) -> Result<Journal, String> {
+        let path = dir.join(JOURNAL_FILE);
+        repair_tail(&path)?;
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("cannot open journal {}: {e}", path.display()))?;
+        Ok(Journal { file: Mutex::new(file), path })
+    }
+
+    /// Journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&self, line: &Json) -> Result<(), String> {
+        let mut text = line.to_string();
+        text.push('\n');
+        let mut file = self.file.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        file.write_all(text.as_bytes())
+            .and_then(|()| file.flush())
+            .map_err(|e| format!("journal write {}: {e}", self.path.display()))
+    }
+
+    /// Record that `cell` started executing.
+    pub fn running(&self, cell: &str) -> Result<(), String> {
+        let mut j = Json::obj();
+        j.set("cell", Json::Str(cell.to_string()));
+        j.set("state", Json::Str("running".into()));
+        self.append(&j)
+    }
+
+    /// Record a finished cell with its result row.
+    pub fn done(&self, cell: &str, result_hash: &str, wall_ms: f64, result: Json) -> Result<(), String> {
+        let mut j = Json::obj();
+        j.set("cell", Json::Str(cell.to_string()));
+        j.set("state", Json::Str("done".into()));
+        j.set("result_hash", Json::Str(result_hash.to_string()));
+        j.set("wall_ms", Json::Num(wall_ms));
+        j.set("result", result);
+        self.append(&j)
+    }
+
+    /// Record a failed cell.
+    pub fn failed(&self, cell: &str, reason: &str) -> Result<(), String> {
+        let mut j = Json::obj();
+        j.set("cell", Json::Str(cell.to_string()));
+        j.set("state", Json::Str("failed".into()));
+        j.set("reason", Json::Str(reason.to_string()));
+        self.append(&j)
+    }
+
+    /// Reduce a journal file to per-cell states. `expect_hash`, when
+    /// given, must match the header's spec hash — resuming under an
+    /// edited spec would silently mix incompatible matrices.
+    ///
+    /// Tolerated: a malformed **final** line (crash mid-append). Any
+    /// other malformed line, a missing/invalid header, or a hash
+    /// mismatch is an error (the CLI's exit-3 unusable-data class).
+    pub fn load(dir: &Path, expect_hash: Option<&str>) -> Result<JournalState, String> {
+        let path = dir.join(JOURNAL_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("unreadable journal {}: {e}", path.display()))?;
+        let lines: Vec<&str> = text.lines().collect();
+        let mut state = JournalState::default();
+        if lines.is_empty() {
+            return Err(line_err(&path, 1, "empty journal (missing header)"));
+        }
+        for (i, line) in lines.iter().enumerate() {
+            let lineno = i + 1;
+            let last = i + 1 == lines.len();
+            let parsed = match parse(line) {
+                Ok(j) => j,
+                // a crash mid-append can truncate only the final line
+                Err(_) if last && i > 0 => break,
+                Err(e) => return Err(line_err(&path, lineno, format!("bad JSON: {e}"))),
+            };
+            if i == 0 {
+                let version = parsed.get("version").and_then(Json::as_f64);
+                if parsed.get("campaign").is_none() || version.is_none() {
+                    return Err(line_err(&path, 1, "missing campaign/version header"));
+                }
+                if version != Some(JOURNAL_VERSION) {
+                    return Err(line_err(
+                        &path,
+                        1,
+                        format!("unsupported journal version {:?}", version),
+                    ));
+                }
+                state.campaign = parsed.str("campaign").to_string();
+                state.spec_hash = parsed.str("spec_hash").to_string();
+                if let Some(expect) = expect_hash {
+                    if state.spec_hash != expect {
+                        return Err(format!(
+                            "journal {} was written by a different spec (journal hash {}, \
+                             current spec {}); use a fresh --out directory",
+                            path.display(),
+                            state.spec_hash,
+                            expect
+                        ));
+                    }
+                }
+                continue;
+            }
+            let cell = parsed.str("cell").to_string();
+            if cell.is_empty() {
+                if last {
+                    break; // torn final line that still parsed as JSON
+                }
+                return Err(line_err(&path, lineno, "missing cell id"));
+            }
+            let new = match parsed.str("state") {
+                "running" => {
+                    *state.attempts.entry(cell.clone()).or_insert(0) += 1;
+                    if matches!(state.cells.get(&cell), Some(CellState::Done { .. })) {
+                        state.reruns_after_done += 1;
+                    }
+                    CellState::Running
+                }
+                "done" => CellState::Done {
+                    result_hash: parsed.str("result_hash").to_string(),
+                    wall_ms: parsed.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    result: parsed.get("result").cloned().unwrap_or_else(Json::obj),
+                },
+                "failed" => CellState::Failed { reason: parsed.str("reason").to_string() },
+                other => {
+                    if last {
+                        break;
+                    }
+                    return Err(line_err(&path, lineno, format!("unknown state {other:?}")));
+                }
+            };
+            state.cells.insert(cell, new);
+        }
+        Ok(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dpro_queue_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn journal_round_trip() {
+        let dir = tmpdir("rt");
+        let j = Journal::create(&dir, "demo", "abc123").unwrap();
+        j.running("a").unwrap();
+        let mut r = Json::obj();
+        r.set("iteration_us", Json::Num(42.0));
+        j.done("a", "h1", 3.5, r).unwrap();
+        j.running("b").unwrap();
+        j.failed("b", "boom").unwrap();
+        j.running("c").unwrap(); // left running: simulated crash
+
+        let state = Journal::load(&dir, Some("abc123")).unwrap();
+        assert_eq!(state.campaign, "demo");
+        assert_eq!(state.count("done"), 1);
+        assert_eq!(state.count("failed"), 1);
+        assert_eq!(state.count("running"), 1);
+        assert_eq!(state.reruns_after_done, 0);
+        match &state.cells["a"] {
+            CellState::Done { result_hash, wall_ms, result } => {
+                assert_eq!(result_hash, "h1");
+                assert!((wall_ms - 3.5).abs() < 1e-9);
+                assert!((result.f64("iteration_us") - 42.0).abs() < 1e-9);
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tolerates_torn_final_line_only() {
+        let dir = tmpdir("torn");
+        let j = Journal::create(&dir, "demo", "h").unwrap();
+        j.running("a").unwrap();
+        let path = j.path().to_path_buf();
+        drop(j);
+        // simulate a crash mid-append: truncated JSON on the last line
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"cell\":\"b\",\"sta").unwrap();
+        drop(f);
+        let state = Journal::load(&dir, Some("h")).unwrap();
+        assert_eq!(state.count("running"), 1);
+        assert!(!state.cells.contains_key("b"));
+
+        // but corruption in the MIDDLE is an error
+        let text = std::fs::read_to_string(&path).unwrap();
+        let fixed = text.replace("{\"cell\":\"a\"", "{broken \"cell\":\"a\"");
+        std::fs::write(&path, fixed).unwrap();
+        assert!(Journal::load(&dir, Some("h")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_repairs_a_torn_tail_before_appending() {
+        let dir = tmpdir("repair");
+        let j = Journal::create(&dir, "demo", "h").unwrap();
+        j.running("a").unwrap();
+        j.done("a", "h1", 1.0, Json::obj()).unwrap();
+        let path = j.path().to_path_buf();
+        drop(j);
+        // an unparseable fragment is truncated, so the next append
+        // starts a clean line instead of gluing onto the fragment
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"cell\":\"b\",\"sta").unwrap();
+        drop(f);
+        let j = Journal::open(&dir).unwrap();
+        j.running("c").unwrap();
+        drop(j);
+        let state = Journal::load(&dir, Some("h")).unwrap();
+        assert_eq!(state.count("done"), 1);
+        assert_eq!(state.count("running"), 1);
+        assert!(!state.cells.contains_key("b"));
+        // a complete final event that lost only its newline is kept:
+        // truncating it would throw away a real (possibly done) result
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.trim_end_matches('\n')).unwrap();
+        let j = Journal::open(&dir).unwrap();
+        j.running("d").unwrap();
+        drop(j);
+        let state = Journal::load(&dir, Some("h")).unwrap();
+        assert_eq!(state.count("done"), 1, "the done result must survive repair");
+        assert_eq!(state.count("running"), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_hash_mismatch_and_fresh_over_existing() {
+        let dir = tmpdir("hash");
+        let _ = Journal::create(&dir, "demo", "aaaa").unwrap();
+        let err = Journal::load(&dir, Some("bbbb")).unwrap_err();
+        assert!(err.contains("different spec"), "{err}");
+        // create over an existing journal must refuse
+        assert!(Journal::create(&dir, "demo", "aaaa").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rerun_after_done_is_counted() {
+        let dir = tmpdir("rerun");
+        let j = Journal::create(&dir, "demo", "h").unwrap();
+        j.running("a").unwrap();
+        j.done("a", "h1", 1.0, Json::obj()).unwrap();
+        j.running("a").unwrap(); // the bug resume must never introduce
+        drop(j);
+        let state = Journal::load(&dir, Some("h")).unwrap();
+        assert_eq!(state.reruns_after_done, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,651 @@
+//! The parallel campaign executor.
+//!
+//! Cells are dispatched onto the shared [`FixedPool`]; each cell is
+//! executed either in-process (testbed profile → fault injection →
+//! replay → diagnose → optimize, per the spec's settings) or — for
+//! cells a live daemon can answer (analytic, exact-mode, fault-free,
+//! strategy-free) — against a `dpro serve` endpoint through the shared
+//! HTTP client. Every state transition is journaled before/after
+//! execution ([`super::queue`]), the matrix is assembled *only* from
+//! the journal, and per-cell results carry no wall-clock inputs (the
+//! optimizer runs round-bounded, timestamps live outside the hashed
+//! result), so kill-and-resume reproduces an uninterrupted run
+//! bit-for-bit — the property `rust/tests/campaign.rs` pins.
+
+use super::matrix::{Matrix, RESULT_COLUMNS};
+use super::queue::{CellState, Journal, JournalState, JOURNAL_FILE};
+use super::spec::{CampaignSpec, Cell, Source, NONE};
+use crate::baselines;
+use crate::config::{CommScheme, JobSpec};
+use crate::diagnosis::{Diagnoser, DiagnosisReport};
+use crate::fault;
+use crate::graph::build::{build_global_nameless, AnalyticCost};
+use crate::graph::dfg::OpKind;
+use crate::optimizer::{optimize, SearchOpts};
+use crate::profiler;
+use crate::replay::tiered::{ReplayMode, TieredReplayer};
+use crate::replay::Replayer;
+use crate::serve::http::Client;
+use crate::serve::fnv1a;
+use crate::testbed::{run as tb_run, TestbedOpts};
+use crate::trace::validate::TraceReport;
+use crate::util::json::Json;
+use crate::util::pool::FixedPool;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Campaign failure, classified per the repo's exit-code contract.
+#[derive(Debug)]
+pub enum CampaignError {
+    /// Caller error (malformed spec, empty expansion, journal already
+    /// present on a fresh run) — the CLI's exit-2 class.
+    Arg(String),
+    /// Unusable persistent state or environment (unreadable/mismatched
+    /// journal, unresolvable endpoint, unwritable output) — exit 3.
+    Data(String),
+}
+
+impl CampaignError {
+    /// The message, regardless of class.
+    pub fn message(&self) -> &str {
+        match self {
+            CampaignError::Arg(m) | CampaignError::Data(m) => m,
+        }
+    }
+
+    /// The process exit code for this class.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            CampaignError::Arg(_) => 2,
+            CampaignError::Data(_) => 3,
+        }
+    }
+}
+
+/// Fresh run vs. continuation of an existing journal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaunchMode {
+    /// `campaign run`: the output directory must not already hold a
+    /// journal (refuses rather than clobbering history).
+    Fresh,
+    /// `campaign resume`: the journal must exist and match the spec
+    /// hash; `done` cells are never re-executed.
+    Resume,
+}
+
+/// Executor options (CLI flags + the determinism seams tests/benches
+/// use).
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Output directory (journal + matrix + canonical spec copy).
+    pub out_dir: PathBuf,
+    /// Pool width.
+    pub jobs: usize,
+    /// `host:port` of a live `dpro serve` daemon; eligible cells are
+    /// executed remotely, the rest fall back to in-process.
+    pub endpoint: Option<String>,
+    /// On resume, also retry cells that previously `failed`.
+    pub retry_failed: bool,
+    /// Stop dispatching new cells after this many seconds; already
+    /// dispatched cells finish and undispatched ones stay `pending`
+    /// (the matrix says so honestly).
+    pub budget_s: Option<f64>,
+    /// Provenance override for `git describe` (tests pin this so
+    /// matrices compare bit-for-bit across builds).
+    pub git: Option<String>,
+    /// Record this wall time for every cell instead of measuring
+    /// (determinism seam — wall clocks don't reproduce).
+    pub fixed_wall_ms: Option<f64>,
+    /// Crash simulation: once this many cells have completed, stop
+    /// executing — the in-flight cell's `running` line is left dangling
+    /// exactly as a SIGKILL would leave it. Test-only.
+    pub kill_after_done: Option<usize>,
+    /// Suppress per-cell progress lines on stderr.
+    pub quiet: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            out_dir: PathBuf::from("campaign_out"),
+            jobs: 4,
+            endpoint: None,
+            retry_failed: false,
+            budget_s: None,
+            git: None,
+            fixed_wall_ms: None,
+            kill_after_done: None,
+            quiet: false,
+        }
+    }
+}
+
+/// What a campaign invocation did.
+#[derive(Debug)]
+pub struct Outcome {
+    /// Cells in the expanded matrix.
+    pub total: usize,
+    /// Cells executed by *this* invocation.
+    pub executed: usize,
+    /// `done` cells reused from the journal (never re-run).
+    pub reused: usize,
+    /// Final `done` count.
+    pub done: usize,
+    /// Final `failed` count.
+    pub failed: usize,
+    /// Cells still pending (budget-truncated or killed).
+    pub pending: usize,
+    /// True when the crash simulation fired (no matrix is written).
+    pub killed: bool,
+    /// Written matrix paths (`None` when killed).
+    pub csv: Option<PathBuf>,
+    /// JSON matrix path.
+    pub json: Option<PathBuf>,
+}
+
+/// `git describe --always --dirty` of the working tree, or `"unknown"`
+/// outside a git checkout.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Reduce the journal in `out_dir` for `spec` (the `status` command and
+/// the post-run matrix assembly share this path).
+pub fn load_state(spec: &CampaignSpec, out_dir: &Path) -> Result<JournalState, CampaignError> {
+    Journal::load(out_dir, Some(&spec.hash())).map_err(CampaignError::Data)
+}
+
+/// Execute (or continue) a campaign. See [`RunOpts`] for the knobs; the
+/// journal in `opts.out_dir` is the single source of truth and the
+/// matrix is recomputed from it after the pool drains.
+pub fn run(spec: &CampaignSpec, mode: LaunchMode, opts: &RunOpts) -> Result<Outcome, CampaignError> {
+    let cells = spec.expand();
+    if cells.is_empty() {
+        return Err(CampaignError::Arg(
+            "spec expands to zero cells (include/exclude filtered everything out)".into(),
+        ));
+    }
+    if opts.jobs == 0 {
+        return Err(CampaignError::Arg("--jobs must be at least 1".into()));
+    }
+    let spec_hash = spec.hash();
+
+    // a configured endpoint must answer before we touch the journal —
+    // a dead daemon should not leave a fresh header-only journal behind
+    if let Some(addr) = &opts.endpoint {
+        let mut c = Client::new(addr);
+        match c.call("GET", "/healthz", None) {
+            Ok((200, _)) => {}
+            Ok((status, body)) => {
+                return Err(CampaignError::Data(format!(
+                    "endpoint {addr} unhealthy: /healthz returned {status}: {body}"
+                )))
+            }
+            Err(e) => {
+                return Err(CampaignError::Data(format!("unresolvable endpoint {addr}: {e}")))
+            }
+        }
+    }
+
+    // journal: create fresh or open + reduce the existing one
+    let (journal, prior) = match mode {
+        LaunchMode::Fresh => {
+            if opts.out_dir.join(JOURNAL_FILE).exists() {
+                return Err(CampaignError::Arg(format!(
+                    "{} already holds a journal; use `dpro campaign resume` to continue it \
+                     or a fresh --out directory",
+                    opts.out_dir.display()
+                )));
+            }
+            let j = Journal::create(&opts.out_dir, &spec.name, &spec_hash)
+                .map_err(CampaignError::Data)?;
+            (j, JournalState::default())
+        }
+        LaunchMode::Resume => {
+            let state = load_state(spec, &opts.out_dir)?;
+            let j = Journal::open(&opts.out_dir).map_err(CampaignError::Data)?;
+            (j, state)
+        }
+    };
+    // canonical spec copy beside the journal (same bytes every time —
+    // pure provenance, not consulted on resume)
+    let spec_path = opts.out_dir.join("spec.txt");
+    std::fs::write(&spec_path, spec.to_string())
+        .map_err(|e| CampaignError::Data(format!("cannot write {}: {e}", spec_path.display())))?;
+
+    let todo: Vec<Cell> = cells
+        .iter()
+        .filter(|c| match prior.cells.get(&c.id()) {
+            Some(CellState::Done { .. }) => false,
+            Some(CellState::Failed { .. }) => opts.retry_failed,
+            Some(CellState::Running) | None => true,
+        })
+        .cloned()
+        .collect();
+    let reused = cells.len() - todo.len();
+
+    let journal = Arc::new(journal);
+    let sspec = Arc::new(spec.clone());
+    let killed = Arc::new(AtomicBool::new(false));
+    let done_counter = Arc::new(AtomicUsize::new(0));
+    let executed = Arc::new(AtomicUsize::new(0));
+    let io_errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let deadline = opts.budget_s.map(|s| Instant::now() + Duration::from_secs_f64(s.max(0.0)));
+
+    {
+        let pool = FixedPool::new(opts.jobs);
+        for cell in todo {
+            let journal = Arc::clone(&journal);
+            let sspec = Arc::clone(&sspec);
+            let killed = Arc::clone(&killed);
+            let done_counter = Arc::clone(&done_counter);
+            let executed = Arc::clone(&executed);
+            let io_errors = Arc::clone(&io_errors);
+            let endpoint = opts.endpoint.clone();
+            let fixed_wall_ms = opts.fixed_wall_ms;
+            let kill_after_done = opts.kill_after_done;
+            let quiet = opts.quiet;
+            pool.execute(move || {
+                if killed.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        return; // honest `pending` row, not a silent drop
+                    }
+                }
+                let id = cell.id();
+                if let Err(e) = journal.running(&id) {
+                    io_errors.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(e);
+                    return;
+                }
+                // crash simulation: die *between* the running line and
+                // the result, exactly where a SIGKILL hurts most
+                if let Some(k) = kill_after_done {
+                    if done_counter.load(Ordering::SeqCst) >= k {
+                        killed.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+                executed.fetch_add(1, Ordering::SeqCst);
+                let t0 = Instant::now();
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    execute_cell(&sspec, &cell, endpoint.as_deref())
+                }))
+                .unwrap_or_else(|p| {
+                    let what = p
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "panic".into());
+                    Err(format!("panicked: {what}"))
+                });
+                let wall_ms = fixed_wall_ms.unwrap_or_else(|| t0.elapsed().as_secs_f64() * 1e3);
+                let append = match outcome {
+                    Ok(result) => {
+                        let hash = format!("{:016x}", fnv1a(result.to_string().bytes()));
+                        if !quiet {
+                            eprintln!("campaign: done {id} ({:.0} us)", result.f64("iteration_us"));
+                        }
+                        let r = journal.done(&id, &hash, wall_ms, result);
+                        done_counter.fetch_add(1, Ordering::SeqCst);
+                        r
+                    }
+                    Err(reason) => {
+                        if !quiet {
+                            eprintln!("campaign: FAILED {id}: {reason}");
+                        }
+                        journal.failed(&id, &reason)
+                    }
+                };
+                if let Err(e) = append {
+                    io_errors.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(e);
+                }
+            });
+        }
+        // pool Drop joins all workers
+    }
+
+    let io_errors = io_errors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    if let Some(e) = io_errors.first() {
+        return Err(CampaignError::Data(format!("journal write failed: {e}")));
+    }
+    drop(io_errors);
+
+    let state = load_state(spec, &opts.out_dir)?;
+    let was_killed = killed.load(Ordering::SeqCst);
+    let done = state.count("done");
+    let failed = state.count("failed");
+    let mut outcome = Outcome {
+        total: cells.len(),
+        executed: executed.load(Ordering::SeqCst),
+        reused,
+        done,
+        failed,
+        pending: cells.len() - done - failed,
+        killed: was_killed,
+        csv: None,
+        json: None,
+    };
+    if was_killed {
+        // a real crash writes no matrix either; resume will
+        return Ok(outcome);
+    }
+    let git = opts.git.clone().unwrap_or_else(git_describe);
+    let matrix = Matrix::from_state(&state, &cells, &git);
+    let (csv, json) = matrix.write(&opts.out_dir).map_err(CampaignError::Data)?;
+    outcome.csv = Some(csv);
+    outcome.json = Some(json);
+    Ok(outcome)
+}
+
+/// Build the per-cell [`JobSpec`] the way the CLI does: standard spec,
+/// resolved worker count, scheme re-parsed against the resolved cluster
+/// shape, deployed-default plan.
+fn build_job(spec: &CampaignSpec, cell: &Cell) -> Result<JobSpec, String> {
+    if crate::models::by_name(&cell.model, 1).is_none() {
+        return Err(format!("unknown model {:?}", cell.model));
+    }
+    let cluster = crate::config::ClusterSpec::default_16(spec.transport);
+    if CommScheme::parse(&cell.scheme, &cluster).is_none() {
+        return Err(format!("unknown scheme {:?}", cell.scheme));
+    }
+    let mut j = JobSpec::standard(&cell.model, &cell.scheme, spec.transport);
+    j.cluster.n_workers = cell.workers;
+    j.scheme = CommScheme::parse(&cell.scheme, &j.cluster)
+        .ok_or_else(|| format!("scheme {:?} rejects {} workers", cell.scheme, cell.workers))?;
+    Ok(baselines::deployed_default(&j))
+}
+
+/// A result row with every schema column present (inapplicable ones
+/// `null`), so the matrix header never varies with spec contents.
+fn empty_result() -> Json {
+    let mut r = Json::obj();
+    for col in RESULT_COLUMNS {
+        r.set(col, Json::Null);
+    }
+    r
+}
+
+/// Whether a live daemon can execute this cell: the serve API registers
+/// analytic jobs and replays them exactly — faults, testbed traces,
+/// tiered mode and optimizer mutations stay in-process (an `optimize`
+/// over HTTP would mutate a session other clients share).
+fn serve_eligible(spec: &CampaignSpec, cell: &Cell) -> bool {
+    spec.source == Source::Analytic
+        && cell.mode == ReplayMode::Exact
+        && cell.inject == NONE
+        && cell.strategies == NONE
+}
+
+/// Execute one cell, locally or against the endpoint.
+fn execute_cell(spec: &CampaignSpec, cell: &Cell, endpoint: Option<&str>) -> Result<Json, String> {
+    match endpoint {
+        Some(addr) if serve_eligible(spec, cell) => execute_serve(spec, cell, addr),
+        _ => execute_local(spec, cell),
+    }
+}
+
+/// Fold the shared diagnosis columns into `r`.
+fn apply_diagnosis(r: &mut Json, rep: &DiagnosisReport) {
+    r.set("path_comp_us", Json::Num(rep.blame.path.comp_us));
+    r.set("path_comm_us", Json::Num(rep.blame.path.comm_us));
+    if let Some(b) = rep.bottlenecks.first() {
+        r.set("top_bottleneck", Json::Str(format!("{}:{}", b.kind.name(), b.subject)));
+    }
+    // auto_queries()[0] is always the perfect-overlap counterfactual
+    if let Some(w) = rep.whatif.first() {
+        r.set("perfect_overlap_speedup", Json::Num(w.speedup));
+    }
+}
+
+/// In-process execution: the full pipeline the CLI commands compose,
+/// driven by the spec's settings.
+fn execute_local(spec: &CampaignSpec, cell: &Cell) -> Result<Json, String> {
+    let jspec = build_job(spec, cell)?;
+    let mut r = empty_result();
+    r.set("executor", Json::Str("local".into()));
+
+    let mut diagnoser: Option<Diagnoser> = None;
+    match spec.source {
+        Source::Testbed => {
+            let tb = tb_run(
+                &jspec,
+                &TestbedOpts { iterations: spec.iters, seed: spec.seed, stragglers: Vec::new() },
+            );
+            let mut trace = tb.trace;
+            let mut report = TraceReport::default();
+            if cell.inject != NONE {
+                // the spec's `+`-joined scenario is the fault grammar's
+                // comma-joined list
+                let faults = fault::parse_faults(&cell.inject.replace('+', ","))?;
+                fault::apply_all(&faults, &mut trace, &mut report);
+            }
+            let est = profiler::estimate_with_mode(&jspec, &trace, true, cell.mode);
+            r.set("iteration_us", Json::Num(est.iteration_us()));
+            r.set("fw_us", Json::Num(est.fw_us()));
+            r.set("bw_us", Json::Num(est.bw_us()));
+            r.set("est_peak_mem_bytes", Json::Num(est.peak_memory(&jspec)));
+            r.set("ops", Json::Num(est.profiled_ops as f64));
+            let (mode_used, demoted) = match &est.tier {
+                Some(t) => (t.mode_used.clone(), !t.demoted.is_empty()),
+                None => (cell.mode.name().to_string(), false),
+            };
+            r.set("mode_used", Json::Str(mode_used));
+            r.set("demoted", Json::Bool(demoted));
+            r.set("trace_warnings", Json::Num(report.diagnostics.len() as f64));
+            if spec.diagnose {
+                diagnoser = Some(Diagnoser::from_trace(jspec.clone(), &trace, report));
+            }
+        }
+        Source::Analytic => {
+            let g = build_global_nameless(&jspec, &AnalyticCost::new(&jspec));
+            let (iteration, fw, bw, peak, mode_used, demoted) = match cell.mode {
+                ReplayMode::Exact => {
+                    let mut eng = Replayer::new(&g);
+                    let res = eng.replay(&g);
+                    (
+                        res.iteration_time,
+                        res.kind_time(&g, 0, OpKind::Forward),
+                        res.kind_time(&g, 0, OpKind::Backward),
+                        crate::replay::estimate_peak_memory(&jspec, &g, res),
+                        "exact".to_string(),
+                        false,
+                    )
+                }
+                ReplayMode::Tiered => {
+                    let mut eng = TieredReplayer::new(&g, &jspec);
+                    let res = eng.replay(&g);
+                    let iteration = res.iteration_time;
+                    let fw = res.kind_time(&g, 0, OpKind::Forward);
+                    let bw = res.kind_time(&g, 0, OpKind::Backward);
+                    let peak = crate::replay::estimate_peak_memory(&jspec, &g, res);
+                    let rep = eng.report();
+                    (iteration, fw, bw, peak, rep.mode_used.clone(), !rep.demoted.is_empty())
+                }
+            };
+            r.set("iteration_us", Json::Num(iteration));
+            r.set("fw_us", Json::Num(fw));
+            r.set("bw_us", Json::Num(bw));
+            r.set("est_peak_mem_bytes", Json::Num(peak));
+            r.set("ops", Json::Num(g.dfg.len() as f64));
+            r.set("mode_used", Json::Str(mode_used));
+            r.set("demoted", Json::Bool(demoted));
+            if spec.diagnose {
+                diagnoser = Some(Diagnoser::new(jspec.clone()));
+            }
+        }
+    }
+
+    if let Some(mut d) = diagnoser {
+        let queries = d.auto_queries();
+        let rep = d.report(&queries, 3);
+        apply_diagnosis(&mut r, &rep);
+    }
+
+    if cell.strategies != NONE {
+        // round-bounded, never wall-bounded: campaign results must not
+        // depend on machine speed (the resume property compares bytes)
+        let so = SearchOpts {
+            strategies: Some(cell.strategies.replace('+', ",")),
+            max_rounds: spec.rounds,
+            converge_rounds: spec.rounds,
+            budget_wall_s: f64::INFINITY,
+            ..SearchOpts::default()
+        };
+        let out = optimize(&jspec, &so);
+        r.set("opt_us", Json::Num(out.est_iteration_us));
+        r.set("opt_speedup", Json::Num(out.speedup()));
+    }
+    Ok(r)
+}
+
+/// Remote execution against a `dpro serve` daemon, through the shared
+/// [`Client`] JSON helpers.
+fn execute_serve(spec: &CampaignSpec, cell: &Cell, addr: &str) -> Result<Json, String> {
+    let mut c = Client::new(addr);
+    let mut job = Json::obj();
+    job.set("model", Json::Str(cell.model.clone()));
+    job.set("scheme", Json::Str(cell.scheme.clone()));
+    job.set("transport", Json::Str(spec.transport.name().to_lowercase()));
+    job.set("workers", Json::Num(cell.workers as f64));
+    let mut body = Json::obj();
+    body.set("job", job);
+    let reg = c.post_json("/jobs", &body.to_string())?;
+    let id = reg.str("job").to_string();
+
+    let replay = c.get_json(&format!("/jobs/{id}/replay"))?;
+    let mut r = empty_result();
+    r.set("executor", Json::Str("serve".into()));
+    for key in ["iteration_us", "fw_us", "bw_us", "est_peak_mem_bytes", "ops"] {
+        r.set(key, Json::Num(replay.f64(key)));
+    }
+    r.set("mode_used", Json::Str("exact".into()));
+    r.set("demoted", Json::Bool(false));
+
+    if spec.diagnose {
+        let diag = c.get_json(&format!("/jobs/{id}/diagnose"))?;
+        let path = diag
+            .get("blame")
+            .and_then(|b| b.get("path"))
+            .ok_or("diagnose response missing blame.path")?;
+        r.set("path_comp_us", Json::Num(path.f64("comp_us")));
+        r.set("path_comm_us", Json::Num(path.f64("comm_us")));
+        if let Some(b) = diag.get("bottlenecks").and_then(Json::as_arr).and_then(<[Json]>::first) {
+            r.set("top_bottleneck", Json::Str(format!("{}:{}", b.str("kind"), b.str("subject"))));
+        }
+        if let Some(w) = diag.get("whatif").and_then(Json::as_arr).and_then(<[Json]>::first) {
+            r.set("perfect_overlap_speedup", Json::Num(w.f64("speedup")));
+        }
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dpro_run_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_spec() -> CampaignSpec {
+        CampaignSpec::parse(
+            "name = unit\nmodels = resnet50\nschemes = horovod\nworkers = 2\n\
+             source = analytic\nreplay-mode = exact, tiered",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fresh_run_writes_matrix_and_refuses_rerun() {
+        let dir = tmp("fresh");
+        let spec = small_spec();
+        let opts = RunOpts {
+            out_dir: dir.clone(),
+            jobs: 2,
+            git: Some("test".into()),
+            fixed_wall_ms: Some(1.0),
+            quiet: true,
+            ..RunOpts::default()
+        };
+        let out = run(&spec, LaunchMode::Fresh, &opts).unwrap();
+        assert_eq!(out.total, 2);
+        assert_eq!(out.done, 2);
+        assert_eq!(out.failed, 0);
+        assert!(out.csv.as_ref().unwrap().exists());
+        // exact and tiered must agree bit-for-bit (the PR-7 contract)
+        let state = load_state(&spec, &dir).unwrap();
+        let iters: Vec<String> = state
+            .cells
+            .values()
+            .map(|s| match s {
+                CellState::Done { result, .. } => Json::Num(result.f64("iteration_us")).to_string(),
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(iters[0], iters[1]);
+        // a second Fresh run on the same dir is an Arg error
+        match run(&spec, LaunchMode::Fresh, &opts) {
+            Err(CampaignError::Arg(m)) => assert!(m.contains("resume"), "{m}"),
+            other => panic!("expected Arg error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_without_journal_is_data_error() {
+        let dir = tmp("nojournal");
+        let spec = small_spec();
+        let opts = RunOpts { out_dir: dir.clone(), quiet: true, ..RunOpts::default() };
+        match run(&spec, LaunchMode::Resume, &opts) {
+            Err(CampaignError::Data(_)) => {}
+            other => panic!("expected Data error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unresolvable_endpoint_is_data_error() {
+        let dir = tmp("endpoint");
+        let spec = small_spec();
+        let opts = RunOpts {
+            out_dir: dir.clone(),
+            endpoint: Some("127.0.0.1:1".into()),
+            quiet: true,
+            ..RunOpts::default()
+        };
+        match run(&spec, LaunchMode::Fresh, &opts) {
+            Err(CampaignError::Data(m)) => assert!(m.contains("endpoint"), "{m}"),
+            other => panic!("expected Data error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_cells_is_arg_error() {
+        let mut spec = small_spec();
+        spec.include = vec![super::super::spec::Filter {
+            clauses: vec![("workers".into(), "999".into())],
+        }];
+        // hand-built unreachable include (parse would reject it; the
+        // executor must still refuse to run an empty matrix)
+        let opts = RunOpts { out_dir: tmp("zero"), quiet: true, ..RunOpts::default() };
+        match run(&spec, LaunchMode::Fresh, &opts) {
+            Err(CampaignError::Arg(m)) => assert!(m.contains("zero cells"), "{m}"),
+            other => panic!("expected Arg error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,672 @@
+//! The declarative sweep-spec grammar (`dpro campaign --spec <file>`).
+//!
+//! A campaign spec names the axes of a scenario matrix — models ×
+//! schemes × worker counts × strategy sets × fault scenarios × replay
+//! modes — plus a handful of single-valued execution settings, and
+//! expands to the cross product of the axes filtered by `include` /
+//! `exclude` lines. The format is line-based (`key = value[, value]`,
+//! `#` comments), every value is validated against the same registries
+//! the CLI flags use, and — like the fault grammar
+//! ([`crate::fault::Fault`]) — `Display` emits a canonical form whose
+//! re-parse is the identity: `parse(spec.to_string()) == spec`, pinned
+//! by the fuzz tests in `rust/tests/campaign.rs`. See `docs/CAMPAIGN.md`
+//! for the full grammar.
+//!
+//! Axis values that themselves have grammars nest with `+` as the list
+//! separator (the spec file's `,` separates axis values): a strategy
+//! *set* is `op-fuse+tensor-fuse`, a fault *scenario* is
+//! `worker-crash:1@1+nic-degrade:0:2@1`. The literal `none` is the
+//! empty set on both axes.
+
+use crate::config::{ClusterSpec, CommScheme, Transport, ALL_SCHEMES};
+use crate::fault::Fault;
+use crate::optimizer::strategy::{parse_strategies, STRATEGY_NAMES};
+use crate::replay::tiered::ReplayMode;
+use std::fmt::Write as _;
+
+/// The literal meaning "empty set" on the `strategies` / `inject` axes.
+pub const NONE: &str = "none";
+
+/// Where a cell's durations come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// Run the simulated testbed for `iters` iterations (seeded, so
+    /// deterministic), producing a measured trace the fault scenarios
+    /// degrade and the profiler replays — the `profile → replay` path.
+    Testbed,
+    /// Build the graph analytically (no trace): the pre-deployment
+    /// what-if path, and the only practical one at fleet scale.
+    Analytic,
+}
+
+impl Source {
+    /// Parse a spec value.
+    pub fn parse(s: &str) -> Option<Source> {
+        match s {
+            "testbed" => Some(Source::Testbed),
+            "analytic" => Some(Source::Analytic),
+            _ => None,
+        }
+    }
+
+    /// Canonical spec spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Source::Testbed => "testbed",
+            Source::Analytic => "analytic",
+        }
+    }
+}
+
+/// One expanded point of the sweep matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    /// Model template name.
+    pub model: String,
+    /// Canonical scheme name.
+    pub scheme: String,
+    /// Worker count.
+    pub workers: usize,
+    /// Strategy set (`none` or `+`-joined strategy names).
+    pub strategies: String,
+    /// Fault scenario (`none` or `+`-joined fault specs).
+    pub inject: String,
+    /// Requested replay engine.
+    pub mode: ReplayMode,
+}
+
+impl Cell {
+    /// The cell's identity — journal key and matrix row id. Axis values
+    /// contain no `/`, so the id splits back unambiguously.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/w{}/{}/{}/{}",
+            self.model,
+            self.scheme,
+            self.workers,
+            self.strategies,
+            self.inject,
+            self.mode.name()
+        )
+    }
+
+    /// The canonical value of one filterable axis (filter matching).
+    fn axis(&self, key: &str) -> String {
+        match key {
+            "model" => self.model.clone(),
+            "scheme" => self.scheme.clone(),
+            "workers" => self.workers.to_string(),
+            "strategies" => self.strategies.clone(),
+            "inject" => self.inject.clone(),
+            "replay-mode" => self.mode.name().to_string(),
+            other => unreachable!("unvalidated filter key {other}"),
+        }
+    }
+}
+
+/// A conjunction of `axis=value` clauses (one `include`/`exclude` line).
+/// A cell matches when **every** clause holds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Filter {
+    /// `(axis key, canonical value)` pairs, in spec order.
+    pub clauses: Vec<(String, String)>,
+}
+
+impl Filter {
+    /// Whether `cell` satisfies every clause.
+    pub fn matches(&self, cell: &Cell) -> bool {
+        self.clauses.iter().all(|(k, v)| cell.axis(k) == *v)
+    }
+}
+
+impl std::fmt::Display for Filter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, (k, v)) in self.clauses.iter().enumerate() {
+            if i > 0 {
+                write!(f, " & ")?;
+            }
+            write!(f, "{k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A parsed, validated campaign spec. Construct via [`CampaignSpec::parse`]
+/// (or field-by-field from code, as the ported benches do); `Display`
+/// emits the canonical file form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignSpec {
+    /// Campaign name (journal/matrix identity, not a cell axis).
+    pub name: String,
+    /// Model axis.
+    pub models: Vec<String>,
+    /// Scheme axis (canonical [`ALL_SCHEMES`] names).
+    pub schemes: Vec<String>,
+    /// Worker-count axis.
+    pub workers: Vec<usize>,
+    /// Strategy-set axis (`none` or `+`-joined names).
+    pub strategies: Vec<String>,
+    /// Fault-scenario axis (`none` or `+`-joined fault specs).
+    pub inject: Vec<String>,
+    /// Replay-mode axis.
+    pub modes: Vec<ReplayMode>,
+    /// Network transport (setting, not an axis).
+    pub transport: Transport,
+    /// Duration source (setting).
+    pub source: Source,
+    /// Run the diagnosis battery per cell (setting).
+    pub diagnose: bool,
+    /// Testbed iterations per cell (setting).
+    pub iters: usize,
+    /// Testbed seed (setting) — same seed, same trace, same bytes.
+    pub seed: u64,
+    /// Optimizer round cap for strategy cells (setting). Campaign cells
+    /// are round-bounded, never wall-bounded, so results are
+    /// reproducible.
+    pub rounds: usize,
+    /// When non-empty, a cell must match at least one of these.
+    pub include: Vec<Filter>,
+    /// A cell matching any of these is dropped (after `include`).
+    pub exclude: Vec<Filter>,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        CampaignSpec {
+            name: "campaign".into(),
+            models: vec!["resnet50".into()],
+            schemes: vec!["horovod".into()],
+            workers: vec![4],
+            strategies: vec![NONE.into()],
+            inject: vec![NONE.into()],
+            modes: vec![ReplayMode::Exact],
+            transport: Transport::Rdma,
+            source: Source::Testbed,
+            diagnose: false,
+            iters: 5,
+            seed: 1,
+            rounds: 2,
+            include: Vec::new(),
+            exclude: Vec::new(),
+        }
+    }
+}
+
+/// The axis keys filters may reference, in canonical order.
+pub const FILTER_KEYS: [&str; 6] =
+    ["model", "scheme", "workers", "strategies", "inject", "replay-mode"];
+
+fn bad(why: impl std::fmt::Display) -> String {
+    format!("invalid campaign spec: {why}; see docs/CAMPAIGN.md for the grammar")
+}
+
+/// Split an axis value list on `,`, trimming and rejecting empties and
+/// duplicates (duplicates would silently skew the cross product — and
+/// break the canonical round-trip).
+fn split_values(key: &str, raw: &str) -> Result<Vec<String>, String> {
+    let mut out: Vec<String> = Vec::new();
+    for part in raw.split(',') {
+        let v = part.trim();
+        if v.is_empty() {
+            return Err(bad(format!("empty value in '{key}' list")));
+        }
+        if out.iter().any(|p| p == v) {
+            return Err(bad(format!("duplicate '{key}' value {v:?}")));
+        }
+        out.push(v.to_string());
+    }
+    Ok(out)
+}
+
+/// Canonicalize one strategy-set value (`none` or `a+b+...`).
+fn canon_strategies(v: &str) -> Result<String, String> {
+    if v == NONE {
+        return Ok(NONE.into());
+    }
+    let parts: Vec<&str> = v.split('+').map(str::trim).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(bad(format!("empty strategy name in set {v:?}")));
+    }
+    // reuse the CLI's validator so the error lists the registry
+    parse_strategies(&parts.join(","))
+        .map_err(|e| bad(format!("strategy set {v:?}: {e}")))?;
+    Ok(parts.join("+"))
+}
+
+/// Canonicalize one fault-scenario value (`none` or `f1+f2+...`).
+fn canon_inject(v: &str) -> Result<String, String> {
+    if v == NONE {
+        return Ok(NONE.into());
+    }
+    let mut canon = Vec::new();
+    for part in v.split('+') {
+        let f = Fault::parse(part).map_err(|e| bad(format!("scenario {v:?}: {e}")))?;
+        canon.push(f.to_string());
+    }
+    Ok(canon.join("+"))
+}
+
+impl CampaignSpec {
+    /// Parse a spec file's text. Order-independent (all lines are
+    /// collected, then the spec is built key by key so e.g. `transport`
+    /// applies to scheme validation regardless of line order); every
+    /// error is the CLI's exit-2 argument class.
+    pub fn parse(text: &str) -> Result<CampaignSpec, String> {
+        let mut spec = CampaignSpec::default();
+        let mut seen: Vec<String> = Vec::new();
+        let mut kv: Vec<(String, String)> = Vec::new();
+        let mut includes: Vec<String> = Vec::new();
+        let mut excludes: Vec<String> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| bad(format!("line {}: expected 'key = value'", lineno + 1)))?;
+            let (key, value) = (key.trim().to_string(), value.trim().to_string());
+            if value.is_empty() {
+                return Err(bad(format!("line {}: empty value for '{key}'", lineno + 1)));
+            }
+            match key.as_str() {
+                "include" => includes.push(value),
+                "exclude" => excludes.push(value),
+                _ => {
+                    if seen.contains(&key) {
+                        return Err(bad(format!("duplicate key '{key}'")));
+                    }
+                    seen.push(key.clone());
+                    kv.push((key, value));
+                }
+            }
+        }
+        let get = |k: &str| kv.iter().find(|(key, _)| key == k).map(|(_, v)| v.as_str());
+
+        // settings first: transport gates scheme validation
+        if let Some(v) = get("name") {
+            if v.contains('/') || v.contains(char::is_whitespace) {
+                return Err(bad(format!("name {v:?} must be a single token without '/'")));
+            }
+            spec.name = v.to_string();
+        }
+        if let Some(v) = get("transport") {
+            spec.transport = match v {
+                "rdma" => Transport::Rdma,
+                "tcp" => Transport::Tcp,
+                _ => return Err(bad(format!("unknown transport {v:?}; valid: rdma, tcp"))),
+            };
+        }
+        if let Some(v) = get("source") {
+            spec.source = Source::parse(v)
+                .ok_or_else(|| bad(format!("unknown source {v:?}; valid: testbed, analytic")))?;
+        }
+        if let Some(v) = get("diagnose") {
+            spec.diagnose = match v {
+                "on" => true,
+                "off" => false,
+                _ => return Err(bad(format!("diagnose must be on|off, got {v:?}"))),
+            };
+        }
+        for (key, slot, min) in [
+            ("iters", &mut spec.iters as &mut usize, 1usize),
+            ("rounds", &mut spec.rounds, 1),
+        ] {
+            if let Some(v) = get(key) {
+                *slot = match v.parse::<usize>() {
+                    Ok(n) if n >= min => n,
+                    _ => return Err(bad(format!("{key} must be a positive integer, got {v:?}"))),
+                };
+            }
+        }
+        if let Some(v) = get("seed") {
+            spec.seed = v
+                .parse::<u64>()
+                .map_err(|_| bad(format!("seed must be a non-negative integer, got {v:?}")))?;
+        }
+
+        // axes
+        if let Some(v) = get("models") {
+            spec.models = split_values("models", v)?;
+            for m in &spec.models {
+                if crate::models::by_name(m, 1).is_none() {
+                    return Err(bad(format!(
+                        "unknown model {m:?}; valid: resnet50, vgg16, inception_v3, \
+                         bert_base, gpt_mini"
+                    )));
+                }
+            }
+        }
+        if let Some(v) = get("schemes") {
+            let cluster = ClusterSpec::default_16(spec.transport);
+            let mut canon = Vec::new();
+            for s in split_values("schemes", v)? {
+                let parsed = CommScheme::parse(&s, &cluster).ok_or_else(|| {
+                    bad(format!("unknown scheme {s:?}; valid: {}", ALL_SCHEMES.join(", ")))
+                })?;
+                let name = parsed.cli_name().to_string();
+                if canon.contains(&name) {
+                    return Err(bad(format!("duplicate 'schemes' value {name:?}")));
+                }
+                canon.push(name);
+            }
+            spec.schemes = canon;
+        }
+        if let Some(v) = get("workers") {
+            let mut ws = Vec::new();
+            for w in split_values("workers", v)? {
+                match w.parse::<usize>() {
+                    Ok(n) if n >= 1 => ws.push(n),
+                    _ => return Err(bad(format!("workers value {w:?} must be a positive integer"))),
+                }
+            }
+            spec.workers = ws;
+        }
+        if let Some(v) = get("strategies") {
+            let mut canon = Vec::new();
+            for s in split_values("strategies", v)? {
+                let c = canon_strategies(&s)?;
+                if canon.contains(&c) {
+                    return Err(bad(format!("duplicate 'strategies' value {c:?}")));
+                }
+                canon.push(c);
+            }
+            spec.strategies = canon;
+        }
+        if let Some(v) = get("inject") {
+            let mut canon = Vec::new();
+            for s in split_values("inject", v)? {
+                let c = canon_inject(&s)?;
+                if canon.contains(&c) {
+                    return Err(bad(format!("duplicate 'inject' value {c:?}")));
+                }
+                canon.push(c);
+            }
+            spec.inject = canon;
+        }
+        if let Some(v) = get("replay-mode") {
+            let mut modes = Vec::new();
+            for m in split_values("replay-mode", v)? {
+                let mode = ReplayMode::parse(&m)
+                    .ok_or_else(|| bad(format!("unknown replay-mode {m:?}; valid: exact, tiered")))?;
+                if modes.contains(&mode) {
+                    return Err(bad(format!("duplicate 'replay-mode' value {m:?}")));
+                }
+                modes.push(mode);
+            }
+            spec.modes = modes;
+        }
+
+        // unknown keys: rejected, never silently ignored (a typoed axis
+        // would otherwise run the default axis without warning)
+        for (key, _) in &kv {
+            if !matches!(
+                key.as_str(),
+                "name" | "models" | "schemes" | "workers" | "strategies" | "inject"
+                    | "replay-mode" | "transport" | "source" | "diagnose" | "iters" | "seed"
+                    | "rounds"
+            ) {
+                return Err(bad(format!("unknown key '{key}'")));
+            }
+        }
+
+        for text in includes {
+            spec.include.push(spec.parse_filter(&text)?);
+        }
+        for text in excludes {
+            spec.exclude.push(spec.parse_filter(&text)?);
+        }
+
+        // faults degrade a measured trace; the analytic path has none
+        if spec.source == Source::Analytic && spec.inject.iter().any(|s| s != NONE) {
+            return Err(bad(
+                "inject scenarios need 'source = testbed' (faults degrade a measured trace)",
+            ));
+        }
+        Ok(spec)
+    }
+
+    /// Parse one `include`/`exclude` value: `axis=value [& axis=value]*`.
+    /// Clause values are canonicalized and must be members of the
+    /// matching axis — a filter that could never match anything is a
+    /// typo, not a no-op.
+    fn parse_filter(&self, text: &str) -> Result<Filter, String> {
+        let mut clauses = Vec::new();
+        for clause in text.split('&') {
+            let (k, v) = clause
+                .split_once('=')
+                .ok_or_else(|| bad(format!("filter clause {:?} must be axis=value", clause.trim())))?;
+            let (k, v) = (k.trim(), v.trim());
+            if !FILTER_KEYS.contains(&k) {
+                return Err(bad(format!(
+                    "unknown filter axis {k:?}; valid: {}",
+                    FILTER_KEYS.join(", ")
+                )));
+            }
+            let canon = match k {
+                "strategies" => canon_strategies(v)?,
+                "inject" => canon_inject(v)?,
+                _ => v.to_string(),
+            };
+            let member = match k {
+                "model" => self.models.contains(&canon),
+                "scheme" => self.schemes.contains(&canon),
+                "workers" => self.workers.iter().any(|w| w.to_string() == canon),
+                "strategies" => self.strategies.contains(&canon),
+                "inject" => self.inject.contains(&canon),
+                "replay-mode" => self.modes.iter().any(|m| m.name() == canon),
+                _ => unreachable!(),
+            };
+            if !member {
+                return Err(bad(format!(
+                    "filter value {canon:?} is not on the '{k}' axis"
+                )));
+            }
+            clauses.push((k.to_string(), canon));
+        }
+        Ok(Filter { clauses })
+    }
+
+    /// Load and parse a spec file.
+    pub fn load(path: &std::path::Path) -> Result<CampaignSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read spec {}: {e}", path.display()))?;
+        CampaignSpec::parse(&text)
+    }
+
+    /// Expand the cross product of the axes, in canonical nesting order
+    /// (model outermost, replay-mode innermost), then apply `include`
+    /// (keep cells matching at least one, when any are given) and
+    /// `exclude` (drop cells matching any). The order is deterministic:
+    /// the same spec always yields the same cell list.
+    pub fn expand(&self) -> Vec<Cell> {
+        let mut cells = Vec::new();
+        for model in &self.models {
+            for scheme in &self.schemes {
+                for &workers in &self.workers {
+                    for strategies in &self.strategies {
+                        for inject in &self.inject {
+                            for &mode in &self.modes {
+                                let cell = Cell {
+                                    model: model.clone(),
+                                    scheme: scheme.clone(),
+                                    workers,
+                                    strategies: strategies.clone(),
+                                    inject: inject.clone(),
+                                    mode,
+                                };
+                                let kept = (self.include.is_empty()
+                                    || self.include.iter().any(|f| f.matches(&cell)))
+                                    && !self.exclude.iter().any(|f| f.matches(&cell));
+                                if kept {
+                                    cells.push(cell);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// The unfiltered algebraic product of the axis lengths.
+    pub fn product(&self) -> usize {
+        self.models.len()
+            * self.schemes.len()
+            * self.workers.len()
+            * self.strategies.len()
+            * self.inject.len()
+            * self.modes.len()
+    }
+
+    /// FNV-1a over the canonical form, as fixed-width hex — the
+    /// provenance column and the journal's spec identity.
+    pub fn hash(&self) -> String {
+        format!("{:016x}", crate::serve::fnv1a(self.to_string().bytes()))
+    }
+}
+
+impl std::fmt::Display for CampaignSpec {
+    /// Canonical spec form: every key explicit, fixed order, `, ` value
+    /// separators — the round-trip anchor (`parse(to_string()) == self`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        let _ = writeln!(out, "name = {}", self.name);
+        let _ = writeln!(out, "models = {}", self.models.join(", "));
+        let _ = writeln!(out, "schemes = {}", self.schemes.join(", "));
+        let _ = writeln!(
+            out,
+            "workers = {}",
+            self.workers.iter().map(usize::to_string).collect::<Vec<_>>().join(", ")
+        );
+        let _ = writeln!(out, "strategies = {}", self.strategies.join(", "));
+        let _ = writeln!(out, "inject = {}", self.inject.join(", "));
+        let _ = writeln!(
+            out,
+            "replay-mode = {}",
+            self.modes.iter().map(|m| m.name().to_string()).collect::<Vec<_>>().join(", ")
+        );
+        let _ = writeln!(out, "transport = {}", self.transport.name().to_lowercase());
+        let _ = writeln!(out, "source = {}", self.source.name());
+        let _ = writeln!(out, "diagnose = {}", if self.diagnose { "on" } else { "off" });
+        let _ = writeln!(out, "iters = {}", self.iters);
+        let _ = writeln!(out, "seed = {}", self.seed);
+        let _ = writeln!(out, "rounds = {}", self.rounds);
+        for inc in &self.include {
+            let _ = writeln!(out, "include = {inc}");
+        }
+        for exc in &self.exclude {
+            let _ = writeln!(out, "exclude = {exc}");
+        }
+        f.write_str(&out)
+    }
+}
+
+/// The strategy names a spec may reference (re-exported for docs/tests).
+pub fn strategy_names() -> &'static [&'static str] {
+    &STRATEGY_NAMES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = "
+        # a comment
+        name = demo
+        models = resnet50, vgg16
+        schemes = horovod, byteps
+        workers = 4, 8
+        strategies = none, op-fuse+tensor-fuse
+        inject = none, worker-crash:1@1
+        replay-mode = exact, tiered
+        transport = rdma
+        source = testbed
+        diagnose = on
+        iters = 3
+        seed = 7
+        rounds = 2
+        exclude = scheme=byteps & workers=8
+    ";
+
+    #[test]
+    fn parse_and_canonical_round_trip() {
+        let spec = CampaignSpec::parse(FULL).unwrap();
+        assert_eq!(spec.models, vec!["resnet50", "vgg16"]);
+        assert_eq!(spec.product(), 2 * 2 * 2 * 2 * 2 * 2);
+        let canon = spec.to_string();
+        let again = CampaignSpec::parse(&canon).unwrap();
+        assert_eq!(again, spec, "canonical form must re-parse to the same spec");
+        assert_eq!(again.to_string(), canon, "display must be a fixed point");
+        assert_eq!(again.hash(), spec.hash());
+    }
+
+    #[test]
+    fn expansion_applies_filters() {
+        let spec = CampaignSpec::parse(FULL).unwrap();
+        let cells = spec.expand();
+        // 64 combos minus byteps&8 (2 models × 2 strategies × 2 inject × 2 modes = 16)
+        assert_eq!(cells.len(), 64 - 16);
+        assert!(cells.iter().all(|c| !(c.scheme == "byteps" && c.workers == 8)));
+        // deterministic order: same spec, same list
+        assert_eq!(spec.expand(), cells);
+    }
+
+    #[test]
+    fn include_keeps_only_matches() {
+        let mut spec = CampaignSpec::parse(FULL).unwrap();
+        spec.exclude.clear();
+        spec.include = vec![spec.parse_filter("model=vgg16").unwrap()];
+        assert!(spec.expand().iter().all(|c| c.model == "vgg16"));
+        assert_eq!(spec.expand().len(), 32);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for (text, needle) in [
+            ("models = warp9", "unknown model"),
+            ("schemes = smoke-signals", "unknown scheme"),
+            ("workers = 0", "positive integer"),
+            ("strategies = op-fuse+warp", "strategy set"),
+            ("inject = gpu-melt:1@1", "scenario"),
+            ("replay-mode = psychic", "unknown replay-mode"),
+            ("bogus-key = 1", "unknown key"),
+            ("models = resnet50, resnet50", "duplicate"),
+            ("models = resnet50\nmodels = vgg16", "duplicate key"),
+            ("exclude = color=red", "unknown filter axis"),
+            ("exclude = model=vgg16", "not on the 'model' axis"),
+            ("workers", "expected 'key = value'"),
+            ("source = analytic\ninject = worker-crash:1@1", "source = testbed"),
+        ] {
+            let err = CampaignSpec::parse(text).unwrap_err();
+            assert!(err.contains(needle), "{text:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn scheme_aliases_canonicalize() {
+        let a = CampaignSpec::parse("schemes = horovod").unwrap();
+        let canon = a.schemes.clone();
+        // whatever alias map CommScheme supports, the canonical name is stable
+        assert_eq!(canon, vec!["horovod"]);
+    }
+
+    #[test]
+    fn cell_ids_are_stable_and_unique() {
+        let spec = CampaignSpec::parse(FULL).unwrap();
+        let cells = spec.expand();
+        let mut ids: Vec<String> = cells.iter().map(Cell::id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), cells.len(), "cell ids must be unique");
+    }
+
+    #[test]
+    fn empty_text_is_the_default_spec() {
+        let spec = CampaignSpec::parse("").unwrap();
+        assert_eq!(spec, CampaignSpec::default());
+        // and the default round-trips too
+        assert_eq!(CampaignSpec::parse(&spec.to_string()).unwrap(), spec);
+    }
+}

@@ -98,6 +98,7 @@ pub fn run(args: Args) -> i32 {
         Some("train") => cmd_train(&args),
         Some("report") => cmd_report(&args),
         Some("serve") => cmd_serve(&args),
+        Some("campaign") => cmd_campaign(&args),
         Some(other) => {
             eprintln!("unknown command {other:?}");
             usage();
@@ -127,14 +128,19 @@ fn usage() {
          [--dump-dir DIR]\n  \
          report   --model M [--scheme S] [--transport T] [--json]\n  \
          serve    [--addr 127.0.0.1:7077] [--cache-bytes 1G] [--threads 8]\n           \
-         [--batch-window-ms 2] [--top 5] [--trace-dir DIR[,DIR]]\n\n\
+         [--batch-window-ms 2] [--top 5] [--trace-dir DIR[,DIR]]\n  \
+         campaign run|resume|status --spec FILE [--out campaign_out] [--jobs 4]\n           \
+         [--endpoint HOST:PORT] [--budget-s S] [--retry-failed] [--quiet] [--json]\n\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
          schemes: {}   transports: rdma tcp\n\
          faults (--inject, docs/FAULTS.md): {}\n\n\
          trace directories follow docs/TRACE_FORMAT.md; `replay --trace-dir`\n\
          reads the job from the dump's metadata.json (explicit flags win).\n\
-         exit codes for replay/align/diagnose: 0 ok (even with warnings),\n\
-         2 bad arguments, 3 unusable trace",
+         exit codes for replay/align/diagnose/campaign: 0 ok (even with\n\
+         warnings), 2 bad arguments, 3 unusable trace/journal/endpoint.\n\
+         campaign sweeps are declarative spec files (docs/CAMPAIGN.md) run\n\
+         on a resumable crash-safe journal; `campaign resume` never\n\
+         re-executes a done cell",
         crate::version(),
         strategy::STRATEGY_NAMES.join(","),
         ALL_SCHEMES.join(" "),
@@ -837,6 +843,146 @@ fn cmd_serve(args: &Args) -> i32 {
                 ServeError::UnusableTrace(_) => 3,
                 _ => 2,
             }
+        }
+    }
+}
+
+fn cmd_campaign(args: &Args) -> i32 {
+    use crate::campaign::{run as campaign, CampaignSpec, LaunchMode, RunOpts};
+    use std::net::ToSocketAddrs;
+    use std::path::PathBuf;
+
+    let action = match args.positional.get(1).map(String::as_str) {
+        Some(a @ ("run" | "resume" | "status")) => a,
+        Some(other) => {
+            eprintln!("unknown campaign action {other:?}; valid actions: run, resume, status");
+            return 2;
+        }
+        None => {
+            eprintln!(
+                "usage: dpro campaign run|resume|status --spec FILE [--out DIR] [--jobs N] \
+                 [--endpoint HOST:PORT] [--budget-s S] [--retry-failed] [--quiet] [--json]"
+            );
+            return 2;
+        }
+    };
+    let Some(spec_path) = args.get("spec") else {
+        eprintln!("campaign: --spec FILE is required (grammar: docs/CAMPAIGN.md)");
+        return 2;
+    };
+    // the spec is an argument: unreadable or malformed is the exit-2
+    // class, same as a bad --inject string
+    let spec = match CampaignSpec::load(Path::new(spec_path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("campaign: {e}");
+            return 2;
+        }
+    };
+
+    let mut opts = RunOpts {
+        out_dir: PathBuf::from(args.get_or("out", "campaign_out")),
+        retry_failed: args.flag("retry-failed"),
+        quiet: args.flag("quiet"),
+        ..RunOpts::default()
+    };
+    if let Some(v) = args.get("jobs") {
+        match v.parse::<usize>() {
+            Ok(n) if n >= 1 => opts.jobs = n,
+            _ => {
+                eprintln!("invalid --jobs {v:?}: expected a positive integer");
+                return 2;
+            }
+        }
+    }
+    if let Some(addr) = args.get("endpoint") {
+        // syntax (exit 2) is checked here; reachability (exit 3) by run()
+        if addr.to_socket_addrs().map(|mut a| a.next()).ok().flatten().is_none() {
+            eprintln!("invalid --endpoint {addr:?}: expected host:port (e.g. 127.0.0.1:7077)");
+            return 2;
+        }
+        opts.endpoint = Some(addr.to_string());
+    }
+    if let Some(v) = args.get("budget-s") {
+        match v.parse::<f64>() {
+            Ok(s) if s > 0.0 && s.is_finite() => opts.budget_s = Some(s),
+            _ => {
+                eprintln!("invalid --budget-s {v:?}: expected a positive number of seconds");
+                return 2;
+            }
+        }
+    }
+
+    if action == "status" {
+        let state = match campaign::load_state(&spec, &opts.out_dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("campaign: {}", e.message());
+                return e.exit_code();
+            }
+        };
+        let cells = spec.expand();
+        let done = state.count("done");
+        let failed = state.count("failed");
+        let running = state.count("running");
+        let pending = cells.len().saturating_sub(done + failed + running);
+        if args.flag("json") {
+            let mut j = Json::obj();
+            j.set("campaign", Json::Str(state.campaign.clone()));
+            j.set("spec_hash", Json::Str(state.spec_hash.clone()));
+            j.set("total", Json::Num(cells.len() as f64));
+            j.set("done", Json::Num(done as f64));
+            j.set("failed", Json::Num(failed as f64));
+            j.set("running", Json::Num(running as f64));
+            j.set("pending", Json::Num(pending as f64));
+            let rows: Vec<Json> = cells
+                .iter()
+                .map(|c| {
+                    let id = c.id();
+                    let status = match state.cells.get(&id) {
+                        Some(crate::campaign::CellState::Done { .. }) => "done",
+                        Some(crate::campaign::CellState::Failed { .. }) => "failed",
+                        Some(crate::campaign::CellState::Running) => "running",
+                        None => "pending",
+                    };
+                    let mut row = Json::obj();
+                    row.set("cell", Json::Str(id));
+                    row.set("status", Json::Str(status.to_string()));
+                    row
+                })
+                .collect();
+            j.set("cells", Json::Arr(rows));
+            println!("{}", j.to_string_pretty());
+        } else {
+            println!(
+                "campaign {} (spec {}): {} cells — {done} done, {failed} failed, \
+                 {running} running, {pending} pending",
+                state.campaign,
+                state.spec_hash,
+                cells.len(),
+            );
+        }
+        return 0;
+    }
+
+    let mode = if action == "run" { LaunchMode::Fresh } else { LaunchMode::Resume };
+    match campaign::run(&spec, mode, &opts) {
+        Ok(out) => {
+            println!(
+                "campaign {}: {} cells — {} done ({} executed now, {} reused), {} failed, \
+                 {} pending",
+                spec.name, out.total, out.done, out.executed, out.reused, out.failed, out.pending,
+            );
+            if let (Some(csv), Some(json)) = (&out.csv, &out.json) {
+                println!("matrix: {} + {}", csv.display(), json.display());
+            }
+            // failed cells: the sweep completed but not cleanly — exit 1,
+            // distinct from the argument (2) and data (3) classes
+            i32::from(out.failed > 0)
+        }
+        Err(e) => {
+            eprintln!("campaign: {}", e.message());
+            e.exit_code()
         }
     }
 }

@@ -22,6 +22,11 @@
 //!   built graphs resident in a byte-accounted LRU session cache and
 //!   serving concurrent replay / diagnose / what-if queries with
 //!   snapshot isolation (single-writer `optimize`, coalesced what-ifs).
+//! - **Campaigns** ([`campaign`]): declarative scenario sweeps (models ×
+//!   schemes × workers × strategies × faults × replay modes) on a
+//!   persistent resumable work queue, emitting one provenance-stamped
+//!   CSV/JSON results matrix — `dpro campaign`, the engine behind the
+//!   paper-figure benches.
 //!
 //! The live end-to-end path ([`runtime`] + [`coordinator`]) executes a JAX
 //! (+Pallas) transformer AOT-compiled to HLO through PJRT, with Python
@@ -36,6 +41,7 @@
 
 pub mod alignment;
 pub mod baselines;
+pub mod campaign;
 pub mod cli;
 /// Live data-parallel training coordinator. Requires the `pjrt` feature
 /// (and an environment providing the `xla`/`anyhow`/`log` crates); the

@@ -215,4 +215,31 @@ impl Client {
         let body = String::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
         Ok((status, body))
     }
+
+    /// GET `path`, expect 200, parse the JSON body. Non-200 statuses and
+    /// unparsable bodies are errors carrying the status + payload — the
+    /// one helper the load generator, the campaign executor and the
+    /// tests all share instead of each re-wrapping [`Client::call`].
+    pub fn get_json(&mut self, path: &str) -> Result<crate::util::json::Json, String> {
+        self.expect_json("GET", path, None)
+    }
+
+    /// POST `body` to `path`, expect 200, parse the JSON response.
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<crate::util::json::Json, String> {
+        self.expect_json("POST", path, Some(body))
+    }
+
+    fn expect_json(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<crate::util::json::Json, String> {
+        match self.call(method, path, body) {
+            Ok((200, resp)) => crate::util::json::parse(&resp)
+                .map_err(|e| format!("{method} {path}: bad JSON response: {e}")),
+            Ok((status, resp)) => Err(format!("{method} {path}: status {status}: {resp}")),
+            Err(e) => Err(format!("{method} {path}: {e}")),
+        }
+    }
 }

@@ -1,0 +1,446 @@
+//! Campaign engine contract tests (ISSUE 9).
+//!
+//! The headline property: a campaign killed mid-sweep at a seeded
+//! random cell and then resumed produces a results matrix **bit-for-bit
+//! identical** to an uninterrupted run, with **zero** re-executed
+//! `done` cells (counted via the journal, not trusted from the
+//! executor). Around it: seeded Display↔parse round-trip fuzz for the
+//! sweep-spec grammar, truncation/bit-flip robustness (malformed specs
+//! are clean errors, never panics), algebraic expansion counts, journal
+//! torn-tail tolerance, and the CLI exit-code battery for
+//! `dpro campaign`.
+
+use dpro::campaign::queue::Journal;
+use dpro::campaign::run::load_state;
+use dpro::campaign::spec::NONE;
+use dpro::campaign::{run, CampaignError, CampaignSpec, Filter, LaunchMode, RunOpts, Source};
+use dpro::cli;
+use dpro::replay::tiered::ReplayMode;
+use dpro::util::rng::Pcg;
+use dpro::util::Args;
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpro_campaign_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic executor options: serial pool (a reproducible crash
+/// point), pinned wall time and git describe (the two nondeterministic
+/// provenance inputs).
+fn det_opts(dir: &std::path::Path) -> RunOpts {
+    RunOpts {
+        out_dir: dir.to_path_buf(),
+        jobs: 1,
+        git: Some("testbuild".into()),
+        fixed_wall_ms: Some(1.0),
+        quiet: true,
+        ..RunOpts::default()
+    }
+}
+
+/// 8 analytic cells: 2 models × 2 worker counts × 2 replay modes.
+const RESUME_SPEC: &str = "name = resume-prop\n\
+     models = resnet50, vgg16\n\
+     schemes = horovod\n\
+     workers = 2, 4\n\
+     source = analytic\n\
+     replay-mode = exact, tiered\n";
+
+// ---------------------------------------------------------------------
+// The resumability property (satellite 2 / acceptance criterion)
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_and_resume_reproduces_uninterrupted_matrix_bit_for_bit() {
+    let spec = CampaignSpec::parse(RESUME_SPEC).unwrap();
+    let n = spec.expand().len();
+    assert_eq!(n, 8);
+    // seeded random kill point, guaranteed to leave both completed and
+    // unfinished cells behind
+    let k = Pcg::seeded(0xD15E_A5E0).below(n - 1) + 1;
+
+    // interrupted run: dies between cell k's `running` line and its
+    // result, exactly like a SIGKILL
+    let dir_a = tmp("resume_a");
+    let mut kill_opts = det_opts(&dir_a);
+    kill_opts.kill_after_done = Some(k);
+    let out_a = run(&spec, LaunchMode::Fresh, &kill_opts).unwrap();
+    assert!(out_a.killed, "crash simulation must fire");
+    assert_eq!(out_a.done, k);
+    assert_eq!(out_a.executed, k, "the in-flight cell must not count as executed");
+    assert!(!dir_a.join("matrix.csv").exists(), "a killed run writes no matrix");
+    assert!(!dir_a.join("matrix.json").exists());
+
+    // resume: finishes the sweep off the journal
+    let out_r = run(&spec, LaunchMode::Resume, &det_opts(&dir_a)).unwrap();
+    assert!(!out_r.killed);
+    assert_eq!(out_r.done, n);
+    assert_eq!(out_r.failed, 0);
+    assert_eq!(out_r.reused, k, "every done cell must be reused, not re-run");
+    assert_eq!(out_r.executed, n - k, "resume executes exactly the unfinished cells");
+
+    // uninterrupted reference run
+    let dir_b = tmp("resume_b");
+    let out_b = run(&spec, LaunchMode::Fresh, &det_opts(&dir_b)).unwrap();
+    assert_eq!(out_b.done, n);
+
+    // bit-for-bit identical matrices
+    for file in ["matrix.csv", "matrix.json"] {
+        let a = std::fs::read(dir_a.join(file)).unwrap();
+        let b = std::fs::read(dir_b.join(file)).unwrap();
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "{file} must be byte-identical across kill+resume vs uninterrupted");
+    }
+
+    // zero re-executed done cells, counted from the journal itself
+    let state = load_state(&spec, &dir_a).unwrap();
+    assert_eq!(state.reruns_after_done, 0, "resume must never re-run a done cell");
+    // attempts: k done once + the killed cell's dangling attempt + the
+    // resume's n-k executions = n + 1 running lines in total
+    let total_attempts: usize = state.attempts.values().sum();
+    assert_eq!(total_attempts, n + 1);
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+// ---------------------------------------------------------------------
+// Sweep-spec grammar: seeded round-trip + malformed-input fuzz
+// ---------------------------------------------------------------------
+
+fn subset<'a>(rng: &mut Pcg, pool: &[&'a str]) -> Vec<&'a str> {
+    let count = rng.below(pool.len()) + 1;
+    let mut picked: Vec<&str> = Vec::new();
+    let mut order: Vec<usize> = (0..pool.len()).collect();
+    rng.shuffle(&mut order);
+    for &i in order.iter().take(count) {
+        picked.push(pool[i]);
+    }
+    picked
+}
+
+fn random_spec(rng: &mut Pcg, tag: usize) -> CampaignSpec {
+    // pools are already in canonical form, so Display emits them verbatim
+    let models = subset(rng, &["resnet50", "vgg16", "gpt_mini"]);
+    let schemes = subset(rng, &["horovod", "ring", "byteps", "ps-tree"]);
+    let workers_pool = [2usize, 4, 8, 16];
+    let mut workers: Vec<usize> = Vec::new();
+    for _ in 0..rng.below(3) + 1 {
+        let w = workers_pool[rng.below(workers_pool.len())];
+        if !workers.contains(&w) {
+            workers.push(w);
+        }
+    }
+    let strategies = subset(rng, &[NONE, "op-fuse", "op-fuse+tensor-fuse"]);
+    let inject = subset(
+        rng,
+        &[NONE, "worker-crash:1@1", "nic-degrade:0:2@1+straggler:1:1.5@2"],
+    );
+    let modes = match rng.below(3) {
+        0 => vec![ReplayMode::Exact],
+        1 => vec![ReplayMode::Tiered],
+        _ => vec![ReplayMode::Exact, ReplayMode::Tiered],
+    };
+    let mut spec = CampaignSpec {
+        name: format!("fuzz{tag}"),
+        models: models.iter().map(|s| s.to_string()).collect(),
+        schemes: schemes.iter().map(|s| s.to_string()).collect(),
+        workers,
+        strategies: strategies.iter().map(|s| s.to_string()).collect(),
+        inject: inject.iter().map(|s| s.to_string()).collect(),
+        modes,
+        source: Source::Testbed, // inject scenarios require testbed
+        diagnose: rng.below(2) == 1,
+        iters: rng.below(5) + 1,
+        seed: rng.next_u64() % 1000,
+        rounds: rng.below(3) + 1,
+        ..CampaignSpec::default()
+    };
+    // a filter over values the axes actually hold stays valid on re-parse
+    if rng.below(2) == 1 {
+        spec.exclude.push(Filter {
+            clauses: vec![
+                ("model".into(), spec.models[rng.below(spec.models.len())].clone()),
+                ("workers".into(), spec.workers[rng.below(spec.workers.len())].to_string()),
+            ],
+        });
+    }
+    if rng.below(4) == 0 {
+        spec.include.push(Filter {
+            clauses: vec![("scheme".into(), spec.schemes[rng.below(spec.schemes.len())].clone())],
+        });
+    }
+    spec
+}
+
+#[test]
+fn display_parse_round_trip_on_seeded_random_specs() {
+    let mut rng = Pcg::seeded(0x5EED_CA3F);
+    for trial in 0..100 {
+        let spec = random_spec(&mut rng, trial);
+        let text = spec.to_string();
+        let re = CampaignSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("trial {trial}: canonical form rejected: {e}\n{text}"));
+        assert_eq!(re, spec, "trial {trial}: parse(display) must be the identity\n{text}");
+        assert_eq!(re.to_string(), text, "trial {trial}: display must be a fixed point");
+        assert_eq!(re.hash(), spec.hash());
+    }
+}
+
+#[test]
+fn truncated_and_bit_flipped_specs_never_panic() {
+    let base = std::fs::read_to_string(fixture_path()).unwrap();
+    assert!(base.is_ascii(), "fixture must stay ASCII so byte slicing is safe");
+    let mut rng = Pcg::seeded(0xBADC_0DE5);
+    // every truncation point: clean Ok or Err, never a panic
+    for cut in 0..base.len() {
+        let _ = CampaignSpec::parse(&base[..cut]);
+    }
+    // seeded random byte flips
+    for _ in 0..300 {
+        let mut bytes = base.clone().into_bytes();
+        let pos = rng.below(bytes.len());
+        bytes[pos] = (rng.below(0x5F) + 0x20) as u8; // printable ASCII
+        if let Ok(text) = String::from_utf8(bytes) {
+            let _ = CampaignSpec::parse(&text);
+        }
+    }
+    // garbage that is not even key=value shaped
+    for garbage in ["= = =", "models", "\u{0}\u{1}\u{2}", "include = &&&", "workers = -3"] {
+        assert!(CampaignSpec::parse(garbage).is_err(), "{garbage:?} must be rejected");
+    }
+}
+
+#[test]
+fn expansion_count_matches_algebraic_product_minus_exclusions() {
+    let mut rng = Pcg::seeded(0xA1_6EB3A);
+    for trial in 0..50 {
+        let mut spec = random_spec(&mut rng, trial);
+        spec.include.clear(); // isolate the exclusion arithmetic
+        let product = spec.product();
+        assert_eq!(
+            product,
+            spec.models.len()
+                * spec.schemes.len()
+                * spec.workers.len()
+                * spec.strategies.len()
+                * spec.inject.len()
+                * spec.modes.len()
+        );
+        // a conjunction filter over distinct axes removes exactly the
+        // sub-product where each filtered axis is pinned to one value
+        let expected = match spec.exclude.first() {
+            None => product,
+            Some(f) => {
+                let mut removed = product;
+                for (key, _) in &f.clauses {
+                    removed /= match key.as_str() {
+                        "model" => spec.models.len(),
+                        "workers" => spec.workers.len(),
+                        other => panic!("unexpected filter key {other}"),
+                    };
+                }
+                product - removed
+            }
+        };
+        assert_eq!(spec.expand().len(), expected, "trial {trial}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Journal robustness (integration-level; unit tests live in queue.rs)
+// ---------------------------------------------------------------------
+
+#[test]
+fn journal_with_torn_tail_resumes_cleanly() {
+    use std::io::Write;
+    let spec = CampaignSpec::parse(RESUME_SPEC).unwrap();
+    let dir = tmp("torn");
+    let mut kill_opts = det_opts(&dir);
+    kill_opts.kill_after_done = Some(2);
+    let out = run(&spec, LaunchMode::Fresh, &kill_opts).unwrap();
+    assert!(out.killed);
+    // a crash can also tear the final appended line: simulate it
+    let jpath = dir.join("journal.jsonl");
+    let mut f = std::fs::OpenOptions::new().append(true).open(&jpath).unwrap();
+    f.write_all(b"{\"cell\":\"half-writ").unwrap();
+    drop(f);
+    let out_r = run(&spec, LaunchMode::Resume, &det_opts(&dir)).unwrap();
+    assert_eq!(out_r.done, spec.expand().len());
+    assert_eq!(load_state(&spec, &dir).unwrap().reruns_after_done, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_under_an_edited_spec_is_refused() {
+    let spec = CampaignSpec::parse(RESUME_SPEC).unwrap();
+    let dir = tmp("edited");
+    let mut kill_opts = det_opts(&dir);
+    kill_opts.kill_after_done = Some(1);
+    run(&spec, LaunchMode::Fresh, &kill_opts).unwrap();
+    let mut edited = spec.clone();
+    edited.workers.push(8); // different matrix, different hash
+    match run(&edited, LaunchMode::Resume, &det_opts(&dir)) {
+        Err(CampaignError::Data(m)) => assert!(m.contains("different spec"), "{m}"),
+        other => panic!("expected Data error, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn journal_header_spec_hash_round_trips() {
+    let spec = CampaignSpec::parse(RESUME_SPEC).unwrap();
+    let dir = tmp("header");
+    std::fs::create_dir_all(&dir).unwrap();
+    let j = Journal::create(&dir, &spec.name, &spec.hash()).unwrap();
+    drop(j);
+    let state = Journal::load(&dir, Some(&spec.hash())).unwrap();
+    assert_eq!(state.campaign, "resume-prop");
+    assert_eq!(state.spec_hash, spec.hash());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// The committed example spec + CLI exit-code battery (satellite 4)
+// ---------------------------------------------------------------------
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/campaign/smoke.spec")
+}
+
+#[test]
+fn committed_smoke_spec_parses_and_expands() {
+    let spec = CampaignSpec::load(&fixture_path()).unwrap();
+    assert_eq!(spec.name, "smoke");
+    assert_eq!(spec.product(), 8, "the CI smoke is a 2×2×2 sweep");
+    assert_eq!(spec.expand().len(), 8);
+    assert_eq!(spec.source, Source::Analytic);
+    assert!(spec.diagnose);
+    // canonical round-trip holds for the committed file too
+    let re = CampaignSpec::parse(&spec.to_string()).unwrap();
+    assert_eq!(re, spec);
+}
+
+fn campaign_args(action: &str, pairs: &[(&str, &str)], flags: &[&str]) -> Args {
+    let mut a = Args::default();
+    a.positional.push("campaign".into());
+    if !action.is_empty() {
+        a.positional.push(action.into());
+    }
+    for (k, v) in pairs {
+        a.options.insert(k.to_string(), v.to_string());
+    }
+    for f in flags {
+        a.flags.push(f.to_string());
+    }
+    a
+}
+
+#[test]
+fn cli_exit_code_contract() {
+    let fixture = fixture_path();
+    let fixture = fixture.to_str().unwrap();
+
+    // argument class → 2
+    let bad_spec_dir = tmp("cli_badspec");
+    std::fs::create_dir_all(&bad_spec_dir).unwrap();
+    let bad_spec = bad_spec_dir.join("bad.spec");
+    std::fs::write(&bad_spec, "models = warp9\n").unwrap();
+    for (label, args) in [
+        ("malformed spec", campaign_args("run", &[("spec", bad_spec.to_str().unwrap())], &[])),
+        ("missing --spec", campaign_args("run", &[], &[])),
+        ("missing action", campaign_args("", &[("spec", fixture)], &[])),
+        ("unknown action", campaign_args("rerun", &[("spec", fixture)], &[])),
+        ("bad --jobs", campaign_args("run", &[("spec", fixture), ("jobs", "0")], &[])),
+        ("unparsable --jobs", campaign_args("run", &[("spec", fixture), ("jobs", "many")], &[])),
+        (
+            "bad --endpoint syntax",
+            campaign_args("run", &[("spec", fixture), ("endpoint", "not an addr")], &[]),
+        ),
+        (
+            "bad --budget-s",
+            campaign_args("run", &[("spec", fixture), ("budget-s", "-5")], &[]),
+        ),
+        ("unreadable spec path", campaign_args("run", &[("spec", "/nonexistent-dpro.spec")], &[])),
+    ] {
+        assert_eq!(cli::run(args), 2, "{label} must exit 2");
+    }
+
+    // data class → 3
+    let empty = tmp("cli_empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    for (label, args) in [
+        (
+            "resume without a journal",
+            campaign_args(
+                "resume",
+                &[("spec", fixture), ("out", empty.to_str().unwrap())],
+                &["quiet"],
+            ),
+        ),
+        (
+            "status without a journal",
+            campaign_args("status", &[("spec", fixture), ("out", empty.to_str().unwrap())], &[]),
+        ),
+        (
+            "unreachable endpoint",
+            campaign_args(
+                "run",
+                &[
+                    ("spec", fixture),
+                    ("out", tmp("cli_endpoint").to_str().unwrap()),
+                    ("endpoint", "127.0.0.1:1"),
+                ],
+                &["quiet"],
+            ),
+        ),
+    ] {
+        assert_eq!(cli::run(args), 3, "{label} must exit 3");
+    }
+
+    let _ = std::fs::remove_dir_all(&bad_spec_dir);
+    let _ = std::fs::remove_dir_all(&empty);
+}
+
+#[test]
+fn cli_run_then_status_is_clean() {
+    // a tiny end-to-end pass through the real CLI surface: run a 2-cell
+    // sweep, then status — both exit 0 and the matrix lands on disk
+    let dir = tmp("cli_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_file = dir.join("tiny.spec");
+    std::fs::write(
+        &spec_file,
+        "name = tiny\nmodels = resnet50\nschemes = horovod\nworkers = 2, 4\nsource = analytic\n",
+    )
+    .unwrap();
+    let out_dir = dir.join("out");
+    let spec_str = spec_file.to_str().unwrap();
+    let out_str = out_dir.to_str().unwrap();
+    assert_eq!(
+        cli::run(campaign_args(
+            "run",
+            &[("spec", spec_str), ("out", out_str), ("jobs", "2")],
+            &["quiet"],
+        )),
+        0
+    );
+    assert!(out_dir.join("matrix.csv").exists());
+    assert!(out_dir.join("matrix.json").exists());
+    assert!(out_dir.join("spec.txt").exists());
+    assert_eq!(
+        cli::run(campaign_args("status", &[("spec", spec_str), ("out", out_str)], &["json"])),
+        0
+    );
+    // a second `run` on the same journal is the argument class
+    assert_eq!(
+        cli::run(campaign_args(
+            "run",
+            &[("spec", spec_str), ("out", out_str)],
+            &["quiet"],
+        )),
+        2
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
