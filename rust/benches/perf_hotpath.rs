@@ -1,6 +1,8 @@
 //! §Perf microbenchmarks of the L3 hot paths: global-DFG construction,
 //! replay throughput (ops/s), partial replay, alignment solve, search
-//! rounds (from-scratch rebuild vs incremental splice + cone replay), and
+//! rounds (from-scratch rebuild vs incremental splice + cone replay), the
+//! self-telemetry overhead guard (disabled `obs::span()` must cost ≤2% of
+//! a search round; the enabled delta is recorded, not gated), and
 //! one full search. Emits `BENCH_perf_hotpath.json` so the perf
 //! trajectory is tracked across PRs; used for the before/after log in
 //! EXPERIMENTS.md §Perf.
@@ -169,6 +171,56 @@ fn main() {
         &round_rows,
     );
     report.set("search_rounds", Json::Arr(jrounds));
+
+    // ---- self-telemetry overhead guard (docs/OBSERVABILITY.md) ----
+    // The obs layer must be free when disabled: a span() call is one
+    // relaxed atomic load and an inert guard. Measure that cost
+    // directly, bound it against a search round, then record the
+    // enabled-path throughput delta for the trajectory log.
+    println!("\n=== self-telemetry overhead ===\n");
+    assert!(!dpro::obs::enabled(), "span collection must start disabled");
+    let spins = 10_000_000u64;
+    let (_, t_noop) = time(|| {
+        for _ in 0..spins {
+            let _g = dpro::obs::span("bench.obs.noop", dpro::obs::SpanKind::Work);
+        }
+    });
+    let ns_disabled = t_noop / spins as f64 * 1e9;
+    let ospec = JobSpec::standard("resnet50", "horovod", Transport::Rdma);
+    let (t_off, _) = rounds_incremental(&ospec, &script);
+    dpro::obs::set_enabled(true);
+    let (t_on, _) = rounds_incremental(&ospec, &script);
+    dpro::obs::set_enabled(false);
+    let spans_collected = dpro::obs::take_spans().len();
+    let rps_off = n_rounds as f64 / t_off;
+    let rps_on = n_rounds as f64 / t_on;
+    // instrumentation is per-round/per-phase, never per-op; 100 span()
+    // calls per round is a generous ceiling for the analytic bound
+    let spans_per_round = 100.0;
+    let round_us_off = t_off / n_rounds as f64 * 1e6;
+    let disabled_overhead_pct = spans_per_round * ns_disabled / 1e3 / round_us_off * 100.0;
+    let enabled_delta_pct = (rps_off - rps_on) / rps_off * 100.0;
+    println!(
+        "disabled span(): {ns_disabled:.1} ns ({disabled_overhead_pct:.4}% of a search round \
+         at {spans_per_round:.0} spans/round)"
+    );
+    println!(
+        "search rounds/s: {rps_off:.1} disabled -> {rps_on:.1} enabled \
+         ({enabled_delta_pct:+.1}% delta, {spans_collected} spans collected)"
+    );
+    assert!(
+        disabled_overhead_pct <= 2.0,
+        "disabled span overhead {disabled_overhead_pct:.3}% of a search round exceeds the 2% guard"
+    );
+    let mut jobs = Json::obj();
+    jobs.set("disabled_span_ns", Json::Num(ns_disabled));
+    jobs.set("spans_per_round_assumed", Json::Num(spans_per_round));
+    jobs.set("disabled_overhead_pct", Json::Num(disabled_overhead_pct));
+    jobs.set("rounds_per_s_disabled", Json::Num(rps_off));
+    jobs.set("rounds_per_s_enabled", Json::Num(rps_on));
+    jobs.set("enabled_delta_pct", Json::Num(enabled_delta_pct));
+    jobs.set("spans_collected", Json::Num(spans_collected as f64));
+    report.set("obs_overhead", jobs);
 
     // alignment solve
     let spec = deployed_default(&JobSpec::standard("resnet50", "horovod", Transport::Tcp));

@@ -15,7 +15,7 @@ use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
 /// Matrix schema version (bumped on column/key changes).
-pub const MATRIX_VERSION: f64 = 1.0;
+pub const MATRIX_VERSION: f64 = 1.1;
 
 /// Result-object keys emitted as CSV columns, in order. Every `done`
 /// result carries all of these (inapplicable ones as JSON `null` → an
@@ -36,6 +36,18 @@ pub const RESULT_COLUMNS: [&str; 15] = [
     "opt_us",
     "opt_speedup",
     "executor",
+];
+
+/// Executor self-telemetry keys, appended after [`RESULT_COLUMNS`] in
+/// the CSV. The executor merges them into the result object **after**
+/// the result hash is computed (and zeroes them under a fixed wall
+/// time), so they never enter `result_hash` and never perturb the
+/// bit-for-bit kill-and-resume property.
+pub const TELEMETRY_COLUMNS: [&str; 4] = [
+    "tele_replay_us",
+    "tele_diagnose_us",
+    "tele_optimize_us",
+    "tele_queue_depth",
 ];
 
 /// One matrix row: a cell plus its journal outcome.
@@ -141,7 +153,7 @@ impl Matrix {
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str("cell,model,scheme,workers,strategies,inject,replay_mode,status");
-        for col in RESULT_COLUMNS {
+        for col in RESULT_COLUMNS.iter().chain(TELEMETRY_COLUMNS.iter()) {
             out.push(',');
             out.push_str(col);
         }
@@ -158,7 +170,7 @@ impl Matrix {
                 c.mode.name().to_string(),
                 row.status.clone(),
             ];
-            for col in RESULT_COLUMNS {
+            for col in RESULT_COLUMNS.iter().chain(TELEMETRY_COLUMNS.iter()) {
                 fields.push(csv_value(row.result.get(col)));
             }
             fields.push(csv_value(Some(&Json::Num(row.wall_ms))));

@@ -11,6 +11,13 @@
 //! optimizer runs round-bounded, timestamps live outside the hashed
 //! result), so kill-and-resume reproduces an uninterrupted run
 //! bit-for-bit — the property `rust/tests/campaign.rs` pins.
+//!
+//! Each cell also records executor self-telemetry ([`CellTelemetry`]):
+//! per-phase wall times and the queue depth at dispatch, merged into
+//! the result row *after* its hash is computed (and zeroed under
+//! [`RunOpts::fixed_wall_ms`]) so observability never perturbs the
+//! resume property. Cells run under a `campaign.cell` span when
+//! self-tracing ([`crate::obs`]) is enabled.
 
 use super::matrix::{Matrix, RESULT_COLUMNS};
 use super::queue::{CellState, Journal, JournalState, JOURNAL_FILE};
@@ -244,7 +251,9 @@ pub fn run(spec: &CampaignSpec, mode: LaunchMode, opts: &RunOpts) -> Result<Outc
 
     {
         let pool = FixedPool::new(opts.jobs);
+        let pending = pool.pending_handle();
         for cell in todo {
+            let pending = Arc::clone(&pending);
             let journal = Arc::clone(&journal);
             let sspec = Arc::clone(&sspec);
             let killed = Arc::clone(&killed);
@@ -278,6 +287,11 @@ pub fn run(spec: &CampaignSpec, mode: LaunchMode, opts: &RunOpts) -> Result<Outc
                     }
                 }
                 executed.fetch_add(1, Ordering::SeqCst);
+                // cells queued behind this one when it started — a
+                // telemetry column, zeroed (like the phase timings)
+                // under the fixed_wall_ms determinism seam
+                let queue_depth = pending.load(Ordering::SeqCst).saturating_sub(1) as f64;
+                let cell_span = crate::obs::span("campaign.cell", crate::obs::SpanKind::Work);
                 let t0 = Instant::now();
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     execute_cell(&sspec, &cell, endpoint.as_deref())
@@ -290,10 +304,20 @@ pub fn run(spec: &CampaignSpec, mode: LaunchMode, opts: &RunOpts) -> Result<Outc
                         .unwrap_or_else(|| "panic".into());
                     Err(format!("panicked: {what}"))
                 });
+                drop(cell_span);
                 let wall_ms = fixed_wall_ms.unwrap_or_else(|| t0.elapsed().as_secs_f64() * 1e3);
                 let append = match outcome {
-                    Ok(result) => {
+                    Ok((mut result, tele)) => {
+                        // hash BEFORE merging telemetry: tele values are
+                        // wall-clock-derived and must never enter
+                        // result_hash (the bit-for-bit resume property)
                         let hash = format!("{:016x}", fnv1a(result.to_string().bytes()));
+                        let zeroed = fixed_wall_ms.is_some();
+                        let t = |v: f64| Json::Num(if zeroed { 0.0 } else { v });
+                        result.set("tele_replay_us", t(tele.replay_us));
+                        result.set("tele_diagnose_us", t(tele.diagnose_us));
+                        result.set("tele_optimize_us", t(tele.optimize_us));
+                        result.set("tele_queue_depth", t(queue_depth));
                         if !quiet {
                             eprintln!("campaign: done {id} ({:.0} us)", result.f64("iteration_us"));
                         }
@@ -377,6 +401,22 @@ fn empty_result() -> Json {
     r
 }
 
+/// Per-cell executor self-telemetry: wall time spent in each pipeline
+/// phase, measured around the phase calls. The dispatcher merges these
+/// into the result row **after** the result hash is computed — and
+/// zeroes them under [`RunOpts::fixed_wall_ms`] — so telemetry never
+/// enters `result_hash` and kill-and-resume stays bit-for-bit
+/// (`rust/tests/campaign.rs`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CellTelemetry {
+    /// Wall µs building + replaying (testbed profiling included).
+    pub replay_us: f64,
+    /// Wall µs in diagnosis.
+    pub diagnose_us: f64,
+    /// Wall µs in optimizer search.
+    pub optimize_us: f64,
+}
+
 /// Whether a live daemon can execute this cell: the serve API registers
 /// analytic jobs and replays them exactly — faults, testbed traces,
 /// tiered mode and optimizer mutations stay in-process (an `optimize`
@@ -389,7 +429,11 @@ fn serve_eligible(spec: &CampaignSpec, cell: &Cell) -> bool {
 }
 
 /// Execute one cell, locally or against the endpoint.
-fn execute_cell(spec: &CampaignSpec, cell: &Cell, endpoint: Option<&str>) -> Result<Json, String> {
+fn execute_cell(
+    spec: &CampaignSpec,
+    cell: &Cell,
+    endpoint: Option<&str>,
+) -> Result<(Json, CellTelemetry), String> {
     match endpoint {
         Some(addr) if serve_eligible(spec, cell) => execute_serve(spec, cell, addr),
         _ => execute_local(spec, cell),
@@ -411,12 +455,15 @@ fn apply_diagnosis(r: &mut Json, rep: &DiagnosisReport) {
 
 /// In-process execution: the full pipeline the CLI commands compose,
 /// driven by the spec's settings.
-fn execute_local(spec: &CampaignSpec, cell: &Cell) -> Result<Json, String> {
+fn execute_local(spec: &CampaignSpec, cell: &Cell) -> Result<(Json, CellTelemetry), String> {
     let jspec = build_job(spec, cell)?;
     let mut r = empty_result();
     r.set("executor", Json::Str("local".into()));
+    let mut tele = CellTelemetry::default();
 
     let mut diagnoser: Option<Diagnoser> = None;
+    let t_replay = Instant::now();
+    let _replay_span = crate::obs::span("campaign.replay", crate::obs::SpanKind::Work);
     match spec.source {
         Source::Testbed => {
             let tb = tb_run(
@@ -486,14 +533,21 @@ fn execute_local(spec: &CampaignSpec, cell: &Cell) -> Result<Json, String> {
             }
         }
     }
+    drop(_replay_span);
+    tele.replay_us = t_replay.elapsed().as_secs_f64() * 1e6;
 
     if let Some(mut d) = diagnoser {
+        let _span = crate::obs::span("campaign.diagnose", crate::obs::SpanKind::Work);
+        let t0 = Instant::now();
         let queries = d.auto_queries();
         let rep = d.report(&queries, 3);
         apply_diagnosis(&mut r, &rep);
+        tele.diagnose_us = t0.elapsed().as_secs_f64() * 1e6;
     }
 
     if cell.strategies != NONE {
+        let _span = crate::obs::span("campaign.optimize", crate::obs::SpanKind::Work);
+        let t0 = Instant::now();
         // round-bounded, never wall-bounded: campaign results must not
         // depend on machine speed (the resume property compares bytes)
         let so = SearchOpts {
@@ -506,13 +560,21 @@ fn execute_local(spec: &CampaignSpec, cell: &Cell) -> Result<Json, String> {
         let out = optimize(&jspec, &so);
         r.set("opt_us", Json::Num(out.est_iteration_us));
         r.set("opt_speedup", Json::Num(out.speedup()));
+        tele.optimize_us = t0.elapsed().as_secs_f64() * 1e6;
     }
-    Ok(r)
+    Ok((r, tele))
 }
 
 /// Remote execution against a `dpro serve` daemon, through the shared
 /// [`Client`] JSON helpers.
-fn execute_serve(spec: &CampaignSpec, cell: &Cell, addr: &str) -> Result<Json, String> {
+fn execute_serve(
+    spec: &CampaignSpec,
+    cell: &Cell,
+    addr: &str,
+) -> Result<(Json, CellTelemetry), String> {
+    let mut tele = CellTelemetry::default();
+    let t_replay = Instant::now();
+    let replay_span = crate::obs::span("campaign.replay", crate::obs::SpanKind::Net);
     let mut c = Client::new(addr);
     let mut job = Json::obj();
     job.set("model", Json::Str(cell.model.clone()));
@@ -525,6 +587,8 @@ fn execute_serve(spec: &CampaignSpec, cell: &Cell, addr: &str) -> Result<Json, S
     let id = reg.str("job").to_string();
 
     let replay = c.get_json(&format!("/jobs/{id}/replay"))?;
+    drop(replay_span);
+    tele.replay_us = t_replay.elapsed().as_secs_f64() * 1e6;
     let mut r = empty_result();
     r.set("executor", Json::Str("serve".into()));
     for key in ["iteration_us", "fw_us", "bw_us", "est_peak_mem_bytes", "ops"] {
@@ -534,6 +598,8 @@ fn execute_serve(spec: &CampaignSpec, cell: &Cell, addr: &str) -> Result<Json, S
     r.set("demoted", Json::Bool(false));
 
     if spec.diagnose {
+        let _span = crate::obs::span("campaign.diagnose", crate::obs::SpanKind::Net);
+        let t0 = Instant::now();
         let diag = c.get_json(&format!("/jobs/{id}/diagnose"))?;
         let path = diag
             .get("blame")
@@ -547,8 +613,9 @@ fn execute_serve(spec: &CampaignSpec, cell: &Cell, addr: &str) -> Result<Json, S
         if let Some(w) = diag.get("whatif").and_then(Json::as_arr).and_then(<[Json]>::first) {
             r.set("perfect_overlap_speedup", Json::Num(w.f64("speedup")));
         }
+        tele.diagnose_us = t0.elapsed().as_secs_f64() * 1e6;
     }
-    Ok(r)
+    Ok((r, tele))
 }
 
 #[cfg(test)]

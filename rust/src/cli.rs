@@ -72,6 +72,13 @@
 //! statuses mirror the same classes: **400** = the exit-2 argument class,
 //! **422** = the exit-3 unusable-trace class, plus 404/405/413/500 for the
 //! transport-level cases.
+//!
+//! Every command accepts the global `--self-trace DIR` flag
+//! ([`crate::obs`], `docs/OBSERVABILITY.md`): the run's own span tree is
+//! dumped into `DIR` in the same gTrace format the pipeline ingests, so
+//! the profiler profiles itself with its own tooling. A bare
+//! `--self-trace` or one naming an existing non-directory exits 2, as
+//! does a non-positive `serve --slow-query-us`.
 
 use crate::alignment::Alignment;
 use crate::baselines;
@@ -88,27 +95,70 @@ use crate::util::{fmt_bytes, fmt_us, Args};
 use std::path::Path;
 
 /// Dispatch a parsed command line; returns the process exit code.
+///
+/// The global `--self-trace DIR` flag works on every command: it turns
+/// on span collection ([`crate::obs`]) for the run, and when the
+/// command returns, dumps the collected span tree into `DIR` as a
+/// standard gTrace directory (`docs/OBSERVABILITY.md`) that `load_dir`
+/// re-ingests cleanly and Perfetto opens. A bare `--self-trace`, or one
+/// naming an existing non-directory, is an argument error (exit 2).
+/// `serve` blocks until killed, so its telemetry is served live on
+/// `GET /metricsz` instead of dumped.
 pub fn run(args: Args) -> i32 {
-    match args.positional.first().map(String::as_str) {
-        Some("profile") => cmd_profile(&args),
-        Some("replay") => cmd_replay(&args),
-        Some("align") => cmd_align(&args),
-        Some("diagnose") => cmd_diagnose(&args),
-        Some("optimize") => cmd_optimize(&args),
-        Some("train") => cmd_train(&args),
-        Some("report") => cmd_report(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("campaign") => cmd_campaign(&args),
-        Some(other) => {
-            eprintln!("unknown command {other:?}");
-            usage();
-            2
+    let self_trace: Option<String> = if args.flag("self-trace") {
+        eprintln!("--self-trace requires a directory argument (e.g. --self-trace obs_out)");
+        return 2;
+    } else {
+        match args.get("self-trace") {
+            Some(d) => {
+                let p = Path::new(d);
+                if p.exists() && !p.is_dir() {
+                    eprintln!("invalid --self-trace {d:?}: exists and is not a directory");
+                    return 2;
+                }
+                crate::obs::set_enabled(true);
+                Some(d.to_string())
+            }
+            None => None,
         }
-        None => {
-            usage();
-            0
+    };
+    let code = {
+        let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+        // root of the span tree; dropped before the dump below so every
+        // span is closed when the trace is written
+        let _root = crate::obs::span(&format!("cli.{cmd}"), crate::obs::SpanKind::Work);
+        match args.positional.first().map(String::as_str) {
+            Some("profile") => cmd_profile(&args),
+            Some("replay") => cmd_replay(&args),
+            Some("align") => cmd_align(&args),
+            Some("diagnose") => cmd_diagnose(&args),
+            Some("optimize") => cmd_optimize(&args),
+            Some("train") => cmd_train(&args),
+            Some("report") => cmd_report(&args),
+            Some("serve") => cmd_serve(&args),
+            Some("campaign") => cmd_campaign(&args),
+            Some(other) => {
+                eprintln!("unknown command {other:?}");
+                usage();
+                2
+            }
+            None => {
+                usage();
+                0
+            }
+        }
+    };
+    if let Some(dir) = self_trace {
+        match crate::obs::export::dump_self_trace(Path::new(&dir)) {
+            Ok(s) => eprintln!(
+                "self-trace: {} spans in {} files under {dir} (gTrace; Perfetto-loadable)",
+                s.events, s.files
+            ),
+            // telemetry failure must not mask the command's own outcome
+            Err(e) => eprintln!("self-trace: dump to {dir} failed: {e}"),
         }
     }
+    code
 }
 
 fn usage() {
@@ -128,9 +178,11 @@ fn usage() {
          [--dump-dir DIR]\n  \
          report   --model M [--scheme S] [--transport T] [--json]\n  \
          serve    [--addr 127.0.0.1:7077] [--cache-bytes 1G] [--threads 8]\n           \
-         [--batch-window-ms 2] [--top 5] [--trace-dir DIR[,DIR]]\n  \
+         [--batch-window-ms 2] [--top 5] [--trace-dir DIR[,DIR]] [--slow-query-us N]\n  \
          campaign run|resume|status --spec FILE [--out campaign_out] [--jobs 4]\n           \
          [--endpoint HOST:PORT] [--budget-s S] [--retry-failed] [--quiet] [--json]\n\n\
+         global: --self-trace DIR dumps the run's own span tree as a gTrace\n\
+         directory (docs/OBSERVABILITY.md); serve exposes GET /metricsz instead.\n\
          models: resnet50 vgg16 inception_v3 bert_base gpt_mini\n\
          schemes: {}   transports: rdma tcp\n\
          faults (--inject, docs/FAULTS.md): {}\n\n\
@@ -815,6 +867,17 @@ fn cmd_serve(args: &Args) -> i32 {
             Ok(ms) => opts.batch_window_ms = ms,
             Err(_) => {
                 eprintln!("invalid --batch-window-ms {v:?}: expected a non-negative integer");
+                return 2;
+            }
+        }
+    }
+    // absence keeps the default (threshold disabled); an explicit zero
+    // or junk value is an argument error, same as --threads
+    if let Some(v) = args.get("slow-query-us") {
+        match v.parse::<u64>() {
+            Ok(us) if us >= 1 => opts.slow_query_us = us,
+            _ => {
+                eprintln!("invalid --slow-query-us {v:?}: expected a positive integer (µs)");
                 return 2;
             }
         }

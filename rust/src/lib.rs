@@ -27,6 +27,10 @@
 //!   persistent resumable work queue, emitting one provenance-stamped
 //!   CSV/JSON results matrix — `dpro campaign`, the engine behind the
 //!   paper-figure benches.
+//! - **Self-telemetry** ([`obs`]): spans + metrics over dpro's own
+//!   replay/search/serve/campaign loops; `--self-trace` dumps a run's
+//!   execution in the crate's own gTrace format, `GET /metricsz`
+//!   exposes the serve registry as Prometheus text.
 //!
 //! The live end-to-end path ([`runtime`] + [`coordinator`]) executes a JAX
 //! (+Pallas) transformer AOT-compiled to HLO through PJRT, with Python
@@ -57,6 +61,7 @@ pub mod testbed;
 pub mod trace;
 pub mod graph;
 pub mod models;
+pub mod obs;
 pub mod optimizer;
 pub mod profiler;
 pub mod replay;

@@ -1,0 +1,86 @@
+//! Dump collected spans as a gTrace directory — dpro's own execution in
+//! dpro's own trace format, loadable by Perfetto and by
+//! [`crate::trace::io::load_dir`].
+//!
+//! Span kinds map onto the gTrace op kinds that the validator never
+//! overlap- or pairing-checks (`AGG`/`NEG`/`IN`/`OUT`/`SEND`; see
+//! [`SpanKind`]), every event carries `txid: None` and `iter: 0`, and
+//! lanes become `proc` ids — so a self-trace dump re-ingests with **zero
+//! diagnostics of any severity**, which `rust/tests/obs.rs` pins. Parent
+//! links are not representable in the on-disk format; within a lane they
+//! are visible as time-nesting (Perfetto renders the containment), and
+//! tests read them from [`SpanRec`] directly.
+
+use super::span::{SpanKind, SpanRec};
+use super::{global, take_spans};
+use crate::graph::OpKind;
+use crate::trace::io::{dump_dir, DumpSummary};
+use crate::trace::{GTrace, TraceEvent};
+use std::path::Path;
+
+/// The gTrace op kind a span kind is exported as.
+pub fn op_kind_for(kind: SpanKind) -> OpKind {
+    match kind {
+        SpanKind::Work => OpKind::Aggregate,
+        SpanKind::Wait => OpKind::Negotiate,
+        SpanKind::Read => OpKind::In,
+        SpanKind::Write => OpKind::Out,
+        SpanKind::Net => OpKind::Send,
+    }
+}
+
+/// Assemble spans into an in-memory [`GTrace`]: events sorted by
+/// `(start, id)`, one `proc` per lane, a single declared iteration. An
+/// empty span set yields one zero-length `obs.idle` marker so the dump
+/// directory is still a loadable trace.
+pub fn gtrace_from_spans(spans: &[SpanRec]) -> GTrace {
+    let mut ordered: Vec<&SpanRec> = spans.iter().collect();
+    ordered.sort_by(|a, b| {
+        a.start_us
+            .partial_cmp(&b.start_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    let mut events: Vec<TraceEvent> = ordered
+        .iter()
+        .map(|s| TraceEvent {
+            name: s.name.resolve().to_string(),
+            kind: op_kind_for(s.kind),
+            ts: s.start_us,
+            dur: s.dur_us,
+            proc: s.lane,
+            machine: 0,
+            iter: 0,
+            txid: None,
+        })
+        .collect();
+    if events.is_empty() {
+        events.push(TraceEvent {
+            name: "obs.idle".to_string(),
+            kind: OpKind::Aggregate,
+            ts: 0.0,
+            dur: 0.0,
+            proc: 0,
+            machine: 0,
+            iter: 0,
+            txid: None,
+        });
+    }
+    let n_procs = events.iter().map(|e| e.proc as usize + 1).max().unwrap_or(1);
+    GTrace { events, n_workers: 1, n_procs, iterations: 1 }
+}
+
+/// Drain the span sink and write it to `dir` as a gTrace dump, plus a
+/// `metrics.prom` sidecar with the [`global`] registry's Prometheus text
+/// (non-`.json` files are ignored by the trace loader). Returns the dump
+/// summary; the sink is left empty either way.
+pub fn dump_self_trace(dir: &Path) -> Result<DumpSummary, String> {
+    let spans = take_spans();
+    let trace = gtrace_from_spans(&spans);
+    let summary =
+        dump_dir(&trace, dir).map_err(|e| format!("self-trace dump {}: {e}", dir.display()))?;
+    let prom = global().render_prometheus();
+    std::fs::write(dir.join("metrics.prom"), prom)
+        .map_err(|e| format!("self-trace metrics {}: {e}", dir.display()))?;
+    Ok(summary)
+}

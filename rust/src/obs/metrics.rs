@@ -1,0 +1,439 @@
+//! Typed metrics — counters, gauges, fixed-bucket latency histograms —
+//! in a registry that renders deterministic Prometheus text exposition.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`-backed
+//! clones of the registered metric: resolve once, then update with one
+//! relaxed atomic op per event, no lock. The registry lock is taken only
+//! at registration and render time.
+//!
+//! Rendering is deterministic for fixed inputs: series are stored in a
+//! `BTreeMap` keyed by (family, labels), so `/metricsz` output is
+//! byte-stable — pinned by `rust/tests/obs.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Histogram bucket upper bounds in µs: a 1–2.5–5 decade ladder from
+/// 1 µs to 10 s, plus the implicit `+Inf` bucket. Chosen so both a
+/// sub-ms what-if and a multi-second optimize land mid-ladder.
+pub const LATENCY_BOUNDS_US: [f64; 22] = [
+    1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0,
+    25_000.0, 50_000.0, 100_000.0, 250_000.0, 500_000.0, 1_000_000.0, 2_500_000.0, 5_000_000.0,
+    10_000_000.0,
+];
+
+/// Number of histogram buckets including `+Inf`.
+pub const N_BUCKETS: usize = LATENCY_BOUNDS_US.len() + 1;
+
+/// Monotonically increasing event count.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A detached counter (not in any registry) — the default wired into
+    /// components built outside a daemon, e.g. `Session::build` in unit
+    /// tests.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// A detached gauge (not in any registry).
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Set the value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Track a high-water mark: keep the larger of the current and `v`.
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+struct HistInner {
+    /// Per-bucket (non-cumulative) counts; index `LATENCY_BOUNDS_US.len()`
+    /// is `+Inf`.
+    buckets: [AtomicU64; N_BUCKETS],
+    /// Sum of observed values, rounded to whole µs.
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket latency histogram over [`LATENCY_BOUNDS_US`].
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram(Arc::new(HistInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histogram {
+    /// A detached histogram (not in any registry).
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation in µs. Non-finite and negative values
+    /// count as 0 (first bucket) rather than poisoning the sum.
+    pub fn observe_us(&self, us: f64) {
+        let v = if us.is_finite() && us > 0.0 { us } else { 0.0 };
+        let idx = LATENCY_BOUNDS_US
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(LATENCY_BOUNDS_US.len());
+        self.0.buckets[idx].fetch_add(1, Relaxed);
+        self.0.sum_us.fetch_add(v.round() as u64, Relaxed);
+        self.0.count.fetch_add(1, Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Relaxed)
+    }
+
+    /// Sum of observations in whole µs.
+    pub fn sum_us(&self) -> u64 {
+        self.0.sum_us.load(Relaxed)
+    }
+
+    /// Consistent-enough point-in-time copy (buckets are read one by one
+    /// without a global lock; concurrent observes may straddle the read,
+    /// which percentile math tolerates).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.0.buckets[i].load(Relaxed)),
+            sum_us: self.sum_us(),
+            count: self.count(),
+        }
+    }
+}
+
+/// Point-in-time histogram state, with percentile estimation.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Per-bucket (non-cumulative) counts, `+Inf` last.
+    pub buckets: [u64; N_BUCKETS],
+    /// Sum of observations in whole µs.
+    pub sum_us: u64,
+    /// Total observations.
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Estimate the `q`-quantile (`0.0..=1.0`) in µs by linear
+    /// interpolation within the bucket containing the target rank. The
+    /// `+Inf` bucket extrapolates to 2× the last finite bound. Returns
+    /// 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = seen;
+            seen += c;
+            if seen >= target {
+                let lo = if i == 0 { 0.0 } else { LATENCY_BOUNDS_US[i - 1] };
+                let hi = LATENCY_BOUNDS_US
+                    .get(i)
+                    .copied()
+                    .unwrap_or(LATENCY_BOUNDS_US[LATENCY_BOUNDS_US.len() - 1] * 2.0);
+                let frac = (target - before) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+        }
+        0.0
+    }
+
+    /// p50 in µs.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// p95 in µs.
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// p99 in µs.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    family: String,
+    labels: Vec<(String, String)>,
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// A named collection of metrics with get-or-create registration and
+/// Prometheus text rendering.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<Key, Metric>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get or create the unlabeled counter `family`.
+    pub fn counter(&self, family: &str) -> Counter {
+        self.counter_with(family, &[])
+    }
+
+    /// Get or create a counter with label pairs (sorted internally, so
+    /// label order at the call site doesn't create duplicate series).
+    pub fn counter_with(&self, family: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = Self::key(family, labels);
+        let mut m = self.lock();
+        match m.entry(key).or_insert_with(|| Metric::Counter(Counter::new())) {
+            Metric::Counter(c) => c.clone(),
+            // family already registered as another type: hand back a
+            // detached handle instead of panicking mid-request
+            _ => Counter::new(),
+        }
+    }
+
+    /// Get or create the unlabeled gauge `family`.
+    pub fn gauge(&self, family: &str) -> Gauge {
+        let key = Self::key(family, &[]);
+        let mut m = self.lock();
+        match m.entry(key).or_insert_with(|| Metric::Gauge(Gauge::new())) {
+            Metric::Gauge(g) => g.clone(),
+            _ => Gauge::new(),
+        }
+    }
+
+    /// Get or create the unlabeled histogram `family`.
+    pub fn histogram(&self, family: &str) -> Histogram {
+        self.histogram_with(family, &[])
+    }
+
+    /// Get or create a histogram with label pairs.
+    pub fn histogram_with(&self, family: &str, labels: &[(&str, &str)]) -> Histogram {
+        let key = Self::key(family, labels);
+        let mut m = self.lock();
+        match m.entry(key).or_insert_with(|| Metric::Histogram(Histogram::new())) {
+            Metric::Histogram(h) => h.clone(),
+            _ => Histogram::new(),
+        }
+    }
+
+    fn key(family: &str, labels: &[(&str, &str)]) -> Key {
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        Key { family: family.to_string(), labels }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<Key, Metric>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Render the whole registry as Prometheus text exposition
+    /// (`text/plain; version=0.0.4`): one `# TYPE` line per family, then
+    /// its series in sorted label order; histograms expand to cumulative
+    /// `_bucket{le=...}`, `_sum` and `_count` series. Deterministic for
+    /// fixed metric values.
+    pub fn render_prometheus(&self) -> String {
+        let m = self.lock();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (key, metric) in m.iter() {
+            if key.family != last_family {
+                let ty = match metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "histogram",
+                };
+                out.push_str(&format!("# TYPE {} {ty}\n", key.family));
+                last_family = key.family.clone();
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        key.family,
+                        render_labels(&key.labels, None),
+                        c.get()
+                    ));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        key.family,
+                        render_labels(&key.labels, None),
+                        g.get()
+                    ));
+                }
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    let mut cum = 0u64;
+                    for (i, &c) in snap.buckets.iter().enumerate() {
+                        cum += c;
+                        let le = LATENCY_BOUNDS_US
+                            .get(i)
+                            .map(|b| fmt_bound(*b))
+                            .unwrap_or_else(|| "+Inf".to_string());
+                        out.push_str(&format!(
+                            "{}_bucket{} {cum}\n",
+                            key.family,
+                            render_labels(&key.labels, Some(&le)),
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        key.family,
+                        render_labels(&key.labels, None),
+                        snap.sum_us
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        key.family,
+                        render_labels(&key.labels, None),
+                        snap.count
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `1`, `2.5`, `10000` — integral bounds without a trailing `.0`.
+fn fmt_bound(b: f64) -> String {
+    if b.fract() == 0.0 {
+        format!("{}", b as u64)
+    } else {
+        format!("{b}")
+    }
+}
+
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("dpro_test_total");
+        let b = r.counter("dpro_test_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "both handles hit one atomic");
+        let g = r.gauge("dpro_test_gauge");
+        g.set(7);
+        g.set_max(3);
+        assert_eq!(r.gauge("dpro_test_gauge").get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        h.observe_us(0.5); // le=1
+        h.observe_us(1.0); // le=1 (inclusive upper bound)
+        h.observe_us(1.1); // le=2.5
+        h.observe_us(1e9); // +Inf
+        h.observe_us(f64::NAN); // counts as 0 → le=1
+        h.observe_us(-3.0); // counts as 0 → le=1
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.buckets[0], 4);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[N_BUCKETS - 1], 1);
+        assert!(s.p50() <= 1.0 && s.p50() > 0.0);
+        assert!(s.p99() > LATENCY_BOUNDS_US[LATENCY_BOUNDS_US.len() - 1]);
+        assert_eq!(HistogramSnapshot { buckets: [0; N_BUCKETS], sum_us: 0, count: 0 }.p95(), 0.0);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_deterministic_and_typed() {
+        let r = MetricsRegistry::new();
+        r.counter("dpro_b_total").add(5);
+        r.counter_with("dpro_req_total", &[("route", "/statsz")]).inc();
+        r.counter_with("dpro_req_total", &[("route", "/healthz")]).add(2);
+        r.gauge("dpro_a_gauge").set(9);
+        r.histogram("dpro_lat_us").observe_us(3.0);
+        let once = r.render_prometheus();
+        assert_eq!(once, r.render_prometheus(), "render must be stable");
+        assert!(once.contains("# TYPE dpro_a_gauge gauge\ndpro_a_gauge 9\n"));
+        assert!(once.contains("# TYPE dpro_b_total counter\ndpro_b_total 5\n"));
+        // label-sorted series under one TYPE line
+        let req = once.find("# TYPE dpro_req_total counter").expect("family present");
+        let healthz = once.find("dpro_req_total{route=\"/healthz\"} 2").expect("healthz series");
+        let statsz = once.find("dpro_req_total{route=\"/statsz\"} 1").expect("statsz series");
+        assert!(req < healthz && healthz < statsz);
+        assert!(once.contains("dpro_lat_us_bucket{le=\"2.5\"} 1"));
+        assert!(once.contains("dpro_lat_us_bucket{le=\"+Inf\"} 1"));
+        assert!(once.contains("dpro_lat_us_sum 3\n"));
+        assert!(once.contains("dpro_lat_us_count 1\n"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Self-telemetry: dpro profiles dpro.
+//!
+//! The thesis of the source paper is that you cannot fix a distributed
+//! system you cannot observe — this module applies that standard to the
+//! tool itself. It is a zero-dependency, std-only telemetry layer with
+//! two independent halves:
+//!
+//! - **Spans** ([`span`], [`SpanGuard`]) — hierarchical RAII timing
+//!   regions with interned names ([`crate::util::intern`]), a monotonic
+//!   process clock ([`now_us`]), per-thread buffers, and a global sink.
+//!   Span collection is **off by default** and costs one relaxed atomic
+//!   load per call site when disabled; `--self-trace <dir>` (or
+//!   [`set_enabled`]) turns it on. The exporter ([`export`]) writes the
+//!   collected span forest in the crate's own gTrace format, so a dpro
+//!   run opens in Perfetto and round-trips through
+//!   [`crate::trace::io::load_dir`] like any training trace.
+//! - **Metrics** ([`metrics::MetricsRegistry`]) — typed counters, gauges
+//!   and fixed-bucket latency histograms behind plain atomics. Metrics
+//!   are **always on**: they replace the serve daemon's previous ad-hoc
+//!   `AtomicU64` fields, so `/statsz` and `/metricsz` are two renderings
+//!   of one registry rather than two sets of counters that can drift.
+//!
+//! Naming conventions (see `docs/OBSERVABILITY.md`): span names are
+//! dotted paths rooted at the subsystem (`replay.exact`,
+//! `search.candidate`, `serve.request`, `campaign.cell`); metric families
+//! are Prometheus-style `dpro_<noun>_<unit-or-total>`
+//! (`dpro_replay_heap_pops_total`, `dpro_request_latency_us`).
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry};
+pub use span::{
+    current_ctx, dropped_spans, enabled, flush_thread, inherit, set_enabled, span, span_interned,
+    take_spans, CtxGuard, SpanCtx, SpanGuard, SpanKind, SpanRec,
+};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Microseconds since the process-wide telemetry epoch (the first call to
+/// this function). Monotonic — backed by [`Instant`], never wall-clock —
+/// so span timestamps order correctly across threads.
+pub fn now_us() -> f64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6
+}
+
+/// The process-global metrics registry. Hot-loop call sites should clone
+/// a metric handle once (they are `Arc`-backed) instead of re-resolving
+/// the name per event; the serve daemon deliberately does **not** use
+/// this instance — each [`crate::serve::ServeOpts`] start gets its own
+/// registry so concurrent in-process daemons (the test harness) don't
+/// share counters.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Process-global counter handles for the replay/search hot loops:
+/// resolved once through a `OnceLock`, then one relaxed atomic add per
+/// use. Kept here (not at the call sites) so the family names stay in
+/// one auditable place.
+pub mod hot {
+    use super::{global, Counter};
+    use std::sync::OnceLock;
+
+    macro_rules! hot_counter {
+        ($(#[$doc:meta])* $fn_name:ident, $family:expr) => {
+            $(#[$doc])*
+            pub fn $fn_name() -> &'static Counter {
+                static C: OnceLock<Counter> = OnceLock::new();
+                C.get_or_init(|| global().counter($family))
+            }
+        };
+    }
+
+    hot_counter!(
+        /// Heap pops across all exact replays (`replay.exact`).
+        replay_heap_pops,
+        "dpro_replay_heap_pops_total"
+    );
+    hot_counter!(
+        /// Full exact replays executed.
+        replay_runs,
+        "dpro_replay_runs_total"
+    );
+    hot_counter!(
+        /// Incremental replays executed.
+        replay_incremental_runs,
+        "dpro_replay_incremental_runs_total"
+    );
+    hot_counter!(
+        /// Nodes recomputed by incremental replays (cone sizes summed).
+        replay_cone_nodes,
+        "dpro_replay_cone_nodes_total"
+    );
+    hot_counter!(
+        /// Tiered-replay machine demotions to the exact engine.
+        tiered_demotions,
+        "dpro_tiered_demotions_total"
+    );
+    hot_counter!(
+        /// Optimizer candidates accepted (committed).
+        search_accepts,
+        "dpro_search_accepts_total"
+    );
+    hot_counter!(
+        /// Optimizer candidates rejected (worse than current).
+        search_rejects,
+        "dpro_search_rejects_total"
+    );
+    hot_counter!(
+        /// Optimizer candidate transactions rolled back (rejected or
+        /// not applicable in the current state).
+        search_rollbacks,
+        "dpro_search_rollbacks_total"
+    );
+}

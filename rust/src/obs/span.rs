@@ -1,0 +1,357 @@
+//! Hierarchical RAII spans with per-thread buffers and a global sink.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled is free.** Every `span()` call starts with one relaxed
+//!    [`AtomicBool`] load; when collection is off nothing else happens —
+//!    no TLS touch, no clock read, no interning. The perf_hotpath bench
+//!    pins this cost (`obs_overhead` section, ≤2% of a replay round).
+//! 2. **Hot path is thread-local.** An open span pushes onto a
+//!    thread-local stack; a closing span pops it and appends one
+//!    [`SpanRec`] to a thread-local buffer. The global sink mutex is
+//!    taken only when a *root* span closes (or a thread exits), so
+//!    nested spans never contend.
+//! 3. **Parenting crosses threads explicitly.** `util/pool.rs` captures
+//!    the submitting thread's context ([`current_ctx`]) and installs it
+//!    in the worker ([`inherit`]), so spans recorded inside
+//!    `parallel_for` / `FixedPool` jobs parent under the span that
+//!    spawned the work.
+//!
+//! Spans must close in LIFO order per thread — guaranteed by RAII
+//! scoping; the pop loop tolerates (and silently discards) violations
+//! rather than corrupting the stack. A `SpanGuard` is `!Send`: dropping
+//! it on a different thread than created it would pop the wrong stack.
+
+use crate::util::intern::{intern, OpId};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// What a span's duration represents — mapped by the exporter onto the
+/// non-overlap-checked gTrace op kinds so a self-trace dump validates
+/// with zero diagnostics (see `docs/OBSERVABILITY.md` for the table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Computation — the thread is doing the named work (→ `AGG`).
+    Work,
+    /// Blocked — queue wait, lock wait, condvar (→ `NEG`).
+    Wait,
+    /// Ingress — reading/parsing input (→ `IN`).
+    Read,
+    /// Egress — serializing/writing output (→ `OUT`).
+    Write,
+    /// Remote call — HTTP request to another process (→ `SEND`).
+    Net,
+}
+
+/// One closed span, as drained by [`take_spans`].
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    /// Interned span name (`replay.exact`, `serve.request`, ...).
+    pub name: OpId,
+    /// What the duration represents.
+    pub kind: SpanKind,
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Id of the enclosing span — same-thread nesting or an inherited
+    /// cross-thread parent; 0 for a root span.
+    pub parent: u64,
+    /// Per-thread lane (the exporter's `proc`): dense small ids reused
+    /// as threads exit, so short-lived scoped threads don't inflate the
+    /// dump's process count.
+    pub lane: u16,
+    /// Start, µs since the telemetry epoch ([`super::now_us`]).
+    pub start_us: f64,
+    /// Duration in µs (clamped non-negative).
+    pub dur_us: f64,
+}
+
+/// Hard cap on buffered spans; beyond it the newest spans are counted in
+/// [`dropped_spans`] instead of growing memory without bound. 2^20 spans
+/// ≈ 56 MiB — far above any CLI run that then dumps and drains.
+pub const SINK_CAP: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static SINK: Mutex<Vec<SpanRec>> = Mutex::new(Vec::new());
+// Lane allocator: lowest free id first, so lanes stay dense no matter
+// how many scoped threads come and go.
+static LANE_FREE: Mutex<Vec<u16>> = Mutex::new(Vec::new());
+static LANE_HIGH: AtomicU16 = AtomicU16::new(0);
+
+/// Turn span collection on or off process-wide. Metrics are unaffected
+/// (always on). Spans opened while enabled still record on drop after a
+/// disable — the flag gates span *creation* only.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+/// Whether span collection is currently enabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Spans discarded because the sink was at [`SINK_CAP`].
+pub fn dropped_spans() -> u64 {
+    DROPPED.load(Relaxed)
+}
+
+struct ThreadBuf {
+    lane: u16,
+    /// Open span ids, innermost last.
+    stack: Vec<u64>,
+    /// Cross-thread parent installed by [`inherit`]; used when `stack`
+    /// is empty. 0 = none.
+    inherited: u64,
+    buf: Vec<SpanRec>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        let lane = LANE_FREE
+            .lock()
+            .ok()
+            .and_then(|mut free| free.pop())
+            // `% u16::MAX` keeps the lane below the trace format's
+            // coordinator sentinel (u16::MAX); collisions are only
+            // possible past 65535 *concurrent* threads.
+            .unwrap_or_else(|| LANE_HIGH.fetch_add(1, Relaxed) % u16::MAX);
+        ThreadBuf { lane, stack: Vec::new(), inherited: 0, buf: Vec::new() }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        flush_into_sink(&mut self.buf);
+        if let Ok(mut free) = LANE_FREE.lock() {
+            free.push(self.lane);
+        }
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+fn flush_into_sink(buf: &mut Vec<SpanRec>) {
+    if buf.is_empty() {
+        return;
+    }
+    let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    let room = SINK_CAP.saturating_sub(sink.len());
+    if buf.len() > room {
+        DROPPED.fetch_add((buf.len() - room) as u64, Relaxed);
+        buf.truncate(room);
+    }
+    sink.append(buf);
+}
+
+/// Open a span. Returns a guard that records the span when dropped; bind
+/// it (`let _g = ...`) — an unnamed `let _ =` drops immediately and
+/// records a zero-length span.
+///
+/// Interns `name` on every call; call sites inside hot loops should
+/// intern once up front and use [`span_interned`].
+#[must_use]
+pub fn span(name: &str, kind: SpanKind) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inactive(kind);
+    }
+    span_interned(intern(name), kind)
+}
+
+/// [`span`] with a pre-interned name — the hot-loop form.
+#[must_use]
+pub fn span_interned(name: OpId, kind: SpanKind) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inactive(kind);
+    }
+    let id = NEXT_ID.fetch_add(1, Relaxed);
+    let parent = TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let parent = t.stack.last().copied().unwrap_or(t.inherited);
+        t.stack.push(id);
+        parent
+    });
+    SpanGuard {
+        live: true,
+        id,
+        parent,
+        name,
+        kind,
+        start_us: super::now_us(),
+        _not_send: std::marker::PhantomData,
+    }
+}
+
+/// RAII guard for an open span; records the [`SpanRec`] on drop.
+pub struct SpanGuard {
+    live: bool,
+    id: u64,
+    parent: u64,
+    name: OpId,
+    kind: SpanKind,
+    start_us: f64,
+    // a guard must drop on the thread that created it (it pops that
+    // thread's span stack), so: !Send
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl SpanGuard {
+    fn inactive(kind: SpanKind) -> SpanGuard {
+        SpanGuard {
+            live: false,
+            id: 0,
+            parent: 0,
+            name: OpId::EMPTY,
+            kind,
+            start_us: 0.0,
+            _not_send: std::marker::PhantomData,
+        }
+    }
+
+    /// This span's id — parent for spans recorded on other threads via
+    /// [`current_ctx`]/[`inherit`]; 0 when collection was disabled at
+    /// creation.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end_us = super::now_us();
+        // TLS teardown may already have destroyed the buffer (a guard
+        // held in another TLS destructor); losing that one span beats
+        // aborting the process.
+        let _ = TLS.try_with(|t| {
+            let mut t = t.borrow_mut();
+            // pop through our id — tolerates non-LIFO drops by
+            // discarding the ids opened (and leaked) above us
+            while let Some(top) = t.stack.pop() {
+                if top == self.id {
+                    break;
+                }
+            }
+            t.buf.push(SpanRec {
+                name: self.name,
+                kind: self.kind,
+                id: self.id,
+                parent: self.parent,
+                lane: t.lane,
+                start_us: self.start_us,
+                dur_us: (end_us - self.start_us).max(0.0),
+            });
+            if t.stack.is_empty() {
+                flush_into_sink(&mut t.buf);
+            }
+        });
+    }
+}
+
+/// A capture of the calling thread's innermost open span, for parenting
+/// work handed to another thread. Copyable and inert — installing it is
+/// [`inherit`]'s job.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanCtx {
+    parent: u64,
+}
+
+/// Capture the current span context: the innermost open span on this
+/// thread (or its own inherited parent when none is open). Returns an
+/// empty context when collection is disabled — making the
+/// capture/install pair a no-op end to end.
+pub fn current_ctx() -> SpanCtx {
+    if !enabled() {
+        return SpanCtx { parent: 0 };
+    }
+    let parent =
+        TLS.with(|t| {
+            let t = t.borrow();
+            t.stack.last().copied().unwrap_or(t.inherited)
+        });
+    SpanCtx { parent }
+}
+
+/// Install a captured context as this thread's parent for root spans,
+/// until the returned guard drops (which restores the previous value —
+/// panic-safe, so pool workers can wrap jobs in it). No-op for an empty
+/// context.
+pub fn inherit(ctx: SpanCtx) -> CtxGuard {
+    if ctx.parent == 0 {
+        return CtxGuard { prev: 0, installed: false };
+    }
+    let prev = TLS.with(|t| std::mem::replace(&mut t.borrow_mut().inherited, ctx.parent));
+    CtxGuard { prev, installed: true }
+}
+
+/// Restores the previously inherited span context on drop. See
+/// [`inherit`].
+pub struct CtxGuard {
+    prev: u64,
+    installed: bool,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        if self.installed {
+            let prev = self.prev;
+            let _ = TLS.try_with(|t| t.borrow_mut().inherited = prev);
+        }
+    }
+}
+
+/// Flush this thread's span buffer to the global sink. Root-span drops
+/// and thread exits flush automatically; callers draining mid-flight
+/// (the exporter, tests) use this to pick up spans recorded under a
+/// still-open root.
+pub fn flush_thread() {
+    let _ = TLS.try_with(|t| {
+        if let Ok(mut t) = t.try_borrow_mut() {
+            flush_into_sink(&mut t.buf);
+        }
+    });
+}
+
+/// Drain every buffered span (flushing the calling thread first). Spans
+/// buffered on *other* live threads under still-open roots are not
+/// included — they arrive when their root closes.
+pub fn take_spans() -> Vec<SpanRec> {
+    flush_thread();
+    let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+    std::mem::take(&mut *sink)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests here only cover what cannot race with the integration
+    // suite (separate process): the disabled fast path. Enabled-mode
+    // behavior lives in rust/tests/obs.rs behind one serializing lock.
+    #[test]
+    fn disabled_spans_record_nothing() {
+        assert!(!enabled(), "spans must be off by default");
+        {
+            let g = span("span.test.disabled", SpanKind::Work);
+            assert_eq!(g.id(), 0);
+        }
+        flush_thread();
+        // cannot assert the sink is empty (other lib tests may enable);
+        // but our named span must not be present
+        let sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(sink.iter().all(|s| s.name.resolve() != "span.test.disabled"));
+    }
+
+    #[test]
+    fn disabled_ctx_is_inert() {
+        let ctx = current_ctx();
+        let _g = inherit(ctx);
+        assert_eq!(format!("{ctx:?}"), "SpanCtx { parent: 0 }");
+    }
+}

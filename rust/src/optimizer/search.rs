@@ -347,6 +347,7 @@ fn run_rounds(
         if t0.elapsed().as_secs_f64() > opts.budget_wall_s {
             break;
         }
+        let _round_span = crate::obs::span("search.round", crate::obs::SpanKind::Work);
         tsync.new_round();
 
         // ---- one replay of the current accepted state ----
@@ -418,11 +419,16 @@ fn run_rounds(
                 break 'rounds;
             }
             candidates_tried += 1;
+            let _cand_span = crate::obs::span("search.candidate", crate::obs::SpanKind::Work);
             let txn = mg.begin();
-            let n = strategies[si].apply(mg, &d, &actx);
+            let n = {
+                let _apply = crate::obs::span("search.apply", crate::obs::SpanKind::Work);
+                strategies[si].apply(mg, &d, &actx)
+            };
             if n == 0 {
                 // decision not applicable in the current state
                 mg.rollback(txn);
+                crate::obs::hot::search_rollbacks().inc();
                 continue;
             }
             let log = mg.commit();
@@ -438,7 +444,12 @@ fn run_rounds(
             }
             let cand = strategies[si].evaluate(&d, raw, mg);
             if strategy::better(&cand, &cur, budget) {
-                mg.commit_txn(txn);
+                {
+                    let _commit =
+                        crate::obs::span("search.commit", crate::obs::SpanKind::Work);
+                    mg.commit_txn(txn);
+                }
+                crate::obs::hot::search_accepts().inc();
                 cur = cand;
                 final_eval = Some(cand);
                 round_applied += n;
@@ -446,7 +457,13 @@ fn run_rounds(
                 strategies[si].decided(&d, true);
                 accepted.push((si, d));
             } else {
-                mg.rollback(txn);
+                {
+                    let _rb =
+                        crate::obs::span("search.rollback", crate::obs::SpanKind::Work);
+                    mg.rollback(txn);
+                }
+                crate::obs::hot::search_rejects().inc();
+                crate::obs::hot::search_rollbacks().inc();
                 strategies[si].decided(&d, false);
             }
         }

@@ -154,11 +154,13 @@ impl IncrementalReplayer {
         mg: &MutableGraph,
         changes: &ChangeLog,
     ) -> &ReplayResult {
+        let _span = crate::obs::span("replay.incremental", crate::obs::SpanKind::Work);
         let dfg = mg.dfg();
         let alive = mg.alive();
         let canon = mg.canon_ranks();
         let n = dfg.len();
         self.replays += 1;
+        crate::obs::hot::replay_incremental_runs().inc();
 
         if self.ran_once && changes.is_empty(n) {
             self.last_recomputed = 0;
@@ -410,6 +412,7 @@ impl IncrementalReplayer {
         self.result.iteration_time = max_end.max(0.0);
         self.result.last = last;
         self.last_recomputed = recomputed;
+        crate::obs::hot::replay_cone_nodes().add(recomputed as u64);
         &self.result
     }
 }

@@ -160,6 +160,8 @@ impl Replayer {
     /// storage (no per-call allocation); clone it or use
     /// [`Replayer::into_result`] if it must outlive the engine.
     pub fn replay(&mut self, g: &GlobalDfg) -> &ReplayResult {
+        let _span = crate::obs::span("replay.exact", crate::obs::SpanKind::Work);
+        let mut heap_pops: u64 = 0;
         let n = self.n;
         self.result.start.iter_mut().for_each(|x| *x = 0.0);
         self.result.end.iter_mut().for_each(|x| *x = 0.0);
@@ -265,6 +267,7 @@ impl Replayer {
             }
 
             let Some(Reverse((_, node))) = self.heap.pop() else { break };
+            heap_pops += 1;
             let i = node as usize;
             let t = self.result.end[i];
             let d = self.node_dev[i] as usize;
@@ -280,6 +283,10 @@ impl Replayer {
         }
         debug_assert_eq!(finished, n, "replay deadlock: {finished}/{n}");
 
+        // one atomic add per replay, not per pop — the loop above stays
+        // a plain register increment
+        crate::obs::hot::replay_heap_pops().add(heap_pops);
+        crate::obs::hot::replay_runs().inc();
         self.result.iteration_time = max_end.max(0.0);
         self.result.last = last;
         &self.result

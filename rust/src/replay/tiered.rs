@@ -331,9 +331,12 @@ impl TieredReplayer {
     /// exact otherwise. The returned schedule covers **all** nodes
     /// either way and borrows engine-owned storage.
     pub fn replay(&mut self, g: &GlobalDfg) -> &ReplayResult {
+        let _span = crate::obs::span("replay.tiered", crate::obs::SpanKind::Work);
         if self.dirty {
+            let _cls = crate::obs::span("replay.tiered.classify", crate::obs::SpanKind::Work);
             self.classify(g);
             self.dirty = false;
+            crate::obs::hot::tiered_demotions().add(self.report.demoted.len() as u64);
         }
         if !self.plan_ok {
             self.report.mode_used = "exact".into();
@@ -344,8 +347,14 @@ impl TieredReplayer {
         self.report.mode_used = "tiered".into();
         self.report.simulated_nodes = self.n_sim;
         self.report.derived_nodes = self.n - self.n_sim;
-        self.reduced_replay(g);
-        self.derive(g);
+        {
+            let _red = crate::obs::span("replay.tiered.reduced", crate::obs::SpanKind::Work);
+            self.reduced_replay(g);
+        }
+        {
+            let _der = crate::obs::span("replay.tiered.derive", crate::obs::SpanKind::Work);
+            self.derive(g);
+        }
         &self.result
     }
 

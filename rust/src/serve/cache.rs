@@ -13,9 +13,9 @@
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
+use crate::obs::Counter;
 use crate::serve::session::Session;
 use crate::serve::ServeError;
 
@@ -63,26 +63,42 @@ impl CacheStats {
     }
 }
 
-/// The session cache (see module docs).
+/// The session cache (see module docs). Hit/miss/eviction counters are
+/// [`Counter`] handles so a daemon can register them in its
+/// [`crate::obs::MetricsRegistry`] ([`SessionCache::with_metrics`]) —
+/// `/statsz` and `/metricsz` then read the *same* atomics instead of two
+/// drift-prone sets.
 pub struct SessionCache {
     cap_bytes: usize,
     inner: Mutex<Inner>,
     cv: Condvar,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
 }
 
 impl SessionCache {
-    /// Cache holding at most ~`cap_bytes` of accounted session bytes.
+    /// Cache holding at most ~`cap_bytes` of accounted session bytes,
+    /// with detached (unregistered) counters.
     pub fn new(cap_bytes: usize) -> SessionCache {
+        SessionCache::with_metrics(cap_bytes, Counter::new(), Counter::new(), Counter::new())
+    }
+
+    /// [`SessionCache::new`] with externally owned counters — the serve
+    /// daemon passes registry-backed handles.
+    pub fn with_metrics(
+        cap_bytes: usize,
+        hits: Counter,
+        misses: Counter,
+        evictions: Counter,
+    ) -> SessionCache {
         SessionCache {
             cap_bytes,
             inner: Mutex::new(Inner { map: HashMap::new(), tick: 0, bytes: 0 }),
             cv: Condvar::new(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            hits,
+            misses,
+            evictions,
         }
     }
 
@@ -100,14 +116,14 @@ impl SessionCache {
             loop {
                 match probe(&mut guard, key) {
                     Probe::Ready(sess) => {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.hits.inc();
                         return Ok((sess, true));
                     }
                     Probe::Building => {
                         guard = self.cv.wait(guard).unwrap_or_else(|p| p.into_inner());
                     }
                     Probe::Absent => {
-                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        self.misses.inc();
                         guard.map.insert(key.to_string(), Slot::Building);
                         break;
                     }
@@ -149,17 +165,30 @@ impl SessionCache {
         loop {
             match probe(&mut guard, key) {
                 Probe::Ready(sess) => {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.hits.inc();
                     return Some(sess);
                 }
                 Probe::Building => {
                     guard = self.cv.wait(guard).unwrap_or_else(|p| p.into_inner());
                 }
                 Probe::Absent => {
-                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    self.misses.inc();
                     return None;
                 }
             }
+        }
+    }
+
+    /// Look at `key` without counting a hit/miss or touching the LRU
+    /// clock — for observers assembling reports over sessions already
+    /// enumerated ([`SessionCache::sessions`]). Before this existed,
+    /// `/statsz` used [`SessionCache::lookup`] per session row and
+    /// inflated the hit counters it was reporting.
+    pub fn peek(&self, key: &str) -> Option<Arc<Session>> {
+        let guard = lock(&self.inner);
+        match guard.map.get(key) {
+            Some(Slot::Ready { sess, .. }) => Some(Arc::clone(sess)),
+            _ => None,
         }
     }
 
@@ -183,9 +212,9 @@ impl SessionCache {
     pub fn stats(&self) -> CacheStats {
         let inner = lock(&self.inner);
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
             sessions: inner
                 .map
                 .values()
@@ -211,7 +240,7 @@ impl SessionCache {
             let Some((_, key)) = victim else { break };
             if let Some(Slot::Ready { sess, .. }) = inner.map.remove(&key) {
                 inner.bytes = inner.bytes.saturating_sub(sess.bytes());
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+                self.evictions.inc();
             }
         }
     }

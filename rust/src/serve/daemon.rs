@@ -12,6 +12,7 @@
 //! POST /jobs/:id/optimize     {"budget_s": .., "strategies": "..", ...}
 //! GET  /healthz               liveness
 //! GET  /statsz                cache hit rate, sessions, queue depth, ...
+//! GET  /metricsz              the same registry as Prometheus text
 //! ```
 //!
 //! Status mapping (the CLI exit-code contract, lifted to HTTP): 200 ok —
@@ -23,11 +24,12 @@
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::diagnosis::parse_whatif;
+use crate::obs::{Counter, Histogram, MetricsRegistry, SpanKind};
 use crate::optimizer::{strategy, SearchOpts};
 use crate::serve::http::{read_request, write_response, Request};
 use crate::serve::session::Session;
@@ -37,8 +39,11 @@ use crate::util::json::{parse, Json};
 use crate::util::pool::FixedPool;
 use crate::util::Args;
 
-/// Shared server state: the session cache plus the counters `/statsz`
-/// reports.
+/// Shared server state: the session cache plus one per-daemon
+/// [`MetricsRegistry`] that every operational counter lives in —
+/// `/statsz` (legacy JSON) and `/metricsz` (Prometheus text) are two
+/// renderings of it. Per-daemon rather than process-global so the test
+/// harness can run several in-process daemons without shared counters.
 struct State {
     opts: ServeOpts,
     cache: SessionCache,
@@ -46,8 +51,14 @@ struct State {
     /// on the accept thread).
     queue_depth: Arc<AtomicUsize>,
     threads: usize,
-    requests: AtomicU64,
     started: Instant,
+    registry: MetricsRegistry,
+    /// `dpro_requests_total` — resolved once, bumped per request.
+    requests: Counter,
+    /// `dpro_slow_queries_total` — requests over `--slow-query-us`.
+    slow_queries: Counter,
+    /// `dpro_conn_queue_wait_us` — accept → worker-pickup latency.
+    conn_wait: Histogram,
 }
 
 /// A running daemon. Dropping the handle stops it; [`ServerHandle::wait`]
@@ -99,13 +110,26 @@ impl Drop for ServerHandle {
 /// fails startup (exit-3 class) instead of serving 422s forever.
 pub fn start(opts: &ServeOpts) -> Result<ServerHandle, ServeError> {
     let pool = FixedPool::new(opts.threads);
+    let registry = MetricsRegistry::new();
+    let cache = SessionCache::with_metrics(
+        opts.cache_bytes,
+        registry.counter("dpro_cache_hits_total"),
+        registry.counter("dpro_cache_misses_total"),
+        registry.counter("dpro_cache_evictions_total"),
+    );
+    let requests = registry.counter("dpro_requests_total");
+    let slow_queries = registry.counter("dpro_slow_queries_total");
+    let conn_wait = registry.histogram("dpro_conn_queue_wait_us");
     let state = Arc::new(State {
         opts: opts.clone(),
-        cache: SessionCache::new(opts.cache_bytes),
+        cache,
         queue_depth: pool.pending_handle(),
         threads: pool.threads(),
-        requests: AtomicU64::new(0),
         started: Instant::now(),
+        registry,
+        requests,
+        slow_queries,
+        conn_wait,
     });
     for dir in &opts.preload {
         register_trace_dir(&state, dir)?;
@@ -127,7 +151,13 @@ pub fn start(opts: &ServeOpts) -> Result<ServerHandle, ServeError> {
             // idle keep-alive connections release their worker after this
             let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
             let st = Arc::clone(&state2);
-            pool.execute(move || serve_conn(stream, st));
+            let accepted = Instant::now();
+            pool.execute(move || {
+                // accept → pickup: how long the connection sat in the
+                // pool queue behind other work
+                st.conn_wait.observe_us(accepted.elapsed().as_secs_f64() * 1e6);
+                serve_conn(stream, st)
+            });
         }
         // `pool` drops here: queued + in-flight requests drain, then the
         // accept thread (and with it ServerHandle::wait/stop) returns
@@ -147,13 +177,41 @@ fn serve_conn(stream: TcpStream, state: Arc<State>) {
                 break;
             }
             Ok(Some(req)) => {
-                state.requests.fetch_add(1, Ordering::Relaxed);
+                state.requests.inc();
+                let pattern = route_pattern(&req.path);
+                let span_guard = crate::obs::span("serve.request", SpanKind::Work);
+                let t0 = Instant::now();
                 // a handler bug answers 500 and keeps the worker alive
                 let (status, body) =
                     match catch_unwind(AssertUnwindSafe(|| route(&state, &req))) {
                         Ok(r) => r,
                         Err(_) => (500, err_body("handler panicked")),
                     };
+                let lat_us = t0.elapsed().as_secs_f64() * 1e6;
+                drop(span_guard);
+                state
+                    .registry
+                    .histogram_with("dpro_request_latency_us", &[("route", pattern)])
+                    .observe_us(lat_us);
+                state
+                    .registry
+                    .counter_with(
+                        "dpro_responses_total",
+                        &[("route", pattern), ("status", status_label(status))],
+                    )
+                    .inc();
+                state.registry.counter("dpro_response_bytes_total").add(body.len() as u64);
+                let slow = state.opts.slow_query_us;
+                if slow > 0 && lat_us > slow as f64 {
+                    state.slow_queries.inc();
+                    eprintln!(
+                        "slow-query: {} {} -> {status} took {:.0}us (threshold {slow}us, {}B)",
+                        req.method,
+                        req.path,
+                        lat_us,
+                        body.len(),
+                    );
+                }
                 let ok = write_response(reader.get_mut(), status, &body, req.keep_alive);
                 if ok.is_err() || !req.keep_alive {
                     break;
@@ -170,17 +228,50 @@ fn err_body(msg: &str) -> String {
     j.to_string()
 }
 
+/// Normalized route label for metrics — path parameters collapsed to
+/// `:id` so label cardinality stays bounded no matter how many jobs the
+/// daemon has seen.
+fn route_pattern(path: &str) -> &'static str {
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match segs.as_slice() {
+        ["healthz"] => "/healthz",
+        ["statsz"] => "/statsz",
+        ["metricsz"] => "/metricsz",
+        ["jobs"] => "/jobs",
+        ["jobs", _, "replay"] => "/jobs/:id/replay",
+        ["jobs", _, "diagnose"] => "/jobs/:id/diagnose",
+        ["jobs", _, "whatif"] => "/jobs/:id/whatif",
+        ["jobs", _, "optimize"] => "/jobs/:id/optimize",
+        _ => "other",
+    }
+}
+
+/// Static status label (the daemon emits a closed set of statuses).
+fn status_label(status: u16) -> &'static str {
+    match status {
+        200 => "200",
+        400 => "400",
+        404 => "404",
+        405 => "405",
+        413 => "413",
+        422 => "422",
+        500 => "500",
+        _ => "other",
+    }
+}
+
 fn route(state: &Arc<State>, req: &Request) -> (u16, String) {
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
     let result = match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => Ok((200, healthz())),
         ("GET", ["statsz"]) => Ok((200, statsz(state))),
+        ("GET", ["metricsz"]) => Ok((200, metricsz(state))),
         ("POST", ["jobs"]) => post_jobs(state, &req.body),
         ("GET", ["jobs", id, "replay"]) => read_snapshot(state, id, true),
         ("GET", ["jobs", id, "diagnose"]) => read_snapshot(state, id, false),
         ("POST", ["jobs", id, "whatif"]) => post_whatif(state, id, &req.body),
         ("POST", ["jobs", id, "optimize"]) => post_optimize(state, id, &req.body),
-        (_, ["healthz" | "statsz"])
+        (_, ["healthz" | "statsz" | "metricsz"])
         | (_, ["jobs"])
         | (_, ["jobs", _, "replay" | "diagnose" | "whatif" | "optimize"]) => {
             Ok((405, err_body(&format!("{} not allowed on {}", req.method, req.path))))
@@ -211,7 +302,9 @@ fn statsz(state: &Arc<State>) -> String {
     let (mut batches, mut coalesced) = (0u64, 0u64);
     let mut sessions = Vec::new();
     for (id, bytes, served) in state.cache.sessions() {
-        if let Some(sess) = state.cache.lookup(&id) {
+        // peek, not lookup: assembling the report must not inflate the
+        // hit counters it is reporting
+        if let Some(sess) = state.cache.peek(&id) {
             let (b, c) = sess.batch_stats();
             batches += b;
             coalesced += c;
@@ -234,8 +327,29 @@ fn statsz(state: &Arc<State>) -> String {
     j.set("sessions", Json::Arr(sessions));
     j.set("queue_depth", Json::Num(state.queue_depth.load(Ordering::Relaxed) as f64));
     j.set("threads", Json::Num(state.threads as f64));
-    j.set("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64));
+    j.set("requests", Json::Num(state.requests.get() as f64));
     j.to_string()
+}
+
+/// `GET /metricsz`: the registry as Prometheus text exposition. Gauges
+/// that mirror live structures (cache occupancy, queue depth, uptime)
+/// are refreshed at scrape time; counters and histograms are the same
+/// atomics `/statsz` reads, so the two views cannot drift.
+fn metricsz(state: &Arc<State>) -> String {
+    let cs = state.cache.stats();
+    state.registry.gauge("dpro_cache_bytes").set(cs.bytes as u64);
+    state.registry.gauge("dpro_cache_cap_bytes").set(cs.cap_bytes as u64);
+    state.registry.gauge("dpro_sessions").set(cs.sessions as u64);
+    state
+        .registry
+        .gauge("dpro_queue_depth")
+        .set(state.queue_depth.load(Ordering::Relaxed) as u64);
+    state.registry.gauge("dpro_threads").set(state.threads as u64);
+    state
+        .registry
+        .gauge("dpro_uptime_seconds")
+        .set(state.started.elapsed().as_secs());
+    state.registry.render_prometheus()
 }
 
 /// The `POST /jobs` response.
@@ -490,7 +604,11 @@ fn insert_session(
 ) -> Result<(Arc<Session>, bool), ServeError> {
     let id = session_id(&spec, trace_tag);
     state.cache.get_or_build(&id, || {
-        Ok(Session::build(&id, spec, trace, state.opts.top, state.opts.batch_window_ms))
+        Ok(Session::build(&id, spec, trace, state.opts.top, state.opts.batch_window_ms)
+            .with_metrics(
+                state.registry.histogram("dpro_engine_lock_wait_us"),
+                state.registry.histogram("dpro_serialize_us"),
+            ))
     })
 }
 
@@ -547,6 +665,10 @@ fn register_trace_dir(
             Some((loaded.trace, loaded.report)),
             state.opts.top,
             state.opts.batch_window_ms,
+        )
+        .with_metrics(
+            state.registry.histogram("dpro_engine_lock_wait_us"),
+            state.registry.histogram("dpro_serialize_us"),
         ))
     })
 }

@@ -24,7 +24,10 @@
 //!   descriptor + plan family + trace identity; an over-budget insert
 //!   evicts the least-recently-used session.
 //! - [`daemon`] — the accept loop over a [`crate::util::pool::FixedPool`],
-//!   request routing, and the `/healthz` + `/statsz` surfaces.
+//!   request routing, and the `/healthz` + `/statsz` + `/metricsz`
+//!   surfaces. All operational counters live in one per-daemon
+//!   [`crate::obs::MetricsRegistry`]; `/statsz` (legacy JSON schema) and
+//!   `/metricsz` (Prometheus text) are two renderings of it.
 //!
 //! The HTTP status contract extends the CLI's exit-code contract
 //! (docs/SERVE.md): **400** is the exit-2 class (argument/body errors),
@@ -60,6 +63,9 @@ pub struct ServeOpts {
     pub preload: Vec<String>,
     /// Bottleneck top-N in published diagnose snapshots (`--top`).
     pub top: usize,
+    /// Log (and count) requests slower than this many µs
+    /// (`--slow-query-us`); 0 disables the threshold.
+    pub slow_query_us: u64,
 }
 
 impl Default for ServeOpts {
@@ -71,6 +77,7 @@ impl Default for ServeOpts {
             batch_window_ms: 2,
             preload: Vec::new(),
             top: 5,
+            slow_query_us: 0,
         }
     }
 }

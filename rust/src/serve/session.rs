@@ -19,10 +19,12 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Instant;
 
 use crate::config::JobSpec;
 use crate::diagnosis::{Diagnoser, WhatIfQuery};
 use crate::graph::dfg::OpKind;
+use crate::obs::Histogram;
 use crate::optimizer::strategy::Strategy;
 use crate::optimizer::SearchOpts;
 use crate::serve::batch::Batcher;
@@ -56,6 +58,12 @@ pub struct Session {
     bytes: usize,
     top: usize,
     whatif_served: AtomicU64,
+    /// Time spent waiting for the engine mutex (what-if + optimize) —
+    /// detached unless the daemon attached registry handles
+    /// ([`Session::with_metrics`]).
+    lock_wait: Histogram,
+    /// Time spent serializing published snapshots.
+    serialize: Histogram,
 }
 
 impl Session {
@@ -83,7 +91,19 @@ impl Session {
             bytes,
             top,
             whatif_served: AtomicU64::new(0),
+            lock_wait: Histogram::new(),
+            serialize: Histogram::new(),
         }
+    }
+
+    /// Attach registry-backed phase histograms (engine-lock wait,
+    /// snapshot serialization) in place of the detached defaults —
+    /// builder-style so [`Session::build`]'s signature (used directly by
+    /// tests and benches) stays put.
+    pub fn with_metrics(mut self, lock_wait: Histogram, serialize: Histogram) -> Session {
+        self.lock_wait = lock_wait;
+        self.serialize = serialize;
+        self
     }
 
     /// The session id (also its cache key and URL segment).
@@ -117,7 +137,8 @@ impl Session {
         let canonical: Vec<String> = queries.iter().map(|q| q.to_string()).collect();
         let key = format!("{}:{}", self.snapshot().version, canonical.join(","));
         let out = self.batcher.run(&key, || {
-            let mut eng = lock(&self.engine);
+            let _span = crate::obs::span("serve.whatif", crate::obs::SpanKind::Work);
+            let mut eng = self.lock_engine();
             // re-read under the engine lock: commits republish while
             // holding it, so the version cannot move during evaluation
             // and the payload's snapshot tag matches the baseline the
@@ -156,19 +177,36 @@ impl Session {
         opts: &SearchOpts,
         strategies: Vec<Box<dyn Strategy>>,
     ) -> String {
-        let mut eng = lock(&self.engine);
+        let _span = crate::obs::span("serve.optimize", crate::obs::SpanKind::Work);
+        let mut eng = self.lock_engine();
         let out = eng.optimize_with(opts, strategies);
         let committed = !out.accepted.is_empty();
         let mut j = out.to_json();
         if committed {
             let version = self.snapshot().version + 1;
-            let snap = publish(&mut eng, &self.id, version, self.top);
+            let snap = {
+                let _ser = crate::obs::span("serve.serialize", crate::obs::SpanKind::Write);
+                let t0 = Instant::now();
+                let snap = publish(&mut eng, &self.id, version, self.top);
+                self.serialize.observe_us(t0.elapsed().as_secs_f64() * 1e6);
+                snap
+            };
             *self.snap.write().unwrap_or_else(|p| p.into_inner()) = Arc::new(snap);
         }
         j.set("job", Json::Str(self.id.clone()));
         j.set("committed", Json::Bool(committed));
         j.set("snapshot", Json::Num(self.snapshot().version as f64));
         j.to_string()
+    }
+
+    /// Acquire the engine mutex, measuring the wait into the session's
+    /// `lock_wait` histogram (and a `serve.lock_wait` span when tracing).
+    fn lock_engine(&self) -> MutexGuard<'_, Diagnoser> {
+        let _wait = crate::obs::span("serve.lock_wait", crate::obs::SpanKind::Wait);
+        let t0 = Instant::now();
+        let guard = lock(&self.engine);
+        self.lock_wait.observe_us(t0.elapsed().as_secs_f64() * 1e6);
+        guard
     }
 }
 

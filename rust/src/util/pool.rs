@@ -40,14 +40,20 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
         return;
     }
     let next = AtomicUsize::new(0);
+    // spans recorded inside workers parent under the caller's open span
+    // (no-op when span collection is disabled)
+    let ctx = crate::obs::current_ctx();
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_tasks {
-                    break;
+            s.spawn(|| {
+                let _obs = crate::obs::inherit(ctx);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    f(i);
                 }
-                f(i);
             });
         }
     });
@@ -168,11 +174,18 @@ impl FixedPool {
     /// (impossible through the public API — `execute` needs `&self`, and
     /// shutdown happens in `Drop`).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        // capture the submitter's span context so spans recorded inside
+        // the job parent under the submitting span; the guard restores
+        // the worker's previous context even if the job panics
+        let ctx = crate::obs::current_ctx();
         self.pending.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("pool alive")
-            .send(Box::new(f))
+            .send(Box::new(move || {
+                let _obs = crate::obs::inherit(ctx);
+                f();
+            }))
             .expect("workers alive");
     }
 

@@ -1,0 +1,431 @@
+//! Self-telemetry tests: span nesting and cross-thread parenting through
+//! the worker pools, histogram bucket edges and quantiles, deterministic
+//! Prometheus rendering, the `--self-trace` gTrace dump round-tripping
+//! through `trace::io::load_dir` with zero diagnostics, the CLI flag
+//! contract (malformed `--self-trace` exits 2), and the serve daemon's
+//! `/statsz` ↔ `/metricsz` consistency (two renderings of one registry,
+//! legacy JSON schema pinned).
+//!
+//! Span collection (`obs::set_enabled`) and the span sink are
+//! process-global, so every test that enables collection or drains
+//! [`dpro::obs::take_spans`] serializes on [`OBS_LOCK`] and filters by
+//! its own unique span-name prefix.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use dpro::cli;
+use dpro::config::{JobSpec, Transport};
+use dpro::graph::{build_global_nameless, AnalyticCost, OpKind};
+use dpro::obs::export::{dump_self_trace, gtrace_from_spans, op_kind_for};
+use dpro::obs::metrics::LATENCY_BOUNDS_US;
+use dpro::obs::{
+    set_enabled, span, take_spans, Histogram, MetricsRegistry, SpanKind, SpanRec,
+};
+use dpro::replay::Replayer;
+use dpro::serve::http::Client;
+use dpro::serve::{start, ServeOpts};
+use dpro::trace::io::load_dir;
+use dpro::util::json::{parse, Json};
+use dpro::util::pool::{parallel_for, FixedPool};
+use dpro::util::Args;
+
+/// Serializes every test that flips the process-global enable flag or
+/// drains the global span sink.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    // a failed sibling test must not cascade into poisoned-lock panics
+    OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dpro_obs_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/two_worker")
+}
+
+fn by_name<'a>(spans: &'a [SpanRec], name: &str) -> Vec<&'a SpanRec> {
+    spans.iter().filter(|s| s.name.resolve() == name).collect()
+}
+
+// ---------------------------------------------------------------- spans
+
+#[test]
+fn disabled_spans_are_inert() {
+    let _l = obs_lock();
+    set_enabled(false);
+    let _ = take_spans();
+    {
+        let g = span("obs.test.inert", SpanKind::Work);
+        assert_eq!(g.id(), 0, "a disabled span guard must be the inert zero guard");
+    }
+    assert!(
+        by_name(&take_spans(), "obs.test.inert").is_empty(),
+        "disabled spans must not reach the sink"
+    );
+}
+
+#[test]
+fn nesting_parents_on_one_thread() {
+    let _l = obs_lock();
+    let _ = take_spans();
+    set_enabled(true);
+    let (outer_id, inner_id) = {
+        let outer = span("obs.test.nest.outer", SpanKind::Work);
+        let inner = span("obs.test.nest.inner", SpanKind::Wait);
+        let _leaf = span("obs.test.nest.leaf", SpanKind::Read);
+        (outer.id(), inner.id())
+    };
+    set_enabled(false);
+    let spans = take_spans();
+    let outer = by_name(&spans, "obs.test.nest.outer");
+    let inner = by_name(&spans, "obs.test.nest.inner");
+    let leaf = by_name(&spans, "obs.test.nest.leaf");
+    assert_eq!((outer.len(), inner.len(), leaf.len()), (1, 1, 1));
+    assert_eq!(outer[0].id, outer_id);
+    assert_eq!(outer[0].parent, 0, "outer is a root span");
+    assert_eq!(inner[0].parent, outer_id, "inner nests under outer");
+    assert_eq!(leaf[0].parent, inner_id, "leaf nests under inner");
+    assert_eq!(inner[0].kind, SpanKind::Wait);
+    assert!(outer[0].dur_us >= inner[0].dur_us, "parent spans contain their children");
+}
+
+#[test]
+fn workers_parent_under_the_submitting_span() {
+    let _l = obs_lock();
+    let _ = take_spans();
+    set_enabled(true);
+
+    // scoped pool: parallel_for captures the caller's context
+    let outer_id = {
+        let outer = span("obs.test.pool.outer", SpanKind::Work);
+        parallel_for(4, |_| {
+            let _s = span("obs.test.pool.task", SpanKind::Work);
+        });
+        outer.id()
+    };
+
+    // persistent pool: execute captures the submitter's context
+    let submit_id = {
+        let submit = span("obs.test.pool.submit", SpanKind::Work);
+        let pool = FixedPool::new(2);
+        for _ in 0..3 {
+            pool.execute(|| {
+                let _s = span("obs.test.pool.job", SpanKind::Work);
+            });
+        }
+        drop(pool); // joins the workers, flushing their span buffers
+        submit.id()
+    };
+
+    set_enabled(false);
+    let spans = take_spans();
+    let tasks = by_name(&spans, "obs.test.pool.task");
+    assert_eq!(tasks.len(), 4);
+    for t in tasks {
+        assert_eq!(t.parent, outer_id, "parallel_for task must parent under the caller");
+    }
+    let jobs = by_name(&spans, "obs.test.pool.job");
+    assert_eq!(jobs.len(), 3);
+    for j in jobs {
+        assert_eq!(j.parent, submit_id, "pool job must parent under the submitter");
+    }
+}
+
+// -------------------------------------------------------------- metrics
+
+#[test]
+fn histogram_bucket_edges_are_inclusive() {
+    let h = Histogram::new();
+    // exactly on a bound lands in that bucket (inclusive upper edge)
+    h.observe_us(1.0);
+    h.observe_us(2.5);
+    h.observe_us(2.6); // first value past the 2.5 edge
+    h.observe_us(-4.0); // clamped to 0 → first bucket
+    h.observe_us(f64::NAN); // clamped to 0 → first bucket
+    h.observe_us(1e12); // beyond the ladder → +Inf bucket
+    let s = h.snapshot();
+    assert_eq!(s.count, 6);
+    assert_eq!(s.buckets[0], 3, "1.0 and the two clamped values share bucket le=1");
+    assert_eq!(s.buckets[1], 1, "2.5 sits inside le=2.5, not le=5");
+    assert_eq!(s.buckets[2], 1, "2.6 spills into le=5");
+    assert_eq!(*s.buckets.last().unwrap(), 1, "1e12 lands in +Inf");
+    assert_eq!(s.sum_us, 1 + 3 + 3 + 1_000_000_000_000);
+
+    // quantiles: 100 observations spread across one bucket interpolate
+    let q = Histogram::new();
+    for _ in 0..100 {
+        q.observe_us(7.0); // bucket (5, 10]
+    }
+    let qs = q.snapshot();
+    assert_eq!(qs.p50(), 7.5, "mid-bucket rank interpolates linearly");
+    assert!(qs.p99() > qs.p50());
+    assert!(qs.p99() <= 10.0, "p99 stays inside the bucket");
+    assert_eq!(LATENCY_BOUNDS_US[0], 1.0);
+    assert_eq!(*LATENCY_BOUNDS_US.last().unwrap(), 10_000_000.0);
+}
+
+#[test]
+fn prometheus_render_is_deterministic_and_typed() {
+    let reg = MetricsRegistry::new();
+    reg.counter("dpro_test_total").add(3);
+    reg.counter_with("dpro_test_routed_total", &[("route", "/jobs"), ("status", "200")]).inc();
+    reg.counter_with("dpro_test_routed_total", &[("route", "/healthz"), ("status", "200")]).inc();
+    reg.gauge("dpro_test_depth").set(7);
+    let h = reg.histogram("dpro_test_latency_us");
+    h.observe_us(3.0);
+    h.observe_us(40.0);
+    let a = reg.render_prometheus();
+    let b = reg.render_prometheus();
+    assert_eq!(a, b, "rendering the same registry twice must be byte-identical");
+    assert!(a.contains("# TYPE dpro_test_total counter"));
+    assert!(a.contains("dpro_test_total 3"));
+    assert!(a.contains("# TYPE dpro_test_depth gauge"));
+    assert!(a.contains("dpro_test_depth 7"));
+    assert!(a.contains("# TYPE dpro_test_latency_us histogram"));
+    assert!(a.contains("dpro_test_latency_us_bucket{le=\"+Inf\"} 2"));
+    assert!(a.contains("dpro_test_latency_us_sum 43"));
+    assert!(a.contains("dpro_test_latency_us_count 2"));
+    // labeled series render sorted, one per label set
+    let routed = a.lines().filter(|l| l.starts_with("dpro_test_routed_total{")).count();
+    assert_eq!(routed, 2);
+    let healthz = a.find("route=\"/healthz\"").unwrap();
+    let jobs = a.find("route=\"/jobs\"").unwrap();
+    assert!(healthz < jobs, "label sets render in sorted order");
+}
+
+// -------------------------------------------------------------- exports
+
+#[test]
+fn span_kinds_export_to_unchecked_op_kinds() {
+    assert_eq!(op_kind_for(SpanKind::Work), OpKind::Aggregate);
+    assert_eq!(op_kind_for(SpanKind::Wait), OpKind::Negotiate);
+    assert_eq!(op_kind_for(SpanKind::Read), OpKind::In);
+    assert_eq!(op_kind_for(SpanKind::Write), OpKind::Out);
+    assert_eq!(op_kind_for(SpanKind::Net), OpKind::Send);
+    // an empty sink still dumps a loadable one-event trace
+    let g = gtrace_from_spans(&[]);
+    assert_eq!(g.events.len(), 1);
+    assert_eq!(g.events[0].name, "obs.idle");
+}
+
+/// The acceptance property: enable collection, run a real replay, dump
+/// the span forest with [`dump_self_trace`], and re-ingest the directory
+/// through the ordinary trace loader with **zero diagnostics of any
+/// severity** — dpro's own trace is a first-class gTrace.
+#[test]
+fn self_trace_dump_round_trips_load_dir() {
+    let _l = obs_lock();
+    let _ = take_spans();
+    set_enabled(true);
+    {
+        let _root = span("obs.test.roundtrip", SpanKind::Work);
+        let spec = JobSpec::standard("gpt_mini", "horovod", Transport::Rdma);
+        let g = build_global_nameless(&spec, &AnalyticCost::new(&spec));
+        let mut rp = Replayer::new(&g);
+        rp.replay(&g);
+    }
+    set_enabled(false);
+
+    let dir = tmp_dir("roundtrip");
+    let summary = dump_self_trace(&dir).unwrap();
+    assert!(summary.events >= 2, "expected at least the root and replay spans");
+    assert!(dir.join("metrics.prom").exists(), "the Prometheus sidecar must be written");
+
+    let loaded = load_dir(&dir).unwrap();
+    assert!(
+        loaded.report.diagnostics.is_empty(),
+        "self-trace must re-ingest clean, got: {:?}",
+        loaded.report.diagnostics
+    );
+    assert!(loaded.report.no_errors());
+    assert_eq!(loaded.report.events_skipped, 0);
+    let names: Vec<&str> = loaded.trace.events.iter().map(|e| e.name.as_str()).collect();
+    assert!(names.contains(&"replay.exact"), "replay span missing from dump: {names:?}");
+    assert!(names.contains(&"obs.test.roundtrip"));
+    // the sink was drained by the dump
+    assert!(take_spans().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `dpro replay --trace-dir <fixture> --self-trace <dir>` end-to-end
+/// through the CLI entry point: exit 0, and the dump re-ingests clean
+/// with the CLI root span present.
+#[test]
+fn cli_replay_self_trace_dumps_cleanly() {
+    let _l = obs_lock();
+    let _ = take_spans();
+    let dir = tmp_dir("cli");
+    let mut a = Args::default();
+    a.positional.push("replay".into());
+    a.options.insert("trace-dir".into(), fixture_dir().display().to_string());
+    a.options.insert("self-trace".into(), dir.display().to_string());
+    a.flags.push("json".into());
+    let code = cli::run(a);
+    set_enabled(false); // cli::run enables collection and leaves it on
+    assert_eq!(code, 0);
+
+    let loaded = load_dir(&dir).unwrap();
+    assert!(
+        loaded.report.diagnostics.is_empty(),
+        "CLI self-trace must re-ingest clean, got: {:?}",
+        loaded.report.diagnostics
+    );
+    let names: Vec<&str> = loaded.trace.events.iter().map(|e| e.name.as_str()).collect();
+    assert!(names.contains(&"cli.replay"), "root CLI span missing: {names:?}");
+    assert!(names.contains(&"replay.exact"), "replay span missing: {names:?}");
+    let _ = take_spans();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Malformed `--self-trace` is a usage error: exit 2 before any work,
+/// without enabling collection.
+#[test]
+fn malformed_self_trace_exits_2() {
+    // bare flag, no directory argument
+    let mut a = Args::default();
+    a.positional.push("replay".into());
+    a.flags.push("self-trace".into());
+    assert_eq!(cli::run(a), 2);
+
+    // argument exists but is a file, not a directory
+    let file = std::env::temp_dir().join(format!("dpro_obs_notdir_{}", std::process::id()));
+    std::fs::write(&file, "x").unwrap();
+    let mut a = Args::default();
+    a.positional.push("replay".into());
+    a.options.insert("self-trace".into(), file.display().to_string());
+    assert_eq!(cli::run(a), 2);
+    let _ = std::fs::remove_file(&file);
+}
+
+// ---------------------------------------------------------------- serve
+
+fn prom_value(text: &str, series: &str) -> f64 {
+    text.lines()
+        .find_map(|l| {
+            let mut it = l.split_whitespace();
+            (it.next() == Some(series)).then(|| it.next().unwrap().parse().unwrap())
+        })
+        .unwrap_or_else(|| panic!("series {series} missing from:\n{text}"))
+}
+
+/// `/statsz` and `/metricsz` are two renderings of one registry: the
+/// session-cache counters agree exactly, and the request-latency
+/// histogram is present with counted traffic.
+#[test]
+fn statsz_and_metricsz_agree_on_one_registry() {
+    let opts = ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        batch_window_ms: 0,
+        ..ServeOpts::default()
+    };
+    let handle = start(&opts).unwrap();
+    let mut c = Client::new(&handle.addr().to_string());
+
+    let job_body =
+        r#"{"job":{"model":"gpt_mini","scheme":"horovod","transport":"rdma","workers":2}}"#;
+    let (s, _) = c.call("POST", "/jobs", Some(job_body)).unwrap();
+    assert_eq!(s, 200);
+    let (s, _) = c.call("POST", "/jobs", Some(job_body)).unwrap(); // cache hit
+    assert_eq!(s, 200);
+
+    let stats = c.get_json("/statsz").unwrap();
+    let cache = stats.get("cache").unwrap();
+    assert_eq!(cache.f64("hits"), 1.0);
+    assert_eq!(cache.f64("misses"), 1.0);
+
+    let (s, prom) = c.call("GET", "/metricsz", None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(prom_value(&prom, "dpro_cache_hits_total"), cache.f64("hits"));
+    assert_eq!(prom_value(&prom, "dpro_cache_misses_total"), cache.f64("misses"));
+    assert_eq!(prom_value(&prom, "dpro_cache_evictions_total"), cache.f64("evictions"));
+    assert_eq!(prom_value(&prom, "dpro_cache_bytes"), cache.f64("bytes"));
+    assert_eq!(prom_value(&prom, "dpro_sessions"), cache.f64("sessions"));
+    assert_eq!(prom_value(&prom, "dpro_threads"), stats.f64("threads"));
+    // the /metricsz request itself is the one request after /statsz
+    assert_eq!(prom_value(&prom, "dpro_requests_total"), stats.f64("requests") + 1.0);
+
+    // request-latency histogram, labeled by route pattern
+    assert!(prom.contains("# TYPE dpro_request_latency_us histogram"), "{prom}");
+    assert!(prom.contains("dpro_request_latency_us_bucket{route=\"/jobs\",le=\"+Inf\"} 2"));
+    assert!(prom.contains("dpro_request_latency_us_count{route=\"/jobs\"} 2"));
+    assert!(prom.contains("dpro_request_latency_us_count{route=\"/statsz\"} 1"));
+    // per-route/status response counters and queue-wait histogram exist
+    assert!(prom.contains("dpro_responses_total{route=\"/jobs\",status=\"200\"} 2"));
+    assert!(prom.contains("dpro_conn_queue_wait_us_count"));
+
+    handle.stop();
+}
+
+/// The legacy `/statsz` JSON schema, pinned: consolidating the daemon's
+/// counters into the registry must not change the response shape.
+#[test]
+fn statsz_legacy_schema_is_stable() {
+    fn flatten(j: &Json, prefix: &str, out: &mut Vec<String>) {
+        match j {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let p = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    flatten(v, &p, out);
+                }
+            }
+            Json::Arr(a) => match a.first() {
+                None => out.push(format!("{prefix}[]")),
+                Some(first) => flatten(first, &format!("{prefix}[]"), out),
+            },
+            _ => out.push(prefix.to_string()),
+        }
+    }
+
+    let opts = ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        batch_window_ms: 0,
+        ..ServeOpts::default()
+    };
+    let handle = start(&opts).unwrap();
+    let mut c = Client::new(&handle.addr().to_string());
+    let job_body =
+        r#"{"job":{"model":"gpt_mini","scheme":"horovod","transport":"rdma","workers":2}}"#;
+    let (s, _) = c.call("POST", "/jobs", Some(job_body)).unwrap();
+    assert_eq!(s, 200);
+
+    let (s, body) = c.call("GET", "/statsz", None).unwrap();
+    assert_eq!(s, 200);
+    let mut keys = Vec::new();
+    flatten(&parse(&body).unwrap(), "", &mut keys);
+    assert_eq!(
+        keys,
+        vec![
+            "batch.batches",
+            "batch.coalesced",
+            "cache.bytes",
+            "cache.cap_bytes",
+            "cache.evictions",
+            "cache.hit_rate",
+            "cache.hits",
+            "cache.misses",
+            "cache.sessions",
+            "queue_depth",
+            "requests",
+            "sessions[].bytes",
+            "sessions[].job",
+            "sessions[].whatif_served",
+            "threads",
+            "uptime_s",
+            "version",
+        ],
+        "the legacy /statsz schema changed"
+    );
+    handle.stop();
+}

@@ -479,6 +479,8 @@ fn serve_cli_exit_codes_follow_the_contract() {
         &[("threads", "many")],
         &[("top", "-3")],
         &[("batch-window-ms", "soon")],
+        &[("slow-query-us", "0")],
+        &[("slow-query-us", "fast")],
     ] {
         assert_eq!(cli::run(serve_args(bad)), 2, "{bad:?} should exit 2");
     }
